@@ -1,0 +1,152 @@
+//! END-TO-END DRIVER (DESIGN.md §5, EXPERIMENTS.md §E2E).
+//!
+//! Exercises the full three-layer stack on a real workload:
+//!   Pallas kernels -> JAX lowering -> HLO artifacts -> Rust PJRT runtime
+//!   -> executor thread -> dynamic batcher -> serving coordinator,
+//! with a Poisson open-loop request generator, and reports latency
+//! (p50/p99) + throughput per batching policy.
+//!
+//! Requires `make artifacts`.  The AlexNet full-network artifacts are the
+//! real Table I network (61M parameters, ~2.27 GFLOP/image); the default
+//! run serves it at modest request counts because the sandbox executes on
+//! a single CPU core.  Use --network tinynet for a fast smoke run.
+//!
+//! Run: `cargo run --release --example alexnet_serving -- [--network alexnet]
+//!       [--requests 24] [--rate 4] [--artifacts DIR]`
+
+use std::time::{Duration, Instant};
+
+use cnnlab::cli::Args;
+use cnnlab::coordinator::{
+    BatchPolicy, PjrtEngine, Server, ServerConfig,
+};
+use cnnlab::model::{alexnet, tinynet};
+use cnnlab::report::{f2, si_time, Table};
+use cnnlab::runtime::{ExecutorService, Manifest};
+use cnnlab::util::{Rng, Samples, Tensor};
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let argv = if argv.is_empty() {
+        vec!["serve".to_string()]
+    } else {
+        let mut v = vec!["serve".to_string()];
+        v.extend(argv);
+        v
+    };
+    let args = Args::parse(&argv)?;
+
+    let net_name = args.get_or("network", "alexnet");
+    let net = match net_name {
+        "alexnet" => alexnet(),
+        "tinynet" => tinynet(),
+        other => anyhow::bail!("unknown network {other:?}"),
+    };
+    let dir = args.get_or("artifacts", "artifacts");
+    let requests = args.get_usize(
+        "requests",
+        if net_name == "alexnet" { 24 } else { 64 },
+    )?;
+    let rate = args.get_f64(
+        "rate",
+        if net_name == "alexnet" { 4.0 } else { 300.0 },
+    )?;
+
+    println!(
+        "== CNNLab E2E serving: {} | {} requests | Poisson {} req/s ==",
+        net.name, requests, rate
+    );
+    let manifest = Manifest::load(dir)?;
+    let batches = manifest.batches_for(&net.name);
+    anyhow::ensure!(
+        !batches.is_empty(),
+        "no artifacts for {} in {dir} (run `make artifacts`)",
+        net.name
+    );
+    println!("artifact batch sizes: {batches:?}");
+
+    let svc = ExecutorService::spawn(dir)?;
+    let image_shape: Vec<usize> =
+        cnnlab::model::shape::input_shape(&net.layers[0], 1)[1..].to_vec();
+
+    // Sweep batching policies: the serving ablation.
+    let max_b = *batches.last().unwrap();
+    let policies: Vec<(String, BatchPolicy)> = vec![
+        ("no-batching".into(), BatchPolicy::immediate()),
+        (
+            format!("batch<={max_b}, 2ms"),
+            BatchPolicy::new(max_b, Duration::from_millis(2)),
+        ),
+        (
+            format!("batch<={max_b}, 20ms"),
+            BatchPolicy::new(max_b, Duration::from_millis(20)),
+        ),
+    ];
+
+    let mut table = Table::new(
+        "Serving latency/throughput by batching policy",
+        &["policy", "req/s", "p50", "p99", "mean batch", "errors"],
+    );
+
+    for (label, policy) in policies {
+        let engine =
+            PjrtEngine::new(svc.handle(), &net, batches.clone(), 42)?;
+        let server = Server::spawn(
+            engine,
+            ServerConfig { policy, queue_capacity: 512 },
+        );
+        let client = server.client();
+        let mut rng = Rng::new(42);
+        let t0 = Instant::now();
+        let mut pending = Vec::with_capacity(requests);
+        for _ in 0..requests {
+            let gap = rng.next_exp(rate);
+            std::thread::sleep(Duration::from_secs_f64(gap.min(0.1)));
+            let img = Tensor::randn(&image_shape, &mut rng, 0.1);
+            // block politely under backpressure
+            loop {
+                match client.submit(img.clone()) {
+                    Ok(rx) => {
+                        pending.push(rx);
+                        break;
+                    }
+                    Err(_) => std::thread::sleep(
+                        Duration::from_millis(1),
+                    ),
+                }
+            }
+        }
+        let mut lat = Samples::new();
+        let mut errors = 0u64;
+        for rx in pending {
+            match rx.recv()? {
+                Ok(resp) => {
+                    lat.push(resp.latency_s);
+                    // sanity: softmax output really is a distribution
+                    let s: f32 = resp.probs.data().iter().sum();
+                    anyhow::ensure!(
+                        (s - 1.0).abs() < 1e-4,
+                        "output not a distribution: sum {s}"
+                    );
+                }
+                Err(_) => errors += 1,
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let m = server.metrics();
+        table.row(&[
+            label,
+            f2(requests as f64 / wall),
+            si_time(lat.p50()),
+            si_time(lat.p99()),
+            f2(m.mean_batch_size()),
+            errors.to_string(),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "(measured wall-clock on the CPU PJRT backend; see EXPERIMENTS.md \
+         §E2E for the recorded run)"
+    );
+    Ok(())
+}

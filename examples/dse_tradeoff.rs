@@ -1,0 +1,84 @@
+//! Design-space exploration on AlexNet: enumerate by-kind mappings, print
+//! the latency/energy Pareto frontier, compare DSE strategies, and show the
+//! effect of a TDP power cap — the paper's §III "design space exploration
+//! and trade-off analysis" as a runnable artifact.
+//!
+//! Run: `cargo run --release --example dse_tradeoff`
+
+use cnnlab::model::alexnet;
+use cnnlab::report::{f2, si_time, Table};
+use cnnlab::sched::{
+    exhaustive_by_kind, greedy, local_search, simulate, tradeoff_frontier,
+    Constraints, EstimateSource, Objective,
+};
+
+fn main() -> anyhow::Result<()> {
+    let net = alexnet();
+    let src = EstimateSource::new();
+    let batch = 128;
+
+    // 1. Pareto frontier over all 81 by-kind mappings.
+    let front = tradeoff_frontier(&net, &src, batch)?;
+    let mut t = Table::new(
+        &format!("Latency/Energy Pareto frontier (batch {batch})"),
+        &["latency", "energy J", "peak W", "mapping (by kind)"],
+    );
+    for p in &front {
+        let c = &p.item;
+        // summarize mapping per layer kind
+        let conv = c.mapping.get("conv1").unwrap().name();
+        let lrn = c.mapping.get("lrn1").unwrap().name();
+        let pool = c.mapping.get("pool1").unwrap().name();
+        let fc = c.mapping.get("fc6").unwrap().name();
+        t.row(&[
+            si_time(p.x),
+            f2(p.y),
+            f2(c.peak_power_w),
+            format!("conv={conv} lrn={lrn} pool={pool} fc={fc}"),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // 2. Strategy comparison.
+    println!("strategy comparison (objective = EDP):");
+    let obj = Objective::Edp;
+    let g = greedy(&net, &src, batch, obj)?;
+    let gt = simulate(&net, &g, &src, batch, 1)?;
+    println!(
+        "  greedy      : latency {} energy {:.2} J edp {:.4}",
+        si_time(gt.makespan_s),
+        gt.energy_j,
+        gt.makespan_s * gt.energy_j
+    );
+    let ex = exhaustive_by_kind(&net, &src, batch, obj, &Constraints::default())?;
+    println!(
+        "  exhaustive  : latency {} energy {:.2} J edp {:.4}",
+        si_time(ex.latency_s),
+        ex.energy_j,
+        ex.score
+    );
+    let ls = local_search(&net, &src, batch, obj, &Constraints::default(), 6)?;
+    println!(
+        "  local search: latency {} energy {:.2} J edp {:.4}",
+        si_time(ls.latency_s),
+        ls.energy_j,
+        ls.score
+    );
+
+    // 3. Power-cap sweep: the FPGA's raison d'etre.
+    println!("\nTDP cap sweep (objective = latency):");
+    for cap in [200.0, 100.0, 80.0, 10.0] {
+        let cons = Constraints { power_cap_w: Some(cap) };
+        match exhaustive_by_kind(&net, &src, batch, Objective::Latency, &cons)
+        {
+            Ok(c) => println!(
+                "  cap {cap:>6.1} W -> latency {} (peak {:.1} W) {}",
+                si_time(c.latency_s),
+                c.peak_power_w,
+                if c.peak_power_w < 10.0 { "[all-FPGA]" } else { "" }
+            ),
+            Err(e) => println!("  cap {cap:>6.1} W -> infeasible: {e}"),
+        }
+    }
+    Ok(())
+}

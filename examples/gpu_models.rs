@@ -1,0 +1,68 @@
+//! cuDNN vs cuBLAS on the FC layers — the paper's §IV.C study (Table II,
+//! Fig 7, Fig 8) as a runnable example.
+//!
+//! Run: `cargo run --release --example gpu_models`
+
+use cnnlab::device::{Accelerator, GpuDevice};
+use cnnlab::model::{alexnet, cost};
+use cnnlab::power::KernelLib;
+use cnnlab::report::{f2, Table};
+use cnnlab::runtime::Pass;
+
+fn main() -> anyhow::Result<()> {
+    let net = alexnet();
+    let batch = 128;
+    let cudnn = GpuDevice::new(KernelLib::CuDnn);
+    let cublas = GpuDevice::new(KernelLib::CuBlas);
+
+    // Table II: fp operations per image.
+    let mut t2 = Table::new(
+        "Table II: FC fp operations per image",
+        &["layer", "forward", "backward"],
+    );
+    for name in ["fc6", "fc7", "fc8"] {
+        let l = net.layer(name).unwrap();
+        t2.row(&[
+            name.into(),
+            cost::forward_flops(l).to_string(),
+            cost::backward_flops(l).unwrap().to_string(),
+        ]);
+    }
+    println!("{}", t2.render());
+
+    for (pass, fig) in
+        [(Pass::Forward, "Fig 7 (forward)"), (Pass::Backward, "Fig 8 (BP)")]
+    {
+        let mut t = Table::new(
+            &format!("{fig}: cuDNN vs cuBLAS, batch {batch}"),
+            &["layer", "cuDNN ms", "cuBLAS ms", "speedup",
+              "cuDNN W", "cuBLAS W", "cuDNN J", "cuBLAS J"],
+        );
+        let mut s_dnn = 0.0;
+        let mut s_blas = 0.0;
+        for name in ["fc6", "fc7", "fc8"] {
+            let l = net.layer(name).unwrap();
+            let d = cudnn.estimate(l, batch, pass)?;
+            let b = cublas.estimate(l, batch, pass)?;
+            s_dnn += d.time_s;
+            s_blas += b.time_s;
+            t.row(&[
+                name.into(),
+                f2(d.time_s * 1e3),
+                f2(b.time_s * 1e3),
+                f2(d.time_s / b.time_s),
+                f2(d.power_w),
+                f2(b.power_w),
+                f2(d.energy_j()),
+                f2(b.energy_j()),
+            ]);
+        }
+        println!("{}", t.render());
+        println!(
+            "  overall cuBLAS speedup: {:.2}x  (paper: {})\n",
+            s_dnn / s_blas,
+            if pass == Pass::Forward { "1.69x" } else { "24.89x" }
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,108 @@
+//! Quickstart: define a CNN with the paper's layer tuples, ask the
+//! middleware for the GPU/FPGA trade-off, and print the per-layer table.
+//!
+//! Run: `cargo run --release --example quickstart`
+//!
+//! No artifacts needed — this exercises the analytic device models only.
+
+use cnnlab::device::{Accelerator, FpgaDevice, GpuDevice};
+use cnnlab::model::{
+    Act, ConvSpec, FcSpec, Layer, Network, PoolKind, PoolSpec, Volume,
+};
+use cnnlab::power::KernelLib;
+use cnnlab::report::{f2, Table};
+use cnnlab::runtime::Pass;
+use cnnlab::sched::{greedy, simulate, Choice, EstimateSource, Mapping, Objective};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Describe a small ConvNet exactly the way the paper's users do:
+    //    each layer is one of the sec III.B tuples.
+    let net = Network::new(
+        "quickstart",
+        vec![
+            Layer::conv("c1", ConvSpec {
+                input: Volume::new(3, 64, 64),
+                cout: 32, kh: 5, kw: 5, stride: 1, pad: 2, act: Act::Relu,
+            }),
+            Layer::pool("p1", PoolSpec {
+                input: Volume::new(32, 64, 64),
+                kind: PoolKind::Max, size: 2, stride: 2,
+            }),
+            Layer::conv("c2", ConvSpec {
+                input: Volume::new(32, 32, 32),
+                cout: 64, kh: 3, kw: 3, stride: 1, pad: 1, act: Act::Relu,
+            }),
+            Layer::pool("p2", PoolSpec {
+                input: Volume::new(64, 32, 32),
+                kind: PoolKind::Max, size: 2, stride: 2,
+            }),
+            Layer::fc("f1", FcSpec {
+                nin: 64 * 16 * 16, nout: 256, act: Act::Relu,
+                softmax: false, in_volume: Some(Volume::new(64, 16, 16)),
+            }),
+            Layer::fc("f2", FcSpec {
+                nin: 256, nout: 10, act: Act::None, softmax: true,
+                in_volume: None,
+            }),
+        ],
+    )?;
+
+    let batch = 64;
+    let gpu = GpuDevice::new(KernelLib::CuDnn);
+    let fpga = FpgaDevice::new();
+
+    // 2. Per-layer trade-off table (the paper's Fig 6 view of your net).
+    let mut table = Table::new(
+        &format!("{} per-layer trade-off (batch {batch})", net.name),
+        &["layer", "GPU ms", "FPGA ms", "GPU GFLOPS", "FPGA GFLOPS",
+          "GPU J", "FPGA J"],
+    );
+    for l in &net.layers {
+        let g = gpu.estimate(l, batch, Pass::Forward)?;
+        let f = fpga.estimate(l, batch, Pass::Forward)?;
+        table.row(&[
+            l.name.clone(),
+            f2(g.time_s * 1e3),
+            f2(f.time_s * 1e3),
+            f2(g.gflops()),
+            f2(f.gflops()),
+            f2(g.energy_j()),
+            f2(f.energy_j()),
+        ]);
+    }
+    println!("{}", table.render());
+
+    // 3. Let the middleware pick mappings for different objectives.
+    let src = EstimateSource::new();
+    for obj in [Objective::Latency, Objective::Energy, Objective::Edp] {
+        let mapping = greedy(&net, &src, batch, obj)?;
+        let t = simulate(&net, &mapping, &src, batch, 1)?;
+        println!(
+            "{:<8} -> latency {:.2} ms, energy {:.2} J   [{}]",
+            obj.name(),
+            t.makespan_s * 1e3,
+            t.energy_j,
+            mapping
+        );
+    }
+
+    // 4. Uniform baselines for reference.
+    for (name, choice) in [
+        ("all-GPU", Choice::Gpu(KernelLib::CuDnn)),
+        ("all-FPGA", Choice::Fpga),
+    ] {
+        let t = simulate(
+            &net,
+            &Mapping::uniform(&net, choice),
+            &src,
+            batch,
+            1,
+        )?;
+        println!(
+            "{name:<8} -> latency {:.2} ms, energy {:.2} J",
+            t.makespan_s * 1e3,
+            t.energy_j
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,169 @@
+"""AOT compile path: lower every (layer, batch) variant to HLO text.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax >=
+0.5 emits protos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs, under ``--out`` (default ../artifacts):
+  <entry>.hlo.txt   one per manifest entry
+  manifest.json     index the Rust runtime loads: file, kind, batch,
+                    input/output shapes, FLOPs/image, layer parameters.
+
+Run via ``make artifacts``; a no-op if inputs are unchanged (make rule).
+Python never runs on the request path — this is the only compile step.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+ALEXNET_BATCHES = [1, 4, 8]
+TINYNET_BATCHES = [1, 2]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(shape) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def spec_params(spec) -> dict:
+    """Layer tuple (sec III.B) serialized for the Rust model layer."""
+    if isinstance(spec, M.ConvSpec):
+        return {"type": "conv", "cin": spec.cin, "hin": spec.hin,
+                "win": spec.win, "cout": spec.cout, "kh": spec.kh,
+                "kw": spec.kw, "stride": spec.stride, "pad": spec.pad,
+                "act": spec.act}
+    if isinstance(spec, M.PoolSpec):
+        return {"type": "pool", "c": spec.c, "hin": spec.hin, "win": spec.win,
+                "size": spec.size, "stride": spec.stride, "kind": spec.kind}
+    if isinstance(spec, M.LrnSpec):
+        return {"type": "lrn", "c": spec.c, "h": spec.h, "w": spec.w,
+                "size": spec.size, "alpha": spec.alpha, "beta": spec.beta,
+                "k": spec.k}
+    if isinstance(spec, M.FcSpec):
+        return {"type": "fc", "nin": spec.nin, "nout": spec.nout,
+                "act": spec.act, "softmax": spec.softmax,
+                "in_shape": list(spec.in_shape) if spec.in_shape else None}
+    raise TypeError(spec)
+
+
+def lower_entry(name: str, fn, arg_shapes: list[tuple[int, ...]],
+                out_dir: str) -> dict:
+    """Lower fn at the given arg shapes, write <name>.hlo.txt, return the
+    manifest stanza (shapes + file)."""
+    args = [f32(s) for s in arg_shapes]
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    out_avals = lowered.out_info
+    outs = [list(o.shape) for o in jax.tree_util.tree_leaves(out_avals)]
+    print(f"  {name}: {len(text)} chars, inputs={arg_shapes} outputs={outs}",
+          flush=True)
+    return {
+        "name": name,
+        "file": fname,
+        "inputs": [{"shape": list(s), "dtype": "f32"} for s in arg_shapes],
+        "outputs": [{"shape": o, "dtype": "f32"} for o in outs],
+    }
+
+
+def build_network(net_name: str, specs: list, batches: list[int],
+                  out_dir: str) -> list[dict]:
+    entries = []
+    for b in batches:
+        # per-layer forward artifacts
+        for spec in specs:
+            in_shapes = [M.input_shape(spec, b)] + M.weight_shapes(spec)
+            e = lower_entry(f"{spec.name}_b{b}", M.layer_forward(spec),
+                            in_shapes, out_dir)
+            e.update({
+                "network": net_name, "layer": spec.name, "pass": "forward",
+                "batch": b, "flops_per_image": spec.flops_per_image(),
+                "params": spec_params(spec),
+            })
+            entries.append(e)
+        # FC backward artifacts (Table II / Fig 8 workload)
+        for spec in specs:
+            if not isinstance(spec, M.FcSpec):
+                continue
+            in_shapes = [(b, spec.nout), M.input_shape(spec, b),
+                         (spec.nin, spec.nout)]
+            e = lower_entry(f"{spec.name}_bwd_b{b}", M.fc_backward(spec),
+                            in_shapes, out_dir)
+            e.update({
+                "network": net_name, "layer": spec.name, "pass": "backward",
+                "batch": b,
+                "flops_per_image": spec.backward_flops_per_image(),
+                "params": spec_params(spec),
+            })
+            entries.append(e)
+        # whole-network forward
+        img = M.input_shape(specs[0], b)
+        shapes = [img] + M.network_param_shapes(specs)
+        e = lower_entry(f"{net_name}_full_b{b}", M.network_forward(specs),
+                        shapes, out_dir)
+        e.update({
+            "network": net_name, "layer": "__full__", "pass": "forward",
+            "batch": b,
+            "flops_per_image": sum(s.flops_per_image() for s in specs),
+            "params": {"type": "network",
+                       "layers": [s.name for s in specs]},
+        })
+        entries.append(e)
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--nets", default="tinynet,alexnet",
+                    help="comma list: tinynet,alexnet")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    entries: list[dict] = []
+    nets = args.nets.split(",")
+    if "tinynet" in nets:
+        print("lowering tinynet...", flush=True)
+        entries += build_network("tinynet", M.tinynet_specs(),
+                                 TINYNET_BATCHES, args.out)
+    if "alexnet" in nets:
+        print("lowering alexnet (Table I)...", flush=True)
+        entries += build_network("alexnet", M.alexnet_specs(),
+                                 ALEXNET_BATCHES, args.out)
+
+    from . import golden
+    golden.write_golden(args.out)
+
+    manifest = {
+        "version": 1,
+        "jax_version": jax.__version__,
+        "entries": entries,
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(entries)} entries to {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Golden I/O vectors for the Rust runtime integration tests.
+
+Inputs are generated from a language-portable integer hash (Knuth
+multiplicative) so the Rust side can regenerate them bit-identically; the
+JAX-evaluated outputs are stored in full in ``golden.json``.  The Rust
+integration suite (`rust/tests/runtime_integration.rs`) runs the same
+artifacts through PJRT and asserts allclose — closing the loop
+python-numerics == rust-loaded-HLO-numerics.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import model as M
+
+SALT_STRIDE = 1000003
+
+
+def hash_fill(shape, salt: int) -> jnp.ndarray:
+    """v[i] = ((i + salt) * 2654435761 mod 2^32) / 2^32 * 0.2 - 0.1."""
+    n = int(np.prod(shape)) if shape else 1
+    idx = (np.arange(n, dtype=np.uint64) + np.uint64(salt)) \
+        * np.uint64(2654435761)
+    h = (idx & np.uint64(0xFFFFFFFF)).astype(np.float64)
+    v = (h / 2.0**32 * 0.2 - 0.1).astype(np.float32)
+    return jnp.asarray(v.reshape(shape))
+
+
+def golden_cases() -> list[tuple[str, object, list[tuple[int, ...]]]]:
+    """(artifact name, fn, arg shapes) for every golden entry."""
+    tiny = {s.name: s for s in M.tinynet_specs()}
+    alex = {s.name: s for s in M.alexnet_specs()}
+    cases = []
+    for name, spec in tiny.items():
+        shapes = [M.input_shape(spec, 1)] + M.weight_shapes(spec)
+        cases.append((f"{name}_b1", M.layer_forward(spec), shapes))
+    tfc = tiny["tfc2"]
+    cases.append((
+        "tfc2_bwd_b1",
+        M.fc_backward(tfc),
+        [(1, tfc.nout), M.input_shape(tfc, 1), (tfc.nin, tfc.nout)],
+    ))
+    tspecs = M.tinynet_specs()
+    cases.append((
+        "tinynet_full_b1",
+        M.network_forward(tspecs),
+        [M.input_shape(tspecs[0], 1)] + M.network_param_shapes(tspecs),
+    ))
+    # one real AlexNet layer to exercise large-buffer paths
+    fc8 = alex["fc8"]
+    cases.append((
+        "fc8_b1",
+        M.layer_forward(fc8),
+        [M.input_shape(fc8, 1)] + M.weight_shapes(fc8),
+    ))
+    return cases
+
+
+def write_golden(out_dir: str) -> int:
+    records = []
+    for name, fn, shapes in golden_cases():
+        args = [hash_fill(s, i * SALT_STRIDE) for i, s in enumerate(shapes)]
+        outs = fn(*args)
+        records.append({
+            "name": name,
+            "input_shapes": [list(s) for s in shapes],
+            "outputs": [
+                {"shape": list(o.shape),
+                 "data": np.asarray(o, dtype=np.float32).ravel().tolist()}
+                for o in outs
+            ],
+        })
+    path = os.path.join(out_dir, "golden.json")
+    with open(path, "w") as f:
+        json.dump({"version": 1, "salt_stride": SALT_STRIDE,
+                   "cases": records}, f)
+    print(f"wrote {len(records)} golden cases to {path}")
+    return len(records)
+
+
+if __name__ == "__main__":
+    import sys
+    write_golden(sys.argv[1] if len(sys.argv) > 1 else "../artifacts")

@@ -1,0 +1,9 @@
+"""CNNLab L1 kernels: Pallas implementations + pure-jnp reference oracles."""
+
+from .matmul import matmul, vmem_bytes  # noqa: F401
+from .conv import conv2d  # noqa: F401
+from .pool import pool  # noqa: F401
+from .lrn import lrn  # noqa: F401
+from .softmax import softmax  # noqa: F401
+from .fc_grad import fc_backward  # noqa: F401
+from . import ref  # noqa: F401

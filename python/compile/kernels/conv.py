@@ -1,0 +1,37 @@
+"""L1 conv layer = im2col (data movement, plain jnp) + Pallas GEMM (compute).
+
+Hardware adaptation (DESIGN.md §3): the paper's cuDNN conv is an implicit
+GEMM over threadblocks.  On TPU the right decomposition is explicit: lay the
+receptive fields out as a (B*Ho*Wo, C*Kh*Kw) matrix (pure data movement XLA
+fuses into the surrounding program) and feed the MXU-tiled Pallas GEMM of
+``matmul.py``, with bias+ReLU fused in its epilogue.  The GEMM is >99% of the
+layer's FLOPs, so the Pallas kernel owns the hot-spot.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .matmul import matmul as _matmul
+from . import ref
+
+
+def conv2d(x: jax.Array, w: jax.Array, b: jax.Array | None = None,
+           stride: int = 1, padding: int = 0, act: str = "none",
+           bm: int | None = None, bn: int | None = None,
+           bk: int | None = None) -> jax.Array:
+    """NCHW conv via im2col + Pallas GEMM.
+
+    x: (B, C, H, W), w: (O, C, Kh, Kw), b: (O,).  Returns (B, O, Ho, Wo).
+    """
+    bsz, c, h, wdim = x.shape
+    o, c2, kh, kw = w.shape
+    assert c == c2, f"channel mismatch: x {x.shape} vs w {w.shape}"
+    ho = (h + 2 * padding - kh) // stride + 1
+    wo = (wdim + 2 * padding - kw) // stride + 1
+
+    cols = ref.im2col_ref(x, kh, kw, stride, padding)        # (B*Ho*Wo, C*Kh*Kw)
+    wmat = w.reshape(o, c * kh * kw).T                       # (C*Kh*Kw, O)
+    y = _matmul(cols, wmat, b, act=act, bm=bm, bn=bn, bk=bk)  # (B*Ho*Wo, O)
+    return y.reshape(bsz, ho, wo, o).transpose(0, 3, 1, 2)

@@ -1,0 +1,28 @@
+"""L1 FC backward pass — the paper's Table II / Fig 8 workload.
+
+Backward of y = x @ w + b is three GEMM-shaped products (the paper counts
+them as exactly 2x the forward FLOPs per image):
+
+    dx = dy @ w.T        (B, No) x (No, Ni)
+    dw = x.T @ dy        (Ni, B) x (B, No)
+    db = sum(dy, axis=0)
+
+Both GEMMs go through the same MXU-tiled Pallas kernel as the forward pass
+(transposes are data movement done in jnp, exactly like cuBLAS's op(A)/op(B)
+arguments).  db rides along in the dw epilogue's cost model.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .matmul import matmul as _matmul
+
+
+def fc_backward(dy: jax.Array, x: jax.Array, w: jax.Array):
+    """Returns (dx, dw, db). dy: (B, No), x: (B, Ni), w: (Ni, No)."""
+    dx = _matmul(dy, w.T)
+    dw = _matmul(x.T, dy)
+    db = jnp.sum(dy, axis=0)
+    return dx, dw, db

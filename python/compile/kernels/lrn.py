@@ -1,0 +1,43 @@
+"""L1 Pallas local-response-normalization kernel (across channels).
+
+Implements the paper's Normalization layer tuple <M_I, T, S, alpha, beta>
+with T = across-channel LRN and S = local size.  One grid step per batch
+element; the channel-window sum of squares unrolls statically over the S
+taps (S is 5 in AlexNet), each tap a shifted channel slice of the padded
+squared activations — all VPU elementwise work.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lrn_kernel(x_ref, o_ref, *, size: int, alpha: float, beta: float,
+                k: float, c: int):
+    x = x_ref[...]  # (1, C, H, W)
+    half = size // 2
+    sq = x * x
+    padded = jnp.pad(sq, ((0, 0), (half, half), (0, 0), (0, 0)))
+    acc = jnp.zeros_like(x)
+    for i in range(size):
+        acc = acc + padded[:, i:i + c, :, :]
+    o_ref[...] = x / jnp.power(k + (alpha / size) * acc, beta)
+
+
+def lrn(x: jax.Array, size: int = 5, alpha: float = 1e-4, beta: float = 0.75,
+        k: float = 2.0) -> jax.Array:
+    """Across-channel LRN. x: (B, C, H, W)."""
+    b, c, h, w = x.shape
+    return pl.pallas_call(
+        functools.partial(_lrn_kernel, size=size, alpha=alpha, beta=beta,
+                          k=k, c=c),
+        grid=(b,),
+        in_specs=[pl.BlockSpec((1, c, h, w), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, c, h, w), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, c, h, w), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32))

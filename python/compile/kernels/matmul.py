@@ -1,0 +1,133 @@
+"""L1 Pallas GEMM — the compute hot-spot of every conv and FC layer.
+
+The paper's GPU backend runs conv/FC as implicit-GEMM (cuDNN) or explicit
+GEMM (cuBLAS) tiled over threadblocks with shared-memory staging.  The TPU
+analogue implemented here: a Pallas kernel tiled for the MXU systolic array,
+with ``BlockSpec`` expressing the HBM->VMEM schedule the paper expressed with
+threadblock geometry, and a VMEM f32 scratch accumulator playing the role of
+shared memory/register tiles.
+
+Grid is (M/bm, N/bn, K/bk); the K axis is the innermost (sequential)
+dimension and the accumulator lives across its steps.  The bias add and the
+nonlinearity ``T`` from the paper's layer tuple run in the epilogue of the
+last K step — fused exactly where a cuBLAS user would fuse them.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU efficiency is estimated in DESIGN.md / EXPERIMENTS.md
+from the VMEM footprint and MXU tile occupancy of these BlockSpecs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import ref
+
+# Reference MXU-shaped tiles.  128x128 matches the MXU systolic array; the
+# K tile is larger because it only costs VMEM bandwidth, not MXU occupancy.
+# These are the tiles the TPU estimate in DESIGN.md §8 is built from and
+# the ones the multi-step accumulator tests exercise.
+BM, BN, BK = 128, 128, 512
+
+# CPU-interpret scheduling note: `interpret=True` executes the grid as an
+# XLA while-loop that materializes the full operands every step, so on the
+# CPU PJRT backend the wall cost is ~grid_steps x operand_bytes.  When no
+# explicit tiles are passed, `matmul` therefore picks the smallest grid
+# whose operands stay under AUTO_MAX_BYTES (single-block for every layer in
+# this repo) — same kernel body, same numerics, CPU-friendly schedule.  On
+# a real TPU the BM/BN/BK tiling above is the design point.
+AUTO_MAX_BYTES = 1 << 28  # 256 MiB
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _mm_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, act: str, k_steps: int):
+    """One (bm, bn) output tile; accumulates over the K grid axis."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _epilogue():
+        y = acc_ref[...] + b_ref[...]  # (bm, bn) + (1, bn)
+        o_ref[...] = ref.apply_act(y, act)
+
+
+def matmul(x: jax.Array, w: jax.Array, b: jax.Array | None = None,
+           act: str = "none",
+           bm: int | None = None, bn: int | None = None,
+           bk: int | None = None) -> jax.Array:
+    """act(x @ w + b) via the tiled Pallas kernel.
+
+    x: (M, K) f32, w: (K, N) f32, b: (N,) f32 or None.
+    Shapes are padded up to tile multiples (zero padding is exact for the
+    K reduction; M/N padding is sliced off the output).
+
+    Pass explicit bm/bn/bk for the MXU reference tiling; leave them None
+    for the CPU-interpret auto schedule (see AUTO_MAX_BYTES note above).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims mismatch: {x.shape} @ {w.shape}"
+    if b is None:
+        b = jnp.zeros((n,), jnp.float32)
+    assert b.shape == (n,), f"bias shape {b.shape} != ({n},)"
+
+    if bm is None and bn is None and bk is None:
+        total = 4 * (m * k + k * n + m * n)
+        if total <= AUTO_MAX_BYTES:
+            # single grid step: no per-step operand rematerialization
+            bm, bn, bk = m, n, k
+        else:
+            bm, bn, bk = BM, BN, BK
+    bm, bn, bk = bm or BM, bn or BN, bk or BK
+
+    # Clamp tiles to the (padded) problem so tiny problems stay one tile.
+    bm = min(bm, _round_up(m, 8))
+    bn = min(bn, _round_up(n, 128))
+    bk = min(bk, _round_up(k, 128))
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+
+    xp = jnp.pad(x.astype(jnp.float32), ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w.astype(jnp.float32), ((0, kp - k), (0, np_ - n)))
+    bp = jnp.pad(b.astype(jnp.float32), (0, np_ - n)).reshape(1, np_)
+
+    k_steps = kp // bk
+    grid = (mp // bm, np_ // bn, k_steps)
+
+    out = pl.pallas_call(
+        functools.partial(_mm_kernel, act=act, k_steps=k_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        # VMEM f32 accumulator — the 'shared memory' of the MXU schedule.
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=True,
+    )(xp, wp, bp)
+
+    return out[:m, :n]
+
+
+def vmem_bytes(bm: int = BM, bn: int = BN, bk: int = BK) -> int:
+    """VMEM footprint of one grid step (x, w, bias, out, acc tiles) — the
+    number DESIGN.md's TPU estimate is built from."""
+    f = 4  # f32
+    return f * (bm * bk + bk * bn + bn + 2 * bm * bn)

@@ -1,0 +1,52 @@
+"""L1 Pallas pooling kernel (max / avg), NCHW, VALID padding.
+
+VPU-shaped: one grid step per batch element; the block is the full (C, H, W)
+feature volume in VMEM and the window reduction unrolls statically over the
+(size x size) taps, each tap a strided slice — the TPU analogue of the
+paper's OpenCL pooling engine that streams one feature map per cycle group
+(Table III: the pooling engine is the smallest and fastest, 304.5 MHz).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pool_kernel(x_ref, o_ref, *, size: int, stride: int, kind: str,
+                 ho: int, wo: int):
+    x = x_ref[...]  # (1, C, H, W)
+    taps = []
+    for i in range(size):
+        for j in range(size):
+            taps.append(x[:, :, i:i + stride * ho:stride, j:j + stride * wo:stride])
+    if kind == "max":
+        acc = taps[0]
+        for t in taps[1:]:
+            acc = jnp.maximum(acc, t)
+    else:  # avg
+        acc = taps[0]
+        for t in taps[1:]:
+            acc = acc + t
+        acc = acc / float(size * size)
+    o_ref[...] = acc
+
+
+def pool(x: jax.Array, size: int, stride: int, kind: str = "max") -> jax.Array:
+    """NCHW pooling. x: (B, C, H, W) -> (B, C, Ho, Wo)."""
+    assert kind in ("max", "avg"), f"unknown pooling kind {kind!r}"
+    b, c, h, w = x.shape
+    ho = (h - size) // stride + 1
+    wo = (w - size) // stride + 1
+    return pl.pallas_call(
+        functools.partial(_pool_kernel, size=size, stride=stride, kind=kind,
+                          ho=ho, wo=wo),
+        grid=(b,),
+        in_specs=[pl.BlockSpec((1, c, h, w), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, c, ho, wo), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, c, ho, wo), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32))

@@ -1,0 +1,139 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the correctness ground truth: ``pytest python/tests`` asserts each
+Pallas kernel (run in interpret mode) matches the corresponding function here
+to float32 tolerance.  Everything is NCHW / OIHW, matching the paper's layer
+descriptions (Table I: "Input: 3x224x224, Kernel: 96x3x11x11, ...").
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def apply_act(x: jax.Array, act: str) -> jax.Array:
+    """Nonlinearity ``T`` from the paper's layer tuples (sec III.B)."""
+    if act == "none":
+        return x
+    if act == "relu":
+        return jnp.maximum(x, 0.0)
+    if act == "sigmoid":
+        return jax.nn.sigmoid(x)
+    if act == "tanh":
+        return jnp.tanh(x)
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def matmul_ref(x: jax.Array, w: jax.Array, b: jax.Array | None = None,
+               act: str = "none") -> jax.Array:
+    """y = act(x @ w + b); x: (M, K), w: (K, N), b: (N,)."""
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    if b is not None:
+        y = y + b[None, :]
+    return apply_act(y, act)
+
+
+def conv2d_ref(x: jax.Array, w: jax.Array, b: jax.Array | None = None,
+               stride: int = 1, padding: int = 0, act: str = "none") -> jax.Array:
+    """NCHW conv. x: (B, C, H, W), w: (O, C, Kh, Kw), b: (O,)."""
+    y = lax.conv_general_dilated(
+        x, w,
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    if b is not None:
+        y = y + b[None, :, None, None]
+    return apply_act(y, act)
+
+
+def pool_ref(x: jax.Array, size: int, stride: int, kind: str = "max") -> jax.Array:
+    """NCHW pooling, VALID. kind: 'max' or 'avg' (paper's Pooling tuple T)."""
+    if kind == "max":
+        init, op = -jnp.inf, lax.max
+    elif kind == "avg":
+        init, op = 0.0, lax.add
+    else:
+        raise ValueError(f"unknown pooling kind {kind!r}")
+    y = lax.reduce_window(
+        x, init, op,
+        window_dimensions=(1, 1, size, size),
+        window_strides=(1, 1, stride, stride),
+        padding="VALID",
+    )
+    if kind == "avg":
+        y = y / float(size * size)
+    return y
+
+
+def lrn_ref(x: jax.Array, size: int = 5, alpha: float = 1e-4,
+            beta: float = 0.75, k: float = 2.0) -> jax.Array:
+    """Across-channel local response normalization (AlexNet-style).
+
+    y[b,c] = x[b,c] / (k + alpha/size * sum_{c' in window(c)} x[b,c']^2)^beta
+    Window is ``size`` channels centred on c (the paper's Normalization
+    tuple <M_I, T, S, alpha, beta> with S = local size).
+    """
+    sq = x * x
+    half = size // 2
+    # pad channels, then sliding-window sum over the channel axis
+    padded = jnp.pad(sq, ((0, 0), (half, half), (0, 0), (0, 0)))
+    acc = jnp.zeros_like(x)
+    for i in range(size):
+        acc = acc + lax.dynamic_slice_in_dim(padded, i, x.shape[1], axis=1)
+    return x / jnp.power(k + (alpha / size) * acc, beta)
+
+
+def softmax_ref(x: jax.Array) -> jax.Array:
+    """Numerically stable softmax over the last axis."""
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def fc_forward_ref(x: jax.Array, w: jax.Array, b: jax.Array,
+                   act: str = "none") -> jax.Array:
+    """FC layer: x (B, Ni) flattened activations, w (Ni, No), b (No,)."""
+    return matmul_ref(x, w, b, act)
+
+
+def fc_backward_ref(dy: jax.Array, x: jax.Array, w: jax.Array):
+    """FC backward (paper Table II counts these as 2x forward FLOPs).
+
+    dy: (B, No) upstream grad; x: (B, Ni); w: (Ni, No).
+    Returns (dx, dw, db).
+    """
+    dx = jnp.dot(dy, w.T, preferred_element_type=jnp.float32)
+    dw = jnp.dot(x.T, dy, preferred_element_type=jnp.float32)
+    db = jnp.sum(dy, axis=0)
+    return dx, dw, db
+
+
+def relu_grad_ref(dy: jax.Array, y: jax.Array) -> jax.Array:
+    """Backprop through ReLU given forward output y."""
+    return jnp.where(y > 0.0, dy, 0.0)
+
+
+def im2col_ref(x: jax.Array, kh: int, kw: int, stride: int,
+               padding: int = 0) -> jax.Array:
+    """Extract conv patches: (B, C, H, W) -> (B*Ho*Wo, C*kh*kw).
+
+    Column order matches OIHW weights reshaped to (O, C*kh*kw).T: channel-
+    major, then kernel row, then kernel col.
+    """
+    b, c, h, w = x.shape
+    if padding:
+        x = jnp.pad(x, ((0, 0), (0, 0), (padding, padding), (padding, padding)))
+    ho = (h + 2 * padding - kh) // stride + 1
+    wo = (w + 2 * padding - kw) // stride + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            patch = x[:, :, i:i + stride * ho:stride, j:j + stride * wo:stride]
+            cols.append(patch)  # (B, C, Ho, Wo)
+    # (kh*kw, B, C, Ho, Wo) -> (B, Ho, Wo, C, kh, kw) -> (B*Ho*Wo, C*kh*kw)
+    stacked = jnp.stack(cols, axis=0).reshape(kh, kw, b, c, ho, wo)
+    out = stacked.transpose(2, 4, 5, 3, 0, 1).reshape(b * ho * wo, c * kh * kw)
+    return out

@@ -1,0 +1,32 @@
+"""L1 Pallas numerically-stable softmax kernel (rows = batch, cols = classes).
+
+The FC8 epilogue of the paper's network (FC-softmax, 4096 -> 1000).  One grid
+step per row block; max-subtraction, exp and the normalizing sum are all
+row-local so the block never leaves VMEM.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _softmax_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    o_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def softmax(x: jax.Array) -> jax.Array:
+    """Softmax over the last axis. x: (B, N)."""
+    b, n = x.shape
+    return pl.pallas_call(
+        _softmax_kernel,
+        grid=(b,),
+        in_specs=[pl.BlockSpec((1, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32))

@@ -1,0 +1,258 @@
+"""L2 — the paper's experimental network (Table I) as a JAX layer graph.
+
+Every layer function calls the L1 Pallas kernels from ``kernels/``; the whole
+module is build-time only: ``aot.py`` lowers each (layer, batch) variant and
+the full forward pass to HLO text which the Rust runtime executes.  Python is
+never on the request path.
+
+The network is the paper's Table I (AlexNet): 5 Conv-ReLU layers and 3 FC
+layers, with the LRN and 3x3/2 max-pool stages that make Table I's shapes
+consistent (conv1 out 96x55x55 -> pool -> conv2 in 96x27x27, etc.).  The
+paper gives 3x224x224 input with 55x55 conv1 output, which pins conv1 to
+pad=2 (floor((224+4-11)/4)+1 = 55).
+
+A second, tiny network ("tinynet") exercises the identical code path at
+integration-test cost; the Rust test-suite runs against its artifacts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels as K
+
+
+# ---------------------------------------------------------------------------
+# Layer descriptions (mirrors the Rust `model::LayerSpec` IR; see DESIGN.md)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    """Paper tuple <M_I, M_K, M_O, S, T> (+ explicit padding)."""
+    name: str
+    cin: int
+    hin: int
+    win: int
+    cout: int
+    kh: int
+    kw: int
+    stride: int
+    pad: int
+    act: str = "relu"
+
+    @property
+    def hout(self) -> int:
+        return (self.hin + 2 * self.pad - self.kh) // self.stride + 1
+
+    @property
+    def wout(self) -> int:
+        return (self.win + 2 * self.pad - self.kw) // self.stride + 1
+
+    def flops_per_image(self) -> int:
+        """2 * MACs, the paper's FLOP convention (Table II)."""
+        return 2 * self.cout * self.hout * self.wout * self.cin * self.kh * self.kw
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolSpec:
+    """Paper tuple <M_I, M_O, T, S, N>."""
+    name: str
+    c: int
+    hin: int
+    win: int
+    size: int
+    stride: int
+    kind: str = "max"
+
+    @property
+    def hout(self) -> int:
+        return (self.hin - self.size) // self.stride + 1
+
+    @property
+    def wout(self) -> int:
+        return (self.win - self.size) // self.stride + 1
+
+    def flops_per_image(self) -> int:
+        # one op per window element per output element
+        return self.c * self.hout * self.wout * self.size * self.size
+
+
+@dataclasses.dataclass(frozen=True)
+class LrnSpec:
+    """Paper tuple <M_I, T, S, alpha, beta>."""
+    name: str
+    c: int
+    h: int
+    w: int
+    size: int = 5
+    alpha: float = 1e-4
+    beta: float = 0.75
+    k: float = 2.0
+
+    def flops_per_image(self) -> int:
+        # square + window-sum + scale + pow per element (approx.)
+        return self.c * self.h * self.w * (self.size + 3)
+
+
+@dataclasses.dataclass(frozen=True)
+class FcSpec:
+    """Paper tuple <M_I, K_O>."""
+    name: str
+    nin: int
+    nout: int
+    act: str = "relu"
+    softmax: bool = False
+    # input may arrive as an NCHW volume to be flattened (FC6: 256x6x6)
+    in_shape: tuple[int, ...] | None = None
+
+    def flops_per_image(self) -> int:
+        return 2 * self.nin * self.nout
+
+    def backward_flops_per_image(self) -> int:
+        # dx and dw GEMMs — exactly 2x forward, matching Table II
+        return 2 * self.flops_per_image()
+
+
+# ---------------------------------------------------------------------------
+# Layer forward functions (x first, then weights — the artifact param order)
+# ---------------------------------------------------------------------------
+
+def conv_forward(spec: ConvSpec) -> Callable:
+    def fn(x, w, b):
+        return (K.conv2d(x, w, b, stride=spec.stride, padding=spec.pad,
+                         act=spec.act),)
+    return fn
+
+
+def pool_forward(spec: PoolSpec) -> Callable:
+    def fn(x):
+        return (K.pool(x, spec.size, spec.stride, spec.kind),)
+    return fn
+
+
+def lrn_forward(spec: LrnSpec) -> Callable:
+    def fn(x):
+        return (K.lrn(x, spec.size, spec.alpha, spec.beta, spec.k),)
+    return fn
+
+
+def fc_forward(spec: FcSpec) -> Callable:
+    def fn(x, w, b):
+        x2 = x.reshape(x.shape[0], -1)
+        y = K.matmul(x2, w, b, act=spec.act)
+        if spec.softmax:
+            y = K.softmax(y)
+        return (y,)
+    return fn
+
+
+def fc_backward(spec: FcSpec) -> Callable:
+    """(dy, x, w) -> (dx, dw, db); the Fig 8 workload."""
+    def fn(dy, x, w):
+        x2 = x.reshape(x.shape[0], -1)
+        return K.fc_backward(dy, x2, w)
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Networks
+# ---------------------------------------------------------------------------
+
+def alexnet_specs() -> list:
+    """The paper's Table I network, in execution order."""
+    return [
+        ConvSpec("conv1", 3, 224, 224, 96, 11, 11, stride=4, pad=2),
+        LrnSpec("lrn1", 96, 55, 55),
+        PoolSpec("pool1", 96, 55, 55, size=3, stride=2),
+        ConvSpec("conv2", 96, 27, 27, 256, 5, 5, stride=1, pad=2),
+        LrnSpec("lrn2", 256, 27, 27),
+        PoolSpec("pool2", 256, 27, 27, size=3, stride=2),
+        ConvSpec("conv3", 256, 13, 13, 384, 3, 3, stride=1, pad=1),
+        ConvSpec("conv4", 384, 13, 13, 384, 3, 3, stride=1, pad=1),
+        ConvSpec("conv5", 384, 13, 13, 256, 3, 3, stride=1, pad=1),
+        PoolSpec("pool5", 256, 13, 13, size=3, stride=2),
+        FcSpec("fc6", 9216, 4096, act="relu", in_shape=(256, 6, 6)),
+        FcSpec("fc7", 4096, 4096, act="relu"),
+        FcSpec("fc8", 4096, 1000, act="none", softmax=True),
+    ]
+
+
+def tinynet_specs() -> list:
+    """A 4-layer miniature with the same layer kinds, for cheap artifacts."""
+    return [
+        ConvSpec("tconv1", 3, 8, 8, 4, 3, 3, stride=1, pad=1),
+        LrnSpec("tlrn1", 4, 8, 8, size=3),
+        PoolSpec("tpool1", 4, 8, 8, size=2, stride=2),
+        FcSpec("tfc2", 64, 10, act="none", softmax=True, in_shape=(4, 4, 4)),
+    ]
+
+
+def weight_shapes(spec) -> list[tuple[int, ...]]:
+    """Runtime-parameter shapes for a layer (after the activation input)."""
+    if isinstance(spec, ConvSpec):
+        return [(spec.cout, spec.cin, spec.kh, spec.kw), (spec.cout,)]
+    if isinstance(spec, FcSpec):
+        return [(spec.nin, spec.nout), (spec.nout,)]
+    return []
+
+
+def input_shape(spec, batch: int) -> tuple[int, ...]:
+    if isinstance(spec, ConvSpec):
+        return (batch, spec.cin, spec.hin, spec.win)
+    if isinstance(spec, PoolSpec):
+        return (batch, spec.c, spec.hin, spec.win)
+    if isinstance(spec, LrnSpec):
+        return (batch, spec.c, spec.h, spec.w)
+    if isinstance(spec, FcSpec):
+        if spec.in_shape is not None:
+            return (batch, *spec.in_shape)
+        return (batch, spec.nin)
+    raise TypeError(spec)
+
+
+def output_shape(spec, batch: int) -> tuple[int, ...]:
+    if isinstance(spec, ConvSpec):
+        return (batch, spec.cout, spec.hout, spec.wout)
+    if isinstance(spec, PoolSpec):
+        return (batch, spec.c, spec.hout, spec.wout)
+    if isinstance(spec, LrnSpec):
+        return (batch, spec.c, spec.h, spec.w)
+    if isinstance(spec, FcSpec):
+        return (batch, spec.nout)
+    raise TypeError(spec)
+
+
+def layer_forward(spec) -> Callable:
+    if isinstance(spec, ConvSpec):
+        return conv_forward(spec)
+    if isinstance(spec, PoolSpec):
+        return pool_forward(spec)
+    if isinstance(spec, LrnSpec):
+        return lrn_forward(spec)
+    if isinstance(spec, FcSpec):
+        return fc_forward(spec)
+    raise TypeError(spec)
+
+
+def network_forward(specs: list) -> Callable:
+    """Whole-network forward: (image, w1, b1, w2, b2, ...) -> (probs,)."""
+    def fn(x, *params):
+        i = 0
+        for spec in specs:
+            nw = len(weight_shapes(spec))
+            layer_args = params[i:i + nw]
+            i += nw
+            (x,) = layer_forward(spec)(x, *layer_args)
+        return (x,)
+    return fn
+
+
+def network_param_shapes(specs: list) -> list[tuple[int, ...]]:
+    shapes: list[tuple[int, ...]] = []
+    for spec in specs:
+        shapes.extend(weight_shapes(spec))
+    return shapes

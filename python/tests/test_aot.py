@@ -1,0 +1,109 @@
+"""AOT pipeline tests: HLO text is parseable-shaped, manifest is complete
+and consistent with the model layer."""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import pytest
+
+from compile import aot, model as M
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    """Build tinynet artifacts into a temp dir once for this module."""
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    entries = aot.build_network("tinynet", M.tinynet_specs(),
+                                [1], out)
+    manifest = {"version": 1, "entries": entries}
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    return out, entries
+
+
+class TestArtifacts:
+    def test_entry_count(self, built):
+        _, entries = built
+        # 4 layers fwd + 1 fc bwd + 1 full  = 6 per batch
+        assert len(entries) == 6
+
+    def test_hlo_files_exist_and_are_hlo(self, built):
+        out, entries = built
+        for e in entries:
+            path = os.path.join(out, e["file"])
+            assert os.path.exists(path), e["name"]
+            text = open(path).read()
+            assert "HloModule" in text
+            assert "ENTRY" in text
+
+    def test_no_custom_calls(self, built):
+        """interpret=True must lower Pallas to plain HLO — a Mosaic
+        custom-call would be unloadable by the CPU PJRT client."""
+        out, entries = built
+        for e in entries:
+            text = open(os.path.join(out, e["file"])).read()
+            assert "custom-call" not in text, e["name"]
+
+    def test_manifest_shapes_match_model(self, built):
+        _, entries = built
+        spec = {s.name: s for s in M.tinynet_specs()}
+        for e in entries:
+            if e["layer"] == "__full__" or e["pass"] != "forward":
+                continue
+            s = spec[e["layer"]]
+            assert e["inputs"][0]["shape"] == \
+                list(M.input_shape(s, e["batch"]))
+            assert e["outputs"][0]["shape"] == \
+                list(M.output_shape(s, e["batch"]))
+
+    def test_flops_recorded(self, built):
+        _, entries = built
+        for e in entries:
+            assert e["flops_per_image"] > 0
+
+    def test_backward_has_three_outputs(self, built):
+        _, entries = built
+        bwd = [e for e in entries if e["pass"] == "backward"]
+        assert len(bwd) == 1
+        assert len(bwd[0]["outputs"]) == 3  # dx, dw, db
+
+
+class TestRepoManifest:
+    """Checks against the real artifacts/ if it has been built."""
+
+    MANIFEST = os.path.join(os.path.dirname(__file__), "..", "..",
+                            "artifacts", "manifest.json")
+
+    @pytest.fixture()
+    def manifest(self):
+        if not os.path.exists(self.MANIFEST):
+            pytest.skip("artifacts not built (run `make artifacts`)")
+        return json.load(open(self.MANIFEST))
+
+    def test_alexnet_complete(self, manifest):
+        names = {e["name"] for e in manifest["entries"]}
+        for b in aot.ALEXNET_BATCHES:
+            for layer in ["conv1", "conv2", "conv3", "conv4", "conv5",
+                          "lrn1", "lrn2", "pool1", "pool2", "pool5",
+                          "fc6", "fc7", "fc8"]:
+                assert f"{layer}_b{b}" in names
+            for fc in ["fc6", "fc7", "fc8"]:
+                assert f"{fc}_bwd_b{b}" in names
+            assert f"alexnet_full_b{b}" in names
+
+    def test_fc_flops_match_table2(self, manifest):
+        by_name = {e["name"]: e for e in manifest["entries"]}
+        assert by_name["fc6_b1"]["flops_per_image"] == 75497472
+        assert by_name["fc7_b1"]["flops_per_image"] == 33554432
+        assert by_name["fc8_b1"]["flops_per_image"] == 8192000
+        assert by_name["fc6_bwd_b1"]["flops_per_image"] == 150994944
+        assert by_name["fc7_bwd_b1"]["flops_per_image"] == 67108864
+        assert by_name["fc8_bwd_b1"]["flops_per_image"] == 16384000
+
+    def test_files_exist(self, manifest):
+        d = os.path.dirname(self.MANIFEST)
+        for e in manifest["entries"]:
+            assert os.path.exists(os.path.join(d, e["file"])), e["name"]

@@ -1,0 +1,263 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+This is the CORE correctness signal of the build path: if these pass, the
+HLO the AOT pipeline hands to the Rust runtime computes the right numbers.
+Fixed-shape cases cover the paper's exact layer configurations (Table I);
+hypothesis sweeps cover the shape/stride/activation space.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels as K
+from compile.kernels import ref
+
+RNG = np.random.default_rng(1234)
+
+
+def randf(*shape):
+    return jnp.asarray(RNG.standard_normal(shape, dtype=np.float32))
+
+
+def assert_close(got, want, rtol=2e-4, atol=2e-4):
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=rtol, atol=atol)
+
+
+# ---------------------------------------------------------------- matmul
+
+class TestMatmul:
+    @pytest.mark.parametrize("act", ["none", "relu", "sigmoid", "tanh"])
+    def test_acts(self, act):
+        x, w, b = randf(37, 91), randf(91, 53), randf(53)
+        assert_close(K.matmul(x, w, b, act=act), ref.matmul_ref(x, w, b, act))
+
+    def test_no_bias(self):
+        x, w = randf(16, 32), randf(32, 8)
+        assert_close(K.matmul(x, w), ref.matmul_ref(x, w))
+
+    def test_single_row(self):
+        x, w, b = randf(1, 9216), randf(9216, 64), randf(64)
+        assert_close(K.matmul(x, w, b), ref.matmul_ref(x, w, b))
+
+    def test_tile_multiples_exact(self):
+        # shapes exactly on tile boundaries: no padding path
+        x, w, b = randf(128, 512), randf(512, 128), randf(128)
+        assert_close(K.matmul(x, w, b, act="relu"),
+                     ref.matmul_ref(x, w, b, "relu"))
+
+    def test_multi_k_step_accumulation(self):
+        # K > BK forces the cross-step VMEM accumulator path
+        x, w = randf(8, 1600), randf(1600, 8)
+        assert_close(K.matmul(x, w, bk=512), ref.matmul_ref(x, w))
+
+    def test_custom_tiny_tiles(self):
+        x, w, b = randf(64, 64), randf(64, 64), randf(64)
+        assert_close(K.matmul(x, w, b, bm=16, bn=128, bk=128),
+                     ref.matmul_ref(x, w, b))
+
+    def test_fc6_shape(self):
+        # paper Table I FC6: 256*6*6 = 9216 -> 4096 (batch 1)
+        x, w, b = randf(1, 9216), randf(9216, 4096), randf(4096)
+        assert_close(K.matmul(x, w, b, act="relu"),
+                     ref.matmul_ref(x, w, b, "relu"), rtol=5e-4, atol=5e-4)
+
+    @settings(max_examples=25, deadline=None)
+    @given(m=st.integers(1, 70), k=st.integers(1, 90), n=st.integers(1, 70),
+           act=st.sampled_from(["none", "relu", "sigmoid", "tanh"]),
+           bias=st.booleans())
+    def test_prop_shapes(self, m, k, n, act, bias):
+        x, w = randf(m, k), randf(k, n)
+        b = randf(n) if bias else None
+        assert_close(K.matmul(x, w, b, act=act), ref.matmul_ref(x, w, b, act))
+
+    def test_vmem_budget(self):
+        # default tiles must fit comfortably in a 16 MiB VMEM
+        assert K.vmem_bytes() < 2 * 1024 * 1024
+
+
+# ---------------------------------------------------------------- conv
+
+class TestConv:
+    def test_basic(self):
+        x, w, b = randf(2, 3, 16, 16), randf(5, 3, 3, 3), randf(5)
+        assert_close(K.conv2d(x, w, b, stride=2, padding=1, act="relu"),
+                     ref.conv2d_ref(x, w, b, 2, 1, "relu"))
+
+    def test_stride4_11x11(self):
+        # conv1 geometry (scaled down): 11x11 stride 4, like Table I conv1
+        x, w, b = randf(1, 3, 47, 47), randf(8, 3, 11, 11), randf(8)
+        assert_close(K.conv2d(x, w, b, stride=4, act="relu"),
+                     ref.conv2d_ref(x, w, b, 4, 0, "relu"))
+
+    def test_padded_same_shape(self):
+        # conv3 geometry: 3x3 stride 1 pad 1 preserves HxW
+        x, w, b = randf(1, 4, 13, 13), randf(6, 4, 3, 3), randf(6)
+        got = K.conv2d(x, w, b, stride=1, padding=1, act="relu")
+        assert got.shape == (1, 6, 13, 13)
+        assert_close(got, ref.conv2d_ref(x, w, b, 1, 1, "relu"))
+
+    def test_1x1_kernel(self):
+        x, w = randf(2, 6, 5, 5), randf(3, 6, 1, 1)
+        assert_close(K.conv2d(x, w), ref.conv2d_ref(x, w))
+
+    def test_no_act(self):
+        x, w, b = randf(1, 2, 8, 8), randf(4, 2, 5, 5), randf(4)
+        assert_close(K.conv2d(x, w, b), ref.conv2d_ref(x, w, b))
+
+    @settings(max_examples=15, deadline=None)
+    @given(b=st.integers(1, 3), c=st.integers(1, 4), o=st.integers(1, 5),
+           hw=st.integers(7, 14), k=st.integers(1, 4), s=st.integers(1, 3),
+           p=st.integers(0, 2))
+    def test_prop_geometry(self, b, c, o, hw, k, s, p):
+        if hw + 2 * p < k:
+            return
+        x, w, bias = randf(b, c, hw, hw), randf(o, c, k, k), randf(o)
+        assert_close(K.conv2d(x, w, bias, stride=s, padding=p, act="relu"),
+                     ref.conv2d_ref(x, w, bias, s, p, "relu"))
+
+    def test_im2col_matches_conv(self):
+        # the im2col layout must agree with OIHW weight flattening
+        x, w = randf(2, 3, 9, 9), randf(4, 3, 3, 3)
+        cols = ref.im2col_ref(x, 3, 3, 2, 1)
+        y = (cols @ w.reshape(4, -1).T).reshape(2, 5, 5, 4).transpose(0, 3, 1, 2)
+        assert_close(y, ref.conv2d_ref(x, w, stride=2, padding=1), rtol=1e-4)
+
+
+# ---------------------------------------------------------------- pool
+
+class TestPool:
+    @pytest.mark.parametrize("kind", ["max", "avg"])
+    def test_alexnet_pool(self, kind):
+        # 3x3 stride 2: the pooling used between conv stages (55->27, 27->13)
+        x = randf(2, 8, 55, 55)
+        assert_close(K.pool(x, 3, 2, kind), ref.pool_ref(x, 3, 2, kind),
+                     rtol=1e-6, atol=1e-6)
+
+    def test_window_equals_stride(self):
+        x = randf(1, 4, 12, 12)
+        assert_close(K.pool(x, 2, 2), ref.pool_ref(x, 2, 2), rtol=1e-6)
+
+    def test_global_pool(self):
+        x = randf(1, 4, 6, 6)
+        got = K.pool(x, 6, 1, "avg")
+        assert got.shape == (1, 4, 1, 1)
+        assert_close(got, ref.pool_ref(x, 6, 1, "avg"), rtol=1e-6)
+
+    def test_negative_inputs_max(self):
+        x = -jnp.abs(randf(1, 2, 8, 8)) - 1.0
+        assert_close(K.pool(x, 3, 2), ref.pool_ref(x, 3, 2), rtol=1e-6)
+
+    @settings(max_examples=15, deadline=None)
+    @given(b=st.integers(1, 3), c=st.integers(1, 6), hw=st.integers(4, 16),
+           size=st.integers(1, 4), stride=st.integers(1, 3),
+           kind=st.sampled_from(["max", "avg"]))
+    def test_prop(self, b, c, hw, size, stride, kind):
+        if hw < size:
+            return
+        x = randf(b, c, hw, hw)
+        assert_close(K.pool(x, size, stride, kind),
+                     ref.pool_ref(x, size, stride, kind), rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------- lrn
+
+class TestLrn:
+    def test_alexnet_params(self):
+        x = randf(2, 96, 7, 7)
+        assert_close(K.lrn(x, 5, 1e-4, 0.75, 2.0),
+                     ref.lrn_ref(x, 5, 1e-4, 0.75, 2.0), rtol=1e-5)
+
+    def test_window_larger_than_channels(self):
+        x = randf(1, 3, 4, 4)
+        assert_close(K.lrn(x, 7), ref.lrn_ref(x, 7), rtol=1e-5)
+
+    def test_size_one(self):
+        x = randf(1, 4, 4, 4)
+        assert_close(K.lrn(x, 1), ref.lrn_ref(x, 1), rtol=1e-5)
+
+    @settings(max_examples=12, deadline=None)
+    @given(b=st.integers(1, 2), c=st.integers(1, 12), hw=st.integers(1, 8),
+           size=st.sampled_from([1, 3, 5]),
+           alpha=st.floats(1e-5, 1e-2), beta=st.floats(0.5, 1.0))
+    def test_prop(self, b, c, hw, size, alpha, beta):
+        x = randf(b, c, hw, hw)
+        assert_close(K.lrn(x, size, alpha, beta),
+                     ref.lrn_ref(x, size, alpha, beta), rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------- softmax
+
+class TestSoftmax:
+    def test_basic(self):
+        x = randf(4, 1000)  # FC8 geometry
+        got = K.softmax(x)
+        assert_close(got, ref.softmax_ref(x), rtol=1e-6, atol=1e-7)
+        assert_close(jnp.sum(got, axis=-1), jnp.ones(4), rtol=1e-6)
+
+    def test_large_logits_stable(self):
+        x = randf(2, 16) * 1000.0
+        got = np.asarray(K.softmax(x))
+        assert np.all(np.isfinite(got))
+        assert_close(got, ref.softmax_ref(x), rtol=1e-6, atol=1e-7)
+
+    def test_single_class(self):
+        x = randf(3, 1)
+        assert_close(K.softmax(x), jnp.ones((3, 1)), rtol=1e-6)
+
+    @settings(max_examples=15, deadline=None)
+    @given(b=st.integers(1, 5), n=st.integers(1, 64),
+           scale=st.floats(0.1, 100.0))
+    def test_prop(self, b, n, scale):
+        x = randf(b, n) * scale
+        assert_close(K.softmax(x), ref.softmax_ref(x), rtol=1e-5, atol=1e-7)
+
+
+# ---------------------------------------------------------------- fc_grad
+
+class TestFcBackward:
+    def test_basic(self):
+        dy, x, w = randf(4, 7), randf(4, 9), randf(9, 7)
+        for g, r in zip(K.fc_backward(dy, x, w), ref.fc_backward_ref(dy, x, w)):
+            assert_close(g, r)
+
+    def test_matches_jax_autodiff(self):
+        import jax
+        dy, x, w = randf(3, 5), randf(3, 8), randf(8, 5)
+        b = jnp.zeros(5)
+
+        def loss(x, w, b):
+            return jnp.sum(ref.fc_forward_ref(x, w, b) * dy)
+
+        gx, gw, gb = jax.grad(loss, argnums=(0, 1, 2))(x, w, b)
+        dx, dw, db = K.fc_backward(dy, x, w)
+        assert_close(dx, gx)
+        assert_close(dw, gw)
+        assert_close(db, gb)
+
+    def test_batch_one(self):
+        dy, x, w = randf(1, 4096), randf(1, 9216), randf(9216, 4096)
+        dx, dw, db = K.fc_backward(dy, x, w)
+        rdx, rdw, rdb = ref.fc_backward_ref(dy, x, w)
+        assert_close(dx, rdx, rtol=5e-4, atol=5e-4)
+        assert_close(db, rdb)
+        assert dw.shape == (9216, 4096)
+
+    @settings(max_examples=10, deadline=None)
+    @given(b=st.integers(1, 6), ni=st.integers(1, 40), no=st.integers(1, 40))
+    def test_prop(self, b, ni, no):
+        dy, x, w = randf(b, no), randf(b, ni), randf(ni, no)
+        for g, r in zip(K.fc_backward(dy, x, w), ref.fc_backward_ref(dy, x, w)):
+            assert_close(g, r)
+
+
+# ---------------------------------------------------------------- relu grad
+
+class TestReluGrad:
+    def test_masks_negative(self):
+        y = jnp.asarray([[-1.0, 0.0, 2.0]])
+        dy = jnp.ones((1, 3))
+        assert_close(ref.relu_grad_ref(dy, y), jnp.asarray([[0.0, 0.0, 1.0]]),
+                     rtol=0, atol=0)

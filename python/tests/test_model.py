@@ -1,0 +1,118 @@
+"""L2 model tests: Table I shape consistency, FLOP counts (Table II exact),
+and full-network forward vs a pure-reference composition."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile.kernels import ref
+
+RNG = np.random.default_rng(7)
+
+
+def randf(*shape):
+    return jnp.asarray(RNG.standard_normal(shape, dtype=np.float32))
+
+
+class TestTableOneShapes:
+    """The paper's Table I, row by row."""
+
+    @pytest.fixture(scope="class")
+    def specs(self):
+        return {s.name: s for s in M.alexnet_specs()}
+
+    @pytest.mark.parametrize("name,cin,hin,cout,hout", [
+        ("conv1", 3, 224, 96, 55),
+        ("conv2", 96, 27, 256, 27),
+        ("conv3", 256, 13, 384, 13),
+        ("conv4", 384, 13, 384, 13),
+        ("conv5", 384, 13, 256, 13),
+    ])
+    def test_conv_rows(self, specs, name, cin, hin, cout, hout):
+        s = specs[name]
+        assert (s.cin, s.hin, s.cout, s.hout, s.wout) == \
+            (cin, hin, cout, hout, hout)
+
+    @pytest.mark.parametrize("name,nin,nout", [
+        ("fc6", 9216, 4096), ("fc7", 4096, 4096), ("fc8", 4096, 1000),
+    ])
+    def test_fc_rows(self, specs, name, nin, nout):
+        s = specs[name]
+        assert (s.nin, s.nout) == (nin, nout)
+
+    def test_fc6_input_is_256x6x6(self, specs):
+        assert specs["fc6"].in_shape == (256, 6, 6)
+
+    def test_chain_consistency(self):
+        """Each layer's output shape equals the next layer's input shape."""
+        specs = M.alexnet_specs()
+        for a, b in zip(specs, specs[1:]):
+            out = M.output_shape(a, 1)
+            inp = M.input_shape(b, 1)
+            # FC layers may flatten the NCHW volume
+            assert int(np.prod(out)) == int(np.prod(inp)), (a.name, b.name)
+
+
+class TestTableTwoFlops:
+    """Table II: FC fp operations per image, forward and backward — exact."""
+
+    @pytest.mark.parametrize("name,fwd,bwd", [
+        ("fc6", 75497472, 150994944),
+        ("fc7", 33554432, 67108864),
+        ("fc8", 8192000, 16384000),
+    ])
+    def test_fc_flops(self, name, fwd, bwd):
+        spec = {s.name: s for s in M.alexnet_specs()}[name]
+        assert spec.flops_per_image() == fwd
+        assert spec.backward_flops_per_image() == bwd
+
+    def test_conv_flops_positive_and_ordered(self):
+        # conv2 is the FLOP-heaviest conv stage of AlexNet
+        convs = {s.name: s.flops_per_image() for s in M.alexnet_specs()
+                 if isinstance(s, M.ConvSpec)}
+        assert all(v > 0 for v in convs.values())
+        assert convs["conv2"] == max(convs.values())
+
+
+class TestNetworkForward:
+    def _params(self, specs):
+        return [randf(*s) * 0.05 for s in M.network_param_shapes(specs)]
+
+    def test_tinynet_matches_reference(self):
+        specs = M.tinynet_specs()
+        params = self._params(specs)
+        x = randf(2, 3, 8, 8)
+        (got,) = M.network_forward(specs)(x, *params)
+
+        # reference composition in pure jnp
+        conv, lrnspec, poolspec, fc = specs
+        y = ref.conv2d_ref(x, params[0], params[1], conv.stride, conv.pad,
+                           conv.act)
+        y = ref.lrn_ref(y, lrnspec.size, lrnspec.alpha, lrnspec.beta,
+                        lrnspec.k)
+        y = ref.pool_ref(y, poolspec.size, poolspec.stride, poolspec.kind)
+        y = ref.fc_forward_ref(y.reshape(2, -1), params[2], params[3], fc.act)
+        y = ref.softmax_ref(y)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(y),
+                                   rtol=2e-4, atol=2e-5)
+
+    def test_tinynet_output_is_distribution(self):
+        specs = M.tinynet_specs()
+        (got,) = M.network_forward(specs)(randf(3, 3, 8, 8),
+                                          *self._params(specs))
+        assert got.shape == (3, 10)
+        np.testing.assert_allclose(np.asarray(got).sum(axis=1),
+                                   np.ones(3), rtol=1e-5)
+
+    def test_param_shapes_alexnet(self):
+        shapes = M.network_param_shapes(M.alexnet_specs())
+        assert len(shapes) == 16  # 8 weighted layers x (w, b)
+        assert shapes[0] == (96, 3, 11, 11)
+        assert shapes[-2:] == [(4096, 1000), (1000,)]
+
+    def test_alexnet_total_params(self):
+        n = sum(int(np.prod(s))
+                for s in M.network_param_shapes(M.alexnet_specs()))
+        # AlexNet has ~61M parameters
+        assert 60_000_000 < n < 63_000_000

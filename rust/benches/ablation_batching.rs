@@ -1,0 +1,124 @@
+//! Ablation: dynamic-batching policy sweep on the mock engine — isolates
+//! the coordinator's batching behaviour from PJRT execution noise.  Sweeps
+//! max_batch and max_wait against bursty and steady arrival patterns.
+//!
+//! Run: `cargo bench --bench ablation_batching`
+
+use std::time::{Duration, Instant};
+
+use cnnlab::coordinator::{BatchPolicy, MockEngine, Server, ServerConfig};
+use cnnlab::report::{f2, si_time, Table};
+use cnnlab::util::{Rng, Samples, Tensor};
+
+fn run(
+    policy: BatchPolicy,
+    arrival: &str,
+    requests: usize,
+) -> (f64, f64, f64, f64) {
+    let mut engine = MockEngine::new(vec![1, 2, 4, 8, 16]);
+    // model a device whose batch cost is sublinear (the whole point of
+    // batching): 300us fixed + 50us per image
+    engine.delay = Duration::from_micros(0);
+    let server = Server::spawn(
+        BatchCostEngine { base_us: 300, per_img_us: 50 },
+        ServerConfig { policy, queue_capacity: 1024 },
+    );
+    let _ = engine;
+    let client = server.client();
+    let mut rng = Rng::new(11);
+    let t0 = Instant::now();
+    let mut pending = Vec::new();
+    for i in 0..requests {
+        match arrival {
+            "burst" => {
+                if i % 16 == 0 {
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+            }
+            _ => std::thread::sleep(Duration::from_secs_f64(
+                rng.next_exp(2000.0).min(0.005),
+            )),
+        }
+        let img = Tensor::randn(&[3, 8, 8], &mut rng, 0.1);
+        loop {
+            match client.submit(img.clone()) {
+                Ok(rx) => {
+                    pending.push(rx);
+                    break;
+                }
+                Err(_) => std::thread::sleep(Duration::from_micros(100)),
+            }
+        }
+    }
+    let mut lat = Samples::new();
+    for rx in pending {
+        lat.push(rx.recv().unwrap().unwrap().latency_s);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    (
+        requests as f64 / wall,
+        lat.p50(),
+        lat.p99(),
+        server.metrics().mean_batch_size(),
+    )
+}
+
+/// Engine whose cost is base + per-image (sublinear per image in batch).
+struct BatchCostEngine {
+    base_us: u64,
+    per_img_us: u64,
+}
+
+impl cnnlab::coordinator::InferenceEngine for BatchCostEngine {
+    fn available_batches(&self) -> &[usize] {
+        &[1, 2, 4, 8, 16]
+    }
+
+    fn infer(
+        &self,
+        images: &[Tensor],
+    ) -> anyhow::Result<(Vec<Tensor>, Duration)> {
+        let d = Duration::from_micros(
+            self.base_us + self.per_img_us * images.len() as u64,
+        );
+        std::thread::sleep(d);
+        Ok((
+            images
+                .iter()
+                .map(|_| Tensor::zeros(&[1, 2]))
+                .collect(),
+            d,
+        ))
+    }
+
+    fn image_shape(&self) -> &[usize] {
+        &[3, 8, 8]
+    }
+}
+
+fn main() {
+    let requests = 256;
+    for arrival in ["steady", "burst"] {
+        let mut t = Table::new(
+            &format!("Batching ablation — {arrival} arrivals, {requests} reqs"),
+            &["policy", "req/s", "p50", "p99", "mean batch"],
+        );
+        for (label, policy) in [
+            ("no batching".to_string(), BatchPolicy::immediate()),
+            ("b<=4 w=0.5ms".to_string(),
+             BatchPolicy::new(4, Duration::from_micros(500))),
+            ("b<=8 w=1ms".to_string(),
+             BatchPolicy::new(8, Duration::from_millis(1))),
+            ("b<=16 w=4ms".to_string(),
+             BatchPolicy::new(16, Duration::from_millis(4))),
+        ] {
+            let (rps, p50, p99, mb) = run(policy, arrival, requests);
+            t.row(&[label, f2(rps), si_time(p50), si_time(p99), f2(mb)]);
+        }
+        println!("{}", t.render());
+    }
+    println!(
+        "expected shape: batching raises throughput (amortized base cost) \
+         at some p50 latency cost; burst arrivals benefit most."
+    );
+}

@@ -1,0 +1,107 @@
+//! Ablation: DSE strategy quality/cost and FPGA engine-size sweep — the
+//! design choices DESIGN.md calls out.
+//!
+//! 1. greedy vs local-search vs exhaustive-by-kind: objective value and
+//!    search cost (mappings evaluated / wall time).
+//! 2. conv-engine PE sweep on the DE5: PEs -> fmax -> throughput -> power
+//!    (the paper's implicit design point at 54 PEs / 162 DSPs).
+//!
+//! Run: `cargo bench --bench ablation_dse`
+
+use std::time::Instant;
+
+use cnnlab::device::{Accelerator, FpgaDevice};
+use cnnlab::fpga::{fit, EngineConfig, DE5};
+use cnnlab::model::{alexnet, LayerKind};
+use cnnlab::power::fpga_power_w;
+use cnnlab::report::{f2, si_time, Table};
+use cnnlab::runtime::Pass;
+use cnnlab::sched::{
+    exhaustive_by_kind, greedy, local_search, simulate, Constraints,
+    EstimateSource, Objective,
+};
+
+fn main() -> anyhow::Result<()> {
+    let net = alexnet();
+    let src = EstimateSource::new();
+    let batch = 128;
+
+    // --- strategy ablation -------------------------------------------------
+    let mut t = Table::new(
+        "DSE strategy ablation (objective = EDP)",
+        &["strategy", "edp", "latency", "energy J", "search time"],
+    );
+    let obj = Objective::Edp;
+
+    let t0 = Instant::now();
+    let g = greedy(&net, &src, batch, obj)?;
+    let gt = simulate(&net, &g, &src, batch, 1)?;
+    let g_time = t0.elapsed();
+    t.row(&[
+        "greedy (hop-blind)".into(),
+        format!("{:.4}", gt.makespan_s * gt.energy_j),
+        si_time(gt.makespan_s),
+        f2(gt.energy_j),
+        si_time(g_time.as_secs_f64()),
+    ]);
+
+    let t0 = Instant::now();
+    let ls = local_search(&net, &src, batch, obj, &Constraints::default(), 6)?;
+    let ls_time = t0.elapsed();
+    t.row(&[
+        "greedy + local search".into(),
+        format!("{:.4}", ls.score),
+        si_time(ls.latency_s),
+        f2(ls.energy_j),
+        si_time(ls_time.as_secs_f64()),
+    ]);
+
+    let t0 = Instant::now();
+    let ex = exhaustive_by_kind(&net, &src, batch, obj, &Constraints::default())?;
+    let ex_time = t0.elapsed();
+    t.row(&[
+        "exhaustive by kind (81)".into(),
+        format!("{:.4}", ex.score),
+        si_time(ex.latency_s),
+        f2(ex.energy_j),
+        si_time(ex_time.as_secs_f64()),
+    ]);
+    println!("{}", t.render());
+    assert!(ls.score <= gt.makespan_s * gt.energy_j * 1.0001,
+            "local search must not be worse than its greedy seed");
+
+    // --- conv engine PE sweep ------------------------------------------------
+    let mut t = Table::new(
+        "DE5 conv-engine size sweep (conv2, batch 128)",
+        &["PEs", "DSPs", "fmax MHz", "fits?", "GFLOPS", "power W",
+          "GFLOPS/W"],
+    );
+    let conv2 = net.layer("conv2").unwrap();
+    let mut best_density = (0u64, 0.0f64);
+    for pes in [13, 27, 40, 54, 68, 80] {
+        let cfg = EngineConfig { kind: LayerKind::Conv, pes };
+        let dev = FpgaDevice::new().with_engine(cfg);
+        let est = dev.estimate(conv2, batch, Pass::Forward)?;
+        let fits = fit(&[cfg], &DE5).fits;
+        let density = est.gflops_per_w();
+        if fits && density > best_density.1 {
+            best_density = (pes, density);
+        }
+        t.row(&[
+            pes.to_string(),
+            cfg.resources().dsp_blocks.to_string(),
+            f2(cfg.fmax_mhz()),
+            fits.to_string(),
+            f2(est.gflops()),
+            f2(fpga_power_w(&cfg)),
+            f2(density),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "best fitting density at {} PEs — the paper's 54-PE (162 DSP) \
+         design point trades peak GFLOPS against clock degradation.",
+        best_density.0
+    );
+    Ok(())
+}

@@ -1,0 +1,112 @@
+//! Bench: end-to-end serving on the real PJRT runtime (measured, not
+//! modeled) — tinynet for statistical runs plus an AlexNet spot check.
+//! Reports throughput and latency percentiles per batching policy.
+//!
+//! Run: `cargo bench --bench e2e_serving` (requires `make artifacts`)
+
+use std::time::{Duration, Instant};
+
+use cnnlab::coordinator::{
+    BatchPolicy, PjrtEngine, Server, ServerConfig,
+};
+use cnnlab::model::{alexnet, tinynet};
+use cnnlab::report::{f2, si_time, Table};
+use cnnlab::runtime::{ExecutorService, Manifest};
+use cnnlab::util::{Rng, Samples, Tensor};
+
+fn main() -> anyhow::Result<()> {
+    let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    if !std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
+        println!("SKIP: artifacts not built (run `make artifacts`)");
+        return Ok(());
+    }
+    let manifest = Manifest::load(&dir)?;
+
+    // --- tinynet sweep ---------------------------------------------------
+    let net = tinynet();
+    let batches = manifest.batches_for(&net.name);
+    let svc = ExecutorService::spawn(&dir)?;
+    let image_shape: Vec<usize> =
+        cnnlab::model::shape::input_shape(&net.layers[0], 1)[1..].to_vec();
+    let requests = 200;
+
+    let mut table = Table::new(
+        &format!("E2E serving, {} x{requests} requests (measured)", net.name),
+        &["policy", "req/s", "p50", "p99", "mean batch"],
+    );
+    for (label, policy) in [
+        ("immediate".to_string(), BatchPolicy::immediate()),
+        (
+            "batch<=2, 1ms".to_string(),
+            BatchPolicy::new(2, Duration::from_millis(1)),
+        ),
+    ] {
+        let engine =
+            PjrtEngine::new(svc.handle(), &net, batches.clone(), 1)?;
+        let server = Server::spawn(
+            engine,
+            ServerConfig { policy, queue_capacity: 512 },
+        );
+        let client = server.client();
+        let mut rng = Rng::new(3);
+        let t0 = Instant::now();
+        let mut pending = Vec::new();
+        for _ in 0..requests {
+            std::thread::sleep(Duration::from_secs_f64(
+                rng.next_exp(600.0).min(0.01),
+            ));
+            let img = Tensor::randn(&image_shape, &mut rng, 0.1);
+            loop {
+                match client.submit(img.clone()) {
+                    Ok(rx) => {
+                        pending.push(rx);
+                        break;
+                    }
+                    Err(_) => std::thread::sleep(Duration::from_micros(200)),
+                }
+            }
+        }
+        let mut lat = Samples::new();
+        for rx in pending {
+            lat.push(rx.recv()??.latency_s);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        table.row(&[
+            label,
+            f2(requests as f64 / wall),
+            si_time(lat.p50()),
+            si_time(lat.p99()),
+            f2(server.metrics().mean_batch_size()),
+        ]);
+    }
+    println!("{}", table.render());
+
+    // --- AlexNet spot check ----------------------------------------------
+    let net = alexnet();
+    let batches = manifest.batches_for(&net.name);
+    if batches.is_empty() {
+        println!("alexnet artifacts missing; skipping spot check");
+        return Ok(());
+    }
+    let engine = PjrtEngine::new(svc.handle(), &net, vec![1], 1)?;
+    let image_shape: Vec<usize> =
+        cnnlab::model::shape::input_shape(&net.layers[0], 1)[1..].to_vec();
+    let mut rng = Rng::new(5);
+    let img = Tensor::randn(&image_shape, &mut rng, 0.05);
+    use cnnlab::coordinator::InferenceEngine;
+    // warm + 3 measured runs
+    let _ = engine.infer(std::slice::from_ref(&img))?;
+    let mut times = Samples::new();
+    for _ in 0..3 {
+        let (_, d) = engine.infer(std::slice::from_ref(&img))?;
+        times.push(d.as_secs_f64());
+    }
+    let flops = net.total_forward_flops() as f64;
+    println!(
+        "alexnet batch-1 full forward (measured on CPU PJRT): p50 {}  \
+         ({:.2} GFLOPS effective)",
+        si_time(times.p50()),
+        flops / times.p50() / 1e9
+    );
+    Ok(())
+}

@@ -1,0 +1,156 @@
+//! Bench/report: regenerate **Fig 6 (a)-(f)** — the GPU-vs-FPGA trade-off
+//! across the eight weighted layers: running time, throughput, power,
+//! energy, and both performance-density metrics, plus the paper's summary
+//! statistics (conv/FC averages) with the published values for comparison.
+//!
+//! Run: `cargo bench --bench fig6_tradeoff`
+
+use cnnlab::device::{Accelerator, FpgaDevice, GpuDevice};
+use cnnlab::metrics::{aggregate, of_kind, speedups, LayerRecord};
+use cnnlab::model::{alexnet, alexnet_fig6_layers, LayerKind};
+use cnnlab::power::KernelLib;
+use cnnlab::report::{f2, f3, Table};
+use cnnlab::runtime::Pass;
+
+/// The paper's implied operating point (DESIGN.md §5): Fig 6's energies
+/// are consistent with a ~256-image batch (GPU conv 8.67 J, FPGA conv
+/// 10.24 J, GPU FC 0.64 J, FPGA FC 12.24 J all land within ~10% there).
+const BATCH: usize = 256;
+
+fn collect(dev: &dyn Accelerator) -> Vec<LayerRecord> {
+    let net = alexnet();
+    alexnet_fig6_layers()
+        .iter()
+        .map(|name| {
+            let l = net.layer(name).unwrap();
+            LayerRecord {
+                layer: name.to_string(),
+                kind: l.kind(),
+                device: dev.name(),
+                batch: BATCH,
+                est: dev.estimate(l, BATCH, Pass::Forward).unwrap(),
+            }
+        })
+        .collect()
+}
+
+fn main() {
+    let gpu = GpuDevice::new(KernelLib::CuDnn);
+    let fpga = FpgaDevice::new();
+    let g = collect(&gpu);
+    let f = collect(&fpga);
+
+    // (a) running time + (b) throughput
+    let mut t = Table::new(
+        &format!("Fig 6(a,b): running time & throughput (batch {BATCH})"),
+        &["layer", "GPU ms", "FPGA ms", "speedup", "GPU GFLOPS",
+          "FPGA GFLOPS"],
+    );
+    for (rg, rf) in g.iter().zip(&f) {
+        t.row(&[
+            rg.layer.clone(),
+            f2(rg.time_ms()),
+            f2(rf.time_ms()),
+            f2(rf.est.time_s / rg.est.time_s),
+            f2(rg.gflops()),
+            f2(rf.gflops()),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // (c) power + (d) energy
+    let mut t = Table::new(
+        "Fig 6(c,d): power & energy per batch",
+        &["layer", "GPU W", "FPGA W", "GPU J", "FPGA J"],
+    );
+    for (rg, rf) in g.iter().zip(&f) {
+        t.row(&[
+            rg.layer.clone(),
+            f2(rg.power_w()),
+            f2(rf.power_w()),
+            f2(rg.energy_j()),
+            f2(rf.energy_j()),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // (e,f) performance density
+    let mut t = Table::new(
+        "Fig 6(e,f): performance density",
+        &["layer", "GPU GFLOPS/W", "FPGA GFLOPS/W", "GPU GFLOP/J",
+          "FPGA GFLOP/J"],
+    );
+    for (rg, rf) in g.iter().zip(&f) {
+        t.row(&[
+            rg.layer.clone(),
+            f2(rg.gflops_per_w()),
+            f2(rf.gflops_per_w()),
+            f3(rg.gflop_per_j()),
+            f3(rf.gflop_per_j()),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // paper-vs-model summary
+    let g_conv = aggregate(of_kind(&g, LayerKind::Conv));
+    let f_conv = aggregate(of_kind(&f, LayerKind::Conv));
+    let g_fc = aggregate(of_kind(&g, LayerKind::Fc));
+    let f_fc = aggregate(of_kind(&f, LayerKind::Fc));
+
+    let mut t = Table::new(
+        "Summary vs paper",
+        &["metric", "paper", "this repro"],
+    );
+    let peak_gpu = g.iter().map(LayerRecord::gflops).fold(0.0, f64::max);
+    let peak_fpga = f.iter().map(LayerRecord::gflops).fold(0.0, f64::max);
+    let max_fc_speedup = speedups(&g, &f)
+        .iter()
+        .filter(|(l, _)| l.starts_with("fc"))
+        .map(|(_, s)| 1.0 / s) // speedups(g, f) gives f/g... invert below
+        .fold(0.0f64, f64::max);
+    let _ = max_fc_speedup;
+    let fc_speedup = g
+        .iter()
+        .zip(&f)
+        .filter(|(rg, _)| rg.kind == LayerKind::Fc)
+        .map(|(rg, rf)| rf.est.time_s / rg.est.time_s)
+        .fold(0.0f64, f64::max);
+    t.row(&["GPU peak GFLOPS (conv4)".into(), "1632".into(), f2(peak_gpu)]);
+    t.row(&["FPGA peak GFLOPS (conv2)".into(), "25.56".into(), f2(peak_fpga)]);
+    t.row(&["max FC speedup GPU vs FPGA".into(), "~1000x".into(),
+            format!("{:.0}x", fc_speedup)]);
+    t.row(&["GPU conv power (W)".into(), "97".into(), f2(g_conv.mean_power_w)]);
+    t.row(&["FPGA conv power (W)".into(), "2.23".into(),
+            f2(f_conv.mean_power_w)]);
+    t.row(&["GPU conv energy (J)".into(), "8.67".into(),
+            f2(g_conv.mean_energy_j)]);
+    t.row(&["FPGA conv energy (J)".into(), "10.24".into(),
+            f2(f_conv.mean_energy_j)]);
+    t.row(&["GPU FC energy (J)".into(), "0.64".into(), f2(g_fc.mean_energy_j)]);
+    t.row(&["FPGA FC energy (J)".into(), "12.24".into(),
+            f2(f_fc.mean_energy_j)]);
+    t.row(&["GPU conv density (GFLOPS/W)".into(), "14.12".into(),
+            f2(g_conv.mean_gflops_per_w)]);
+    t.row(&["FPGA conv density (GFLOPS/W)".into(), "10.58".into(),
+            f2(f_conv.mean_gflops_per_w)]);
+    t.row(&["GPU FC density (GFLOPS/W)".into(), "14.20".into(),
+            f2(g_fc.mean_gflops_per_w)]);
+    t.row(&["FPGA FC density (GFLOPS/W)".into(), "0.82".into(),
+            f2(f_fc.mean_gflops_per_w)]);
+    println!("{}", t.render());
+
+    // shape assertions (who wins, and roughly by how much)
+    for (rg, rf) in g.iter().zip(&f) {
+        assert!(rg.est.time_s < rf.est.time_s, "GPU wins {} on time", rg.layer);
+    }
+    assert!(fc_speedup > 300.0 && fc_speedup < 2000.0, "FC gap ~1000x");
+    assert!(g_conv.mean_power_w / f_conv.mean_power_w > 35.0, "power gap");
+    assert!(g_fc.mean_energy_j < f_fc.mean_energy_j, "FC energy: GPU wins");
+    let conv_energy_ratio = f_conv.mean_energy_j / g_conv.mean_energy_j;
+    assert!(
+        (0.4..3.0).contains(&conv_energy_ratio),
+        "conv energies comparable, got ratio {conv_energy_ratio}"
+    );
+    println!("shape checks passed: GPU wins time on all layers; FC gap \
+              {fc_speedup:.0}x; conv energy comparable; FC energy GPU-won.");
+}

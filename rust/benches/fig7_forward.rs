@@ -1,0 +1,64 @@
+//! Bench/report: regenerate **Fig 7** — forward FC comparison between GPU
+//! kernel libraries (cuDNN vs cuBLAS): time, throughput, power, energy,
+//! and density, with the paper's headline ratios asserted.
+//!
+//! Run: `cargo bench --bench fig7_forward`
+
+use cnnlab::device::{Accelerator, GpuDevice};
+use cnnlab::model::alexnet;
+use cnnlab::power::KernelLib;
+use cnnlab::report::{f2, Table};
+use cnnlab::runtime::Pass;
+
+const BATCH: usize = 256;
+
+fn main() {
+    let net = alexnet();
+    let cudnn = GpuDevice::new(KernelLib::CuDnn);
+    let cublas = GpuDevice::new(KernelLib::CuBlas);
+
+    let mut t = Table::new(
+        &format!("Fig 7: FC forward, cuDNN vs cuBLAS (batch {BATCH})"),
+        &["layer", "cuDNN ms", "cuBLAS ms", "speedup", "cuDNN GFLOPS",
+          "cuBLAS GFLOPS", "cuDNN W", "cuBLAS W", "cuDNN J", "cuBLAS J"],
+    );
+    let mut sum_d = 0.0;
+    let mut sum_b = 0.0;
+    let mut pw_d = 0.0;
+    let mut pw_b = 0.0;
+    for name in ["fc6", "fc7", "fc8"] {
+        let l = net.layer(name).unwrap();
+        let d = cudnn.estimate(l, BATCH, Pass::Forward).unwrap();
+        let b = cublas.estimate(l, BATCH, Pass::Forward).unwrap();
+        sum_d += d.time_s;
+        sum_b += b.time_s;
+        pw_d += d.power_w;
+        pw_b += b.power_w;
+        t.row(&[
+            name.into(),
+            f2(d.time_s * 1e3),
+            f2(b.time_s * 1e3),
+            f2(d.time_s / b.time_s),
+            f2(d.gflops()),
+            f2(b.gflops()),
+            f2(d.power_w),
+            f2(b.power_w),
+            f2(d.energy_j()),
+            f2(b.energy_j()),
+        ]);
+    }
+    println!("{}", t.render());
+
+    let speedup = sum_d / sum_b;
+    let mut s = Table::new("Fig 7 summary vs paper", &["metric", "paper", "repro"]);
+    s.row(&["cuBLAS speedup (time)".into(), "1.69x".into(),
+            format!("{speedup:.2}x")]);
+    s.row(&["cuDNN avg power (W)".into(), "79.12".into(), f2(pw_d / 3.0)]);
+    s.row(&["cuBLAS avg power (W)".into(), "78.73".into(), f2(pw_b / 3.0)]);
+    println!("{}", s.render());
+
+    assert!((speedup - 1.69).abs() < 0.15, "fwd speedup {speedup}");
+    assert!((pw_d / 3.0 - 79.12).abs() < 0.01);
+    assert!((pw_b / 3.0 - 78.73).abs() < 0.01);
+    println!("Fig 7 shape checks passed.");
+}

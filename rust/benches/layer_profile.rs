@@ -1,0 +1,53 @@
+//! Perf instrument: measured per-layer wall time of every AlexNet artifact
+//! on the CPU PJRT backend — the profile that drives the §Perf pass.
+//!
+//! Run: `cargo bench --bench layer_profile`
+
+use cnnlab::model::{alexnet, cost, shape};
+use cnnlab::report::{f2, si_time, Table};
+use cnnlab::runtime::ExecutorService;
+use cnnlab::util::{Rng, Tensor};
+
+fn main() -> anyhow::Result<()> {
+    let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    if !std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
+        println!("SKIP: artifacts not built");
+        return Ok(());
+    }
+    let svc = ExecutorService::spawn(&dir)?;
+    let handle = svc.handle();
+    let net = alexnet();
+    let mut rng = Rng::new(3);
+    let batch = 1;
+
+    let mut t = Table::new(
+        "AlexNet per-layer measured time (CPU PJRT, batch 1)",
+        &["layer", "time", "MFLOP", "GFLOPS"],
+    );
+    let mut total = 0.0;
+    for layer in &net.layers {
+        let name = format!("{}_b{batch}", layer.name);
+        let mut inputs =
+            vec![Tensor::randn(&shape::input_shape(layer, batch), &mut rng, 0.05)];
+        for ps in shape::param_shapes(layer) {
+            inputs.push(Tensor::randn(&ps, &mut rng, 0.05));
+        }
+        handle.warm(&name)?;
+        let mut best = f64::INFINITY;
+        for _ in 0..2 {
+            let out = handle.run(&name, inputs.clone())?;
+            best = best.min(out.elapsed.as_secs_f64());
+        }
+        total += best;
+        let mflop = cost::forward_flops(layer) as f64 / 1e6;
+        t.row(&[
+            layer.name.clone(),
+            si_time(best),
+            f2(mflop),
+            f2(mflop / 1e3 / best),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("sum of layers: {}", si_time(total));
+    Ok(())
+}

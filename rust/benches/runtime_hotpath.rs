@@ -1,0 +1,116 @@
+//! Bench: runtime hot-path microbenchmarks (criterion-style timing without
+//! criterion): per-call overhead of the executor service, literal
+//! conversion, batcher, and the end-to-end request path on tinynet.
+//! This is the §Perf baseline/after instrument.
+//!
+//! Run: `cargo bench --bench runtime_hotpath`
+
+use std::time::{Duration, Instant};
+
+use cnnlab::coordinator::{BatchPolicy, Batcher, Request};
+use cnnlab::report::{si_time, Table};
+use cnnlab::runtime::ExecutorService;
+use cnnlab::util::{Rng, Samples, Tensor};
+
+/// Criterion-ish measurement: warmup then timed iterations, report
+/// mean/p50/p99 per iteration.
+fn bench<F: FnMut()>(
+    name: &str,
+    table: &mut Table,
+    warmup: usize,
+    iters: usize,
+    mut f: F,
+) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut s = Samples::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        s.push(t0.elapsed().as_secs_f64());
+    }
+    table.row(&[
+        name.into(),
+        iters.to_string(),
+        si_time(s.mean()),
+        si_time(s.p50()),
+        si_time(s.p99()),
+    ]);
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    let have_artifacts =
+        std::path::Path::new(&format!("{dir}/manifest.json")).exists();
+
+    let mut table = Table::new(
+        "Runtime hot-path microbenchmarks",
+        &["path", "iters", "mean", "p50", "p99"],
+    );
+    let mut rng = Rng::new(17);
+
+    // 1. batcher push+pop (pure coordinator overhead)
+    {
+        let mut b = Batcher::new(BatchPolicy::new(8, Duration::ZERO));
+        let img = Tensor::zeros(&[3, 8, 8]);
+        let mut i = 0u64;
+        bench("batcher push+pop x8", &mut table, 100, 2000, || {
+            let now = Instant::now();
+            for _ in 0..8 {
+                b.push(Request {
+                    id: i,
+                    image: img.clone(),
+                    arrived: now,
+                });
+                i += 1;
+            }
+            let batch = b.pop_ready(now).unwrap();
+            assert_eq!(batch.len(), 8);
+        });
+    }
+
+    // 2. tensor alloc + fill (buffer path)
+    bench("tensor randn 3x224x224", &mut table, 5, 50, || {
+        let t = Tensor::randn(&[3, 224, 224], &mut rng, 0.1);
+        std::hint::black_box(&t);
+    });
+
+    if have_artifacts {
+        let svc = ExecutorService::spawn(&dir)?;
+        let handle = svc.handle();
+        handle.warm("tfc2_b1")?;
+        handle.warm("tinynet_full_b1")?;
+
+        // 3. tiny artifact execution round trip (channel + PJRT + literal)
+        let x = Tensor::randn(&[1, 4, 4, 4], &mut rng, 0.1);
+        let w = Tensor::randn(&[64, 10], &mut rng, 0.1);
+        let b = Tensor::randn(&[10], &mut rng, 0.1);
+        bench("executor round-trip tfc2_b1", &mut table, 20, 200, || {
+            let out = handle
+                .run("tfc2_b1", vec![x.clone(), w.clone(), b.clone()])
+                .unwrap();
+            std::hint::black_box(&out);
+        });
+
+        // 4. full tinynet forward
+        let img = Tensor::randn(&[1, 3, 8, 8], &mut rng, 0.1);
+        let params: Vec<Tensor> = vec![
+            Tensor::randn(&[4, 3, 3, 3], &mut rng, 0.1),
+            Tensor::randn(&[4], &mut rng, 0.1),
+            Tensor::randn(&[64, 10], &mut rng, 0.1),
+            Tensor::randn(&[10], &mut rng, 0.1),
+        ];
+        bench("tinynet full fwd b1", &mut table, 10, 100, || {
+            let mut inputs = vec![img.clone()];
+            inputs.extend(params.iter().cloned());
+            let out = handle.run("tinynet_full_b1", inputs).unwrap();
+            std::hint::black_box(&out);
+        });
+    } else {
+        println!("(artifacts missing: PJRT paths skipped)");
+    }
+
+    println!("{}", table.render());
+    Ok(())
+}

@@ -1,0 +1,71 @@
+//! Bench/report: regenerate **Table I** — the experimental network
+//! description — from the model layer, with FLOP and parameter counts.
+//!
+//! Run: `cargo bench --bench table1_network`
+
+use cnnlab::model::{alexnet, cost, shape, LayerSpec};
+use cnnlab::report::Table;
+
+fn main() {
+    let net = alexnet();
+    let mut t = Table::new(
+        "Table I: experimental neural network model (AlexNet)",
+        &["layer", "type", "input", "kernel/window", "output", "stride",
+          "MFLOP/img", "params"],
+    );
+    for l in &net.layers {
+        let input = shape::input_shape(l, 1)[1..]
+            .iter()
+            .map(ToString::to_string)
+            .collect::<Vec<_>>()
+            .join("x");
+        let output = shape::output_shape(l, 1)[1..]
+            .iter()
+            .map(ToString::to_string)
+            .collect::<Vec<_>>()
+            .join("x");
+        let (ty, kernel, stride) = match &l.spec {
+            LayerSpec::Conv(c) => (
+                format!("Conv-{}", c.act.name()),
+                format!("{}x{}x{}x{}", c.cout, c.input.c, c.kh, c.kw),
+                c.stride.to_string(),
+            ),
+            LayerSpec::Lrn(n) => {
+                ("Norm-LRN".to_string(), format!("size {}", n.size), "-".into())
+            }
+            LayerSpec::Pool(p) => (
+                format!("Pool-{}", p.kind.name()),
+                format!("{}x{}", p.size, p.size),
+                p.stride.to_string(),
+            ),
+            LayerSpec::Fc(f) => (
+                if f.softmax { "FC-softmax" } else { "FC-dropout" }.to_string(),
+                format!("{}x{}", f.nin, f.nout),
+                "-".into(),
+            ),
+        };
+        t.row(&[
+            l.name.clone(),
+            ty,
+            input,
+            kernel,
+            output,
+            stride,
+            format!("{:.1}", cost::forward_flops(l) as f64 / 1e6),
+            cost::param_count(l).to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+
+    let total_flops: u64 = net.layers.iter().map(cost::forward_flops).sum();
+    let total_params: u64 = net.layers.iter().map(cost::param_count).sum();
+    println!(
+        "total: {:.2} GFLOP/image forward, {:.1}M parameters",
+        total_flops as f64 / 1e9,
+        total_params as f64 / 1e6
+    );
+    println!(
+        "paper check: conv1 out 96x55x55, conv2 out 256x27x27, fc6 9216->4096 \
+         [all asserted in cargo tests]"
+    );
+}

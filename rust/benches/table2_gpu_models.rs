@@ -1,0 +1,57 @@
+//! Bench/report: regenerate **Table II** — FC fp operations per image for
+//! forward and backward, for both GPU kernel libraries (the counts are
+//! library-independent; the paper lists both rows).
+//!
+//! Run: `cargo bench --bench table2_gpu_models`
+
+use cnnlab::model::{alexnet, cost};
+use cnnlab::report::Table;
+
+fn main() {
+    let net = alexnet();
+    let mut t = Table::new(
+        "Table II: network description of GPU models",
+        &["process", "layer", "type", "fp ops per image", "device"],
+    );
+    for device in ["K40-cudnn", "K40-cublas"] {
+        for name in ["fc6", "fc7", "fc8"] {
+            let l = net.layer(name).unwrap();
+            let ty = if name == "fc8" { "FC-softmax" } else { "FC-dropout" };
+            t.row(&[
+                "Forward".into(),
+                name.into(),
+                ty.into(),
+                cost::forward_flops(l).to_string(),
+                device.into(),
+            ]);
+        }
+    }
+    for device in ["K40-cudnn", "K40-cublas"] {
+        for name in ["fc6", "fc7", "fc8"] {
+            let l = net.layer(name).unwrap();
+            let ty = if name == "fc8" { "FC-softmax" } else { "FC-dropout" };
+            t.row(&[
+                "Backward".into(),
+                name.into(),
+                ty.into(),
+                cost::backward_flops(l).unwrap().to_string(),
+                device.into(),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+
+    // exact paper values, asserted here too so a drifting cost model makes
+    // the bench fail loudly
+    let want = [
+        ("fc6", 75_497_472u64, 150_994_944u64),
+        ("fc7", 33_554_432, 67_108_864),
+        ("fc8", 8_192_000, 16_384_000),
+    ];
+    for (name, fwd, bwd) in want {
+        let l = net.layer(name).unwrap();
+        assert_eq!(cost::forward_flops(l), fwd, "{name} forward");
+        assert_eq!(cost::backward_flops(l).unwrap(), bwd, "{name} backward");
+    }
+    println!("all six counts match the paper exactly.");
+}

@@ -1,0 +1,114 @@
+//! Bench/report: regenerate **Table III** — FPGA engine resource
+//! utilization and achieved clock frequency — from the resource model, and
+//! diff it against the published row.
+//!
+//! Run: `cargo bench --bench table3_resources`
+
+use cnnlab::fpga::{
+    engine_template, EngineConfig, DE5, TABLE_III,
+};
+use cnnlab::power::fpga_power_w;
+use cnnlab::report::{f2, Table};
+
+fn main() {
+    let mut t = Table::new(
+        "Table III: resource utilization of the accelerator on FPGA (DE5)",
+        &["resource", "Conv", "LRN", "FC", "Pooling"],
+    );
+    let res: Vec<_> = TABLE_III
+        .iter()
+        .map(|r| engine_template(r.kind).default_resources())
+        .collect();
+    let cfgs: Vec<_> = TABLE_III
+        .iter()
+        .map(|r| EngineConfig::default_for(r.kind))
+        .collect();
+    let pct = |num: u64, den: u64| format!("{num}/{den} ({:.0}%)",
+        num as f64 / den as f64 * 100.0);
+
+    t.row(&[
+        "ALUTs".into(),
+        res[0].aluts.to_string(),
+        res[1].aluts.to_string(),
+        res[2].aluts.to_string(),
+        res[3].aluts.to_string(),
+    ]);
+    t.row(&[
+        "Registers".into(),
+        res[0].registers.to_string(),
+        res[1].registers.to_string(),
+        res[2].registers.to_string(),
+        res[3].registers.to_string(),
+    ]);
+    t.row(&[
+        "Logic (ALMs)".into(),
+        pct(res[0].alms, DE5.alms),
+        pct(res[1].alms, DE5.alms),
+        pct(res[2].alms, DE5.alms),
+        pct(res[3].alms, DE5.alms),
+    ]);
+    t.row(&[
+        "I/O pins".into(),
+        pct(res[0].io_pins, DE5.io_pins),
+        pct(res[1].io_pins, DE5.io_pins),
+        pct(res[2].io_pins, DE5.io_pins),
+        pct(res[3].io_pins, DE5.io_pins),
+    ]);
+    t.row(&[
+        "DSP blocks".into(),
+        pct(res[0].dsp_blocks, DE5.dsp_blocks),
+        pct(res[1].dsp_blocks, DE5.dsp_blocks),
+        pct(res[2].dsp_blocks, DE5.dsp_blocks),
+        pct(res[3].dsp_blocks, DE5.dsp_blocks),
+    ]);
+    t.row(&[
+        "Memory bits".into(),
+        pct(res[0].memory_bits, DE5.memory_bits),
+        pct(res[1].memory_bits, DE5.memory_bits),
+        pct(res[2].memory_bits, DE5.memory_bits),
+        pct(res[3].memory_bits, DE5.memory_bits),
+    ]);
+    t.row(&[
+        "RAM (M20K) blocks".into(),
+        pct(res[0].m20k_blocks, DE5.m20k_blocks),
+        pct(res[1].m20k_blocks, DE5.m20k_blocks),
+        pct(res[2].m20k_blocks, DE5.m20k_blocks),
+        pct(res[3].m20k_blocks, DE5.m20k_blocks),
+    ]);
+    t.row(&[
+        "Actual clock (MHz)".into(),
+        f2(cfgs[0].fmax_mhz()),
+        f2(cfgs[1].fmax_mhz()),
+        f2(cfgs[2].fmax_mhz()),
+        f2(cfgs[3].fmax_mhz()),
+    ]);
+    t.row(&[
+        "Engine power (W, modeled)".into(),
+        f2(fpga_power_w(&cfgs[0])),
+        f2(fpga_power_w(&cfgs[1])),
+        f2(fpga_power_w(&cfgs[2])),
+        f2(fpga_power_w(&cfgs[3])),
+    ]);
+    println!("{}", t.render());
+
+    // diff vs published
+    let mut max_err = 0.0f64;
+    for (row, got) in TABLE_III.iter().zip(&res) {
+        for (name, g, w) in [
+            ("aluts", got.aluts, row.aluts),
+            ("registers", got.registers, row.registers),
+            ("alms", got.alms, row.alms),
+            ("dsp", got.dsp_blocks, row.dsp_blocks),
+            ("membits", got.memory_bits, row.memory_bits),
+            ("m20k", got.m20k_blocks, row.m20k_blocks),
+        ] {
+            assert_eq!(g, w, "{:?} {name}", row.kind);
+        }
+        let f = EngineConfig::default_for(row.kind).fmax_mhz();
+        max_err = max_err.max((f - row.clock_mhz).abs());
+    }
+    println!(
+        "resource counts reproduce the paper exactly; max clock error \
+         {max_err:.4} MHz"
+    );
+}

@@ -1,0 +1,129 @@
+//! Command-line parsing for the `cnnlab` leader binary (no `clap` offline).
+//!
+//! Grammar: `cnnlab <subcommand> [--key value]... [--flag]...`
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Args {
+    pub subcommand: String,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> anyhow::Result<Args> {
+        anyhow::ensure!(
+            !argv.is_empty(),
+            "usage: cnnlab <run|serve|dse|report|devices> [--opt value]"
+        );
+        let subcommand = argv[0].clone();
+        anyhow::ensure!(
+            !subcommand.starts_with('-'),
+            "first argument must be a subcommand, got {subcommand:?}"
+        );
+        let mut opts = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut i = 1;
+        while i < argv.len() {
+            let a = &argv[i];
+            let key = a
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow::anyhow!("unexpected argument {a:?}"))?;
+            anyhow::ensure!(!key.is_empty(), "empty option name");
+            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                anyhow::ensure!(
+                    opts.insert(key.to_string(), argv[i + 1].clone())
+                        .is_none(),
+                    "duplicate option --{key}"
+                );
+                i += 2;
+            } else {
+                flags.push(key.to_string());
+                i += 1;
+            }
+        }
+        Ok(Args { subcommand, opts, flags })
+    }
+
+    pub fn from_env() -> anyhow::Result<Args> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} needs an integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} needs a number, got {v:?}")),
+        }
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> anyhow::Result<Args> {
+        Args::parse(&s.iter().map(|x| x.to_string()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn parses_subcommand_opts_flags() {
+        let a = args(&["serve", "--batch", "8", "--verbose"]).unwrap();
+        assert_eq!(a.subcommand, "serve");
+        assert_eq!(a.get("batch"), Some("8"));
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.get_usize("batch", 1).unwrap(), 8);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = args(&["run"]).unwrap();
+        assert_eq!(a.get_or("network", "tinynet"), "tinynet");
+        assert_eq!(a.get_usize("batch", 4).unwrap(), 4);
+        assert_eq!(a.get_f64("rate", 1.5).unwrap(), 1.5);
+    }
+
+    #[test]
+    fn rejects_missing_subcommand() {
+        assert!(args(&[]).is_err());
+        assert!(args(&["--oops"]).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_numbers_and_dupes() {
+        let a = args(&["run", "--n", "abc"]).unwrap();
+        assert!(a.get_usize("n", 1).is_err());
+        assert!(args(&["run", "--x", "1", "--x", "2"]).is_err());
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = args(&["dse", "--cap", "50", "--json"]).unwrap();
+        assert_eq!(a.get_f64("cap", 0.0).unwrap(), 50.0);
+        assert!(a.has_flag("json"));
+    }
+}

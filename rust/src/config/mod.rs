@@ -1,0 +1,366 @@
+//! Typed configuration layer: TOML-subset parsing plus the config structs
+//! the launcher consumes (serving policy, DSE settings, custom networks).
+
+pub mod toml;
+
+use std::time::Duration;
+
+use crate::coordinator::BatchPolicy;
+use crate::model::{
+    Act, ConvSpec, FcSpec, Layer, LrnSpec, Network, PoolKind, PoolSpec,
+    Volume,
+};
+use crate::sched::Objective;
+
+pub use toml::{parse as parse_toml, TomlValue};
+
+/// Top-level launcher configuration (`cnnlab serve --config <file>`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServingConfig {
+    pub artifacts_dir: String,
+    pub network: String,
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    pub queue_capacity: usize,
+    pub requests: usize,
+    pub arrival_rate_hz: f64,
+    pub seed: u64,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig {
+            artifacts_dir: crate::DEFAULT_ARTIFACTS_DIR.into(),
+            network: "tinynet".into(),
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            queue_capacity: 256,
+            requests: 64,
+            arrival_rate_hz: 200.0,
+            seed: 42,
+        }
+    }
+}
+
+impl ServingConfig {
+    pub fn policy(&self) -> BatchPolicy {
+        BatchPolicy::new(self.max_batch, self.max_wait)
+    }
+
+    pub fn from_toml(doc: &TomlValue) -> anyhow::Result<ServingConfig> {
+        let mut cfg = ServingConfig::default();
+        if let Some(t) = doc.get("serving") {
+            if let Some(v) = t.get("artifacts_dir").and_then(TomlValue::as_str)
+            {
+                cfg.artifacts_dir = v.to_string();
+            }
+            if let Some(v) = t.get("network").and_then(TomlValue::as_str) {
+                cfg.network = v.to_string();
+            }
+            if let Some(v) = t.get("max_batch").and_then(TomlValue::as_int) {
+                anyhow::ensure!(v > 0, "max_batch must be positive");
+                cfg.max_batch = v as usize;
+            }
+            if let Some(v) =
+                t.get("max_wait_us").and_then(TomlValue::as_int)
+            {
+                cfg.max_wait = Duration::from_micros(v as u64);
+            }
+            if let Some(v) =
+                t.get("queue_capacity").and_then(TomlValue::as_int)
+            {
+                anyhow::ensure!(v > 0, "queue_capacity must be positive");
+                cfg.queue_capacity = v as usize;
+            }
+            if let Some(v) = t.get("requests").and_then(TomlValue::as_int) {
+                cfg.requests = v as usize;
+            }
+            if let Some(v) =
+                t.get("arrival_rate_hz").and_then(TomlValue::as_float)
+            {
+                anyhow::ensure!(v > 0.0, "arrival rate must be positive");
+                cfg.arrival_rate_hz = v;
+            }
+            if let Some(v) = t.get("seed").and_then(TomlValue::as_int) {
+                cfg.seed = v as u64;
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+/// DSE run configuration (`cnnlab dse`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DseConfig {
+    pub batch: usize,
+    pub objective: Objective,
+    pub power_cap_w: Option<f64>,
+}
+
+impl Default for DseConfig {
+    fn default() -> Self {
+        DseConfig { batch: 128, objective: Objective::Latency, power_cap_w: None }
+    }
+}
+
+impl DseConfig {
+    pub fn from_toml(doc: &TomlValue) -> anyhow::Result<DseConfig> {
+        let mut cfg = DseConfig::default();
+        if let Some(t) = doc.get("dse") {
+            if let Some(v) = t.get("batch").and_then(TomlValue::as_int) {
+                anyhow::ensure!(v > 0, "batch must be positive");
+                cfg.batch = v as usize;
+            }
+            if let Some(v) = t.get("objective").and_then(TomlValue::as_str) {
+                cfg.objective = parse_objective(v)?;
+            }
+            if let Some(v) =
+                t.get("power_cap_w").and_then(TomlValue::as_float)
+            {
+                cfg.power_cap_w = Some(v);
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+pub fn parse_objective(s: &str) -> anyhow::Result<Objective> {
+    Ok(match s {
+        "latency" => Objective::Latency,
+        "energy" => Objective::Energy,
+        "edp" => Objective::Edp,
+        other => anyhow::bail!("unknown objective {other:?}"),
+    })
+}
+
+/// Build a [`Network`] from a `[[layer]]` TOML description — the uniform
+/// user-facing model definition of the paper's §III.B, e.g.:
+///
+/// ```toml
+/// name = "mynet"
+/// [[layer]]
+/// type = "conv"
+/// name = "c1"
+/// input = [3, 32, 32]     # C, H, W
+/// cout = 16
+/// kernel = 3
+/// stride = 1
+/// pad = 1
+/// act = "relu"
+/// ```
+pub fn network_from_toml(doc: &TomlValue) -> anyhow::Result<Network> {
+    let name = doc
+        .get("name")
+        .and_then(TomlValue::as_str)
+        .unwrap_or("custom");
+    let layers_v = doc
+        .get("layer")
+        .and_then(TomlValue::as_array)
+        .ok_or_else(|| anyhow::anyhow!("no [[layer]] entries"))?;
+    let mut layers = Vec::new();
+    for (i, lt) in layers_v.iter().enumerate() {
+        let lname = lt
+            .get("name")
+            .and_then(TomlValue::as_str)
+            .map(str::to_string)
+            .unwrap_or_else(|| format!("layer{i}"));
+        let ty = lt.req_str("type")?;
+        let vol = |key: &str| -> anyhow::Result<Volume> {
+            let a = lt
+                .get(key)
+                .and_then(TomlValue::as_array)
+                .ok_or_else(|| {
+                    anyhow::anyhow!("{lname}: missing {key} = [C, H, W]")
+                })?;
+            anyhow::ensure!(a.len() == 3, "{lname}: {key} needs 3 dims");
+            Ok(Volume::new(
+                a[0].as_int().unwrap_or(0) as usize,
+                a[1].as_int().unwrap_or(0) as usize,
+                a[2].as_int().unwrap_or(0) as usize,
+            ))
+        };
+        let layer = match ty {
+            "conv" => Layer::conv(
+                &lname,
+                ConvSpec {
+                    input: vol("input")?,
+                    cout: lt.req_int("cout")? as usize,
+                    kh: lt.req_int("kernel")? as usize,
+                    kw: lt.req_int("kernel")? as usize,
+                    stride: lt.req_int("stride")? as usize,
+                    pad: lt
+                        .get("pad")
+                        .and_then(TomlValue::as_int)
+                        .unwrap_or(0) as usize,
+                    act: Act::parse(
+                        lt.get("act")
+                            .and_then(TomlValue::as_str)
+                            .unwrap_or("relu"),
+                    )?,
+                },
+            ),
+            "lrn" => Layer::lrn(
+                &lname,
+                LrnSpec {
+                    input: vol("input")?,
+                    size: lt
+                        .get("size")
+                        .and_then(TomlValue::as_int)
+                        .unwrap_or(5) as usize,
+                    alpha: lt
+                        .get("alpha")
+                        .and_then(TomlValue::as_float)
+                        .unwrap_or(1e-4),
+                    beta: lt
+                        .get("beta")
+                        .and_then(TomlValue::as_float)
+                        .unwrap_or(0.75),
+                    k: lt
+                        .get("k")
+                        .and_then(TomlValue::as_float)
+                        .unwrap_or(2.0),
+                },
+            ),
+            "pool" => Layer::pool(
+                &lname,
+                PoolSpec {
+                    input: vol("input")?,
+                    kind: PoolKind::parse(
+                        lt.get("kind")
+                            .and_then(TomlValue::as_str)
+                            .unwrap_or("max"),
+                    )?,
+                    size: lt.req_int("size")? as usize,
+                    stride: lt.req_int("stride")? as usize,
+                },
+            ),
+            "fc" => Layer::fc(
+                &lname,
+                FcSpec {
+                    nin: lt.req_int("nin")? as usize,
+                    nout: lt.req_int("nout")? as usize,
+                    act: Act::parse(
+                        lt.get("act")
+                            .and_then(TomlValue::as_str)
+                            .unwrap_or("none"),
+                    )?,
+                    softmax: lt
+                        .get("softmax")
+                        .and_then(TomlValue::as_bool)
+                        .unwrap_or(false),
+                    in_volume: lt
+                        .get("in_volume")
+                        .map(|_| vol("in_volume"))
+                        .transpose()?,
+                },
+            ),
+            other => anyhow::bail!("{lname}: unknown layer type {other:?}"),
+        };
+        layers.push(layer);
+    }
+    Network::new(name, layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serving_defaults_and_overrides() {
+        let doc = parse_toml(
+            r#"
+            [serving]
+            network = "alexnet"
+            max_batch = 4
+            max_wait_us = 500
+            arrival_rate_hz = 50.0
+        "#,
+        )
+        .unwrap();
+        let cfg = ServingConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.network, "alexnet");
+        assert_eq!(cfg.max_batch, 4);
+        assert_eq!(cfg.max_wait, Duration::from_micros(500));
+        assert_eq!(cfg.arrival_rate_hz, 50.0);
+        // untouched fields keep defaults
+        assert_eq!(cfg.queue_capacity, 256);
+    }
+
+    #[test]
+    fn serving_rejects_zero_batch() {
+        let doc = parse_toml("[serving]\nmax_batch = 0").unwrap();
+        assert!(ServingConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn dse_config() {
+        let doc = parse_toml(
+            "[dse]\nbatch = 64\nobjective = \"edp\"\npower_cap_w = 50.0",
+        )
+        .unwrap();
+        let cfg = DseConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.batch, 64);
+        assert_eq!(cfg.objective, Objective::Edp);
+        assert_eq!(cfg.power_cap_w, Some(50.0));
+    }
+
+    #[test]
+    fn dse_bad_objective() {
+        let doc =
+            parse_toml("[dse]\nobjective = \"speed\"").unwrap();
+        assert!(DseConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn network_from_toml_roundtrip() {
+        let doc = parse_toml(
+            r#"
+            name = "mini"
+            [[layer]]
+            type = "conv"
+            name = "c1"
+            input = [3, 16, 16]
+            cout = 8
+            kernel = 3
+            stride = 1
+            pad = 1
+            [[layer]]
+            type = "pool"
+            name = "p1"
+            input = [8, 16, 16]
+            size = 2
+            stride = 2
+            [[layer]]
+            type = "fc"
+            name = "f1"
+            nin = 512
+            nout = 10
+            softmax = true
+            in_volume = [8, 8, 8]
+        "#,
+        )
+        .unwrap();
+        let net = network_from_toml(&doc).unwrap();
+        assert_eq!(net.name, "mini");
+        assert_eq!(net.layers.len(), 3);
+        net.validate().unwrap();
+    }
+
+    #[test]
+    fn network_from_toml_shape_break_rejected() {
+        let doc = parse_toml(
+            r#"
+            [[layer]]
+            type = "fc"
+            nin = 10
+            nout = 4
+            [[layer]]
+            type = "fc"
+            nin = 99
+            nout = 2
+        "#,
+        )
+        .unwrap();
+        assert!(network_from_toml(&doc).is_err());
+    }
+}

@@ -1,0 +1,411 @@
+//! TOML-subset parser (no `serde`/`toml` crates offline).
+//!
+//! Supported: `[section]` and `[section.sub]` headers, `[[array.of.tables]]`,
+//! `key = value` with strings, integers, floats, booleans, and flat arrays;
+//! `#` comments.  This covers every config file CNNLab ships.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+    Table(BTreeMap<String, TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn as_table(&self) -> Option<&BTreeMap<String, TomlValue>> {
+        match self {
+            TomlValue::Table(t) => Some(t),
+            _ => None,
+        }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.as_table().and_then(|t| t.get(key))
+    }
+
+    /// Dotted-path lookup: `get_path("serving.batch.max")`.
+    pub fn get_path(&self, path: &str) -> Option<&TomlValue> {
+        let mut cur = self;
+        for part in path.split('.') {
+            cur = cur.get(part)?;
+        }
+        Some(cur)
+    }
+
+    pub fn req_str(&self, key: &str) -> anyhow::Result<&str> {
+        self.get(key)
+            .and_then(TomlValue::as_str)
+            .ok_or_else(|| anyhow::anyhow!("missing string key {key:?}"))
+    }
+
+    pub fn req_int(&self, key: &str) -> anyhow::Result<i64> {
+        self.get(key)
+            .and_then(TomlValue::as_int)
+            .ok_or_else(|| anyhow::anyhow!("missing integer key {key:?}"))
+    }
+
+    pub fn req_float(&self, key: &str) -> anyhow::Result<f64> {
+        self.get(key)
+            .and_then(TomlValue::as_float)
+            .ok_or_else(|| anyhow::anyhow!("missing float key {key:?}"))
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("toml parse error at line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+/// Parse a document into a root table.
+pub fn parse(text: &str) -> Result<TomlValue, TomlError> {
+    let mut root: BTreeMap<String, TomlValue> = BTreeMap::new();
+    let mut cursor: Vec<String> = Vec::new(); // current table path
+    for (ln, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        let err = |msg: &str| TomlError { line: ln + 1, msg: msg.into() };
+        if let Some(inner) = line
+            .strip_prefix("[[")
+            .and_then(|s| s.strip_suffix("]]"))
+        {
+            let path: Vec<String> =
+                inner.split('.').map(|s| s.trim().to_string()).collect();
+            push_array_table(&mut root, &path)
+                .map_err(|m| err(&m))?;
+            cursor = path;
+            cursor.push("__last__".into());
+        } else if let Some(inner) =
+            line.strip_prefix('[').and_then(|s| s.strip_suffix(']'))
+        {
+            cursor =
+                inner.split('.').map(|s| s.trim().to_string()).collect();
+            ensure_table(&mut root, &cursor).map_err(|m| err(&m))?;
+        } else if let Some(eq) = find_eq(&line) {
+            let key = line[..eq].trim().to_string();
+            if key.is_empty() {
+                return Err(err("empty key"));
+            }
+            let val = parse_value(line[eq + 1..].trim())
+                .map_err(|m| err(&m))?;
+            insert(&mut root, &cursor, key, val).map_err(|m| err(&m))?;
+        } else {
+            return Err(err("expected key = value or [section]"));
+        }
+    }
+    Ok(TomlValue::Table(root))
+}
+
+fn strip_comment(s: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &s[..i],
+            _ => {}
+        }
+    }
+    s
+}
+
+fn find_eq(s: &str) -> Option<usize> {
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '=' if !in_str => return Some(i),
+            _ => {}
+        }
+    }
+    None
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    let s = s.trim();
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(body) = s.strip_prefix('"') {
+        let body = body
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        return Ok(TomlValue::Str(
+            body.replace("\\\"", "\"").replace("\\\\", "\\"),
+        ));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(body) =
+        s.strip_prefix('[').and_then(|b| b.strip_suffix(']'))
+    {
+        let mut items = Vec::new();
+        for part in split_top_level(body) {
+            let p = part.trim();
+            if !p.is_empty() {
+                items.push(parse_value(p)?);
+            }
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    let clean = s.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value {s:?}"))
+}
+
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut depth = 0;
+    let mut in_str = false;
+    let mut cur = String::new();
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            '[' if !in_str => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' if !in_str => {
+                depth -= 1;
+                cur.push(c);
+            }
+            ',' if !in_str && depth == 0 => {
+                out.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+fn ensure_table(
+    root: &mut BTreeMap<String, TomlValue>,
+    path: &[String],
+) -> Result<(), String> {
+    let mut cur = root;
+    for p in path {
+        let entry = cur
+            .entry(p.clone())
+            .or_insert_with(|| TomlValue::Table(BTreeMap::new()));
+        cur = match entry {
+            TomlValue::Table(t) => t,
+            TomlValue::Array(a) => match a.last_mut() {
+                Some(TomlValue::Table(t)) => t,
+                _ => return Err(format!("{p:?} is not a table")),
+            },
+            _ => return Err(format!("{p:?} is not a table")),
+        };
+    }
+    Ok(())
+}
+
+fn push_array_table(
+    root: &mut BTreeMap<String, TomlValue>,
+    path: &[String],
+) -> Result<(), String> {
+    let (last, prefix) =
+        path.split_last().ok_or_else(|| "empty path".to_string())?;
+    let mut cur = root;
+    for p in prefix {
+        let entry = cur
+            .entry(p.clone())
+            .or_insert_with(|| TomlValue::Table(BTreeMap::new()));
+        cur = match entry {
+            TomlValue::Table(t) => t,
+            _ => return Err(format!("{p:?} is not a table")),
+        };
+    }
+    let arr = cur
+        .entry(last.clone())
+        .or_insert_with(|| TomlValue::Array(Vec::new()));
+    match arr {
+        TomlValue::Array(a) => {
+            a.push(TomlValue::Table(BTreeMap::new()));
+            Ok(())
+        }
+        _ => Err(format!("{last:?} is not an array of tables")),
+    }
+}
+
+fn insert(
+    root: &mut BTreeMap<String, TomlValue>,
+    cursor: &[String],
+    key: String,
+    val: TomlValue,
+) -> Result<(), String> {
+    // resolve cursor, where a trailing "__last__" means "last array elem"
+    let mut cur = root;
+    for p in cursor {
+        if p == "__last__" {
+            continue;
+        }
+        let entry = cur
+            .entry(p.clone())
+            .or_insert_with(|| TomlValue::Table(BTreeMap::new()));
+        cur = match entry {
+            TomlValue::Table(t) => t,
+            TomlValue::Array(a) => match a.last_mut() {
+                Some(TomlValue::Table(t)) => t,
+                _ => return Err(format!("{p:?} array has no table")),
+            },
+            _ => return Err(format!("{p:?} is not a table")),
+        };
+    }
+    if cur.contains_key(&key) {
+        return Err(format!("duplicate key {key:?}"));
+    }
+    cur.insert(key, val);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_and_sections() {
+        let doc = r#"
+            name = "cnnlab"   # comment
+            workers = 4
+            ratio = 0.5
+            debug = true
+
+            [serving]
+            max_batch = 8
+        "#;
+        let t = parse(doc).unwrap();
+        assert_eq!(t.get("name").unwrap().as_str(), Some("cnnlab"));
+        assert_eq!(t.get("workers").unwrap().as_int(), Some(4));
+        assert_eq!(t.get("ratio").unwrap().as_float(), Some(0.5));
+        assert_eq!(t.get("debug").unwrap().as_bool(), Some(true));
+        assert_eq!(
+            t.get_path("serving.max_batch").unwrap().as_int(),
+            Some(8)
+        );
+    }
+
+    #[test]
+    fn arrays() {
+        let t = parse("batches = [1, 4, 8]\nnames = [\"a\", \"b\"]")
+            .unwrap();
+        let b: Vec<i64> = t
+            .get("batches")
+            .unwrap()
+            .as_array()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_int().unwrap())
+            .collect();
+        assert_eq!(b, vec![1, 4, 8]);
+        assert_eq!(
+            t.get("names").unwrap().as_array().unwrap()[1].as_str(),
+            Some("b")
+        );
+    }
+
+    #[test]
+    fn nested_sections() {
+        let doc = "[a.b]\nx = 1\n[a.c]\ny = 2";
+        let t = parse(doc).unwrap();
+        assert_eq!(t.get_path("a.b.x").unwrap().as_int(), Some(1));
+        assert_eq!(t.get_path("a.c.y").unwrap().as_int(), Some(2));
+    }
+
+    #[test]
+    fn array_of_tables() {
+        let doc = r#"
+            [[layer]]
+            name = "conv1"
+            [[layer]]
+            name = "pool1"
+        "#;
+        let t = parse(doc).unwrap();
+        let layers = t.get("layer").unwrap().as_array().unwrap();
+        assert_eq!(layers.len(), 2);
+        assert_eq!(layers[0].get("name").unwrap().as_str(), Some("conv1"));
+        assert_eq!(layers[1].get("name").unwrap().as_str(), Some("pool1"));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("this is not toml").is_err());
+        assert!(parse("= 3").is_err());
+        assert!(parse("x = ").is_err());
+        assert!(parse("x = \"unterminated").is_err());
+    }
+
+    #[test]
+    fn duplicate_key_rejected() {
+        assert!(parse("a = 1\na = 2").is_err());
+    }
+
+    #[test]
+    fn underscored_numbers() {
+        let t = parse("big = 1_000_000").unwrap();
+        assert_eq!(t.get("big").unwrap().as_int(), Some(1_000_000));
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let t = parse("s = \"a#b\"").unwrap();
+        assert_eq!(t.get("s").unwrap().as_str(), Some("a#b"));
+    }
+}

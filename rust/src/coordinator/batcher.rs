@@ -1,0 +1,179 @@
+//! Dynamic batcher — forms execution batches from the request stream.
+//!
+//! Policy: close a batch when it reaches `max_batch` requests OR when the
+//! oldest queued request has waited `max_wait`.  This is the classic
+//! latency/throughput dial the serving ablation sweeps.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use super::request::Request;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl BatchPolicy {
+    pub fn new(max_batch: usize, max_wait: Duration) -> BatchPolicy {
+        assert!(max_batch > 0);
+        BatchPolicy { max_batch, max_wait }
+    }
+
+    /// No batching: every request goes out alone, immediately.
+    pub fn immediate() -> BatchPolicy {
+        BatchPolicy { max_batch: 1, max_wait: Duration::ZERO }
+    }
+}
+
+/// Accumulates requests and releases batches per policy.
+#[derive(Debug)]
+pub struct Batcher {
+    policy: BatchPolicy,
+    queue: VecDeque<Request>,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Batcher {
+        Batcher { policy, queue: VecDeque::new() }
+    }
+
+    pub fn policy(&self) -> BatchPolicy {
+        self.policy
+    }
+
+    pub fn push(&mut self, req: Request) {
+        self.queue.push_back(req);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Pop a ready batch, if any, according to the policy at time `now`.
+    pub fn pop_ready(&mut self, now: Instant) -> Option<Vec<Request>> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let full = self.queue.len() >= self.policy.max_batch;
+        let expired = now
+            .duration_since(self.queue.front().unwrap().arrived)
+            >= self.policy.max_wait;
+        if !(full || expired) {
+            return None;
+        }
+        let n = self.queue.len().min(self.policy.max_batch);
+        Some(self.queue.drain(..n).collect())
+    }
+
+    /// Flush everything (shutdown path), in max_batch chunks.
+    pub fn drain_all(&mut self) -> Vec<Vec<Request>> {
+        let mut out = Vec::new();
+        while !self.queue.is_empty() {
+            let n = self.queue.len().min(self.policy.max_batch);
+            out.push(self.queue.drain(..n).collect());
+        }
+        out
+    }
+
+    /// Earliest moment a timeout-triggered batch could become ready
+    /// (None when the queue is empty) — lets the server sleep precisely.
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.queue
+            .front()
+            .map(|r| r.arrived + self.policy.max_wait)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Tensor;
+
+    fn req(id: u64, arrived: Instant) -> Request {
+        Request { id, image: Tensor::zeros(&[1]), arrived }
+    }
+
+    #[test]
+    fn batch_closes_on_size() {
+        let mut b = Batcher::new(BatchPolicy::new(3, Duration::from_secs(10)));
+        let t0 = Instant::now();
+        b.push(req(1, t0));
+        b.push(req(2, t0));
+        assert!(b.pop_ready(t0).is_none(), "not full, not expired");
+        b.push(req(3, t0));
+        let batch = b.pop_ready(t0).unwrap();
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), [1, 2, 3]);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn batch_closes_on_timeout() {
+        let mut b =
+            Batcher::new(BatchPolicy::new(8, Duration::from_millis(5)));
+        let t0 = Instant::now();
+        b.push(req(1, t0));
+        assert!(b.pop_ready(t0).is_none());
+        let later = t0 + Duration::from_millis(6);
+        let batch = b.pop_ready(later).unwrap();
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn size_trigger_caps_batch() {
+        let mut b = Batcher::new(BatchPolicy::new(2, Duration::ZERO));
+        let t0 = Instant::now();
+        for i in 0..5 {
+            b.push(req(i, t0));
+        }
+        assert_eq!(b.pop_ready(t0).unwrap().len(), 2);
+        assert_eq!(b.pop_ready(t0).unwrap().len(), 2);
+        assert_eq!(b.pop_ready(t0).unwrap().len(), 1);
+        assert!(b.pop_ready(t0).is_none());
+    }
+
+    #[test]
+    fn immediate_policy_never_waits() {
+        let mut b = Batcher::new(BatchPolicy::immediate());
+        let t0 = Instant::now();
+        b.push(req(9, t0));
+        assert_eq!(b.pop_ready(t0).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut b = Batcher::new(BatchPolicy::new(10, Duration::ZERO));
+        let t0 = Instant::now();
+        for i in 0..7 {
+            b.push(req(i, t0));
+        }
+        let ids: Vec<u64> =
+            b.pop_ready(t0).unwrap().iter().map(|r| r.id).collect();
+        assert_eq!(ids, (0..7).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn drain_all_chunks() {
+        let mut b = Batcher::new(BatchPolicy::new(4, Duration::from_secs(1)));
+        let t0 = Instant::now();
+        for i in 0..10 {
+            b.push(req(i, t0));
+        }
+        let chunks = b.drain_all();
+        assert_eq!(
+            chunks.iter().map(Vec::len).collect::<Vec<_>>(),
+            vec![4, 4, 2]
+        );
+    }
+
+    #[test]
+    fn deadline_tracks_oldest() {
+        let mut b =
+            Batcher::new(BatchPolicy::new(4, Duration::from_millis(10)));
+        assert!(b.next_deadline().is_none());
+        let t0 = Instant::now();
+        b.push(req(1, t0));
+        assert_eq!(b.next_deadline(), Some(t0 + Duration::from_millis(10)));
+    }
+}

@@ -1,0 +1,233 @@
+//! Inference engine abstraction: the batcher hands a formed batch to an
+//! engine; the production engine stacks the images, runs the whole-network
+//! PJRT artifact at the nearest available batch size, and splits the
+//! outputs.  A mock engine keeps the coordinator tests hermetic.
+
+use std::time::Duration;
+
+use crate::model::Network;
+use crate::runtime::ExecutorHandle;
+use crate::util::{Rng, Tensor};
+
+/// Runs batches of images through a network.
+pub trait InferenceEngine: Send + 'static {
+    /// Batch sizes for which a compiled executable exists, ascending.
+    fn available_batches(&self) -> &[usize];
+
+    /// Run `images` (n <= max available batch); returns one output tensor
+    /// per image plus the execution wall time.
+    fn infer(
+        &self,
+        images: &[Tensor],
+    ) -> anyhow::Result<(Vec<Tensor>, Duration)>;
+
+    /// Per-image input shape (without batch dim).
+    fn image_shape(&self) -> &[usize];
+}
+
+/// Production engine: whole-network artifacts + fixed synthetic weights.
+pub struct PjrtEngine {
+    handle: ExecutorHandle,
+    network: String,
+    batches: Vec<usize>,
+    image_shape: Vec<usize>,
+    /// network weights, shared across requests (w1, b1, w2, b2, ...)
+    /// Host copy of the network weights (device-resident copies are held
+    /// by the executor after `preload_params`); kept for re-preloading on
+    /// executor restart and for tests that inspect the weights.
+    pub params: Vec<Tensor>,
+    out_elems_per_image: usize,
+}
+
+impl PjrtEngine {
+    /// Build for a network whose artifacts exist in the manifest; weights
+    /// are N(0, 0.05) from the given seed (the experiments measure layer
+    /// compute, not accuracy — DESIGN.md §2).
+    pub fn new(
+        handle: ExecutorHandle,
+        net: &Network,
+        batches: Vec<usize>,
+        seed: u64,
+    ) -> anyhow::Result<PjrtEngine> {
+        anyhow::ensure!(!batches.is_empty(), "need at least one batch size");
+        let mut sorted = batches.clone();
+        sorted.sort();
+        let mut rng = Rng::new(seed);
+        let mut params = Vec::new();
+        for layer in &net.layers {
+            for shape in crate::model::shape::param_shapes(layer) {
+                params.push(Tensor::randn(&shape, &mut rng, 0.05));
+            }
+        }
+        let image_shape = crate::model::shape::input_shape(&net.layers[0], 1)
+            [1..]
+            .to_vec();
+        let out_shape =
+            crate::model::shape::output_shape(net.layers.last().unwrap(), 1);
+        // warm every batch variant so serving latency is compile-free, and
+        // park the weights on the device once (zero-copy per request)
+        for &b in &sorted {
+            let name = format!("{}_full_b{b}", net.name);
+            handle.warm(&name)?;
+            handle.preload_params(&name, params.clone())?;
+        }
+        Ok(PjrtEngine {
+            handle,
+            network: net.name.clone(),
+            batches: sorted,
+            image_shape,
+            params,
+            out_elems_per_image: out_shape[1..].iter().product(),
+        })
+    }
+
+    /// Smallest available batch >= n (or the largest available).
+    pub fn pick_batch(&self, n: usize) -> usize {
+        *self
+            .batches
+            .iter()
+            .find(|&&b| b >= n)
+            .unwrap_or_else(|| self.batches.last().unwrap())
+    }
+}
+
+impl InferenceEngine for PjrtEngine {
+    fn available_batches(&self) -> &[usize] {
+        &self.batches
+    }
+
+    fn infer(
+        &self,
+        images: &[Tensor],
+    ) -> anyhow::Result<(Vec<Tensor>, Duration)> {
+        let n = images.len();
+        anyhow::ensure!(n > 0, "empty batch");
+        let b = self.pick_batch(n);
+        anyhow::ensure!(
+            n <= b,
+            "batch of {n} exceeds largest artifact batch {b}"
+        );
+        // stack + zero-pad to the artifact batch
+        let mut shape = vec![b];
+        shape.extend_from_slice(&self.image_shape);
+        let per: usize = self.image_shape.iter().product();
+        let mut stacked = Tensor::zeros(&shape);
+        for (i, img) in images.iter().enumerate() {
+            anyhow::ensure!(
+                img.shape() == self.image_shape
+                    || (img.shape().len() == self.image_shape.len() + 1
+                        && img.shape()[0] == 1
+                        && &img.shape()[1..] == self.image_shape.as_slice()),
+                "image {i} shape {:?} != {:?}",
+                img.shape(),
+                self.image_shape
+            );
+            stacked.data_mut()[i * per..(i + 1) * per]
+                .copy_from_slice(img.data());
+        }
+        // weights are resident on the device (preloaded in `new`): only
+        // the stacked activation crosses the channel
+        let out = self
+            .handle
+            .run_cached(&format!("{}_full_b{b}", self.network), vec![stacked])?;
+        let probs = &out.outputs[0];
+        let k = self.out_elems_per_image;
+        let per_image: Vec<Tensor> = (0..n)
+            .map(|i| {
+                Tensor::from_vec(
+                    &[1, k],
+                    probs.data()[i * k..(i + 1) * k].to_vec(),
+                )
+                .unwrap()
+            })
+            .collect();
+        Ok((per_image, out.elapsed))
+    }
+
+    fn image_shape(&self) -> &[usize] {
+        &self.image_shape
+    }
+}
+
+/// Hermetic engine for coordinator tests: deterministic output, optional
+/// artificial delay and failure injection.
+pub struct MockEngine {
+    pub batches: Vec<usize>,
+    pub image_shape: Vec<usize>,
+    pub delay: Duration,
+    /// fail every Nth call (0 = never)
+    pub fail_every: usize,
+    calls: std::sync::atomic::AtomicUsize,
+}
+
+impl MockEngine {
+    pub fn new(batches: Vec<usize>) -> MockEngine {
+        MockEngine {
+            batches,
+            image_shape: vec![3, 8, 8],
+            delay: Duration::from_micros(200),
+            fail_every: 0,
+            calls: std::sync::atomic::AtomicUsize::new(0),
+        }
+    }
+}
+
+impl InferenceEngine for MockEngine {
+    fn available_batches(&self) -> &[usize] {
+        &self.batches
+    }
+
+    fn infer(
+        &self,
+        images: &[Tensor],
+    ) -> anyhow::Result<(Vec<Tensor>, Duration)> {
+        let c = self
+            .calls
+            .fetch_add(1, std::sync::atomic::Ordering::SeqCst)
+            + 1;
+        if self.fail_every > 0 && c % self.fail_every == 0 {
+            anyhow::bail!("injected engine failure on call {c}");
+        }
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        let outs = images
+            .iter()
+            .map(|img| {
+                // echo a fingerprint of the input so tests can check routing
+                let sum: f32 = img.data().iter().sum();
+                Tensor::from_vec(&[1, 2], vec![sum, img.len() as f32])
+                    .unwrap()
+            })
+            .collect();
+        Ok((outs, self.delay))
+    }
+
+    fn image_shape(&self) -> &[usize] {
+        &self.image_shape
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mock_engine_echoes_fingerprint() {
+        let e = MockEngine::new(vec![1, 4]);
+        let img = Tensor::from_vec(&[3, 8, 8], vec![0.5; 192]).unwrap();
+        let (outs, _) = e.infer(&[img]).unwrap();
+        assert_eq!(outs.len(), 1);
+        assert!((outs[0].data()[0] - 96.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn mock_engine_failure_injection() {
+        let mut e = MockEngine::new(vec![1]);
+        e.fail_every = 2;
+        let img = Tensor::zeros(&[3, 8, 8]);
+        assert!(e.infer(std::slice::from_ref(&img)).is_ok());
+        assert!(e.infer(std::slice::from_ref(&img)).is_err());
+        assert!(e.infer(std::slice::from_ref(&img)).is_ok());
+    }
+}

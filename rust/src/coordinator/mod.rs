@@ -1,0 +1,15 @@
+//! Serving coordinator — the paper's middleware runtime (Fig 2/4): uniform
+//! request API in front, dynamic batching, bounded-queue backpressure,
+//! router over accelerator workers, per-request latency metrics.
+
+pub mod batcher;
+pub mod engine;
+pub mod request;
+pub mod router;
+pub mod server;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use engine::{InferenceEngine, MockEngine, PjrtEngine};
+pub use request::{Request, Response};
+pub use router::{RoutePolicy, Router};
+pub use server::{Client, Server, ServerConfig, ServerMetrics};

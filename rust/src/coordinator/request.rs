@@ -1,0 +1,44 @@
+//! Request/response types for the serving coordinator.
+
+use std::time::Instant;
+
+use crate::util::Tensor;
+
+/// A single inference request (one image).
+#[derive(Debug)]
+pub struct Request {
+    pub id: u64,
+    pub image: Tensor,
+    pub arrived: Instant,
+}
+
+/// The response: class probabilities plus latency accounting.
+#[derive(Debug)]
+pub struct Response {
+    pub id: u64,
+    pub probs: Tensor,
+    /// queueing delay before the batch was formed
+    pub queue_s: f64,
+    /// batch execution time (shared across the batch)
+    pub exec_s: f64,
+    /// total request latency (arrival -> completion)
+    pub latency_s: f64,
+    /// how many requests shared the executed batch
+    pub batch_size: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_construction() {
+        let r = Request {
+            id: 7,
+            image: Tensor::zeros(&[1, 3, 8, 8]),
+            arrived: Instant::now(),
+        };
+        assert_eq!(r.id, 7);
+        assert_eq!(r.image.shape(), &[1, 3, 8, 8]);
+    }
+}

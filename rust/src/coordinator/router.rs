@@ -1,0 +1,142 @@
+//! Request router — spreads the incoming stream over several coordinator
+//! instances (one per accelerator worker), the front door of the paper's
+//! Fig 2 middleware stack.
+//!
+//! Policies: round-robin and least-outstanding (join-shortest-queue).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::util::Tensor;
+
+use super::request::Response;
+use super::server::Client;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutePolicy {
+    RoundRobin,
+    LeastOutstanding,
+}
+
+pub struct Router {
+    clients: Vec<Client>,
+    policy: RoutePolicy,
+    rr: AtomicUsize,
+}
+
+impl Router {
+    pub fn new(clients: Vec<Client>, policy: RoutePolicy) -> Router {
+        assert!(!clients.is_empty(), "router needs at least one backend");
+        Router { clients, policy, rr: AtomicUsize::new(0) }
+    }
+
+    pub fn backends(&self) -> usize {
+        self.clients.len()
+    }
+
+    /// Pick a backend index per policy.
+    pub fn pick(&self) -> usize {
+        match self.policy {
+            RoutePolicy::RoundRobin => {
+                self.rr.fetch_add(1, Ordering::Relaxed) % self.clients.len()
+            }
+            RoutePolicy::LeastOutstanding => self
+                .clients
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, c)| c.outstanding())
+                .map(|(i, _)| i)
+                .unwrap(),
+        }
+    }
+
+    /// Route and run one request (blocking).  On backpressure from the
+    /// picked backend, fails over to the others before giving up.
+    pub fn infer(&self, image: Tensor) -> anyhow::Result<Response> {
+        let first = self.pick();
+        let n = self.clients.len();
+        let mut last_err = None;
+        for k in 0..n {
+            let idx = (first + k) % n;
+            match self.clients[idx].submit(image.clone()) {
+                Ok(rx) => {
+                    return rx.recv().map_err(|_| {
+                        anyhow::anyhow!("backend dropped the reply")
+                    })?;
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        Err(last_err.unwrap_or_else(|| anyhow::anyhow!("no backends")))
+    }
+
+    pub fn client(&self, idx: usize) -> &Client {
+        &self.clients[idx]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::MockEngine;
+    use crate::coordinator::server::{Server, ServerConfig};
+    use crate::coordinator::BatchPolicy;
+    use std::time::Duration;
+
+    fn tiny_image() -> Tensor {
+        Tensor::zeros(&[3, 8, 8])
+    }
+
+    fn spawn_backend(delay_us: u64) -> Server {
+        let mut e = MockEngine::new(vec![1, 4, 8]);
+        e.delay = Duration::from_micros(delay_us);
+        Server::spawn(
+            e,
+            ServerConfig {
+                policy: BatchPolicy::new(4, Duration::from_micros(100)),
+                queue_capacity: 64,
+            },
+        )
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let s1 = spawn_backend(10);
+        let s2 = spawn_backend(10);
+        let r = Router::new(
+            vec![s1.client(), s2.client()],
+            RoutePolicy::RoundRobin,
+        );
+        let picks: Vec<usize> = (0..6).map(|_| r.pick()).collect();
+        assert_eq!(picks, vec![0, 1, 0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn routes_and_answers() {
+        let s1 = spawn_backend(20);
+        let s2 = spawn_backend(20);
+        let r = Router::new(
+            vec![s1.client(), s2.client()],
+            RoutePolicy::LeastOutstanding,
+        );
+        for _ in 0..10 {
+            let resp = r.infer(tiny_image()).unwrap();
+            assert_eq!(resp.probs.shape(), &[1, 2]);
+        }
+        let total = s1.metrics().completed.load(Ordering::Relaxed)
+            + s2.metrics().completed.load(Ordering::Relaxed);
+        assert_eq!(total, 10);
+    }
+
+    #[test]
+    fn least_outstanding_prefers_idle() {
+        let s1 = spawn_backend(10);
+        let s2 = spawn_backend(10);
+        let r = Router::new(
+            vec![s1.client(), s2.client()],
+            RoutePolicy::LeastOutstanding,
+        );
+        // submit a slow request to backend 0 manually so it has backlog
+        let _pending = s1.client().submit(tiny_image()).unwrap();
+        assert_eq!(r.pick(), 1);
+    }
+}

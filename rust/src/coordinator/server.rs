@@ -1,0 +1,303 @@
+//! The serving coordinator: a leader thread that owns the dynamic batcher
+//! and an inference engine, plus a `Client` handle for submitters.
+//!
+//! Flow (the paper's Fig 2: cloud users -> uniform API -> middleware ->
+//! accelerators): requests enter through a *bounded* channel (backpressure),
+//! the leader forms batches per [`BatchPolicy`], executes them on the
+//! engine, and answers each request with its latency breakdown.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::util::{Samples, Tensor};
+
+use super::batcher::{BatchPolicy, Batcher};
+use super::engine::InferenceEngine;
+use super::request::{Request, Response};
+
+struct Envelope {
+    req: Request,
+    reply: Sender<anyhow::Result<Response>>,
+}
+
+/// Aggregated serving metrics (the E2E experiment's output).
+#[derive(Default)]
+pub struct ServerMetrics {
+    pub completed: AtomicU64,
+    pub errors: AtomicU64,
+    pub rejected: AtomicU64,
+    inner: Mutex<MetricsInner>,
+}
+
+#[derive(Default)]
+struct MetricsInner {
+    latency: Samples,
+    queue_delay: Samples,
+    batch_sizes: Samples,
+}
+
+impl ServerMetrics {
+    fn record(&self, resp: &Response) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        let mut m = self.inner.lock().unwrap();
+        m.latency.push(resp.latency_s);
+        m.queue_delay.push(resp.queue_s);
+        m.batch_sizes.push(resp.batch_size as f64);
+    }
+
+    pub fn latency_summary(&self) -> crate::util::Summary {
+        self.inner.lock().unwrap().latency.summary()
+    }
+
+    pub fn queue_delay_summary(&self) -> crate::util::Summary {
+        self.inner.lock().unwrap().queue_delay.summary()
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        self.inner.lock().unwrap().batch_sizes.mean()
+    }
+}
+
+/// Submission handle (clone freely across threads).
+#[derive(Clone)]
+pub struct Client {
+    tx: SyncSender<Envelope>,
+    next_id: Arc<AtomicU64>,
+    outstanding: Arc<AtomicUsize>,
+    metrics: Arc<ServerMetrics>,
+}
+
+impl Client {
+    /// Submit and wait for the response (blocking).
+    pub fn infer(&self, image: Tensor) -> anyhow::Result<Response> {
+        let rx = self.submit(image)?;
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("server dropped the reply"))?
+    }
+
+    /// Submit without waiting; returns the reply channel.
+    /// Errors with `ServerBusy` when the bounded queue is full
+    /// (backpressure) — callers decide whether to retry or shed.
+    pub fn submit(
+        &self,
+        image: Tensor,
+    ) -> anyhow::Result<Receiver<anyhow::Result<Response>>> {
+        let (reply, rx) = channel();
+        let env = Envelope {
+            req: Request {
+                id: self.next_id.fetch_add(1, Ordering::Relaxed),
+                image,
+                arrived: Instant::now(),
+            },
+            reply,
+        };
+        match self.tx.try_send(env) {
+            Ok(()) => {
+                self.outstanding.fetch_add(1, Ordering::Relaxed);
+                Ok(rx)
+            }
+            Err(std::sync::mpsc::TrySendError::Full(_)) => {
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                anyhow::bail!("ServerBusy: request queue full")
+            }
+            Err(std::sync::mpsc::TrySendError::Disconnected(_)) => {
+                anyhow::bail!("server is down")
+            }
+        }
+    }
+
+    pub fn outstanding(&self) -> usize {
+        self.outstanding.load(Ordering::Relaxed)
+    }
+
+    pub fn metrics(&self) -> &ServerMetrics {
+        &self.metrics
+    }
+}
+
+/// Coordinator configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ServerConfig {
+    pub policy: BatchPolicy,
+    /// Bounded request-queue capacity (backpressure threshold).
+    pub queue_capacity: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            policy: BatchPolicy::new(8, Duration::from_millis(2)),
+            queue_capacity: 256,
+        }
+    }
+}
+
+/// The leader: owns the batcher loop thread.
+pub struct Server {
+    client: Client,
+    shutdown: Arc<AtomicBool>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    pub fn spawn<E: InferenceEngine>(
+        engine: E,
+        config: ServerConfig,
+    ) -> Server {
+        let (tx, rx) = sync_channel::<Envelope>(config.queue_capacity);
+        let metrics = Arc::new(ServerMetrics::default());
+        let outstanding = Arc::new(AtomicUsize::new(0));
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let client = Client {
+            tx,
+            next_id: Arc::new(AtomicU64::new(0)),
+            outstanding: Arc::clone(&outstanding),
+            metrics: Arc::clone(&metrics),
+        };
+        let sd = Arc::clone(&shutdown);
+        let join = std::thread::Builder::new()
+            .name("cnnlab-leader".into())
+            .spawn(move || {
+                leader_loop(engine, config, rx, metrics, outstanding, sd)
+            })
+            .expect("spawn leader");
+        Server { client, shutdown, join: Some(join) }
+    }
+
+    pub fn client(&self) -> Client {
+        self.client.clone()
+    }
+
+    pub fn metrics(&self) -> Arc<ServerMetrics> {
+        Arc::clone(&self.client.metrics)
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        // signal shutdown (Client clones may outlive the server, so the
+        // channel alone cannot signal it); the leader drains, then exits
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn leader_loop<E: InferenceEngine>(
+    engine: E,
+    config: ServerConfig,
+    rx: Receiver<Envelope>,
+    metrics: Arc<ServerMetrics>,
+    outstanding: Arc<AtomicUsize>,
+    shutdown: Arc<AtomicBool>,
+) {
+    let mut batcher = Batcher::new(config.policy);
+    let mut replies: std::collections::HashMap<
+        u64,
+        Sender<anyhow::Result<Response>>,
+    > = std::collections::HashMap::new();
+    let mut open = true;
+
+    while open || batcher.pending() > 0 {
+        if shutdown.load(Ordering::SeqCst) {
+            open = false;
+            // absorb anything already queued so it gets drained below
+            while let Ok(env) = rx.try_recv() {
+                replies.insert(env.req.id, env.reply);
+                batcher.push(env.req);
+            }
+        }
+        // 1. wait for work: block until a request arrives, the oldest
+        //    queued request's deadline passes, or shutdown is signaled
+        if open {
+            let wait = batcher
+                .next_deadline()
+                .map(|d| d.saturating_duration_since(Instant::now()))
+                .unwrap_or(Duration::from_millis(50))
+                .min(Duration::from_millis(20)); // bound shutdown latency
+            match rx.recv_timeout(wait) {
+                Ok(env) => {
+                    replies.insert(env.req.id, env.reply);
+                    batcher.push(env.req);
+                    // opportunistically drain whatever else is queued
+                    while let Ok(env) = rx.try_recv() {
+                        replies.insert(env.req.id, env.reply);
+                        batcher.push(env.req);
+                    }
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                    open = false;
+                }
+            }
+        }
+
+        // 2. execute every ready batch
+        let now = Instant::now();
+        let mut batches = Vec::new();
+        while let Some(b) = batcher.pop_ready(now) {
+            batches.push(b);
+        }
+        if !open && batcher.pending() > 0 {
+            batches.extend(batcher.drain_all());
+        }
+        for batch in batches {
+            run_batch(&engine, batch, &mut replies, &metrics, &outstanding);
+        }
+    }
+}
+
+fn run_batch<E: InferenceEngine>(
+    engine: &E,
+    batch: Vec<Request>,
+    replies: &mut std::collections::HashMap<
+        u64,
+        Sender<anyhow::Result<Response>>,
+    >,
+    metrics: &ServerMetrics,
+    outstanding: &AtomicUsize,
+) {
+    let formed = Instant::now();
+    let images: Vec<Tensor> =
+        batch.iter().map(|r| r.image.clone()).collect();
+    let result = engine.infer(&images);
+    let done = Instant::now();
+    match result {
+        Ok((outputs, exec)) => {
+            for (req, probs) in batch.into_iter().zip(outputs) {
+                let resp = Response {
+                    id: req.id,
+                    probs,
+                    queue_s: formed
+                        .duration_since(req.arrived)
+                        .as_secs_f64(),
+                    exec_s: exec.as_secs_f64(),
+                    latency_s: done
+                        .duration_since(req.arrived)
+                        .as_secs_f64(),
+                    batch_size: images.len(),
+                };
+                metrics.record(&resp);
+                outstanding.fetch_sub(1, Ordering::Relaxed);
+                if let Some(tx) = replies.remove(&resp.id) {
+                    let _ = tx.send(Ok(resp));
+                }
+            }
+        }
+        Err(e) => {
+            for req in batch {
+                metrics.errors.fetch_add(1, Ordering::Relaxed);
+                outstanding.fetch_sub(1, Ordering::Relaxed);
+                if let Some(tx) = replies.remove(&req.id) {
+                    let _ = tx.send(Err(anyhow::anyhow!(
+                        "batch execution failed: {e}"
+                    )));
+                }
+            }
+        }
+    }
+}

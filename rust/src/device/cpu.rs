@@ -1,0 +1,144 @@
+//! CPU PJRT device — the *measured* backend.
+//!
+//! Unlike the GPU/FPGA models, this device actually executes the AOT
+//! artifacts through the PJRT runtime and reports wall-clock time.  It is
+//! the ground truth for the E2E serving experiments and the perf pass;
+//! power is a configurable host estimate (we have no RAPL guarantee in the
+//! sandbox).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::model::{cost, Layer, LayerKind};
+use crate::runtime::{ExecutorHandle, Pass};
+use crate::util::{Rng, Tensor};
+
+use super::{Accelerator, DeviceKind, LayerEstimate};
+
+pub struct CpuPjrtDevice {
+    handle: ExecutorHandle,
+    /// Host package power estimate, watts.
+    pub power_w: f64,
+    /// Measured seconds per (artifact name), cached.
+    measured: Mutex<HashMap<String, f64>>,
+    /// Median-of-N timing for `estimate` runs.
+    pub samples: usize,
+}
+
+impl CpuPjrtDevice {
+    pub fn new(handle: ExecutorHandle) -> CpuPjrtDevice {
+        CpuPjrtDevice {
+            handle,
+            power_w: 65.0,
+            measured: Mutex::new(HashMap::new()),
+            samples: 3,
+        }
+    }
+
+    pub fn artifact_name(layer: &Layer, batch: usize, pass: Pass) -> String {
+        match pass {
+            Pass::Forward => format!("{}_b{batch}", layer.name),
+            Pass::Backward => format!("{}_bwd_b{batch}", layer.name),
+        }
+    }
+
+    /// Synthesize shape-correct inputs for a layer artifact.
+    pub fn synth_inputs(
+        layer: &Layer,
+        batch: usize,
+        pass: Pass,
+        rng: &mut Rng,
+    ) -> Vec<Tensor> {
+        use crate::model::shape;
+        let mut shapes: Vec<Vec<usize>> = Vec::new();
+        match pass {
+            Pass::Forward => {
+                shapes.push(shape::input_shape(layer, batch));
+                shapes.extend(shape::param_shapes(layer));
+            }
+            Pass::Backward => {
+                // (dy, x, w)
+                shapes.push(shape::output_shape(layer, batch));
+                shapes.push(shape::input_shape(layer, batch));
+                shapes.push(shape::param_shapes(layer)[0].clone());
+            }
+        }
+        shapes
+            .iter()
+            .map(|s| Tensor::randn(s, rng, 0.05))
+            .collect()
+    }
+
+    /// Run the artifact once, returning outputs + wall time (uncached).
+    pub fn run_once(
+        &self,
+        layer: &Layer,
+        batch: usize,
+        pass: Pass,
+        inputs: Vec<Tensor>,
+    ) -> anyhow::Result<(Vec<Tensor>, f64)> {
+        let name = Self::artifact_name(layer, batch, pass);
+        let out = self.handle.run(&name, inputs)?;
+        Ok((out.outputs, out.elapsed.as_secs_f64()))
+    }
+}
+
+impl Accelerator for CpuPjrtDevice {
+    fn name(&self) -> String {
+        "CPU/PJRT".to_string()
+    }
+
+    fn kind(&self) -> DeviceKind {
+        DeviceKind::CpuPjrt
+    }
+
+    fn supports(&self, layer: &Layer, pass: Pass) -> bool {
+        pass == Pass::Forward || layer.kind() == LayerKind::Fc
+    }
+
+    /// Measured estimate: executes the artifact `samples` times with
+    /// synthetic inputs and reports the median wall time (cached per
+    /// artifact).
+    fn estimate(
+        &self,
+        layer: &Layer,
+        batch: usize,
+        pass: Pass,
+    ) -> anyhow::Result<LayerEstimate> {
+        anyhow::ensure!(batch > 0, "batch must be positive");
+        let name = Self::artifact_name(layer, batch, pass);
+        let per_image = match pass {
+            Pass::Forward => cost::forward_flops(layer),
+            Pass::Backward => cost::backward_flops(layer)
+                .ok_or_else(|| anyhow::anyhow!("no backward flops"))?,
+        };
+        let flops = per_image * batch as u64;
+
+        if let Some(&t) = self.measured.lock().unwrap().get(&name) {
+            return Ok(LayerEstimate {
+                time_s: t,
+                power_w: self.power_w,
+                flops,
+                transfer_s: 0.0,
+            });
+        }
+
+        let mut rng = Rng::new(0xC0FFEE);
+        let inputs = Self::synth_inputs(layer, batch, pass, &mut rng);
+        self.handle.warm(&name)?;
+        let mut times: Vec<f64> = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples.max(1) {
+            let out = self.handle.run(&name, inputs.clone())?;
+            times.push(out.elapsed.as_secs_f64());
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let t = times[times.len() / 2];
+        self.measured.lock().unwrap().insert(name, t);
+        Ok(LayerEstimate {
+            time_s: t,
+            power_w: self.power_w,
+            flops,
+            transfer_s: 0.0,
+        })
+    }
+}

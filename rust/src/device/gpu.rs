@@ -1,0 +1,251 @@
+//! K40 GPU device model (cuDNN / cuBLAS kernel libraries).
+//!
+//! Substitution for the paper's physical Nvidia K40 (DESIGN.md §2): a
+//! roofline calibrated to the paper's own measurements.
+//!
+//!   time(layer, batch) = max(compute, bandwidth) + launch overhead
+//!   compute  = flops / (PEAK_FLOPS * eff(layer, lib, pass))
+//!   bandwidth= bytes / (PEAK_BW * bw_eff)
+//!
+//! Efficiency is geometry-dependent (GEMM K/N saturation), calibrated so:
+//! * conv4 peaks at ~1632 GFLOPS (Fig 6b) and conv1 is the weakest conv;
+//! * FC forward (cuDNN) lands near the paper's 14.20 GFLOPS/W at 79.12 W;
+//! * cuBLAS FC forward is ~1.69x faster than cuDNN (Fig 7);
+//! * cuBLAS FC backward is ~24.89x faster than cuDNN (Fig 8).
+
+use crate::model::{cost, Layer, LayerKind, LayerSpec};
+use crate::power::{gpu_power_w, KernelLib};
+use crate::runtime::Pass;
+
+use super::{Accelerator, DeviceKind, LayerEstimate, PcieModel};
+
+/// K40 datasheet peaks (§IV.A of the paper).
+pub const PEAK_GFLOPS: f64 = 4290.0;
+pub const PEAK_BW_GBS: f64 = 288.0;
+pub const BW_EFF: f64 = 0.75;
+/// Fixed kernel-launch + driver overhead per layer invocation.
+pub const LAUNCH_OVERHEAD_S: f64 = 8e-6;
+
+/// Calibrated efficiency ceilings.
+const CONV_EFF_MAX: f64 = 0.5076;
+const FC_EFF_CUDNN_FWD: f64 = 0.2615;
+const FC_CUBLAS_FWD_SPEEDUP: f64 = 1.69; // Fig 7
+const FC_CUDNN_BWD_SLOWDOWN: f64 = 24.89; // Fig 8
+const LRN_EFF: f64 = 0.055; // elementwise: bandwidth-ish
+const POOL_EFF: f64 = 0.035;
+
+#[derive(Clone, Debug)]
+pub struct GpuDevice {
+    pub lib: KernelLib,
+    pub pcie: Option<PcieModel>,
+}
+
+impl GpuDevice {
+    pub fn new(lib: KernelLib) -> GpuDevice {
+        GpuDevice { lib, pcie: None }
+    }
+
+    pub fn with_pcie(lib: KernelLib, pcie: PcieModel) -> GpuDevice {
+        GpuDevice { lib, pcie: Some(pcie) }
+    }
+
+    /// Achieved fraction of peak for one layer.
+    pub fn efficiency(&self, layer: &Layer, pass: Pass) -> f64 {
+        match &layer.spec {
+            LayerSpec::Conv(c) => {
+                // GEMM saturation: K = cin*kh*kw, N = cout
+                let k = (c.input.c * c.kh * c.kw) as f64;
+                let n = c.cout as f64;
+                CONV_EFF_MAX * (k / (k + 500.0)) * (n / (n + 64.0))
+            }
+            LayerSpec::Fc(_) => {
+                let base = match (self.lib, pass) {
+                    (KernelLib::CuDnn, Pass::Forward) => FC_EFF_CUDNN_FWD,
+                    (KernelLib::CuBlas, Pass::Forward) => {
+                        FC_EFF_CUDNN_FWD * FC_CUBLAS_FWD_SPEEDUP
+                    }
+                    // cuBLAS runs backward as plain GEMMs — same
+                    // efficiency as its forward path.
+                    (KernelLib::CuBlas, Pass::Backward) => {
+                        FC_EFF_CUDNN_FWD * FC_CUBLAS_FWD_SPEEDUP
+                    }
+                    // the Fig 8 pathology: cuDNN's BP path is ~25x slower
+                    (KernelLib::CuDnn, Pass::Backward) => {
+                        FC_EFF_CUDNN_FWD * FC_CUBLAS_FWD_SPEEDUP
+                            / FC_CUDNN_BWD_SLOWDOWN
+                    }
+                };
+                base.min(1.0)
+            }
+            LayerSpec::Lrn(_) => LRN_EFF,
+            LayerSpec::Pool(_) => POOL_EFF,
+        }
+    }
+}
+
+impl Accelerator for GpuDevice {
+    fn name(&self) -> String {
+        format!("K40/{}", self.lib.name())
+    }
+
+    fn kind(&self) -> DeviceKind {
+        DeviceKind::Gpu
+    }
+
+    fn supports(&self, layer: &Layer, pass: Pass) -> bool {
+        // backward is modeled for FC only (the paper's Fig 8 workload)
+        pass == Pass::Forward || layer.kind() == LayerKind::Fc
+    }
+
+    fn estimate(
+        &self,
+        layer: &Layer,
+        batch: usize,
+        pass: Pass,
+    ) -> anyhow::Result<LayerEstimate> {
+        anyhow::ensure!(batch > 0, "batch must be positive");
+        anyhow::ensure!(
+            self.supports(layer, pass),
+            "{} does not support {:?} on {}",
+            self.name(),
+            pass,
+            layer.name
+        );
+        let per_image = match pass {
+            Pass::Forward => cost::forward_flops(layer),
+            Pass::Backward => cost::backward_flops(layer)
+                .ok_or_else(|| anyhow::anyhow!("no backward model"))?,
+        };
+        let flops = per_image * batch as u64;
+        let eff = self.efficiency(layer, pass);
+        let compute_s = flops as f64 / (PEAK_GFLOPS * 1e9 * eff);
+        let bytes = cost::forward_bytes(layer, batch) as f64
+            * if pass == Pass::Backward { 2.0 } else { 1.0 };
+        let bw_s = bytes / (PEAK_BW_GBS * 1e9 * BW_EFF);
+        let time_s = compute_s.max(bw_s) + LAUNCH_OVERHEAD_S;
+        let transfer_s = self
+            .pcie
+            .map(|p| p.transfer_s(cost::forward_bytes(layer, batch)))
+            .unwrap_or(0.0);
+        Ok(LayerEstimate {
+            time_s,
+            power_w: gpu_power_w(layer.kind(), self.lib, pass),
+            flops,
+            transfer_s,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::alexnet;
+
+    /// The paper's implied operating point (see DESIGN.md §5).
+    const B: usize = 128;
+
+    fn est(layer: &str, lib: KernelLib, pass: Pass) -> LayerEstimate {
+        let net = alexnet();
+        GpuDevice::new(lib)
+            .estimate(net.layer(layer).unwrap(), B, pass)
+            .unwrap()
+    }
+
+    #[test]
+    fn conv4_peaks_near_1632_gflops() {
+        let g = est("conv4", KernelLib::CuDnn, Pass::Forward).gflops();
+        assert!((g - 1632.0).abs() / 1632.0 < 0.05, "conv4 {g} GFLOPS");
+    }
+
+    #[test]
+    fn conv4_is_the_conv_throughput_peak() {
+        let gf = |l| est(l, KernelLib::CuDnn, Pass::Forward).gflops();
+        for l in ["conv1", "conv2", "conv3", "conv5"] {
+            assert!(gf("conv4") >= gf(l), "{l}: {} vs {}", gf(l), gf("conv4"));
+        }
+        // conv1 (tiny K=363 GEMM) is the weakest
+        for l in ["conv2", "conv3", "conv4", "conv5"] {
+            assert!(gf("conv1") < gf(l), "{l}");
+        }
+    }
+
+    #[test]
+    fn fc_forward_density_near_paper() {
+        // paper: GPU FC density ~14.20 GFLOPS/W
+        let d = est("fc6", KernelLib::CuDnn, Pass::Forward).gflops_per_w();
+        assert!((d - 14.2).abs() / 14.2 < 0.05, "fc6 density {d}");
+    }
+
+    #[test]
+    fn cublas_fwd_speedup_is_1_69x() {
+        let t_dnn = est("fc6", KernelLib::CuDnn, Pass::Forward).time_s;
+        let t_blas = est("fc6", KernelLib::CuBlas, Pass::Forward).time_s;
+        let s = t_dnn / t_blas;
+        assert!((s - 1.69).abs() < 0.1, "speedup {s}");
+    }
+
+    #[test]
+    fn cublas_bwd_speedup_is_24_89x() {
+        let t_dnn = est("fc6", KernelLib::CuDnn, Pass::Backward).time_s;
+        let t_blas = est("fc6", KernelLib::CuBlas, Pass::Backward).time_s;
+        let s = t_dnn / t_blas;
+        assert!((s - 24.89).abs() / 24.89 < 0.05, "speedup {s}");
+    }
+
+    #[test]
+    fn cublas_bwd_energy_much_lower_than_cudnn() {
+        // Fig 8: 0.70 J vs 31.19 J average — a ~40x gap
+        let e_dnn: f64 = ["fc6", "fc7", "fc8"]
+            .iter()
+            .map(|l| est(l, KernelLib::CuDnn, Pass::Backward).energy_j())
+            .sum();
+        let e_blas: f64 = ["fc6", "fc7", "fc8"]
+            .iter()
+            .map(|l| est(l, KernelLib::CuBlas, Pass::Backward).energy_j())
+            .sum();
+        let ratio = e_dnn / e_blas;
+        assert!(ratio > 30.0 && ratio < 50.0, "energy ratio {ratio}");
+    }
+
+    #[test]
+    fn small_batch_fc_is_bandwidth_bound() {
+        let net = alexnet();
+        let dev = GpuDevice::new(KernelLib::CuDnn);
+        let fc6 = net.layer("fc6").unwrap();
+        let e1 = dev.estimate(fc6, 1, Pass::Forward).unwrap();
+        // at batch 1 the 150 MB weight read dominates: throughput well
+        // below the compute ceiling
+        assert!(e1.gflops() < 200.0, "batch-1 fc6 {}", e1.gflops());
+    }
+
+    #[test]
+    fn unsupported_backward_is_rejected() {
+        let net = alexnet();
+        let dev = GpuDevice::new(KernelLib::CuDnn);
+        assert!(dev
+            .estimate(net.layer("conv1").unwrap(), 1, Pass::Backward)
+            .is_err());
+    }
+
+    #[test]
+    fn zero_batch_rejected() {
+        let net = alexnet();
+        let dev = GpuDevice::new(KernelLib::CuDnn);
+        assert!(dev
+            .estimate(net.layer("conv1").unwrap(), 0, Pass::Forward)
+            .is_err());
+    }
+
+    #[test]
+    fn pcie_adds_transfer_time() {
+        let net = alexnet();
+        let with = GpuDevice::with_pcie(KernelLib::CuDnn, PcieModel::gen2_x8());
+        let without = GpuDevice::new(KernelLib::CuDnn);
+        let l = net.layer("conv1").unwrap();
+        let a = with.estimate(l, 8, Pass::Forward).unwrap();
+        let b = without.estimate(l, 8, Pass::Forward).unwrap();
+        assert!(a.transfer_s > 0.0);
+        assert_eq!(b.transfer_s, 0.0);
+        assert_eq!(a.time_s, b.time_s);
+    }
+}

@@ -1,0 +1,119 @@
+//! Accelerator abstraction — the middleware's uniform offload interface.
+//!
+//! The paper's runtime decides, per layer, whether to offload to the GPU
+//! (CUDA) or the FPGA (OpenCL) engine.  Each backend here implements
+//! [`Accelerator`]: given a layer, batch and pass, produce an estimate of
+//! execution time and power (the `model` timing mode), or — for the CPU
+//! PJRT device — actually execute the artifact and report measured wall
+//! time.  The scheduler and DSE consume only this trait.
+
+pub mod cpu;
+pub mod fpga;
+pub mod gpu;
+pub mod transfer;
+
+pub use cpu::CpuPjrtDevice;
+pub use fpga::FpgaDevice;
+pub use gpu::GpuDevice;
+pub use transfer::PcieModel;
+
+use crate::model::Layer;
+use crate::runtime::Pass;
+
+/// What silicon a backend models/uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DeviceKind {
+    /// Analytic K40 model (cuDNN or cuBLAS kernel library).
+    Gpu,
+    /// Analytic DE5 model (OpenCL engines).
+    Fpga,
+    /// Real execution on the host CPU via PJRT (measured time).
+    CpuPjrt,
+}
+
+impl DeviceKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            DeviceKind::Gpu => "gpu",
+            DeviceKind::Fpga => "fpga",
+            DeviceKind::CpuPjrt => "cpu-pjrt",
+        }
+    }
+}
+
+/// Result of offloading one layer at one batch size.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LayerEstimate {
+    /// Kernel execution time for the whole batch, seconds.
+    pub time_s: f64,
+    /// Average board power during execution, watts.
+    pub power_w: f64,
+    /// fp operations for the whole batch.
+    pub flops: u64,
+    /// Host<->device transfer time for the batch, seconds (0 when the
+    /// transfer model is disabled).
+    pub transfer_s: f64,
+}
+
+impl LayerEstimate {
+    pub fn total_time_s(&self) -> f64 {
+        self.time_s + self.transfer_s
+    }
+
+    /// Throughput in GFLOPS (kernel time, the paper's convention).
+    pub fn gflops(&self) -> f64 {
+        self.flops as f64 / self.time_s / 1e9
+    }
+
+    /// Energy in joules for the batch.
+    pub fn energy_j(&self) -> f64 {
+        self.power_w * self.time_s
+    }
+
+    /// GFLOPS per watt (the paper's Throughput/Power density).
+    pub fn gflops_per_w(&self) -> f64 {
+        self.gflops() / self.power_w
+    }
+
+    /// GFLOP per joule (the paper's Operation/Energy density).
+    pub fn gflop_per_j(&self) -> f64 {
+        self.flops as f64 / 1e9 / self.energy_j()
+    }
+}
+
+/// Uniform accelerator interface.
+pub trait Accelerator {
+    fn name(&self) -> String;
+    fn kind(&self) -> DeviceKind;
+
+    /// Can this backend run the layer at all?
+    fn supports(&self, layer: &Layer, pass: Pass) -> bool;
+
+    /// Time/power estimate (analytic backends) or measurement (CPU PJRT).
+    fn estimate(
+        &self,
+        layer: &Layer,
+        batch: usize,
+        pass: Pass,
+    ) -> anyhow::Result<LayerEstimate>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn estimate_derived_metrics() {
+        let e = LayerEstimate {
+            time_s: 0.5,
+            power_w: 10.0,
+            flops: 5_000_000_000,
+            transfer_s: 0.1,
+        };
+        assert!((e.gflops() - 10.0).abs() < 1e-9);
+        assert!((e.energy_j() - 5.0).abs() < 1e-9);
+        assert!((e.gflops_per_w() - 1.0).abs() < 1e-9);
+        assert!((e.gflop_per_j() - 1.0).abs() < 1e-9);
+        assert!((e.total_time_s() - 0.6).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,53 @@
+//! PCIe transfer model — the paper's accelerators hang off a PCIe x8 edge
+//! connector (§IV.A); offload cost = latency + bytes/effective-bandwidth.
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PcieModel {
+    /// Effective unidirectional bandwidth, GB/s.
+    pub bw_gbs: f64,
+    /// Per-transfer latency (DMA setup + doorbell), seconds.
+    pub latency_s: f64,
+}
+
+impl PcieModel {
+    /// PCIe gen2 x8 (the DE5 / K40-era link): 4 GB/s raw, ~80% effective.
+    pub fn gen2_x8() -> PcieModel {
+        PcieModel { bw_gbs: 3.2, latency_s: 10e-6 }
+    }
+
+    /// PCIe gen3 x16 for what-if studies.
+    pub fn gen3_x16() -> PcieModel {
+        PcieModel { bw_gbs: 12.0, latency_s: 8e-6 }
+    }
+
+    pub fn transfer_s(&self, bytes: u64) -> f64 {
+        self.latency_s + bytes as f64 / (self.bw_gbs * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_floor() {
+        let p = PcieModel::gen2_x8();
+        assert!(p.transfer_s(0) >= 10e-6);
+    }
+
+    #[test]
+    fn bandwidth_dominates_large_transfers() {
+        let p = PcieModel::gen2_x8();
+        let t = p.transfer_s(3_200_000_000);
+        assert!((t - 1.0).abs() < 0.01, "{t}");
+    }
+
+    #[test]
+    fn gen3_is_faster() {
+        let b = 100_000_000;
+        assert!(
+            PcieModel::gen3_x16().transfer_s(b)
+                < PcieModel::gen2_x8().transfer_s(b)
+        );
+    }
+}

@@ -1,0 +1,81 @@
+//! Clock-frequency model for the DE5 engines.
+//!
+//! Table III shows achieved Fmax falling as engines grow (the conv engine at
+//! 73% logic closes at 171.29 MHz; the pooling engine at 17% closes at
+//! 304.50 MHz).  First-order routing-congestion model:
+//!
+//! ```text
+//! fmax(u) = F0 - SLOPE * u      (u = binding-resource utilization)
+//! ```
+//!
+//! with per-engine intercepts calibrated so the default configurations land
+//! exactly on the published frequencies.
+
+use crate::model::LayerKind;
+
+use super::resources::{engine_template, DE5};
+
+/// Congestion slope in MHz per unit utilization — one global constant fit
+/// across the four published (utilization, fmax) points.
+pub const SLOPE_MHZ: f64 = 180.0;
+
+/// Per-engine intrinsic Fmax (critical path at zero congestion), MHz.
+/// Calibrated: F0 = published_fmax + SLOPE * default_utilization.
+pub fn intrinsic_fmax_mhz(kind: LayerKind) -> f64 {
+    let u = engine_template(kind).default_resources().utilization(&DE5);
+    let published = super::resources::table3_row(kind).clock_mhz;
+    published + SLOPE_MHZ * u
+}
+
+/// Achieved clock for an engine synthesized at `pes` processing elements.
+pub fn fmax_mhz(kind: LayerKind, pes: u64) -> f64 {
+    let u = engine_template(kind).at(pes).utilization(&DE5);
+    (intrinsic_fmax_mhz(kind) - SLOPE_MHZ * u).max(50.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::resources::{table3_row, TABLE_III};
+
+    #[test]
+    fn default_configs_hit_published_fmax() {
+        for row in &TABLE_III {
+            let t = engine_template(row.kind);
+            let f = fmax_mhz(row.kind, t.default_pes);
+            assert!(
+                (f - row.clock_mhz).abs() < 1e-6,
+                "{:?}: {f} vs {}",
+                row.kind,
+                row.clock_mhz
+            );
+        }
+    }
+
+    #[test]
+    fn ordering_matches_table3() {
+        // pool > lrn > fc > conv, as published
+        let f = |k| fmax_mhz(k, engine_template(k).default_pes);
+        assert!(f(LayerKind::Pool) > f(LayerKind::Lrn));
+        assert!(f(LayerKind::Lrn) > f(LayerKind::Fc));
+        assert!(f(LayerKind::Fc) > f(LayerKind::Conv));
+    }
+
+    #[test]
+    fn smaller_engines_clock_faster() {
+        let t = engine_template(LayerKind::Conv);
+        assert!(fmax_mhz(LayerKind::Conv, 10) > fmax_mhz(LayerKind::Conv, t.default_pes));
+    }
+
+    #[test]
+    fn fmax_floor() {
+        // absurdly large engines saturate at the 50 MHz floor, not negative
+        assert!(fmax_mhz(LayerKind::Conv, 1000) >= 50.0);
+    }
+
+    #[test]
+    fn conv_fmax_is_published_value() {
+        let f = fmax_mhz(LayerKind::Conv, 54);
+        assert!((f - table3_row(LayerKind::Conv).clock_mhz).abs() < 1e-6);
+    }
+}

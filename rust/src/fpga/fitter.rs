@@ -1,0 +1,182 @@
+//! Bitstream fitter: decides which engine configurations co-reside on the
+//! DE5 and checks capacity.
+//!
+//! Table III's four default engines total >150% of the device logic, so the
+//! paper's flow cannot host all four at once — the fitter either (a)
+//! verifies that a chosen subset fits, or (b) shrinks PE counts
+//! proportionally until the whole set fits (used by the DSE ablation).
+
+use crate::model::LayerKind;
+
+use super::resources::{engine_template, DeviceCapacity, Resources, DE5};
+
+/// A concrete engine configuration: kind + PE count.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EngineConfig {
+    pub kind: LayerKind,
+    pub pes: u64,
+}
+
+impl EngineConfig {
+    pub fn default_for(kind: LayerKind) -> EngineConfig {
+        EngineConfig { kind, pes: engine_template(kind).default_pes }
+    }
+
+    pub fn resources(&self) -> Resources {
+        engine_template(self.kind).at(self.pes)
+    }
+
+    pub fn fmax_mhz(&self) -> f64 {
+        super::clock::fmax_mhz(self.kind, self.pes)
+    }
+}
+
+/// Result of fitting a set of engines onto a device.
+#[derive(Clone, Debug)]
+pub struct FitReport {
+    pub engines: Vec<EngineConfig>,
+    pub total: Resources,
+    pub fits: bool,
+    /// Binding-resource utilization of the combined design.
+    pub utilization: f64,
+}
+
+pub fn fit(engines: &[EngineConfig], cap: &DeviceCapacity) -> FitReport {
+    let total = engines
+        .iter()
+        .map(EngineConfig::resources)
+        .fold(Resources::default(), |acc, r| acc.add(&r));
+    FitReport {
+        engines: engines.to_vec(),
+        fits: total.fits(cap),
+        utilization: total.utilization(cap),
+        total,
+    }
+}
+
+/// Shrink all engines proportionally (keeping >=1 PE each) until the set
+/// fits, mimicking a design-space sweep a real OpenCL flow would do.
+/// Returns None if even 1-PE engines cannot co-reside.
+pub fn shrink_to_fit(
+    engines: &[EngineConfig],
+    cap: &DeviceCapacity,
+) -> Option<Vec<EngineConfig>> {
+    // binary search the global scale in (0, 1]
+    let base: Vec<u64> = engines.iter().map(|e| e.pes).collect();
+    let scaled = |s: f64| -> Vec<EngineConfig> {
+        engines
+            .iter()
+            .zip(&base)
+            .map(|(e, &b)| EngineConfig {
+                kind: e.kind,
+                pes: ((b as f64 * s).floor() as u64).max(1),
+            })
+            .collect()
+    };
+    if fit(&scaled(1.0), cap).fits {
+        return Some(scaled(1.0));
+    }
+    let (mut lo, mut hi) = (0.0f64, 1.0f64);
+    for _ in 0..40 {
+        let mid = (lo + hi) / 2.0;
+        if fit(&scaled(mid), cap).fits {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    let cfg = scaled(lo);
+    fit(&cfg, cap).fits.then_some(cfg)
+}
+
+/// Convenience: the DE5 with the paper's default engines, per kind.
+pub fn de5_default(kind: LayerKind) -> EngineConfig {
+    EngineConfig::default_for(kind)
+}
+
+/// All four default engines (do NOT fit together — see tests).
+pub fn all_default_engines() -> Vec<EngineConfig> {
+    LayerKind::ALL.iter().map(|&k| EngineConfig::default_for(k)).collect()
+}
+
+pub fn de5() -> DeviceCapacity {
+    DE5
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_engines_fit() {
+        for kind in LayerKind::ALL {
+            let r = fit(&[EngineConfig::default_for(kind)], &DE5);
+            assert!(r.fits, "{kind:?}");
+            assert!(r.utilization <= 1.0);
+        }
+    }
+
+    #[test]
+    fn all_defaults_overflow() {
+        let r = fit(&all_default_engines(), &DE5);
+        assert!(!r.fits);
+        assert!(r.utilization > 1.0);
+    }
+
+    #[test]
+    fn shrink_to_fit_finds_a_fit() {
+        let cfg = shrink_to_fit(&all_default_engines(), &DE5)
+            .expect("1-PE engines must fit");
+        let r = fit(&cfg, &DE5);
+        assert!(r.fits);
+        // every engine survived with at least one PE
+        assert_eq!(cfg.len(), 4);
+        assert!(cfg.iter().all(|e| e.pes >= 1));
+        // shrunk, not default
+        let defaults = all_default_engines();
+        assert!(cfg
+            .iter()
+            .zip(&defaults)
+            .any(|(s, d)| s.pes < d.pes));
+    }
+
+    #[test]
+    fn shrink_is_maximal_ish() {
+        // growing every engine by ~30% from the shrunk config must overflow
+        let cfg = shrink_to_fit(&all_default_engines(), &DE5).unwrap();
+        let grown: Vec<EngineConfig> = cfg
+            .iter()
+            .map(|e| EngineConfig {
+                kind: e.kind,
+                pes: (e.pes as f64 * 1.3).ceil() as u64 + 1,
+            })
+            .collect();
+        assert!(!fit(&grown, &DE5).fits);
+    }
+
+    #[test]
+    fn conv_plus_pool_fit_together() {
+        // 73% + 17% logic, 63% + 0% DSP: fits
+        let r = fit(
+            &[
+                EngineConfig::default_for(LayerKind::Conv),
+                EngineConfig::default_for(LayerKind::Pool),
+            ],
+            &DE5,
+        );
+        assert!(r.fits, "utilization {}", r.utilization);
+    }
+
+    #[test]
+    fn conv_plus_fc_overflow() {
+        // 73% + 42% logic > 100%
+        let r = fit(
+            &[
+                EngineConfig::default_for(LayerKind::Conv),
+                EngineConfig::default_for(LayerKind::Fc),
+            ],
+            &DE5,
+        );
+        assert!(!r.fits);
+    }
+}

@@ -1,0 +1,15 @@
+//! FPGA substrate: DE5 resource model (Table III), clock-frequency model,
+//! and the bitstream fitter used by the DSE.
+
+pub mod clock;
+pub mod fitter;
+pub mod resources;
+
+pub use fitter::{
+    all_default_engines, de5, de5_default, fit, shrink_to_fit, EngineConfig,
+    FitReport,
+};
+pub use resources::{
+    engine_template, table3_row, DeviceCapacity, EngineTemplate, Resources,
+    TableThreeRow, DE5, TABLE_III,
+};

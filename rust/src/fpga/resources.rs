@@ -1,0 +1,372 @@
+//! DE5 resource model — the substrate behind Table III.
+//!
+//! The paper synthesizes four OpenCL engines (Conv / LRN / FC / Pooling) on
+//! an Intel-Altera DE5 (Stratix V GX A7) and reports ALUTs, registers, logic
+//! (ALMs), DSP blocks, memory bits, M20K RAM blocks and achieved clock per
+//! engine.  We model each engine as a template: a fixed control/interface
+//! core plus per-PE (processing element) increments.  The default PE counts
+//! reproduce Table III exactly (constants are calibrated to the paper's
+//! synthesis results); the per-PE increments give first-order scaling for
+//! design-space exploration over engine size.
+
+use crate::model::LayerKind;
+
+/// Stratix V GX A7 device capacities (the denominators printed in
+/// Table III).
+#[derive(Clone, Copy, Debug)]
+pub struct DeviceCapacity {
+    pub aluts: u64,
+    pub registers: u64,
+    pub alms: u64,
+    pub io_pins: u64,
+    pub dsp_blocks: u64,
+    pub memory_bits: u64,
+    pub m20k_blocks: u64,
+}
+
+pub const DE5: DeviceCapacity = DeviceCapacity {
+    aluts: 469_440, // 2 per ALM
+    registers: 938_880,
+    alms: 234_720,
+    io_pins: 1_064,
+    dsp_blocks: 256,
+    memory_bits: 52_428_800,
+    m20k_blocks: 2_560,
+};
+
+/// Resource requirement of one synthesized engine instance.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Resources {
+    pub aluts: u64,
+    pub registers: u64,
+    pub alms: u64,
+    pub io_pins: u64,
+    pub dsp_blocks: u64,
+    pub memory_bits: u64,
+    pub m20k_blocks: u64,
+}
+
+impl Resources {
+    pub fn add(&self, other: &Resources) -> Resources {
+        Resources {
+            aluts: self.aluts + other.aluts,
+            registers: self.registers + other.registers,
+            alms: self.alms + other.alms,
+            // the PCIe interface pins are shared, not replicated
+            io_pins: self.io_pins.max(other.io_pins),
+            dsp_blocks: self.dsp_blocks + other.dsp_blocks,
+            memory_bits: self.memory_bits + other.memory_bits,
+            m20k_blocks: self.m20k_blocks + other.m20k_blocks,
+        }
+    }
+
+    pub fn fits(&self, cap: &DeviceCapacity) -> bool {
+        self.aluts <= cap.aluts
+            && self.registers <= cap.registers
+            && self.alms <= cap.alms
+            && self.io_pins <= cap.io_pins
+            && self.dsp_blocks <= cap.dsp_blocks
+            && self.memory_bits <= cap.memory_bits
+            && self.m20k_blocks <= cap.m20k_blocks
+    }
+
+    /// Fraction of the binding (most utilized) resource, 0..=1+.
+    pub fn utilization(&self, cap: &DeviceCapacity) -> f64 {
+        [
+            self.aluts as f64 / cap.aluts as f64,
+            self.registers as f64 / cap.registers as f64,
+            self.alms as f64 / cap.alms as f64,
+            self.dsp_blocks as f64 / cap.dsp_blocks as f64,
+            self.memory_bits as f64 / cap.memory_bits as f64,
+            self.m20k_blocks as f64 / cap.m20k_blocks as f64,
+        ]
+        .into_iter()
+        .fold(0.0, f64::max)
+    }
+}
+
+/// Engine template: `base` (control, DMA, PCIe interface) + `per_pe`
+/// replicated for each processing element.
+#[derive(Clone, Copy, Debug)]
+pub struct EngineTemplate {
+    pub kind: LayerKind,
+    pub base: Resources,
+    pub per_pe: Resources,
+    /// PE count whose synthesis the paper reports (Table III).
+    pub default_pes: u64,
+}
+
+/// Calibration: Table III column for each engine at its default PE count.
+/// base + default_pes * per_pe == the published row, exactly.
+pub fn engine_template(kind: LayerKind) -> EngineTemplate {
+    // Shared I/O interface (279 pins = PCIe x8 + DDR) on every engine.
+    const IO: u64 = 279;
+    match kind {
+        // Conv engine: 162 DSPs over 54 PEs (3 DSP-MACs per PE).
+        LayerKind::Conv => EngineTemplate {
+            kind,
+            base: Resources {
+                aluts: 47_786,
+                registers: 68_692,
+                alms: 37_006,
+                io_pins: IO,
+                dsp_blocks: 0,
+                memory_bits: 1_755_205,
+                m20k_blocks: 402,
+            },
+            per_pe: Resources {
+                aluts: 3_000,
+                registers: 4_666,
+                alms: 2_500,
+                io_pins: IO,
+                dsp_blocks: 3,
+                memory_bits: 120_027,
+                m20k_blocks: 19,
+            },
+            default_pes: 54,
+        },
+        // LRN engine: almost no DSP (3 blocks for the power function),
+        // logic-dominated.
+        LayerKind::Lrn => EngineTemplate {
+            kind,
+            base: Resources {
+                aluts: 18_327,
+                registers: 34_469,
+                alms: 21_185,
+                io_pins: IO,
+                dsp_blocks: 0,
+                memory_bits: 1_596_240,
+                m20k_blocks: 192,
+            },
+            per_pe: Resources {
+                aluts: 10_000,
+                registers: 16_000,
+                alms: 10_000,
+                io_pins: IO,
+                dsp_blocks: 1,
+                memory_bits: 800_000,
+                m20k_blocks: 80,
+            },
+            default_pes: 3,
+        },
+        // FC engine: 130 DSPs over 65 PEs (2 DSP-MACs per PE).
+        LayerKind::Fc => EngineTemplate {
+            kind,
+            base: Resources {
+                aluts: 28_237,
+                registers: 49_336,
+                alms: 21_233,
+                io_pins: IO,
+                dsp_blocks: 0,
+                memory_bits: 1_395_518,
+                m20k_blocks: 131,
+            },
+            per_pe: Resources {
+                aluts: 1_291,
+                registers: 2_282,
+                alms: 1_208,
+                io_pins: IO,
+                dsp_blocks: 2,
+                memory_bits: 64_018,
+                m20k_blocks: 8,
+            },
+            default_pes: 65,
+        },
+        // Pooling engine: zero DSP (comparators only), smallest engine.
+        LayerKind::Pool => EngineTemplate {
+            kind,
+            base: Resources {
+                aluts: 15_247,
+                registers: 22_603,
+                alms: 16_581,
+                io_pins: IO,
+                dsp_blocks: 0,
+                memory_bits: 619_856,
+                m20k_blocks: 123,
+            },
+            per_pe: Resources {
+                aluts: 2_500,
+                registers: 4_000,
+                alms: 3_000,
+                io_pins: IO,
+                dsp_blocks: 0,
+                memory_bits: 100_000,
+                m20k_blocks: 20,
+            },
+            default_pes: 8,
+        },
+    }
+}
+
+impl EngineTemplate {
+    /// Resources at `pes` processing elements.
+    pub fn at(&self, pes: u64) -> Resources {
+        Resources {
+            aluts: self.base.aluts + pes * self.per_pe.aluts,
+            registers: self.base.registers + pes * self.per_pe.registers,
+            alms: self.base.alms + pes * self.per_pe.alms,
+            io_pins: self.base.io_pins,
+            dsp_blocks: self.base.dsp_blocks + pes * self.per_pe.dsp_blocks,
+            memory_bits: self.base.memory_bits
+                + pes * self.per_pe.memory_bits,
+            m20k_blocks: self.base.m20k_blocks
+                + pes * self.per_pe.m20k_blocks,
+        }
+    }
+
+    /// The paper's synthesized configuration.
+    pub fn default_resources(&self) -> Resources {
+        self.at(self.default_pes)
+    }
+}
+
+/// The published Table III row for an engine — used as the calibration
+/// target and printed by the `table3_resources` bench.
+#[derive(Clone, Copy, Debug)]
+pub struct TableThreeRow {
+    pub kind: LayerKind,
+    pub aluts: u64,
+    pub registers: u64,
+    pub alms: u64,
+    pub io_pins: u64,
+    pub dsp_blocks: u64,
+    pub memory_bits: u64,
+    pub m20k_blocks: u64,
+    pub clock_mhz: f64,
+}
+
+pub const TABLE_III: [TableThreeRow; 4] = [
+    TableThreeRow {
+        kind: LayerKind::Conv,
+        aluts: 209_786,
+        registers: 320_656,
+        alms: 172_006,
+        io_pins: 279,
+        dsp_blocks: 162,
+        memory_bits: 8_236_663,
+        m20k_blocks: 1_428,
+        clock_mhz: 171.29,
+    },
+    TableThreeRow {
+        kind: LayerKind::Lrn,
+        aluts: 48_327,
+        registers: 82_469,
+        alms: 51_185,
+        io_pins: 279,
+        dsp_blocks: 3,
+        memory_bits: 3_996_240,
+        m20k_blocks: 432,
+        clock_mhz: 269.02,
+    },
+    TableThreeRow {
+        kind: LayerKind::Fc,
+        aluts: 112_152,
+        registers: 197_666,
+        alms: 99_753,
+        io_pins: 279,
+        dsp_blocks: 130,
+        memory_bits: 5_556_688,
+        m20k_blocks: 651,
+        clock_mhz: 216.16,
+    },
+    TableThreeRow {
+        kind: LayerKind::Pool,
+        aluts: 35_247,
+        registers: 54_603,
+        alms: 40_581,
+        io_pins: 279,
+        dsp_blocks: 0,
+        memory_bits: 1_419_856,
+        m20k_blocks: 283,
+        clock_mhz: 304.50,
+    },
+];
+
+pub fn table3_row(kind: LayerKind) -> &'static TableThreeRow {
+    TABLE_III.iter().find(|r| r.kind == kind).unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_configs_reproduce_table3_exactly() {
+        for row in &TABLE_III {
+            let got = engine_template(row.kind).default_resources();
+            assert_eq!(got.aluts, row.aluts, "{:?} aluts", row.kind);
+            assert_eq!(got.registers, row.registers, "{:?} regs", row.kind);
+            assert_eq!(got.alms, row.alms, "{:?} alms", row.kind);
+            assert_eq!(got.dsp_blocks, row.dsp_blocks, "{:?} dsp", row.kind);
+            assert_eq!(
+                got.memory_bits, row.memory_bits,
+                "{:?} membits",
+                row.kind
+            );
+            assert_eq!(
+                got.m20k_blocks, row.m20k_blocks,
+                "{:?} m20k",
+                row.kind
+            );
+            assert_eq!(got.io_pins, row.io_pins, "{:?} io", row.kind);
+        }
+    }
+
+    #[test]
+    fn table3_percentages_match_paper() {
+        // Table III prints logic 73%/22%/42%/17%, DSP 63%/1%/51%/0%,
+        // RAM blocks 56%/17%/25%/11%, membits 16%/8%/11%/3%.
+        let pct = |num: u64, den: u64| (num as f64 / den as f64 * 100.0).round();
+        let conv = table3_row(LayerKind::Conv);
+        assert_eq!(pct(conv.alms, DE5.alms), 73.0);
+        assert_eq!(pct(conv.dsp_blocks, DE5.dsp_blocks), 63.0);
+        assert_eq!(pct(conv.m20k_blocks, DE5.m20k_blocks), 56.0);
+        assert_eq!(pct(conv.memory_bits, DE5.memory_bits), 16.0);
+        let lrn = table3_row(LayerKind::Lrn);
+        assert_eq!(pct(lrn.alms, DE5.alms), 22.0);
+        let fc = table3_row(LayerKind::Fc);
+        assert_eq!(pct(fc.alms, DE5.alms), 42.0);
+        assert_eq!(pct(fc.dsp_blocks, DE5.dsp_blocks), 51.0);
+        let pool = table3_row(LayerKind::Pool);
+        assert_eq!(pct(pool.alms, DE5.alms), 17.0);
+        assert_eq!(pool.dsp_blocks, 0);
+    }
+
+    #[test]
+    fn each_engine_fits_alone() {
+        for kind in LayerKind::ALL {
+            let r = engine_template(kind).default_resources();
+            assert!(r.fits(&DE5), "{kind:?} must fit the DE5");
+        }
+    }
+
+    #[test]
+    fn all_four_engines_do_not_fit_together() {
+        // 73% + 22% + 42% + 17% logic > 100%: the paper necessarily
+        // time-multiplexes bitstreams (or shrinks engines) — our fitter
+        // must detect this.
+        let total = LayerKind::ALL
+            .iter()
+            .map(|&k| engine_template(k).default_resources())
+            .fold(Resources::default(), |acc, r| acc.add(&r));
+        assert!(!total.fits(&DE5));
+    }
+
+    #[test]
+    fn scaling_is_monotonic() {
+        let t = engine_template(LayerKind::Conv);
+        let small = t.at(10);
+        let big = t.at(50);
+        assert!(big.dsp_blocks > small.dsp_blocks);
+        assert!(big.alms > small.alms);
+        assert!(big.aluts > small.aluts);
+    }
+
+    #[test]
+    fn utilization_binding_resource() {
+        let r = engine_template(LayerKind::Conv).default_resources();
+        let u = r.utilization(&DE5);
+        // conv's binding resource is ALM logic at 73%
+        assert!((u - 172_006.0 / 234_720.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,36 @@
+//! # CNNLab — parallel middleware for neural networks with accelerator
+//! # trade-off analysis
+//!
+//! Reproduction of *CNNLab: a Novel Parallel Framework for Neural Networks
+//! using GPU and FPGA* (2016) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1/L2 (build-time Python)** — every layer of the paper's network is a
+//!   JAX function calling Pallas kernels, AOT-lowered to HLO text under
+//!   `artifacts/` by `make artifacts`.
+//! * **L3 (this crate)** — the paper's middleware contribution: the layer
+//!   abstraction ([`model`]), the PJRT runtime that executes the lowered
+//!   artifacts ([`runtime`]), calibrated GPU/FPGA device models ([`device`],
+//!   [`fpga`], [`power`]), the offload scheduler and design-space
+//!   exploration ([`sched`]), the serving coordinator ([`coordinator`]),
+//!   and the metric/trade-off machinery ([`metrics`], [`report`]).
+//!
+//! Python never runs on the request path; after `make artifacts` the crate
+//! is self-contained.
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod device;
+pub mod fpga;
+pub mod metrics;
+pub mod model;
+pub mod power;
+pub mod prop;
+pub mod report;
+pub mod runtime;
+pub mod sched;
+pub mod trace;
+pub mod util;
+
+/// Repo-relative default artifact directory (overridable everywhere).
+pub const DEFAULT_ARTIFACTS_DIR: &str = "artifacts";

@@ -1,0 +1,251 @@
+//! `cnnlab` — the leader binary.
+//!
+//! Subcommands:
+//! * `run`     — one inference through the full network on the PJRT runtime
+//! * `serve`   — run the serving coordinator over a synthetic request trace
+//! * `dse`     — design-space exploration / trade-off analysis
+//! * `report`  — regenerate the paper's tables from the device models
+//! * `devices` — list modeled devices and their calibrated operating points
+
+use std::time::{Duration, Instant};
+
+use cnnlab::cli::Args;
+use cnnlab::coordinator::{InferenceEngine, PjrtEngine, Server, ServerConfig};
+use cnnlab::device::{Accelerator, FpgaDevice, GpuDevice};
+use cnnlab::fpga;
+use cnnlab::model::{alexnet, tinynet, Network};
+use cnnlab::power::KernelLib;
+use cnnlab::report::{f2, si_time, Table};
+use cnnlab::runtime::{ExecutorService, Pass};
+use cnnlab::sched::{
+    exhaustive_by_kind, simulate, Choice, Constraints, EstimateSource,
+    Mapping, Objective,
+};
+use cnnlab::util::{Rng, Tensor};
+
+fn network_by_name(name: &str) -> anyhow::Result<Network> {
+    match name {
+        "alexnet" => Ok(alexnet()),
+        "tinynet" => Ok(tinynet()),
+        other => anyhow::bail!("unknown network {other:?} (alexnet|tinynet)"),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            eprintln!(
+                "usage: cnnlab <run|serve|dse|report|devices> [--opt value]"
+            );
+            std::process::exit(2);
+        }
+    };
+    match args.subcommand.as_str() {
+        "run" => cmd_run(&args),
+        "serve" => cmd_serve(&args),
+        "dse" => cmd_dse(&args),
+        "report" => cmd_report(&args),
+        "devices" => cmd_devices(&args),
+        other => {
+            eprintln!("unknown subcommand {other:?}");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// `cnnlab run --network tinynet --batch 1 [--artifacts DIR]`
+fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    let net = network_by_name(args.get_or("network", "tinynet"))?;
+    let batch = args.get_usize("batch", 1)?;
+    let dir = args.get_or("artifacts", cnnlab::DEFAULT_ARTIFACTS_DIR);
+    let svc = ExecutorService::spawn(dir)?;
+    let engine =
+        PjrtEngine::new(svc.handle(), &net, vec![batch], 42)?;
+    let mut rng = Rng::new(7);
+    let mut shape = vec![1];
+    shape.extend_from_slice(engine.image_shape());
+    let image = Tensor::randn(&shape, &mut rng, 0.1);
+    let t0 = Instant::now();
+    let (outs, exec) = engine.infer(&[image])?;
+    println!(
+        "network={} batch_artifact={} exec={} total={}",
+        net.name,
+        batch,
+        si_time(exec.as_secs_f64()),
+        si_time(t0.elapsed().as_secs_f64()),
+    );
+    let probs = &outs[0];
+    let mut top: Vec<(usize, f32)> =
+        probs.data().iter().copied().enumerate().collect();
+    top.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    println!(
+        "top-3 classes: {:?}",
+        top.iter().take(3).collect::<Vec<_>>()
+    );
+    Ok(())
+}
+
+/// `cnnlab serve --network tinynet --requests 64 --rate 200 --max-batch 8`
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let net = network_by_name(args.get_or("network", "tinynet"))?;
+    let dir = args.get_or("artifacts", cnnlab::DEFAULT_ARTIFACTS_DIR);
+    let requests = args.get_usize("requests", 64)?;
+    let rate = args.get_f64("rate", 200.0)?;
+    let max_batch = args.get_usize("max-batch", 8)?;
+    let max_wait_us = args.get_usize("max-wait-us", 2000)?;
+
+    let svc = ExecutorService::spawn(dir)?;
+    let rt_manifest = cnnlab::runtime::Manifest::load(dir)?;
+    let batches = rt_manifest.batches_for(&net.name);
+    anyhow::ensure!(!batches.is_empty(), "no artifacts for {}", net.name);
+    let engine = PjrtEngine::new(svc.handle(), &net, batches, 42)?;
+    let image_shape: Vec<usize> = engine.image_shape().to_vec();
+
+    let server = Server::spawn(
+        engine,
+        ServerConfig {
+            policy: cnnlab::coordinator::BatchPolicy::new(
+                max_batch,
+                Duration::from_micros(max_wait_us as u64),
+            ),
+            queue_capacity: 256,
+        },
+    );
+    let client = server.client();
+    let mut rng = Rng::new(9);
+    let t0 = Instant::now();
+    let mut pending = Vec::new();
+    for _ in 0..requests {
+        let gap = rng.next_exp(rate);
+        std::thread::sleep(Duration::from_secs_f64(gap.min(0.05)));
+        let img = Tensor::randn(&image_shape, &mut rng, 0.1);
+        pending.push(client.submit(img)?);
+    }
+    for rx in pending {
+        rx.recv()??;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let m = server.metrics();
+    let lat = m.latency_summary();
+    println!(
+        "served {requests} requests in {} ({:.1} req/s)",
+        si_time(wall),
+        requests as f64 / wall
+    );
+    println!(
+        "latency: p50={} p99={} mean={}",
+        si_time(lat.p50),
+        si_time(lat.p99),
+        si_time(lat.mean)
+    );
+    println!("mean batch size: {:.2}", m.mean_batch_size());
+    Ok(())
+}
+
+/// `cnnlab dse --batch 128 --objective latency [--power-cap 50]`
+fn cmd_dse(args: &Args) -> anyhow::Result<()> {
+    let net = network_by_name(args.get_or("network", "alexnet"))?;
+    let batch = args.get_usize("batch", 128)?;
+    let objective =
+        cnnlab::config::parse_objective(args.get_or("objective", "latency"))?;
+    let cap = match args.get("power-cap") {
+        Some(v) => Some(v.parse::<f64>().map_err(|_| {
+            anyhow::anyhow!("--power-cap needs a number")
+        })?),
+        None => None,
+    };
+    let src = EstimateSource::new();
+    let cons = Constraints { power_cap_w: cap };
+    let best = exhaustive_by_kind(&net, &src, batch, objective, &cons)?;
+    println!(
+        "objective={} batch={batch} power_cap={:?}",
+        objective.name(),
+        cap
+    );
+    println!(
+        "best mapping: latency={} energy={:.2} J peak_power={:.1} W",
+        si_time(best.latency_s),
+        best.energy_j,
+        best.peak_power_w
+    );
+    println!("  {}", best.mapping);
+    Ok(())
+}
+
+/// `cnnlab report` — regenerate Table III + a Fig 6 summary.
+fn cmd_report(args: &Args) -> anyhow::Result<()> {
+    let batch = args.get_usize("batch", 128)?;
+    let net = alexnet();
+
+    let mut t3 = Table::new(
+        "Table III: FPGA engine resources",
+        &["engine", "ALUTs", "registers", "logic", "DSP", "RAM blocks",
+          "Fmax (MHz)"],
+    );
+    for row in &fpga::TABLE_III {
+        let r = fpga::engine_template(row.kind).default_resources();
+        let f = fpga::EngineConfig::default_for(row.kind).fmax_mhz();
+        t3.row(&[
+            row.kind.name().into(),
+            r.aluts.to_string(),
+            r.registers.to_string(),
+            format!("{} ({:.0}%)", r.alms,
+                    r.alms as f64 / fpga::DE5.alms as f64 * 100.0),
+            r.dsp_blocks.to_string(),
+            r.m20k_blocks.to_string(),
+            f2(f),
+        ]);
+    }
+    println!("{}", t3.render());
+
+    let gpu = GpuDevice::new(KernelLib::CuDnn);
+    let fpga_dev = FpgaDevice::new();
+    let mut fig6 = Table::new(
+        &format!("Fig 6 summary (batch {batch})"),
+        &["layer", "GPU ms", "FPGA ms", "speedup", "GPU GFLOPS",
+          "FPGA GFLOPS", "GPU W", "FPGA W"],
+    );
+    for name in cnnlab::model::alexnet_fig6_layers() {
+        let l = net.layer(name).unwrap();
+        let g = gpu.estimate(l, batch, Pass::Forward)?;
+        let f = fpga_dev.estimate(l, batch, Pass::Forward)?;
+        fig6.row(&[
+            name.into(),
+            f2(g.time_s * 1e3),
+            f2(f.time_s * 1e3),
+            f2(f.time_s / g.time_s),
+            f2(g.gflops()),
+            f2(f.gflops()),
+            f2(g.power_w),
+            f2(f.power_w),
+        ]);
+    }
+    println!("{}", fig6.render());
+    Ok(())
+}
+
+/// `cnnlab devices`
+fn cmd_devices(_args: &Args) -> anyhow::Result<()> {
+    let net = alexnet();
+    let src = EstimateSource::new();
+    println!("modeled devices:");
+    println!("  K40/cuDNN, K40/cuBLAS  (roofline, paper-calibrated)");
+    println!("  DE5/OpenCL             (Table III resource model)");
+    println!("  CPU/PJRT               (measured; needs artifacts)");
+    let m = Mapping::uniform(&net, Choice::Gpu(KernelLib::CuDnn));
+    let t = simulate(&net, &m, &src, 128, 1)?;
+    println!(
+        "alexnet batch-128 on K40/cuDNN: {} per batch",
+        si_time(t.makespan_s)
+    );
+    let m = Mapping::uniform(&net, Choice::Fpga);
+    let t = simulate(&net, &m, &src, 128, 1)?;
+    println!(
+        "alexnet batch-128 on DE5:       {} per batch",
+        si_time(t.makespan_s)
+    );
+    let _ = Objective::Latency;
+    Ok(())
+}

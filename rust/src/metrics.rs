@@ -1,0 +1,160 @@
+//! Metrics layer — the paper's five metric families (§IV.B):
+//! execution time, throughput, power, energy, and performance density
+//! (GFLOPS/W and GFLOP/J), aggregated per layer / layer class / device.
+
+use crate::device::LayerEstimate;
+use crate::model::LayerKind;
+
+/// One (layer, device) measurement row — a cell of Fig 6.
+#[derive(Clone, Debug)]
+pub struct LayerRecord {
+    pub layer: String,
+    pub kind: LayerKind,
+    pub device: String,
+    pub batch: usize,
+    pub est: LayerEstimate,
+}
+
+impl LayerRecord {
+    pub fn time_ms(&self) -> f64 {
+        self.est.time_s * 1e3
+    }
+
+    pub fn gflops(&self) -> f64 {
+        self.est.gflops()
+    }
+
+    pub fn power_w(&self) -> f64 {
+        self.est.power_w
+    }
+
+    pub fn energy_j(&self) -> f64 {
+        self.est.energy_j()
+    }
+
+    pub fn gflops_per_w(&self) -> f64 {
+        self.est.gflops_per_w()
+    }
+
+    pub fn gflop_per_j(&self) -> f64 {
+        self.est.gflop_per_j()
+    }
+}
+
+/// Aggregate over a set of records (the paper quotes conv-average,
+/// FC-average, and all-layer-average numbers).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Aggregate {
+    pub n: usize,
+    pub mean_time_s: f64,
+    pub mean_power_w: f64,
+    pub mean_energy_j: f64,
+    pub mean_gflops: f64,
+    pub mean_gflops_per_w: f64,
+    pub mean_gflop_per_j: f64,
+}
+
+pub fn aggregate<'a>(
+    records: impl IntoIterator<Item = &'a LayerRecord>,
+) -> Aggregate {
+    let rs: Vec<&LayerRecord> = records.into_iter().collect();
+    if rs.is_empty() {
+        return Aggregate::default();
+    }
+    let n = rs.len() as f64;
+    Aggregate {
+        n: rs.len(),
+        mean_time_s: rs.iter().map(|r| r.est.time_s).sum::<f64>() / n,
+        mean_power_w: rs.iter().map(|r| r.power_w()).sum::<f64>() / n,
+        mean_energy_j: rs.iter().map(|r| r.energy_j()).sum::<f64>() / n,
+        mean_gflops: rs.iter().map(|r| r.gflops()).sum::<f64>() / n,
+        mean_gflops_per_w: rs.iter().map(|r| r.gflops_per_w()).sum::<f64>()
+            / n,
+        mean_gflop_per_j: rs.iter().map(|r| r.gflop_per_j()).sum::<f64>()
+            / n,
+    }
+}
+
+/// Filter helper: records of a given layer class.
+pub fn of_kind<'a>(
+    records: &'a [LayerRecord],
+    kind: LayerKind,
+) -> impl Iterator<Item = &'a LayerRecord> {
+    records.iter().filter(move |r| r.kind == kind)
+}
+
+/// Speedup of `a` over `b` per layer (time_b / time_a), keyed by layer.
+pub fn speedups(
+    a: &[LayerRecord],
+    b: &[LayerRecord],
+) -> Vec<(String, f64)> {
+    a.iter()
+        .filter_map(|ra| {
+            b.iter()
+                .find(|rb| rb.layer == ra.layer)
+                .map(|rb| (ra.layer.clone(), rb.est.time_s / ra.est.time_s))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::LayerEstimate;
+
+    fn rec(layer: &str, kind: LayerKind, time_s: f64, power_w: f64) -> LayerRecord {
+        LayerRecord {
+            layer: layer.into(),
+            kind,
+            device: "test".into(),
+            batch: 1,
+            est: LayerEstimate {
+                time_s,
+                power_w,
+                flops: 1_000_000_000,
+                transfer_s: 0.0,
+            },
+        }
+    }
+
+    #[test]
+    fn aggregate_means() {
+        let rs = vec![
+            rec("a", LayerKind::Conv, 1.0, 10.0),
+            rec("b", LayerKind::Conv, 3.0, 30.0),
+        ];
+        let agg = aggregate(&rs);
+        assert_eq!(agg.n, 2);
+        assert!((agg.mean_time_s - 2.0).abs() < 1e-12);
+        assert!((agg.mean_power_w - 20.0).abs() < 1e-12);
+        // energies: 10 J and 90 J -> 50 J
+        assert!((agg.mean_energy_j - 50.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_aggregate_is_zero() {
+        let agg = aggregate(&[]);
+        assert_eq!(agg.n, 0);
+        assert_eq!(agg.mean_time_s, 0.0);
+    }
+
+    #[test]
+    fn kind_filter() {
+        let rs = vec![
+            rec("c1", LayerKind::Conv, 1.0, 1.0),
+            rec("f1", LayerKind::Fc, 1.0, 1.0),
+            rec("c2", LayerKind::Conv, 1.0, 1.0),
+        ];
+        assert_eq!(of_kind(&rs, LayerKind::Conv).count(), 2);
+        assert_eq!(of_kind(&rs, LayerKind::Fc).count(), 1);
+    }
+
+    #[test]
+    fn speedup_pairs() {
+        let fast = vec![rec("x", LayerKind::Fc, 0.1, 1.0)];
+        let slow = vec![rec("x", LayerKind::Fc, 10.0, 1.0)];
+        let s = speedups(&fast, &slow);
+        assert_eq!(s.len(), 1);
+        assert!((s[0].1 - 100.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,151 @@
+//! Analytic cost model: FLOPs and bytes moved per layer.
+//!
+//! FLOP convention is the paper's (Table II): one multiply-accumulate = 2
+//! fp operations, so an (M,K)x(K,N) GEMM is `2*M*K*N`.  The FC rows of
+//! Table II are reproduced *exactly* by these formulas (verified in tests).
+//! Bytes are f32 activation + weight traffic — the roofline denominator for
+//! the device models.
+
+use super::layer::{Layer, LayerSpec};
+use super::shape::{output_volume, param_shapes};
+
+/// Forward fp operations per image.
+pub fn forward_flops(layer: &Layer) -> u64 {
+    match &layer.spec {
+        LayerSpec::Conv(c) => {
+            let o = output_volume(layer);
+            2 * (c.cout as u64)
+                * (o.h as u64)
+                * (o.w as u64)
+                * (c.input.c as u64)
+                * (c.kh as u64)
+                * (c.kw as u64)
+        }
+        LayerSpec::Lrn(l) => {
+            // square + window accumulate + scale + pow per element
+            (l.input.elems() as u64) * (l.size as u64 + 3)
+        }
+        LayerSpec::Pool(p) => {
+            let o = output_volume(layer);
+            (o.elems() as u64) * (p.size as u64) * (p.size as u64)
+        }
+        LayerSpec::Fc(f) => 2 * (f.nin as u64) * (f.nout as u64),
+    }
+}
+
+/// Backward fp operations per image (FC only — the paper's Fig 8 workload;
+/// backward = the dX and dW GEMMs = exactly 2x forward, matching Table II).
+pub fn backward_flops(layer: &Layer) -> Option<u64> {
+    match &layer.spec {
+        LayerSpec::Fc(_) => Some(2 * forward_flops(layer)),
+        _ => None,
+    }
+}
+
+/// Parameter count (weights + biases).
+pub fn param_count(layer: &Layer) -> u64 {
+    param_shapes(layer)
+        .iter()
+        .map(|s| s.iter().product::<usize>() as u64)
+        .sum()
+}
+
+/// Bytes moved per image: read input + read params + write output (f32).
+pub fn forward_bytes(layer: &Layer, batch: usize) -> u64 {
+    let f = 4u64;
+    let input: u64 = super::shape::input_shape(layer, batch)
+        .iter()
+        .product::<usize>() as u64;
+    let output: u64 = super::shape::output_shape(layer, batch)
+        .iter()
+        .product::<usize>() as u64;
+    f * (input + output) + f * param_count(layer)
+}
+
+/// Arithmetic intensity (FLOP/byte) at a given batch — decides whether a
+/// device model is compute- or bandwidth-bound.
+pub fn arithmetic_intensity(layer: &Layer, batch: usize) -> f64 {
+    (batch as u64 * forward_flops(layer)) as f64
+        / forward_bytes(layer, batch) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::model::network::alexnet;
+    use super::*;
+
+    #[test]
+    fn table2_fc_forward_flops_exact() {
+        let net = alexnet();
+        assert_eq!(forward_flops(net.layer("fc6").unwrap()), 75_497_472);
+        assert_eq!(forward_flops(net.layer("fc7").unwrap()), 33_554_432);
+        assert_eq!(forward_flops(net.layer("fc8").unwrap()), 8_192_000);
+    }
+
+    #[test]
+    fn table2_fc_backward_flops_exact() {
+        let net = alexnet();
+        assert_eq!(
+            backward_flops(net.layer("fc6").unwrap()),
+            Some(150_994_944)
+        );
+        assert_eq!(
+            backward_flops(net.layer("fc7").unwrap()),
+            Some(67_108_864)
+        );
+        assert_eq!(
+            backward_flops(net.layer("fc8").unwrap()),
+            Some(16_384_000)
+        );
+    }
+
+    #[test]
+    fn conv_has_no_backward_model() {
+        let net = alexnet();
+        assert_eq!(backward_flops(net.layer("conv1").unwrap()), None);
+    }
+
+    #[test]
+    fn conv2_is_heaviest_conv() {
+        let net = alexnet();
+        let convs = ["conv1", "conv2", "conv3", "conv4", "conv5"];
+        let flops: Vec<u64> = convs
+            .iter()
+            .map(|n| forward_flops(net.layer(n).unwrap()))
+            .collect();
+        let max = *flops.iter().max().unwrap();
+        assert_eq!(flops[1], max, "conv2 should dominate: {flops:?}");
+    }
+
+    #[test]
+    fn alexnet_param_count() {
+        let net = alexnet();
+        let total: u64 = net.layers.iter().map(param_count).sum();
+        assert!(
+            (60_000_000..63_000_000).contains(&total),
+            "AlexNet ~61M params, got {total}"
+        );
+    }
+
+    #[test]
+    fn fc_intensity_grows_with_batch() {
+        // FC layers are weight-bound: batching amortizes the weight reads,
+        // which is exactly why the GPU's FC speedup in Fig 6 needs batching.
+        let net = alexnet();
+        let fc6 = net.layer("fc6").unwrap();
+        let i1 = arithmetic_intensity(fc6, 1);
+        let i8 = arithmetic_intensity(fc6, 8);
+        assert!(i8 > 4.0 * i1, "batch-8 intensity {i8} vs batch-1 {i1}");
+    }
+
+    #[test]
+    fn bytes_positive_and_scale_with_batch() {
+        let net = alexnet();
+        for l in &net.layers {
+            let b1 = forward_bytes(l, 1);
+            let b4 = forward_bytes(l, 4);
+            assert!(b1 > 0);
+            assert!(b4 > b1);
+        }
+    }
+}

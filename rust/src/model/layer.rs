@@ -1,0 +1,254 @@
+//! Layer IR — the paper's user-facing abstraction (§III.B).
+//!
+//! Each supported layer kind is described by exactly the tuple the paper
+//! defines:
+//!
+//! * Convolutional layer  ⟨M_I, M_K, M_O, S, T⟩
+//! * Normalization layer  ⟨M_I, T, S, α, β⟩
+//! * Pooling layer        ⟨M_I, M_O, T, S, N⟩
+//! * FC layer             ⟨M_I, K_O⟩
+//!
+//! plus the explicit padding the shapes of Table I pin down.  Shape
+//! inference and FLOP/byte costs live in `shape.rs` / `cost.rs`.
+
+/// Nonlinearity `T` of the conv/FC tuples.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Act {
+    None,
+    Relu,
+    Sigmoid,
+    Tanh,
+}
+
+impl Act {
+    pub fn parse(s: &str) -> anyhow::Result<Act> {
+        Ok(match s {
+            "none" => Act::None,
+            "relu" => Act::Relu,
+            "sigmoid" => Act::Sigmoid,
+            "tanh" => Act::Tanh,
+            other => anyhow::bail!("unknown activation {other:?}"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Act::None => "none",
+            Act::Relu => "relu",
+            Act::Sigmoid => "sigmoid",
+            Act::Tanh => "tanh",
+        }
+    }
+}
+
+/// Pooling operator `T` of the pooling tuple.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PoolKind {
+    Max,
+    Avg,
+}
+
+impl PoolKind {
+    pub fn parse(s: &str) -> anyhow::Result<PoolKind> {
+        Ok(match s {
+            "max" => PoolKind::Max,
+            "avg" => PoolKind::Avg,
+            other => anyhow::bail!("unknown pooling kind {other:?}"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PoolKind::Max => "max",
+            PoolKind::Avg => "avg",
+        }
+    }
+}
+
+/// A feature-map volume `height x width x dimension` (paper's M_I/M_O).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Volume {
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+}
+
+impl Volume {
+    pub fn new(c: usize, h: usize, w: usize) -> Self {
+        Volume { c, h, w }
+    }
+
+    pub fn elems(&self) -> usize {
+        self.c * self.h * self.w
+    }
+}
+
+/// Convolutional layer ⟨M_I, M_K, M_O, S, T⟩.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ConvSpec {
+    pub input: Volume,
+    pub cout: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    pub pad: usize,
+    pub act: Act,
+}
+
+/// Normalization layer ⟨M_I, T, S, α, β⟩ (T = across-channel LRN).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LrnSpec {
+    pub input: Volume,
+    pub size: usize,
+    pub alpha: f64,
+    pub beta: f64,
+    pub k: f64,
+}
+
+/// Pooling layer ⟨M_I, M_O, T, S, N⟩.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PoolSpec {
+    pub input: Volume,
+    pub kind: PoolKind,
+    pub size: usize,
+    pub stride: usize,
+}
+
+/// FC layer ⟨M_I, K_O⟩; `input` keeps the NCHW view when the activations
+/// arrive as a volume (FC6's 256x6x6).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FcSpec {
+    pub nin: usize,
+    pub nout: usize,
+    pub act: Act,
+    pub softmax: bool,
+    pub in_volume: Option<Volume>,
+}
+
+/// One layer of a network, named.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Layer {
+    pub name: String,
+    pub spec: LayerSpec,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum LayerSpec {
+    Conv(ConvSpec),
+    Lrn(LrnSpec),
+    Pool(PoolSpec),
+    Fc(FcSpec),
+}
+
+impl Layer {
+    pub fn conv(name: &str, spec: ConvSpec) -> Layer {
+        Layer { name: name.into(), spec: LayerSpec::Conv(spec) }
+    }
+
+    pub fn lrn(name: &str, spec: LrnSpec) -> Layer {
+        Layer { name: name.into(), spec: LayerSpec::Lrn(spec) }
+    }
+
+    pub fn pool(name: &str, spec: PoolSpec) -> Layer {
+        Layer { name: name.into(), spec: LayerSpec::Pool(spec) }
+    }
+
+    pub fn fc(name: &str, spec: FcSpec) -> Layer {
+        Layer { name: name.into(), spec: LayerSpec::Fc(spec) }
+    }
+
+    /// Layer class used by the device models and the FPGA resource model
+    /// (Table III groups engines as Conv / LRN / FC / Pooling).
+    pub fn kind(&self) -> LayerKind {
+        match &self.spec {
+            LayerSpec::Conv(_) => LayerKind::Conv,
+            LayerSpec::Lrn(_) => LayerKind::Lrn,
+            LayerSpec::Pool(_) => LayerKind::Pool,
+            LayerSpec::Fc(_) => LayerKind::Fc,
+        }
+    }
+
+    /// Does this layer carry trainable parameters (w, b)?
+    pub fn has_params(&self) -> bool {
+        matches!(self.spec, LayerSpec::Conv(_) | LayerSpec::Fc(_))
+    }
+}
+
+/// Coarse layer class — the granularity of the paper's engines and figures.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LayerKind {
+    Conv,
+    Lrn,
+    Pool,
+    Fc,
+}
+
+impl LayerKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            LayerKind::Conv => "conv",
+            LayerKind::Lrn => "lrn",
+            LayerKind::Pool => "pool",
+            LayerKind::Fc => "fc",
+        }
+    }
+
+    pub const ALL: [LayerKind; 4] =
+        [LayerKind::Conv, LayerKind::Lrn, LayerKind::Pool, LayerKind::Fc];
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn act_roundtrip() {
+        for a in [Act::None, Act::Relu, Act::Sigmoid, Act::Tanh] {
+            assert_eq!(Act::parse(a.name()).unwrap(), a);
+        }
+        assert!(Act::parse("gelu").is_err());
+    }
+
+    #[test]
+    fn pool_kind_roundtrip() {
+        for k in [PoolKind::Max, PoolKind::Avg] {
+            assert_eq!(PoolKind::parse(k.name()).unwrap(), k);
+        }
+        assert!(PoolKind::parse("l2").is_err());
+    }
+
+    #[test]
+    fn volume_elems() {
+        assert_eq!(Volume::new(96, 55, 55).elems(), 96 * 55 * 55);
+    }
+
+    #[test]
+    fn layer_kind_and_params() {
+        let conv = Layer::conv(
+            "c",
+            ConvSpec {
+                input: Volume::new(3, 8, 8),
+                cout: 4,
+                kh: 3,
+                kw: 3,
+                stride: 1,
+                pad: 1,
+                act: Act::Relu,
+            },
+        );
+        assert_eq!(conv.kind(), LayerKind::Conv);
+        assert!(conv.has_params());
+
+        let pool = Layer::pool(
+            "p",
+            PoolSpec {
+                input: Volume::new(4, 8, 8),
+                kind: PoolKind::Max,
+                size: 2,
+                stride: 2,
+            },
+        );
+        assert_eq!(pool.kind(), LayerKind::Pool);
+        assert!(!pool.has_params());
+    }
+}

@@ -1,0 +1,13 @@
+//! Model layer: the paper's user-facing layer abstraction (§III.B tuples),
+//! shape inference, analytic costs, and network construction/validation.
+
+pub mod cost;
+pub mod layer;
+pub mod network;
+pub mod shape;
+
+pub use layer::{
+    Act, ConvSpec, FcSpec, Layer, LayerKind, LayerSpec, LrnSpec, PoolKind,
+    PoolSpec, Volume,
+};
+pub use network::{alexnet, alexnet_fig6_layers, tinynet, Network};

@@ -1,0 +1,292 @@
+//! Network = ordered layer graph + validation + the two built-in networks
+//! (the paper's Table I AlexNet, and the tiny test network that shares
+//! artifacts with the Python test-suite).
+
+use super::layer::*;
+use super::shape::{input_shape, output_shape};
+
+/// A sequential CNN (the paper's networks are strictly layer-sequential;
+/// §II: "a large number of layers, which are normally executed in
+/// sequence").
+#[derive(Clone, Debug)]
+pub struct Network {
+    pub name: String,
+    pub layers: Vec<Layer>,
+}
+
+impl Network {
+    pub fn new(name: &str, layers: Vec<Layer>) -> anyhow::Result<Network> {
+        let net = Network { name: name.into(), layers };
+        net.validate()?;
+        Ok(net)
+    }
+
+    pub fn layer(&self, name: &str) -> Option<&Layer> {
+        self.layers.iter().find(|l| l.name == name)
+    }
+
+    pub fn layer_index(&self, name: &str) -> Option<usize> {
+        self.layers.iter().position(|l| l.name == name)
+    }
+
+    /// Every adjacent pair must be element-compatible: the producer's
+    /// output element count equals the consumer's input element count
+    /// (FC layers may flatten an NCHW volume).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.layers.is_empty(), "network has no layers");
+        let mut seen = std::collections::HashSet::new();
+        for l in &self.layers {
+            anyhow::ensure!(
+                seen.insert(l.name.clone()),
+                "duplicate layer name {:?}",
+                l.name
+            );
+        }
+        for pair in self.layers.windows(2) {
+            let out: usize = output_shape(&pair[0], 1).iter().product();
+            let inp: usize = input_shape(&pair[1], 1).iter().product();
+            anyhow::ensure!(
+                out == inp,
+                "shape break {} -> {}: {} vs {} elements",
+                pair[0].name,
+                pair[1].name,
+                out,
+                inp
+            );
+        }
+        for l in &self.layers {
+            if let LayerSpec::Conv(c) = &l.spec {
+                anyhow::ensure!(c.stride > 0, "{}: stride 0", l.name);
+                anyhow::ensure!(
+                    c.input.h + 2 * c.pad >= c.kh
+                        && c.input.w + 2 * c.pad >= c.kw,
+                    "{}: kernel larger than padded input",
+                    l.name
+                );
+            }
+            if let LayerSpec::Pool(p) = &l.spec {
+                anyhow::ensure!(p.stride > 0, "{}: stride 0", l.name);
+                anyhow::ensure!(
+                    p.input.h >= p.size && p.input.w >= p.size,
+                    "{}: pool window larger than input",
+                    l.name
+                );
+            }
+            if let LayerSpec::Fc(f) = &l.spec {
+                if let Some(v) = f.in_volume {
+                    anyhow::ensure!(
+                        v.elems() == f.nin,
+                        "{}: in_volume {}x{}x{} != nin {}",
+                        l.name,
+                        v.c,
+                        v.h,
+                        v.w,
+                        f.nin
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn total_forward_flops(&self) -> u64 {
+        self.layers.iter().map(super::cost::forward_flops).sum()
+    }
+}
+
+/// The paper's experimental network (Table I), with the LRN/pool stages
+/// that make its shapes consistent.  Must mirror
+/// `python/compile/model.py::alexnet_specs` exactly.
+pub fn alexnet() -> Network {
+    let relu = Act::Relu;
+    Network::new(
+        "alexnet",
+        vec![
+            Layer::conv("conv1", ConvSpec {
+                input: Volume::new(3, 224, 224),
+                cout: 96, kh: 11, kw: 11, stride: 4, pad: 2, act: relu,
+            }),
+            Layer::lrn("lrn1", LrnSpec {
+                input: Volume::new(96, 55, 55),
+                size: 5, alpha: 1e-4, beta: 0.75, k: 2.0,
+            }),
+            Layer::pool("pool1", PoolSpec {
+                input: Volume::new(96, 55, 55),
+                kind: PoolKind::Max, size: 3, stride: 2,
+            }),
+            Layer::conv("conv2", ConvSpec {
+                input: Volume::new(96, 27, 27),
+                cout: 256, kh: 5, kw: 5, stride: 1, pad: 2, act: relu,
+            }),
+            Layer::lrn("lrn2", LrnSpec {
+                input: Volume::new(256, 27, 27),
+                size: 5, alpha: 1e-4, beta: 0.75, k: 2.0,
+            }),
+            Layer::pool("pool2", PoolSpec {
+                input: Volume::new(256, 27, 27),
+                kind: PoolKind::Max, size: 3, stride: 2,
+            }),
+            Layer::conv("conv3", ConvSpec {
+                input: Volume::new(256, 13, 13),
+                cout: 384, kh: 3, kw: 3, stride: 1, pad: 1, act: relu,
+            }),
+            Layer::conv("conv4", ConvSpec {
+                input: Volume::new(384, 13, 13),
+                cout: 384, kh: 3, kw: 3, stride: 1, pad: 1, act: relu,
+            }),
+            Layer::conv("conv5", ConvSpec {
+                input: Volume::new(384, 13, 13),
+                cout: 256, kh: 3, kw: 3, stride: 1, pad: 1, act: relu,
+            }),
+            Layer::pool("pool5", PoolSpec {
+                input: Volume::new(256, 13, 13),
+                kind: PoolKind::Max, size: 3, stride: 2,
+            }),
+            Layer::fc("fc6", FcSpec {
+                nin: 9216, nout: 4096, act: relu, softmax: false,
+                in_volume: Some(Volume::new(256, 6, 6)),
+            }),
+            Layer::fc("fc7", FcSpec {
+                nin: 4096, nout: 4096, act: relu, softmax: false,
+                in_volume: None,
+            }),
+            Layer::fc("fc8", FcSpec {
+                nin: 4096, nout: 1000, act: Act::None, softmax: true,
+                in_volume: None,
+            }),
+        ],
+    )
+    .expect("alexnet is internally consistent")
+}
+
+/// Miniature network matching `python/compile/model.py::tinynet_specs`;
+/// its artifacts make the integration tests cheap.
+pub fn tinynet() -> Network {
+    Network::new(
+        "tinynet",
+        vec![
+            Layer::conv("tconv1", ConvSpec {
+                input: Volume::new(3, 8, 8),
+                cout: 4, kh: 3, kw: 3, stride: 1, pad: 1, act: Act::Relu,
+            }),
+            Layer::lrn("tlrn1", LrnSpec {
+                input: Volume::new(4, 8, 8),
+                size: 3, alpha: 1e-4, beta: 0.75, k: 2.0,
+            }),
+            Layer::pool("tpool1", PoolSpec {
+                input: Volume::new(4, 8, 8),
+                kind: PoolKind::Max, size: 2, stride: 2,
+            }),
+            Layer::fc("tfc2", FcSpec {
+                nin: 64, nout: 10, act: Act::None, softmax: true,
+                in_volume: Some(Volume::new(4, 4, 4)),
+            }),
+        ],
+    )
+    .expect("tinynet is internally consistent")
+}
+
+/// The eight rows the paper's Fig 6 plots (conv1-5, fc6-8), in order.
+pub fn alexnet_fig6_layers() -> Vec<&'static str> {
+    vec!["conv1", "conv2", "conv3", "conv4", "conv5", "fc6", "fc7", "fc8"]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::shape::output_shape;
+
+    #[test]
+    fn alexnet_validates() {
+        alexnet().validate().unwrap();
+    }
+
+    #[test]
+    fn tinynet_validates() {
+        tinynet().validate().unwrap();
+    }
+
+    #[test]
+    fn alexnet_has_13_layers_8_weighted() {
+        let net = alexnet();
+        assert_eq!(net.layers.len(), 13);
+        assert_eq!(net.layers.iter().filter(|l| l.has_params()).count(), 8);
+    }
+
+    #[test]
+    fn table1_output_shapes() {
+        let net = alexnet();
+        let check = |name: &str, want: &[usize]| {
+            assert_eq!(
+                output_shape(net.layer(name).unwrap(), 1),
+                want.to_vec(),
+                "{name}"
+            );
+        };
+        check("conv1", &[1, 96, 55, 55]);
+        check("conv2", &[1, 256, 27, 27]);
+        check("conv3", &[1, 384, 13, 13]);
+        check("conv4", &[1, 384, 13, 13]);
+        check("conv5", &[1, 256, 13, 13]);
+        check("pool5", &[1, 256, 6, 6]);
+        check("fc6", &[1, 4096]);
+        check("fc7", &[1, 4096]);
+        check("fc8", &[1, 1000]);
+    }
+
+    #[test]
+    fn rejects_shape_break() {
+        let bad = Network::new(
+            "bad",
+            vec![
+                Layer::fc("a", FcSpec {
+                    nin: 8, nout: 4, act: Act::None, softmax: false,
+                    in_volume: None,
+                }),
+                Layer::fc("b", FcSpec {
+                    nin: 5, nout: 2, act: Act::None, softmax: false,
+                    in_volume: None,
+                }),
+            ],
+        );
+        assert!(bad.is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_names() {
+        let bad = Network::new(
+            "dup",
+            vec![
+                Layer::fc("x", FcSpec {
+                    nin: 4, nout: 4, act: Act::None, softmax: false,
+                    in_volume: None,
+                }),
+                Layer::fc("x", FcSpec {
+                    nin: 4, nout: 4, act: Act::None, softmax: false,
+                    in_volume: None,
+                }),
+            ],
+        );
+        assert!(bad.is_err());
+    }
+
+    #[test]
+    fn rejects_oversized_pool() {
+        let bad = Network::new(
+            "badpool",
+            vec![Layer::pool("p", PoolSpec {
+                input: Volume::new(4, 2, 2),
+                kind: PoolKind::Max, size: 3, stride: 1,
+            })],
+        );
+        assert!(bad.is_err());
+    }
+
+    #[test]
+    fn fig6_rows() {
+        let net = alexnet();
+        for name in alexnet_fig6_layers() {
+            assert!(net.layer(name).is_some(), "{name}");
+        }
+    }
+}

@@ -1,0 +1,152 @@
+//! Shape inference over the layer IR — must agree exactly with the Python
+//! side (`python/compile/model.py`), since the Rust coordinator feeds
+//! buffers to artifacts lowered from those Python shapes.
+
+use super::layer::{Layer, LayerSpec, Volume};
+
+/// Conv/pool output extent with floor semantics: ⌊(in + 2p − k)/s⌋ + 1.
+pub fn out_extent(input: usize, k: usize, stride: usize, pad: usize) -> usize {
+    (input + 2 * pad - k) / stride + 1
+}
+
+/// Output volume of a layer (per image).
+pub fn output_volume(layer: &Layer) -> Volume {
+    match &layer.spec {
+        LayerSpec::Conv(c) => Volume::new(
+            c.cout,
+            out_extent(c.input.h, c.kh, c.stride, c.pad),
+            out_extent(c.input.w, c.kw, c.stride, c.pad),
+        ),
+        LayerSpec::Lrn(l) => l.input,
+        LayerSpec::Pool(p) => Volume::new(
+            p.input.c,
+            out_extent(p.input.h, p.size, p.stride, 0),
+            out_extent(p.input.w, p.size, p.stride, 0),
+        ),
+        // FC output is a flat vector; represent as 1x1xN volume
+        LayerSpec::Fc(f) => Volume::new(f.nout, 1, 1),
+    }
+}
+
+/// Input activation shape as NCHW / NC, batch-prefixed.
+pub fn input_shape(layer: &Layer, batch: usize) -> Vec<usize> {
+    match &layer.spec {
+        LayerSpec::Conv(c) => vec![batch, c.input.c, c.input.h, c.input.w],
+        LayerSpec::Lrn(l) => vec![batch, l.input.c, l.input.h, l.input.w],
+        LayerSpec::Pool(p) => vec![batch, p.input.c, p.input.h, p.input.w],
+        LayerSpec::Fc(f) => match f.in_volume {
+            Some(v) => vec![batch, v.c, v.h, v.w],
+            None => vec![batch, f.nin],
+        },
+    }
+}
+
+/// Output shape, batch-prefixed.
+pub fn output_shape(layer: &Layer, batch: usize) -> Vec<usize> {
+    match &layer.spec {
+        LayerSpec::Fc(f) => vec![batch, f.nout],
+        _ => {
+            let v = output_volume(layer);
+            vec![batch, v.c, v.h, v.w]
+        }
+    }
+}
+
+/// Shapes of the trainable parameters, in artifact order (w then b).
+pub fn param_shapes(layer: &Layer) -> Vec<Vec<usize>> {
+    match &layer.spec {
+        LayerSpec::Conv(c) => vec![
+            vec![c.cout, c.input.c, c.kh, c.kw],
+            vec![c.cout],
+        ],
+        LayerSpec::Fc(f) => vec![vec![f.nin, f.nout], vec![f.nout]],
+        _ => vec![],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::layer::*;
+
+    fn conv1() -> Layer {
+        Layer::conv(
+            "conv1",
+            ConvSpec {
+                input: Volume::new(3, 224, 224),
+                cout: 96,
+                kh: 11,
+                kw: 11,
+                stride: 4,
+                pad: 2,
+                act: Act::Relu,
+            },
+        )
+    }
+
+    #[test]
+    fn table1_conv1_is_55() {
+        // floor((224 + 4 - 11)/4) + 1 = 55 — the Table I row
+        let v = output_volume(&conv1());
+        assert_eq!((v.c, v.h, v.w), (96, 55, 55));
+    }
+
+    #[test]
+    fn pool_55_to_27() {
+        let p = Layer::pool(
+            "pool1",
+            PoolSpec {
+                input: Volume::new(96, 55, 55),
+                kind: PoolKind::Max,
+                size: 3,
+                stride: 2,
+            },
+        );
+        let v = output_volume(&p);
+        assert_eq!((v.c, v.h, v.w), (96, 27, 27));
+    }
+
+    #[test]
+    fn shapes_batched() {
+        assert_eq!(input_shape(&conv1(), 4), vec![4, 3, 224, 224]);
+        assert_eq!(output_shape(&conv1(), 4), vec![4, 96, 55, 55]);
+    }
+
+    #[test]
+    fn conv_param_shapes() {
+        let ps = param_shapes(&conv1());
+        assert_eq!(ps, vec![vec![96, 3, 11, 11], vec![96]]);
+    }
+
+    #[test]
+    fn fc_shapes_with_volume_input() {
+        let fc = Layer::fc(
+            "fc6",
+            FcSpec {
+                nin: 9216,
+                nout: 4096,
+                act: Act::Relu,
+                softmax: false,
+                in_volume: Some(Volume::new(256, 6, 6)),
+            },
+        );
+        assert_eq!(input_shape(&fc, 2), vec![2, 256, 6, 6]);
+        assert_eq!(output_shape(&fc, 2), vec![2, 4096]);
+        assert_eq!(param_shapes(&fc), vec![vec![9216, 4096], vec![4096]]);
+    }
+
+    #[test]
+    fn lrn_preserves_shape() {
+        let l = Layer::lrn(
+            "lrn1",
+            LrnSpec {
+                input: Volume::new(96, 55, 55),
+                size: 5,
+                alpha: 1e-4,
+                beta: 0.75,
+                k: 2.0,
+            },
+        );
+        assert_eq!(output_shape(&l, 1), vec![1, 96, 55, 55]);
+    }
+}

@@ -1,0 +1,148 @@
+//! Power models for both accelerators.
+//!
+//! GPU power is table-driven from the paper's own measurements (Fig 6c,
+//! Fig 7/8 power panels).  FPGA power is resource-derived: static leakage
+//! plus frequency-scaled dynamic terms per DSP / ALM / M20K, calibrated so
+//! the conv engine lands on the paper's 2.23 W.
+
+use crate::fpga::{EngineConfig, DE5};
+use crate::model::LayerKind;
+use crate::runtime::Pass;
+
+/// GPU kernel library (the paper's §IV.C comparison).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum KernelLib {
+    CuDnn,
+    CuBlas,
+}
+
+impl KernelLib {
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelLib::CuDnn => "cuDNN",
+            KernelLib::CuBlas => "cuBLAS",
+        }
+    }
+}
+
+/// K40 board power by layer kind / library / pass — the paper's measured
+/// operating points:
+/// * conv layers: 97 W average (Fig 6c)
+/// * FC forward: cuDNN 79.12 W, cuBLAS 78.73 W (Fig 7)
+/// * FC backward: cuDNN 123.40 W, cuBLAS 78.77 W (Fig 8)
+pub fn gpu_power_w(kind: LayerKind, lib: KernelLib, pass: Pass) -> f64 {
+    match (kind, pass) {
+        (LayerKind::Conv, _) => 97.0,
+        (LayerKind::Fc, Pass::Forward) => match lib {
+            KernelLib::CuDnn => 79.12,
+            KernelLib::CuBlas => 78.73,
+        },
+        (LayerKind::Fc, Pass::Backward) => match lib {
+            KernelLib::CuDnn => 123.40,
+            KernelLib::CuBlas => 78.77,
+        },
+        // LRN / pooling kernels are lightweight elementwise passes
+        (LayerKind::Lrn, _) => 75.0,
+        (LayerKind::Pool, _) => 72.0,
+    }
+}
+
+/// K40 idle draw (board powered, no kernel resident).
+pub const GPU_IDLE_W: f64 = 20.0;
+
+/// FPGA static leakage (board idle).
+pub const FPGA_STATIC_W: f64 = 0.9;
+
+/// Dynamic power coefficients, watts per GHz per resource unit.
+pub const FPGA_W_PER_GHZ_DSP: f64 = 0.012;
+pub const FPGA_W_PER_GHZ_ALM: f64 = 2.6e-5;
+pub const FPGA_W_PER_GHZ_M20K: f64 = 1.0e-3;
+
+/// Engine power at its achieved clock.
+pub fn fpga_power_w(cfg: &EngineConfig) -> f64 {
+    let r = cfg.resources();
+    let f_ghz = cfg.fmax_mhz() / 1000.0;
+    FPGA_STATIC_W
+        + f_ghz
+            * (FPGA_W_PER_GHZ_DSP * r.dsp_blocks as f64
+                + FPGA_W_PER_GHZ_ALM * r.alms as f64
+                + FPGA_W_PER_GHZ_M20K * r.m20k_blocks as f64)
+}
+
+/// Utilization check against the DE5 — exposed for power-density studies.
+pub fn fpga_utilization(cfg: &EngineConfig) -> f64 {
+    cfg.resources().utilization(&DE5)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gpu_conv_power_is_97w() {
+        assert_eq!(
+            gpu_power_w(LayerKind::Conv, KernelLib::CuDnn, Pass::Forward),
+            97.0
+        );
+    }
+
+    #[test]
+    fn gpu_fc_power_matches_fig7_fig8() {
+        assert_eq!(
+            gpu_power_w(LayerKind::Fc, KernelLib::CuDnn, Pass::Forward),
+            79.12
+        );
+        assert_eq!(
+            gpu_power_w(LayerKind::Fc, KernelLib::CuBlas, Pass::Forward),
+            78.73
+        );
+        assert_eq!(
+            gpu_power_w(LayerKind::Fc, KernelLib::CuDnn, Pass::Backward),
+            123.40
+        );
+        assert_eq!(
+            gpu_power_w(LayerKind::Fc, KernelLib::CuBlas, Pass::Backward),
+            78.77
+        );
+    }
+
+    #[test]
+    fn cudnn_backward_power_spike_is_modeled() {
+        // the Fig 8 observation: cuDNN BP draws ~1.57x cuBLAS BP power
+        let ratio = gpu_power_w(LayerKind::Fc, KernelLib::CuDnn, Pass::Backward)
+            / gpu_power_w(LayerKind::Fc, KernelLib::CuBlas, Pass::Backward);
+        assert!((ratio - 1.566).abs() < 0.01, "ratio {ratio}");
+    }
+
+    #[test]
+    fn fpga_conv_power_calibrated_to_paper() {
+        // paper: 2.23 W for the conv engine
+        let p = fpga_power_w(&EngineConfig::default_for(LayerKind::Conv));
+        assert!((p - 2.23).abs() < 0.05, "conv engine power {p}");
+    }
+
+    #[test]
+    fn fpga_power_far_below_gpu() {
+        // the paper's headline: FPGA ~40-50x more power-frugal on conv
+        let fpga = fpga_power_w(&EngineConfig::default_for(LayerKind::Conv));
+        let gpu = gpu_power_w(LayerKind::Conv, KernelLib::CuDnn, Pass::Forward);
+        let ratio = gpu / fpga;
+        assert!(ratio > 35.0 && ratio < 60.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn fpga_power_scales_with_pes() {
+        let small = fpga_power_w(&EngineConfig { kind: LayerKind::Conv, pes: 10 });
+        let big = fpga_power_w(&EngineConfig { kind: LayerKind::Conv, pes: 54 });
+        assert!(big > small);
+    }
+
+    #[test]
+    fn all_engines_within_fpga_envelope() {
+        // every engine draws single-digit watts — the board's envelope
+        for kind in LayerKind::ALL {
+            let p = fpga_power_w(&EngineConfig::default_for(kind));
+            assert!(p > FPGA_STATIC_W && p < 10.0, "{kind:?}: {p}");
+        }
+    }
+}

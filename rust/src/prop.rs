@@ -1,0 +1,227 @@
+//! Mini property-testing framework (no `proptest` offline).
+//!
+//! A `Gen<T>` draws random values from the repo PRNG; [`check`] runs a
+//! property over many cases and, on failure, greedily shrinks the input via
+//! the generator's `shrink` function before reporting.  Used by
+//! `rust/tests/prop_invariants.rs` for coordinator/scheduler invariants.
+
+use crate::util::Rng;
+
+/// A generator: draws a `T` and can propose smaller variants of a value.
+pub struct Gen<T> {
+    pub draw: Box<dyn Fn(&mut Rng) -> T>,
+    pub shrink: Box<dyn Fn(&T) -> Vec<T>>,
+}
+
+impl<T: Clone + 'static> Gen<T> {
+    pub fn new(draw: impl Fn(&mut Rng) -> T + 'static) -> Gen<T> {
+        Gen { draw: Box::new(draw), shrink: Box::new(|_| Vec::new()) }
+    }
+
+    pub fn with_shrink(
+        mut self,
+        shrink: impl Fn(&T) -> Vec<T> + 'static,
+    ) -> Gen<T> {
+        self.shrink = Box::new(shrink);
+        self
+    }
+
+    /// Map the generated value (shrinking is lost across the map).
+    pub fn map<U: Clone + 'static>(
+        self,
+        f: impl Fn(T) -> U + 'static,
+    ) -> Gen<U> {
+        let draw = self.draw;
+        Gen::new(move |rng| f((draw)(rng)))
+    }
+}
+
+/// usize in [lo, hi], shrinking toward lo.
+pub fn usize_in(lo: usize, hi: usize) -> Gen<usize> {
+    assert!(lo <= hi);
+    Gen::new(move |rng| lo + rng.next_below((hi - lo + 1) as u64) as usize)
+        .with_shrink(move |&v| {
+            let mut out = Vec::new();
+            if v > lo {
+                out.push(lo);
+                let mid = lo + (v - lo) / 2;
+                if mid != lo && mid != v {
+                    out.push(mid);
+                }
+                if v - 1 != lo {
+                    out.push(v - 1);
+                }
+            }
+            out
+        })
+}
+
+/// f64 in [lo, hi), shrinking toward lo.
+pub fn f64_in(lo: f64, hi: f64) -> Gen<f64> {
+    Gen::new(move |rng| rng.range_f64(lo, hi)).with_shrink(move |&v| {
+        if v > lo {
+            vec![lo, lo + (v - lo) / 2.0]
+        } else {
+            Vec::new()
+        }
+    })
+}
+
+/// Vec of draws from an element generator, with a generated length.
+pub fn vec_of<T: Clone + 'static>(
+    elem: Gen<T>,
+    len: Gen<usize>,
+) -> Gen<Vec<T>> {
+    let edraw = elem.draw;
+    let ldraw = len.draw;
+    Gen::new(move |rng| {
+        let n = (ldraw)(rng);
+        (0..n).map(|_| (edraw)(rng)).collect()
+    })
+    .with_shrink(|v: &Vec<T>| {
+        let mut out = Vec::new();
+        if !v.is_empty() {
+            out.push(v[..v.len() / 2].to_vec());
+            out.push(v[..v.len() - 1].to_vec());
+        }
+        out
+    })
+}
+
+/// Outcome of a property check.
+#[derive(Debug)]
+pub enum PropResult<T> {
+    Ok { cases: usize },
+    Failed { original: T, shrunk: T, message: String, shrinks: usize },
+}
+
+impl<T: std::fmt::Debug> PropResult<T> {
+    pub fn unwrap(self) {
+        match self {
+            PropResult::Ok { .. } => {}
+            PropResult::Failed { original, shrunk, message, shrinks } => {
+                panic!(
+                    "property failed: {message}\n  original: {original:?}\n  \
+                     shrunk ({shrinks} steps): {shrunk:?}"
+                )
+            }
+        }
+    }
+}
+
+/// Run `prop` over `cases` random inputs; shrink on first failure.
+/// The property returns Err(description) to signal failure.
+pub fn check<T: Clone + std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    gen: &Gen<T>,
+    prop: impl Fn(&T) -> Result<(), String>,
+) -> PropResult<T> {
+    let mut rng = Rng::new(seed);
+    for _ in 0..cases {
+        let input = (gen.draw)(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // greedy shrink
+            let mut cur = input.clone();
+            let mut cur_msg = msg;
+            let mut steps = 0;
+            'outer: loop {
+                for cand in (gen.shrink)(&cur) {
+                    if let Err(m) = prop(&cand) {
+                        cur = cand;
+                        cur_msg = m;
+                        steps += 1;
+                        if steps > 200 {
+                            break 'outer;
+                        }
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            return PropResult::Failed {
+                original: input,
+                shrunk: cur,
+                message: cur_msg,
+                shrinks: steps,
+            };
+        }
+    }
+    PropResult::Ok { cases }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        let g = usize_in(0, 100);
+        match check(1, 200, &g, |&x| {
+            if x <= 100 {
+                Ok(())
+            } else {
+                Err("out of range".into())
+            }
+        }) {
+            PropResult::Ok { cases } => assert_eq!(cases, 200),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_minimum() {
+        let g = usize_in(0, 1000);
+        match check(2, 500, &g, |&x| {
+            if x < 50 {
+                Ok(())
+            } else {
+                Err(format!("{x} >= 50"))
+            }
+        }) {
+            PropResult::Failed { shrunk, .. } => {
+                // greedy shrink should land on exactly the boundary
+                assert_eq!(shrunk, 50, "shrunk to {shrunk}");
+            }
+            other => panic!("expected failure, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn vec_generator_shrinks_length() {
+        let g = vec_of(usize_in(0, 9), usize_in(0, 20));
+        match check(3, 300, &g, |v: &Vec<usize>| {
+            if v.len() < 5 {
+                Ok(())
+            } else {
+                Err("too long".into())
+            }
+        }) {
+            PropResult::Failed { shrunk, .. } => {
+                assert_eq!(shrunk.len(), 5, "minimal failing length");
+            }
+            other => panic!("expected failure, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn map_transports_values() {
+        let g = usize_in(1, 9).map(|x| x * 10);
+        let mut rng = Rng::new(4);
+        for _ in 0..50 {
+            let v = (g.draw)(&mut rng);
+            assert!(v >= 10 && v <= 90 && v % 10 == 0);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let g = usize_in(0, 1 << 30);
+        let collect = |seed| {
+            let mut rng = Rng::new(seed);
+            (0..5).map(|_| (g.draw)(&mut rng)).collect::<Vec<_>>()
+        };
+        assert_eq!(collect(7), collect(7));
+        assert_ne!(collect(7), collect(8));
+    }
+}

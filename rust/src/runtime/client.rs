@@ -1,0 +1,187 @@
+//! PJRT runtime: load AOT-lowered HLO text, compile once, execute many.
+//!
+//! Wraps the `xla` crate (xla_extension 0.5.1, CPU PJRT).  The interchange
+//! format is HLO *text* — `HloModuleProto::from_text_file` reassigns
+//! instruction ids, which sidesteps the 64-bit-id protos jax >= 0.5 emits
+//! (see /opt/xla-example/README.md).
+//!
+//! `Runtime` is deliberately **not** `Send`: the underlying PJRT handles are
+//! raw pointers.  Cross-thread use goes through [`super::service`], which
+//! owns a `Runtime` on a dedicated executor thread per device.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Duration;
+
+use crate::runtime::manifest::{Entry, Manifest};
+use crate::util::Tensor;
+
+/// A compiled artifact plus its manifest entry (shapes, flops).
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub entry: Entry,
+}
+
+impl Executable {
+    /// Execute with shape-checked inputs; returns one `Tensor` per output.
+    pub fn run(&self, inputs: &[Tensor]) -> anyhow::Result<Vec<Tensor>> {
+        anyhow::ensure!(
+            inputs.len() == self.entry.inputs.len(),
+            "{}: expected {} inputs, got {}",
+            self.entry.name,
+            self.entry.inputs.len(),
+            inputs.len()
+        );
+        for (i, (t, meta)) in
+            inputs.iter().zip(&self.entry.inputs).enumerate()
+        {
+            anyhow::ensure!(
+                t.shape() == meta.shape.as_slice(),
+                "{}: input {} shape {:?} != manifest {:?}",
+                self.entry.name,
+                i,
+                t.shape(),
+                meta.shape
+            );
+        }
+
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                let dims: Vec<i64> =
+                    t.shape().iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(t.data())
+                    .reshape(&dims)
+                    .map_err(anyhow::Error::from)
+            })
+            .collect::<anyhow::Result<_>>()?;
+
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        // single replica, single output buffer holding a tuple
+        // (aot.py lowers with return_tuple=True)
+        let literal = result[0][0].to_literal_sync()?;
+        let parts = literal.to_tuple()?;
+        anyhow::ensure!(
+            parts.len() == self.entry.outputs.len(),
+            "{}: expected {} outputs, got {}",
+            self.entry.name,
+            self.entry.outputs.len(),
+            parts.len()
+        );
+        parts
+            .into_iter()
+            .zip(&self.entry.outputs)
+            .map(|(lit, meta)| {
+                let data = lit.to_vec::<f32>()?;
+                Tensor::from_vec(&meta.shape, data)
+            })
+            .collect()
+    }
+
+    /// Execute and report wall-clock — the `measured` timing mode.
+    pub fn run_timed(
+        &self,
+        inputs: &[Tensor],
+    ) -> anyhow::Result<(Vec<Tensor>, Duration)> {
+        let t0 = std::time::Instant::now();
+        let out = self.run(inputs)?;
+        Ok((out, t0.elapsed()))
+    }
+
+    /// Execute with pre-uploaded device buffers — the zero-copy hot path.
+    /// `bufs` must match the artifact's full input list (fresh activations
+    /// first, then cached parameters; see `ExecutorHandle::run_cached`).
+    pub fn run_buffers(
+        &self,
+        bufs: &[&xla::PjRtBuffer],
+    ) -> anyhow::Result<Vec<Tensor>> {
+        anyhow::ensure!(
+            bufs.len() == self.entry.inputs.len(),
+            "{}: expected {} inputs, got {}",
+            self.entry.name,
+            self.entry.inputs.len(),
+            bufs.len()
+        );
+        let result = self.exe.execute_b(bufs)?;
+        let literal = result[0][0].to_literal_sync()?;
+        let parts = literal.to_tuple()?;
+        anyhow::ensure!(
+            parts.len() == self.entry.outputs.len(),
+            "{}: expected {} outputs, got {}",
+            self.entry.name,
+            self.entry.outputs.len(),
+            parts.len()
+        );
+        parts
+            .into_iter()
+            .zip(&self.entry.outputs)
+            .map(|(lit, meta)| {
+                let data = lit.to_vec::<f32>()?;
+                Tensor::from_vec(&meta.shape, data)
+            })
+            .collect()
+    }
+}
+
+/// PJRT CPU client + manifest + compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (must contain `manifest.json`).
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> anyhow::Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) the named artifact.
+    pub fn load(&self, name: &str) -> anyhow::Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(Rc::clone(e));
+        }
+        let entry = self.manifest.require(name)?.clone();
+        let path = self.manifest.hlo_path(&entry);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| {
+                anyhow::anyhow!("parsing {}: {e}", path.display())
+            })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let exec = Rc::new(Executable { exe, entry });
+        self.cache
+            .borrow_mut()
+            .insert(name.to_string(), Rc::clone(&exec));
+        Ok(exec)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    /// Upload a tensor to a device buffer (for parameter caching).
+    pub fn upload(&self, t: &Tensor) -> anyhow::Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<f32>(t.data(), t.shape(), None)
+            .map_err(anyhow::Error::from)
+    }
+
+    /// Convenience: load + run in one call.
+    pub fn run(
+        &self,
+        name: &str,
+        inputs: &[Tensor],
+    ) -> anyhow::Result<Vec<Tensor>> {
+        self.load(name)?.run(inputs)
+    }
+}

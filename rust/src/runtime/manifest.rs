@@ -1,0 +1,275 @@
+//! Artifact manifest — the contract between `python/compile/aot.py` and the
+//! Rust runtime.  One entry per lowered HLO module: file name, network,
+//! layer, pass, batch, I/O shapes, FLOPs/image, and the layer tuple.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorMeta {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorMeta {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> anyhow::Result<TensorMeta> {
+        let shape = j
+            .req("shape")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("shape not an array"))?
+            .iter()
+            .map(|x| {
+                x.as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("bad shape element"))
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let dtype = j
+            .req("dtype")?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("dtype not a string"))?
+            .to_string();
+        Ok(TensorMeta { shape, dtype })
+    }
+}
+
+/// Which direction of the layer this artifact computes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Pass {
+    Forward,
+    Backward,
+}
+
+#[derive(Clone, Debug)]
+pub struct Entry {
+    pub name: String,
+    pub file: String,
+    pub network: String,
+    pub layer: String,
+    pub pass_: Pass,
+    pub batch: usize,
+    pub flops_per_image: u64,
+    pub inputs: Vec<TensorMeta>,
+    pub outputs: Vec<TensorMeta>,
+}
+
+impl Entry {
+    /// Whole-network artifacts use the reserved layer name `__full__`.
+    pub fn is_full_network(&self) -> bool {
+        self.layer == "__full__"
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<Entry>,
+    by_name: HashMap<String, usize>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {} (run `make artifacts`): {e}",
+                path.display()
+            )
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> anyhow::Result<Manifest> {
+        let j = Json::parse(text)?;
+        let version = j
+            .req("version")?
+            .as_i64()
+            .ok_or_else(|| anyhow::anyhow!("bad version"))?;
+        anyhow::ensure!(version == 1, "unsupported manifest version {version}");
+        let mut entries = Vec::new();
+        for e in j
+            .req("entries")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("entries not an array"))?
+        {
+            let name = e
+                .req("name")?
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("bad name"))?
+                .to_string();
+            let pass_ = match e.req("pass")?.as_str() {
+                Some("forward") => Pass::Forward,
+                Some("backward") => Pass::Backward,
+                other => anyhow::bail!("bad pass {other:?} in {name}"),
+            };
+            let parse_metas = |key: &str| -> anyhow::Result<Vec<TensorMeta>> {
+                e.req(key)?
+                    .as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("{key} not an array"))?
+                    .iter()
+                    .map(TensorMeta::from_json)
+                    .collect()
+            };
+            entries.push(Entry {
+                file: e
+                    .req("file")?
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("bad file"))?
+                    .to_string(),
+                network: e
+                    .req("network")?
+                    .as_str()
+                    .unwrap_or_default()
+                    .to_string(),
+                layer: e
+                    .req("layer")?
+                    .as_str()
+                    .unwrap_or_default()
+                    .to_string(),
+                batch: e
+                    .req("batch")?
+                    .as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("bad batch"))?,
+                flops_per_image: e
+                    .req("flops_per_image")?
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("bad flops"))?
+                    as u64,
+                inputs: parse_metas("inputs")?,
+                outputs: parse_metas("outputs")?,
+                pass_,
+                name,
+            });
+        }
+        let by_name = entries
+            .iter()
+            .enumerate()
+            .map(|(i, e)| (e.name.clone(), i))
+            .collect();
+        Ok(Manifest { dir, entries, by_name })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Entry> {
+        self.by_name.get(name).map(|&i| &self.entries[i])
+    }
+
+    pub fn require(&self, name: &str) -> anyhow::Result<&Entry> {
+        self.get(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "artifact {name:?} not in manifest ({} entries); \
+                 run `make artifacts`",
+                self.entries.len()
+            )
+        })
+    }
+
+    /// Per-layer forward artifact name convention: `<layer>_b<batch>`.
+    pub fn layer_entry(
+        &self,
+        layer: &str,
+        batch: usize,
+    ) -> anyhow::Result<&Entry> {
+        self.require(&format!("{layer}_b{batch}"))
+    }
+
+    /// Backward artifact: `<layer>_bwd_b<batch>`.
+    pub fn backward_entry(
+        &self,
+        layer: &str,
+        batch: usize,
+    ) -> anyhow::Result<&Entry> {
+        self.require(&format!("{layer}_bwd_b{batch}"))
+    }
+
+    /// Whole-network artifact: `<network>_full_b<batch>`.
+    pub fn full_entry(
+        &self,
+        network: &str,
+        batch: usize,
+    ) -> anyhow::Result<&Entry> {
+        self.require(&format!("{network}_full_b{batch}"))
+    }
+
+    /// Batches for which a given network has full artifacts, ascending.
+    pub fn batches_for(&self, network: &str) -> Vec<usize> {
+        let mut b: Vec<usize> = self
+            .entries
+            .iter()
+            .filter(|e| e.network == network && e.is_full_network())
+            .map(|e| e.batch)
+            .collect();
+        b.sort();
+        b.dedup();
+        b
+    }
+
+    pub fn hlo_path(&self, entry: &Entry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "entries": [
+        {"name": "tconv1_b1", "file": "tconv1_b1.hlo.txt",
+         "network": "tinynet", "layer": "tconv1", "pass": "forward",
+         "batch": 1, "flops_per_image": 4608,
+         "inputs": [{"shape": [1,3,8,8], "dtype": "f32"},
+                     {"shape": [4,3,3,3], "dtype": "f32"},
+                     {"shape": [4], "dtype": "f32"}],
+         "outputs": [{"shape": [1,4,8,8], "dtype": "f32"}]},
+        {"name": "tinynet_full_b1", "file": "f.hlo.txt",
+         "network": "tinynet", "layer": "__full__", "pass": "forward",
+         "batch": 1, "flops_per_image": 9999,
+         "inputs": [{"shape": [1,3,8,8], "dtype": "f32"}],
+         "outputs": [{"shape": [1,10], "dtype": "f32"}]}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        let e = m.layer_entry("tconv1", 1).unwrap();
+        assert_eq!(e.inputs.len(), 3);
+        assert_eq!(e.inputs[0].shape, vec![1, 3, 8, 8]);
+        assert_eq!(e.outputs[0].elems(), 256);
+        assert_eq!(e.pass_, Pass::Forward);
+    }
+
+    #[test]
+    fn full_network_lookup() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert!(m.full_entry("tinynet", 1).unwrap().is_full_network());
+        assert_eq!(m.batches_for("tinynet"), vec![1]);
+        assert!(m.full_entry("tinynet", 7).is_err());
+    }
+
+    #[test]
+    fn missing_name_is_error() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert!(m.require("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let bad = SAMPLE.replace("\"version\": 1", "\"version\": 9");
+        assert!(Manifest::parse(&bad, PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_json() {
+        assert!(Manifest::parse("{\"version\":1", PathBuf::from("/tmp"))
+            .is_err());
+    }
+}

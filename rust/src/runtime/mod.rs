@@ -1,0 +1,13 @@
+//! Runtime layer: PJRT client wrapper, artifact manifest, executable cache,
+//! and the per-device executor service threads.
+//!
+//! Pattern (from /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+
+pub mod client;
+pub mod manifest;
+pub mod service;
+
+pub use client::{Executable, Runtime};
+pub use manifest::{Entry, Manifest, Pass, TensorMeta};
+pub use service::{ExecutorHandle, ExecutorService, JobOutput};

@@ -1,0 +1,266 @@
+//! Executor service: a dedicated OS thread that owns a [`Runtime`] and
+//! executes artifacts on behalf of other threads.
+//!
+//! PJRT handles are `!Send`, so the coordinator cannot share a `Runtime`
+//! across workers.  Instead each simulated device gets one executor thread;
+//! [`ExecutorHandle`] (cheap to clone, `Send`) carries jobs over an mpsc
+//! channel and returns results over a per-job oneshot channel.  This is the
+//! request-path hot loop: tensors in, tensors + wall time out.
+
+use std::sync::mpsc::{channel, Sender};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::runtime::client::Runtime;
+use crate::util::Tensor;
+
+/// One artifact execution request.
+struct Job {
+    artifact: String,
+    inputs: Vec<Tensor>,
+    reply: Sender<anyhow::Result<JobOutput>>,
+}
+
+/// Result of an artifact execution.
+#[derive(Debug)]
+pub struct JobOutput {
+    pub outputs: Vec<Tensor>,
+    /// Wall-clock of the PJRT execute call (the `measured` timing mode).
+    pub elapsed: Duration,
+}
+
+enum Msg {
+    Run(Job),
+    /// Run with cached trailing parameters (uploaded via `Preload`):
+    /// only the leading activations cross the channel per request.
+    RunCached(Job),
+    /// Pre-compile an artifact so first-request latency is flat.
+    Warm(String, Sender<anyhow::Result<()>>),
+    /// Upload the artifact's trailing parameter tensors to device buffers
+    /// once; subsequent `RunCached` calls reuse them (zero-copy weights).
+    Preload {
+        artifact: String,
+        params: Vec<Tensor>,
+        reply: Sender<anyhow::Result<()>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable, `Send` handle to an executor thread.
+#[derive(Clone)]
+pub struct ExecutorHandle {
+    tx: Sender<Msg>,
+}
+
+impl ExecutorHandle {
+    /// Execute `artifact` with `inputs`; blocks until the result is back.
+    pub fn run(
+        &self,
+        artifact: &str,
+        inputs: Vec<Tensor>,
+    ) -> anyhow::Result<JobOutput> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Msg::Run(Job {
+                artifact: artifact.to_string(),
+                inputs,
+                reply,
+            }))
+            .map_err(|_| anyhow::anyhow!("executor thread gone"))?;
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("executor dropped reply"))?
+    }
+
+    /// Compile ahead of time (no execution).
+    pub fn warm(&self, artifact: &str) -> anyhow::Result<()> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Msg::Warm(artifact.to_string(), reply))
+            .map_err(|_| anyhow::anyhow!("executor thread gone"))?;
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("executor dropped reply"))?
+    }
+
+    /// Upload the artifact's trailing parameters once (weights stay
+    /// resident on the device across requests).
+    pub fn preload_params(
+        &self,
+        artifact: &str,
+        params: Vec<Tensor>,
+    ) -> anyhow::Result<()> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Msg::Preload {
+                artifact: artifact.to_string(),
+                params,
+                reply,
+            })
+            .map_err(|_| anyhow::anyhow!("executor thread gone"))?;
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("executor dropped reply"))?
+    }
+
+    /// Execute `artifact` passing only the leading activation tensors;
+    /// the trailing parameters must have been `preload_params`-ed.
+    pub fn run_cached(
+        &self,
+        artifact: &str,
+        activations: Vec<Tensor>,
+    ) -> anyhow::Result<JobOutput> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Msg::RunCached(Job {
+                artifact: artifact.to_string(),
+                inputs: activations,
+                reply,
+            }))
+            .map_err(|_| anyhow::anyhow!("executor thread gone"))?;
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("executor dropped reply"))?
+    }
+}
+
+/// Owns the executor thread; dropping shuts it down.
+pub struct ExecutorService {
+    tx: Sender<Msg>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl ExecutorService {
+    /// Spawn an executor thread over the given artifact directory.
+    /// Fails fast (on this thread) if the manifest is unreadable.
+    pub fn spawn(artifacts_dir: &str) -> anyhow::Result<ExecutorService> {
+        // Validate the manifest here so errors surface synchronously.
+        crate::runtime::manifest::Manifest::load(artifacts_dir)?;
+        let dir = artifacts_dir.to_string();
+        let (tx, rx) = channel::<Msg>();
+        let (ready_tx, ready_rx) = channel::<anyhow::Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("cnnlab-executor".into())
+            .spawn(move || {
+                let rt = match Runtime::new(&dir) {
+                    Ok(rt) => {
+                        let _ = ready_tx.send(Ok(()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                let mut param_cache: std::collections::HashMap<
+                    String,
+                    Vec<xla::PjRtBuffer>,
+                > = std::collections::HashMap::new();
+                for msg in rx {
+                    match msg {
+                        Msg::Run(job) => {
+                            let res = rt
+                                .load(&job.artifact)
+                                .and_then(|exe| exe.run_timed(&job.inputs))
+                                .map(|(outputs, elapsed)| JobOutput {
+                                    outputs,
+                                    elapsed,
+                                });
+                            let _ = job.reply.send(res);
+                        }
+                        Msg::RunCached(job) => {
+                            let res = run_cached_job(
+                                &rt,
+                                &param_cache,
+                                &job.artifact,
+                                &job.inputs,
+                            );
+                            let _ = job.reply.send(res);
+                        }
+                        Msg::Warm(name, reply) => {
+                            let _ =
+                                reply.send(rt.load(&name).map(|_| ()));
+                        }
+                        Msg::Preload { artifact, params, reply } => {
+                            let res = (|| {
+                                let exe = rt.load(&artifact)?;
+                                let expect = exe.entry.inputs.len();
+                                anyhow::ensure!(
+                                    params.len() < expect,
+                                    "{artifact}: {} params >= {} inputs",
+                                    params.len(),
+                                    expect
+                                );
+                                let bufs = params
+                                    .iter()
+                                    .map(|t| rt.upload(t))
+                                    .collect::<anyhow::Result<Vec<_>>>()?;
+                                param_cache
+                                    .insert(artifact.clone(), bufs);
+                                Ok(())
+                            })();
+                            let _ = reply.send(res);
+                        }
+                        Msg::Shutdown => break,
+                    }
+                }
+            })?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("executor died on startup"))??;
+        Ok(ExecutorService { tx, join: Some(join) })
+    }
+
+    pub fn handle(&self) -> ExecutorHandle {
+        ExecutorHandle { tx: self.tx.clone() }
+    }
+}
+
+impl Drop for ExecutorService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Execute with cached trailing params: upload the activations, chain with
+/// the resident parameter buffers, run via `execute_b`.
+fn run_cached_job(
+    rt: &Runtime,
+    param_cache: &std::collections::HashMap<String, Vec<xla::PjRtBuffer>>,
+    artifact: &str,
+    activations: &[Tensor],
+) -> anyhow::Result<JobOutput> {
+    let exe = rt.load(artifact)?;
+    let params = param_cache.get(artifact).ok_or_else(|| {
+        anyhow::anyhow!("{artifact}: params not preloaded")
+    })?;
+    anyhow::ensure!(
+        activations.len() + params.len() == exe.entry.inputs.len(),
+        "{artifact}: {} activations + {} cached params != {} inputs",
+        activations.len(),
+        params.len(),
+        exe.entry.inputs.len()
+    );
+    // shape-check the fresh activations against the manifest
+    for (i, (t, meta)) in
+        activations.iter().zip(&exe.entry.inputs).enumerate()
+    {
+        anyhow::ensure!(
+            t.shape() == meta.shape.as_slice(),
+            "{artifact}: activation {i} shape {:?} != manifest {:?}",
+            t.shape(),
+            meta.shape
+        );
+    }
+    let t0 = std::time::Instant::now();
+    let fresh: Vec<xla::PjRtBuffer> = activations
+        .iter()
+        .map(|t| rt.upload(t))
+        .collect::<anyhow::Result<_>>()?;
+    let mut all: Vec<&xla::PjRtBuffer> = Vec::with_capacity(
+        fresh.len() + params.len(),
+    );
+    all.extend(fresh.iter());
+    all.extend(params.iter());
+    let outputs = exe.run_buffers(&all)?;
+    Ok(JobOutput { outputs, elapsed: t0.elapsed() })
+}

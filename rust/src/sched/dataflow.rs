@@ -1,0 +1,357 @@
+//! Dataflow scheduler / timeline simulator.
+//!
+//! The paper's runtime rule (§III.A): "whenever a pending layer has obtained
+//! its requisite input parameters, it can be offloaded to a particular
+//! accelerator for immediate execution."  For a sequential CNN that is a
+//! dependency chain per image, but a *stream* of batches pipelines across
+//! devices: while the FPGA runs conv2 of batch k, the GPU can run fc6 of
+//! batch k-1.  This module simulates that pipeline and produces the
+//! makespan, per-device busy time, and per-batch latency.
+
+use std::collections::BTreeMap;
+
+use crate::device::{Accelerator, FpgaDevice, GpuDevice, LayerEstimate, PcieModel};
+use crate::model::Network;
+use crate::power::KernelLib;
+use crate::runtime::Pass;
+
+use super::mapping::{Choice, Mapping};
+
+/// Estimate provider for the analytic devices (shared by DSE and the
+/// simulator).  CPU-PJRT estimates need a live runtime, so they are
+/// injected via [`EstimateSource::with_cpu`].
+pub struct EstimateSource {
+    gpu_cudnn: GpuDevice,
+    gpu_cublas: GpuDevice,
+    fpga: FpgaDevice,
+    cpu: Option<Box<dyn Fn(&str, usize) -> anyhow::Result<LayerEstimate>>>,
+    /// PCIe model used for device-switch hops in the pipeline simulator.
+    pub pcie: PcieModel,
+}
+
+impl Default for EstimateSource {
+    fn default() -> Self {
+        EstimateSource::new()
+    }
+}
+
+impl EstimateSource {
+    pub fn new() -> EstimateSource {
+        EstimateSource {
+            gpu_cudnn: GpuDevice::new(KernelLib::CuDnn),
+            gpu_cublas: GpuDevice::new(KernelLib::CuBlas),
+            fpga: FpgaDevice::new(),
+            cpu: None,
+            pcie: PcieModel::gen2_x8(),
+        }
+    }
+
+    pub fn with_fpga(mut self, fpga: FpgaDevice) -> Self {
+        self.fpga = fpga;
+        self
+    }
+
+    /// Inject a measured-time source for CpuPjrt choices.
+    pub fn with_cpu(
+        mut self,
+        f: impl Fn(&str, usize) -> anyhow::Result<LayerEstimate> + 'static,
+    ) -> Self {
+        self.cpu = Some(Box::new(f));
+        self
+    }
+
+    pub fn estimate(
+        &self,
+        net: &Network,
+        layer: &str,
+        choice: Choice,
+        batch: usize,
+        pass: Pass,
+    ) -> anyhow::Result<LayerEstimate> {
+        let l = net
+            .layer(layer)
+            .ok_or_else(|| anyhow::anyhow!("unknown layer {layer:?}"))?;
+        match choice {
+            Choice::Gpu(KernelLib::CuDnn) => {
+                self.gpu_cudnn.estimate(l, batch, pass)
+            }
+            Choice::Gpu(KernelLib::CuBlas) => {
+                self.gpu_cublas.estimate(l, batch, pass)
+            }
+            Choice::Fpga => self.fpga.estimate(l, batch, pass),
+            Choice::CpuPjrt => match &self.cpu {
+                Some(f) => f(layer, batch),
+                None => anyhow::bail!(
+                    "CpuPjrt estimates need a runtime (EstimateSource::with_cpu)"
+                ),
+            },
+        }
+    }
+}
+
+/// One scheduled layer execution in the simulated timeline.
+#[derive(Clone, Debug)]
+pub struct ScheduledOp {
+    pub batch_idx: usize,
+    pub layer: String,
+    pub choice: Choice,
+    pub start_s: f64,
+    pub end_s: f64,
+}
+
+/// Pipeline simulation result.
+#[derive(Clone, Debug)]
+pub struct Timeline {
+    pub ops: Vec<ScheduledOp>,
+    pub makespan_s: f64,
+    /// total busy seconds per device choice
+    pub busy_s: BTreeMap<String, f64>,
+    /// completion time per batch
+    pub batch_done_s: Vec<f64>,
+    /// total energy over the run, joules
+    pub energy_j: f64,
+}
+
+impl Timeline {
+    /// Steady-state throughput, images/s.
+    pub fn throughput_img_s(&self, batch: usize) -> f64 {
+        (self.batch_done_s.len() * batch) as f64 / self.makespan_s
+    }
+}
+
+fn phys(c: Choice) -> &'static str {
+    match c {
+        Choice::Gpu(_) => "gpu",
+        Choice::Fpga => "fpga",
+        Choice::CpuPjrt => "cpu",
+    }
+}
+
+/// Simulate `n_batches` consecutive batches through the mapped network with
+/// an event-driven, work-conserving scheduler: an op becomes *ready* when
+/// its predecessor layer finishes (plus a PCIe hop when the producer ran on
+/// a different physical device); each device executes ready ops one at a
+/// time in readiness (FIFO) order.  This is exactly the paper's runtime
+/// rule — "whenever a pending layer has obtained its requisite input
+/// parameters, it can be offloaded ... for immediate execution" — and lets
+/// batch k+1's conv layers overlap batch k's FC layers when they map to
+/// different accelerators.
+pub fn simulate(
+    net: &Network,
+    mapping: &Mapping,
+    src: &EstimateSource,
+    batch: usize,
+    n_batches: usize,
+) -> anyhow::Result<Timeline> {
+    mapping.validate(net)?;
+    anyhow::ensure!(n_batches > 0, "need at least one batch");
+
+    let n_layers = net.layers.len();
+    // Pre-compute per-layer estimates and hop costs (same for every batch).
+    let mut ests = Vec::with_capacity(n_layers);
+    let mut hops = Vec::with_capacity(n_layers);
+    for (li, layer) in net.layers.iter().enumerate() {
+        let choice = mapping.get(&layer.name).unwrap();
+        ests.push(src.estimate(net, &layer.name, choice, batch, Pass::Forward)?);
+        let hop_s = if li > 0 {
+            let prev = mapping.get(&net.layers[li - 1].name).unwrap();
+            if phys(prev) != phys(choice) {
+                let e: usize = crate::model::shape::input_shape(layer, 1)
+                    .iter()
+                    .product();
+                src.pcie.transfer_s(4 * batch as u64 * e as u64)
+            } else {
+                0.0
+            }
+        } else {
+            0.0
+        };
+        hops.push(hop_s);
+    }
+
+    let mut device_free: BTreeMap<&'static str, f64> = BTreeMap::new();
+    let mut ops: Vec<ScheduledOp> = Vec::with_capacity(n_batches * n_layers);
+    let mut busy: BTreeMap<String, f64> = BTreeMap::new();
+    let mut batch_done = vec![0.0f64; n_batches];
+    let mut energy = 0.0f64;
+
+    // per-batch progress: next layer index and its ready time
+    let mut next_layer = vec![0usize; n_batches];
+    let mut ready = vec![0.0f64; n_batches];
+    let mut remaining = n_batches * n_layers;
+
+    while remaining > 0 {
+        // pick the schedulable op with the earliest start time; ties go to
+        // the *oldest batch* (depth-first) — the FIFO a serving system
+        // gives requests, and the order that maximizes pipeline overlap
+        let mut best: Option<(f64, usize)> = None; // (start, b)
+        for b in 0..n_batches {
+            let li = next_layer[b];
+            if li >= n_layers {
+                continue;
+            }
+            let choice = mapping.get(&net.layers[li].name).unwrap();
+            let dev = *device_free.get(phys(choice)).unwrap_or(&0.0);
+            let start = (ready[b] + hops[li]).max(dev);
+            let better = match best {
+                None => true,
+                Some((bs, bb)) => {
+                    start < bs - 1e-15
+                        || ((start - bs).abs() <= 1e-15 && b < bb)
+                }
+            };
+            if better {
+                best = Some((start, b));
+            }
+        }
+        let (start, b) = best.expect("ops remain");
+        let li = next_layer[b];
+        let layer = &net.layers[li];
+        let choice = mapping.get(&layer.name).unwrap();
+        let est = &ests[li];
+        let end = start + est.time_s;
+        *device_free.entry(phys(choice)).or_insert(0.0) = end;
+        ready[b] = end;
+        next_layer[b] += 1;
+        remaining -= 1;
+        if next_layer[b] == n_layers {
+            batch_done[b] = end;
+        }
+        *busy.entry(choice.name()).or_insert(0.0) += est.time_s;
+        energy += est.energy_j();
+        ops.push(ScheduledOp {
+            batch_idx: b,
+            layer: layer.name.clone(),
+            choice,
+            start_s: start,
+            end_s: end,
+        });
+    }
+
+    let makespan = batch_done.iter().copied().fold(0.0, f64::max);
+    Ok(Timeline {
+        ops,
+        makespan_s: makespan,
+        busy_s: busy,
+        batch_done_s: batch_done,
+        energy_j: energy,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::alexnet;
+
+    fn src() -> EstimateSource {
+        EstimateSource::new()
+    }
+
+    #[test]
+    fn single_batch_is_sequential_sum() {
+        let net = alexnet();
+        let m = Mapping::uniform(&net, Choice::Gpu(KernelLib::CuDnn));
+        let t = simulate(&net, &m, &src(), 16, 1).unwrap();
+        let sum: f64 = net
+            .layers
+            .iter()
+            .map(|l| {
+                src()
+                    .estimate(
+                        &net,
+                        &l.name,
+                        Choice::Gpu(KernelLib::CuDnn),
+                        16,
+                        Pass::Forward,
+                    )
+                    .unwrap()
+                    .time_s
+            })
+            .sum();
+        assert!((t.makespan_s - sum).abs() / sum < 1e-9);
+        assert_eq!(t.ops.len(), net.layers.len());
+    }
+
+    #[test]
+    fn pipelining_beats_serial_for_split_mapping() {
+        let net = alexnet();
+        // conv stages on the (fast) GPU, FC on the (slow) FPGA: the GPU
+        // front-end of batch k+1 overlaps the FPGA back-end of batch k
+        let mut m = Mapping::uniform(&net, Choice::Gpu(KernelLib::CuBlas));
+        for fc in ["fc6", "fc7", "fc8"] {
+            m.set(fc, Choice::Fpga);
+        }
+        let one = simulate(&net, &m, &src(), 16, 1).unwrap();
+        let many = simulate(&net, &m, &src(), 16, 8).unwrap();
+        // 8 batches must take measurably less than 8x one batch (overlap)
+        assert!(
+            many.makespan_s < 8.0 * one.makespan_s * 0.995,
+            "{} vs {}",
+            many.makespan_s,
+            8.0 * one.makespan_s
+        );
+    }
+
+    #[test]
+    fn uniform_single_device_cannot_pipeline() {
+        let net = alexnet();
+        let m = Mapping::uniform(&net, Choice::Gpu(KernelLib::CuDnn));
+        let one = simulate(&net, &m, &src(), 8, 1).unwrap();
+        let four = simulate(&net, &m, &src(), 8, 4).unwrap();
+        assert!(
+            (four.makespan_s - 4.0 * one.makespan_s).abs()
+                / four.makespan_s
+                < 1e-6
+        );
+    }
+
+    #[test]
+    fn ordering_within_batch_respected() {
+        let net = alexnet();
+        let m = Mapping::uniform(&net, Choice::Fpga);
+        let t = simulate(&net, &m, &src(), 4, 2).unwrap();
+        // for each batch the ops must be time-ordered along the chain
+        for b in 0..2 {
+            let mut last_end = 0.0;
+            for l in &net.layers {
+                let op = t
+                    .ops
+                    .iter()
+                    .find(|o| o.batch_idx == b && o.layer == l.name)
+                    .unwrap();
+                assert!(op.start_s >= last_end - 1e-12);
+                last_end = op.end_s;
+            }
+        }
+    }
+
+    #[test]
+    fn energy_accumulates() {
+        let net = alexnet();
+        let m = Mapping::uniform(&net, Choice::Fpga);
+        let t1 = simulate(&net, &m, &src(), 4, 1).unwrap();
+        let t3 = simulate(&net, &m, &src(), 4, 3).unwrap();
+        assert!((t3.energy_j - 3.0 * t1.energy_j).abs() < 1e-9);
+    }
+
+    #[test]
+    fn device_switch_charges_pcie_hop() {
+        let net = alexnet();
+        let uniform = Mapping::uniform(&net, Choice::Gpu(KernelLib::CuDnn));
+        let mut hybrid = uniform.clone();
+        hybrid.set("pool1", Choice::Fpga); // forces two hops
+        let a = simulate(&net, &uniform, &src(), 8, 1).unwrap();
+        let b = simulate(&net, &hybrid, &src(), 8, 1).unwrap();
+        // hybrid pays hops; pool itself is cheap on either device
+        assert!(b.makespan_s > a.makespan_s);
+    }
+
+    #[test]
+    fn throughput_definition() {
+        let net = alexnet();
+        let m = Mapping::uniform(&net, Choice::Gpu(KernelLib::CuDnn));
+        let t = simulate(&net, &m, &src(), 10, 2).unwrap();
+        let want = 20.0 / t.makespan_s;
+        assert!((t.throughput_img_s(10) - want).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,384 @@
+//! Design-space exploration — the paper's middleware core (§III.A):
+//! "the structure of the NN input model will undergo the design space
+//! exploration and trade-off analysis in the middleware support".
+//!
+//! Strategies:
+//! * `greedy`      — per-layer argmin of the objective (optimal for purely
+//!                   additive objectives on a sequential chain, ignoring
+//!                   PCIe hops);
+//! * `exhaustive`  — enumerate per-layer-kind assignments (devices choose
+//!                   engines per layer *class*, as the paper's FPGA flow
+//!                   does) — 3^4 = 81 mappings, hop-aware via the pipeline
+//!                   simulator;
+//! * `local search`— greedy seed + hill-climbing single-layer moves under
+//!                   the simulator (hop-aware refinement).
+//!
+//! Objectives: latency, energy, or energy-delay product; plus a power cap.
+
+use crate::model::{LayerKind, Network};
+use crate::runtime::Pass;
+
+use super::dataflow::{simulate, EstimateSource};
+use super::mapping::{Choice, Mapping};
+use super::pareto::{frontier, Point};
+
+/// What the search minimizes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Objective {
+    /// Batch latency (makespan of one batch).
+    Latency,
+    /// Energy per batch.
+    Energy,
+    /// Energy-delay product.
+    Edp,
+}
+
+impl Objective {
+    pub fn name(self) -> &'static str {
+        match self {
+            Objective::Latency => "latency",
+            Objective::Energy => "energy",
+            Objective::Edp => "edp",
+        }
+    }
+
+    pub fn score(self, time_s: f64, energy_j: f64) -> f64 {
+        match self {
+            Objective::Latency => time_s,
+            Objective::Energy => energy_j,
+            Objective::Edp => time_s * energy_j,
+        }
+    }
+}
+
+/// Constraints the search must respect.
+#[derive(Clone, Copy, Debug)]
+pub struct Constraints {
+    /// Max instantaneous board power of any chosen device, watts
+    /// (None = unconstrained).  A TDP-style cap: the paper's motivating
+    /// deployment constraint for FPGAs ("the data centers [are] quite
+    /// power consuming").
+    pub power_cap_w: Option<f64>,
+}
+
+impl Default for Constraints {
+    fn default() -> Self {
+        Constraints { power_cap_w: None }
+    }
+}
+
+/// A scored mapping.
+#[derive(Clone, Debug)]
+pub struct Candidate {
+    pub mapping: Mapping,
+    pub latency_s: f64,
+    pub energy_j: f64,
+    pub avg_power_w: f64,
+    /// Max instantaneous device power across the schedule.
+    pub peak_power_w: f64,
+    pub score: f64,
+}
+
+fn evaluate(
+    net: &Network,
+    mapping: &Mapping,
+    src: &EstimateSource,
+    batch: usize,
+    obj: Objective,
+) -> anyhow::Result<Candidate> {
+    let t = simulate(net, mapping, src, batch, 1)?;
+    let avg_power = t.energy_j / t.makespan_s;
+    let mut peak = 0.0f64;
+    for layer in &net.layers {
+        let c = mapping.get(&layer.name).unwrap();
+        let est = src.estimate(net, &layer.name, c, batch, Pass::Forward)?;
+        peak = peak.max(est.power_w);
+    }
+    Ok(Candidate {
+        mapping: mapping.clone(),
+        latency_s: t.makespan_s,
+        energy_j: t.energy_j,
+        avg_power_w: avg_power,
+        peak_power_w: peak,
+        score: obj.score(t.makespan_s, t.energy_j),
+    })
+}
+
+fn feasible(c: &Candidate, cons: &Constraints) -> bool {
+    cons.power_cap_w.map_or(true, |cap| c.peak_power_w <= cap)
+}
+
+/// Greedy per-layer assignment (hop-blind).
+pub fn greedy(
+    net: &Network,
+    src: &EstimateSource,
+    batch: usize,
+    obj: Objective,
+) -> anyhow::Result<Mapping> {
+    let mut m = Mapping::uniform(net, Choice::Fpga);
+    for layer in &net.layers {
+        let mut best: Option<(f64, Choice)> = None;
+        for &c in &Choice::CANDIDATES {
+            let Ok(est) =
+                src.estimate(net, &layer.name, c, batch, Pass::Forward)
+            else {
+                continue;
+            };
+            let s = obj.score(est.time_s, est.energy_j());
+            if best.map_or(true, |(bs, _)| s < bs) {
+                best = Some((s, c));
+            }
+        }
+        let (_, choice) = best.ok_or_else(|| {
+            anyhow::anyhow!("no device supports layer {:?}", layer.name)
+        })?;
+        m.set(&layer.name, choice);
+    }
+    Ok(m)
+}
+
+/// Exhaustive search over per-layer-*kind* assignments (hop-aware).
+pub fn exhaustive_by_kind(
+    net: &Network,
+    src: &EstimateSource,
+    batch: usize,
+    obj: Objective,
+    cons: &Constraints,
+) -> anyhow::Result<Candidate> {
+    let kinds = LayerKind::ALL;
+    let cands = Choice::CANDIDATES;
+    let mut best: Option<Candidate> = None;
+    let n = cands.len().pow(kinds.len() as u32);
+    for code in 0..n {
+        let mut c = code;
+        let mut kind_choice = std::collections::HashMap::new();
+        for &k in &kinds {
+            kind_choice.insert(k, cands[c % cands.len()]);
+            c /= cands.len();
+        }
+        let mut m = Mapping::uniform(net, Choice::Fpga);
+        for layer in &net.layers {
+            m.set(&layer.name, kind_choice[&layer.kind()]);
+        }
+        let cand = evaluate(net, &m, src, batch, obj)?;
+        if !feasible(&cand, cons) {
+            continue;
+        }
+        if best.as_ref().map_or(true, |b| cand.score < b.score) {
+            best = Some(cand);
+        }
+    }
+    best.ok_or_else(|| anyhow::anyhow!("no feasible mapping under constraints"))
+}
+
+/// Greedy seed + single-layer hill climbing (hop-aware).
+pub fn local_search(
+    net: &Network,
+    src: &EstimateSource,
+    batch: usize,
+    obj: Objective,
+    cons: &Constraints,
+    max_rounds: usize,
+) -> anyhow::Result<Candidate> {
+    let mut m = greedy(net, src, batch, obj)?;
+    let mut cur = evaluate(net, &m, src, batch, obj)?;
+    for _ in 0..max_rounds {
+        let mut improved = false;
+        for layer in &net.layers {
+            let original = m.get(&layer.name).unwrap();
+            for &c in &Choice::CANDIDATES {
+                if c == original {
+                    continue;
+                }
+                m.set(&layer.name, c);
+                if let Ok(cand) = evaluate(net, &m, src, batch, obj) {
+                    if feasible(&cand, cons) && cand.score < cur.score {
+                        cur = cand;
+                        improved = true;
+                        continue;
+                    }
+                }
+                m.set(&layer.name, original);
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+    Ok(cur)
+}
+
+/// Full trade-off study: evaluate every by-kind mapping, return the
+/// (latency, energy) Pareto frontier — the paper's Fig 6 discussion in
+/// mapping space.
+pub fn tradeoff_frontier(
+    net: &Network,
+    src: &EstimateSource,
+    batch: usize,
+) -> anyhow::Result<Vec<Point<Candidate>>> {
+    let kinds = LayerKind::ALL;
+    let cands = Choice::CANDIDATES;
+    let mut pts = Vec::new();
+    let n = cands.len().pow(kinds.len() as u32);
+    for code in 0..n {
+        let mut c = code;
+        let mut kind_choice = std::collections::HashMap::new();
+        for &k in &kinds {
+            kind_choice.insert(k, cands[c % cands.len()]);
+            c /= cands.len();
+        }
+        let mut m = Mapping::uniform(net, Choice::Fpga);
+        for layer in &net.layers {
+            m.set(&layer.name, kind_choice[&layer.kind()]);
+        }
+        let cand = evaluate(net, &m, src, batch, Objective::Latency)?;
+        pts.push(Point {
+            x: cand.latency_s,
+            y: cand.energy_j,
+            item: cand,
+        });
+    }
+    Ok(frontier(&pts))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::alexnet;
+    use crate::power::KernelLib;
+
+    fn src() -> EstimateSource {
+        EstimateSource::new()
+    }
+
+    const B: usize = 128;
+
+    #[test]
+    fn greedy_latency_picks_gpu_everywhere() {
+        // Fig 6a: GPU is faster on every layer
+        let net = alexnet();
+        let m = greedy(&net, &src(), B, Objective::Latency).unwrap();
+        for l in &net.layers {
+            assert!(
+                matches!(m.get(&l.name).unwrap(), Choice::Gpu(_)),
+                "{} should be on GPU",
+                l.name
+            );
+        }
+    }
+
+    #[test]
+    fn greedy_energy_splits_conv_fpga_fc_gpu() {
+        // Fig 6d: conv energies are comparable (FPGA slightly better at the
+        // paper's calibration the winner flips per layer) but FC energy is
+        // decisively GPU.  The greedy energy mapping must put FC on GPU.
+        let net = alexnet();
+        let m = greedy(&net, &src(), B, Objective::Energy).unwrap();
+        for fc in ["fc6", "fc7", "fc8"] {
+            assert!(
+                matches!(m.get(fc).unwrap(), Choice::Gpu(_)),
+                "{fc} must be GPU for energy"
+            );
+        }
+    }
+
+    #[test]
+    fn power_cap_forces_fpga() {
+        // TDP cap below every GPU operating point (72-123 W) -> the whole
+        // network must land on the FPGA
+        let net = alexnet();
+        let cons = Constraints { power_cap_w: Some(10.0) };
+        let best =
+            exhaustive_by_kind(&net, &src(), B, Objective::Latency, &cons)
+                .unwrap();
+        assert!(best.peak_power_w <= 10.0);
+        for l in &net.layers {
+            assert_eq!(
+                best.mapping.get(&l.name).unwrap(),
+                Choice::Fpga,
+                "{} must be FPGA under a 10 W cap",
+                l.name
+            );
+        }
+    }
+
+    #[test]
+    fn infeasible_cap_errors() {
+        let net = alexnet();
+        let cons = Constraints { power_cap_w: Some(0.1) };
+        assert!(exhaustive_by_kind(
+            &net,
+            &src(),
+            B,
+            Objective::Latency,
+            &cons
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn local_search_not_worse_than_greedy() {
+        let net = alexnet();
+        let obj = Objective::Edp;
+        let g = greedy(&net, &src(), B, obj).unwrap();
+        let g_score = {
+            let t = simulate(&net, &g, &src(), B, 1).unwrap();
+            obj.score(t.makespan_s, t.energy_j)
+        };
+        let ls = local_search(
+            &net,
+            &src(),
+            B,
+            obj,
+            &Constraints::default(),
+            4,
+        )
+        .unwrap();
+        assert!(ls.score <= g_score * (1.0 + 1e-9));
+    }
+
+    #[test]
+    fn exhaustive_latency_beats_uniform_fpga() {
+        let net = alexnet();
+        let best = exhaustive_by_kind(
+            &net,
+            &src(),
+            B,
+            Objective::Latency,
+            &Constraints::default(),
+        )
+        .unwrap();
+        let fpga = evaluate(
+            &net,
+            &Mapping::uniform(&net, Choice::Fpga),
+            &src(),
+            B,
+            Objective::Latency,
+        )
+        .unwrap();
+        assert!(best.latency_s < fpga.latency_s);
+    }
+
+    #[test]
+    fn frontier_contains_extremes() {
+        let net = alexnet();
+        let front = tradeoff_frontier(&net, &src(), B).unwrap();
+        assert!(!front.is_empty());
+        // the all-GPU mapping (min latency) should be on or near the front
+        let gpu = evaluate(
+            &net,
+            &Mapping::uniform(&net, Choice::Gpu(KernelLib::CuBlas)),
+            &src(),
+            B,
+            Objective::Latency,
+        )
+        .unwrap();
+        let min_lat =
+            front.iter().map(|p| p.x).fold(f64::INFINITY, f64::min);
+        assert!(min_lat <= gpu.latency_s * 1.001);
+        // frontier trade-off: as latency rises, energy must fall
+        for w in front.windows(2) {
+            assert!(w[0].y > w[1].y);
+        }
+    }
+}

@@ -1,0 +1,144 @@
+//! Hardware mapping: which accelerator runs each layer.
+//!
+//! This is the object the paper's middleware searches over ("the design
+//! space is searched, and this process yields a succession of hardware
+//! mappings of the NN model onto the particular FPGA-based or GPU-based
+//! platforms", §III.A).
+
+use std::collections::BTreeMap;
+
+use crate::model::Network;
+use crate::power::KernelLib;
+
+/// Per-layer device choice.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Choice {
+    Gpu(KernelLib),
+    Fpga,
+    CpuPjrt,
+}
+
+impl Choice {
+    pub fn name(self) -> String {
+        match self {
+            Choice::Gpu(lib) => format!("gpu/{}", lib.name()),
+            Choice::Fpga => "fpga".to_string(),
+            Choice::CpuPjrt => "cpu-pjrt".to_string(),
+        }
+    }
+
+    /// The candidate set the DSE enumerates per layer.
+    pub const CANDIDATES: [Choice; 3] = [
+        Choice::Gpu(KernelLib::CuDnn),
+        Choice::Gpu(KernelLib::CuBlas),
+        Choice::Fpga,
+    ];
+}
+
+/// layer name -> device choice, total over a network.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mapping {
+    pub choices: BTreeMap<String, Choice>,
+}
+
+impl Mapping {
+    /// Uniform mapping: every layer on the same device.
+    pub fn uniform(net: &Network, choice: Choice) -> Mapping {
+        Mapping {
+            choices: net
+                .layers
+                .iter()
+                .map(|l| (l.name.clone(), choice))
+                .collect(),
+        }
+    }
+
+    pub fn get(&self, layer: &str) -> Option<Choice> {
+        self.choices.get(layer).copied()
+    }
+
+    pub fn set(&mut self, layer: &str, choice: Choice) {
+        self.choices.insert(layer.to_string(), choice);
+    }
+
+    /// Complete and consistent with the network?
+    pub fn validate(&self, net: &Network) -> anyhow::Result<()> {
+        for l in &net.layers {
+            anyhow::ensure!(
+                self.choices.contains_key(&l.name),
+                "mapping missing layer {:?}",
+                l.name
+            );
+        }
+        for name in self.choices.keys() {
+            anyhow::ensure!(
+                net.layer(name).is_some(),
+                "mapping names unknown layer {name:?}"
+            );
+        }
+        Ok(())
+    }
+
+    /// Number of device switches along the execution order (each switch
+    /// costs a PCIe hop in the simulator).
+    pub fn switches(&self, net: &Network) -> usize {
+        net.layers
+            .windows(2)
+            .filter(|w| self.get(&w[0].name) != self.get(&w[1].name))
+            .count()
+    }
+}
+
+impl std::fmt::Display for Mapping {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut first = true;
+        for (k, v) in &self.choices {
+            if !first {
+                write!(f, ", ")?;
+            }
+            write!(f, "{k}->{}", v.name())?;
+            first = false;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{alexnet, tinynet};
+
+    #[test]
+    fn uniform_mapping_is_valid() {
+        let net = alexnet();
+        let m = Mapping::uniform(&net, Choice::Fpga);
+        m.validate(&net).unwrap();
+        assert_eq!(m.switches(&net), 0);
+    }
+
+    #[test]
+    fn switches_counted() {
+        let net = tinynet();
+        let mut m = Mapping::uniform(&net, Choice::Fpga);
+        m.set("tfc2", Choice::Gpu(KernelLib::CuBlas));
+        assert_eq!(m.switches(&net), 1);
+        m.set("tlrn1", Choice::Gpu(KernelLib::CuDnn));
+        assert_eq!(m.switches(&net), 3);
+    }
+
+    #[test]
+    fn missing_layer_rejected() {
+        let net = alexnet();
+        let mut m = Mapping::uniform(&net, Choice::Fpga);
+        m.choices.remove("conv3");
+        assert!(m.validate(&net).is_err());
+    }
+
+    #[test]
+    fn unknown_layer_rejected() {
+        let net = tinynet();
+        let mut m = Mapping::uniform(&net, Choice::Fpga);
+        m.set("bogus", Choice::Fpga);
+        assert!(m.validate(&net).is_err());
+    }
+}

@@ -1,0 +1,15 @@
+//! Scheduling layer: mappings, the dataflow/pipeline simulator, the
+//! design-space exploration, and Pareto trade-off analysis.
+
+pub mod dataflow;
+pub mod dse;
+pub mod mapping;
+pub mod pareto;
+
+pub use dataflow::{simulate, EstimateSource, ScheduledOp, Timeline};
+pub use dse::{
+    exhaustive_by_kind, greedy, local_search, tradeoff_frontier, Candidate,
+    Constraints, Objective,
+};
+pub use mapping::{Choice, Mapping};
+pub use pareto::{dominates, frontier, Point};

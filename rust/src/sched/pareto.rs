@@ -1,0 +1,84 @@
+//! Pareto-frontier utility over (minimize, minimize) objective pairs —
+//! the trade-off curve the paper's middleware exposes to users.
+
+/// A candidate with two minimized objectives and a payload.
+#[derive(Clone, Debug)]
+pub struct Point<T> {
+    pub x: f64,
+    pub y: f64,
+    pub item: T,
+}
+
+/// `a` dominates `b` if it is no worse in both and better in one.
+pub fn dominates(ax: f64, ay: f64, bx: f64, by: f64) -> bool {
+    (ax <= bx && ay <= by) && (ax < bx || ay < by)
+}
+
+/// Non-dominated subset, sorted by x ascending.
+pub fn frontier<T: Clone>(points: &[Point<T>]) -> Vec<Point<T>> {
+    let mut front: Vec<Point<T>> = Vec::new();
+    for p in points {
+        if points
+            .iter()
+            .any(|q| dominates(q.x, q.y, p.x, p.y))
+        {
+            continue;
+        }
+        // dedupe exact duplicates
+        if front.iter().any(|f| f.x == p.x && f.y == p.y) {
+            continue;
+        }
+        front.push(p.clone());
+    }
+    front.sort_by(|a, b| a.x.partial_cmp(&b.x).unwrap());
+    front
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(x: f64, y: f64) -> Point<u32> {
+        Point { x, y, item: 0 }
+    }
+
+    #[test]
+    fn dominance_rules() {
+        assert!(dominates(1.0, 1.0, 2.0, 2.0));
+        assert!(dominates(1.0, 2.0, 1.0, 3.0));
+        assert!(!dominates(1.0, 1.0, 1.0, 1.0)); // equal: no strict gain
+        assert!(!dominates(1.0, 3.0, 2.0, 1.0)); // trade-off
+    }
+
+    #[test]
+    fn frontier_filters_dominated() {
+        let pts = vec![pt(1.0, 5.0), pt(2.0, 4.0), pt(3.0, 6.0), pt(4.0, 1.0)];
+        let f = frontier(&pts);
+        let coords: Vec<(f64, f64)> = f.iter().map(|p| (p.x, p.y)).collect();
+        assert_eq!(coords, vec![(1.0, 5.0), (2.0, 4.0), (4.0, 1.0)]);
+    }
+
+    #[test]
+    fn frontier_is_monotone() {
+        let pts: Vec<Point<u32>> = (0..50)
+            .map(|i| pt((i % 7) as f64, ((i * 13) % 11) as f64))
+            .collect();
+        let f = frontier(&pts);
+        for w in f.windows(2) {
+            assert!(w[0].x < w[1].x);
+            assert!(w[0].y > w[1].y, "y must strictly decrease along front");
+        }
+    }
+
+    #[test]
+    fn single_point_is_its_own_front() {
+        let f = frontier(&[pt(1.0, 1.0)]);
+        assert_eq!(f.len(), 1);
+    }
+
+    #[test]
+    fn duplicates_collapse() {
+        let f = frontier(&[pt(1.0, 1.0), pt(1.0, 1.0)]);
+        assert_eq!(f.len(), 1);
+    }
+}

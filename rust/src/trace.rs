@@ -1,0 +1,185 @@
+//! Workload-trace substrate: synthetic request arrival processes for the
+//! serving experiments (the paper's "front-end cloud users", Fig 2).
+//!
+//! A [`Trace`] is a deterministic sequence of request arrival offsets that
+//! both the E2E example and the benches can replay; processes: Poisson
+//! (open-loop), uniform, and on/off bursts.  Determinism comes from the
+//! repo PRNG so every run of an experiment sees the same workload.
+
+use crate::util::Rng;
+
+/// Arrival process shape.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Process {
+    /// Exponential inter-arrivals at `rate_hz`.
+    Poisson { rate_hz: f64 },
+    /// Fixed inter-arrival gap (rate_hz requests per second).
+    Uniform { rate_hz: f64 },
+    /// `burst_len` back-to-back arrivals, then an idle gap so the average
+    /// rate is `rate_hz`.
+    Burst { rate_hz: f64, burst_len: usize },
+}
+
+/// A materialized trace: monotonically non-decreasing arrival times (s).
+#[derive(Clone, Debug)]
+pub struct Trace {
+    pub arrivals_s: Vec<f64>,
+}
+
+impl Trace {
+    pub fn generate(process: Process, n: usize, seed: u64) -> Trace {
+        let mut rng = Rng::new(seed);
+        let mut t = 0.0f64;
+        let mut arrivals = Vec::with_capacity(n);
+        match process {
+            Process::Poisson { rate_hz } => {
+                assert!(rate_hz > 0.0);
+                for _ in 0..n {
+                    t += rng.next_exp(rate_hz);
+                    arrivals.push(t);
+                }
+            }
+            Process::Uniform { rate_hz } => {
+                assert!(rate_hz > 0.0);
+                let gap = 1.0 / rate_hz;
+                for _ in 0..n {
+                    t += gap;
+                    arrivals.push(t);
+                }
+            }
+            Process::Burst { rate_hz, burst_len } => {
+                assert!(rate_hz > 0.0 && burst_len > 0);
+                // each burst of k arrivals is followed by k/rate of idle
+                let idle = burst_len as f64 / rate_hz;
+                let mut i = 0;
+                while arrivals.len() < n {
+                    arrivals.push(t);
+                    i += 1;
+                    if i % burst_len == 0 {
+                        t += idle;
+                    }
+                }
+            }
+        }
+        Trace { arrivals_s: arrivals }
+    }
+
+    pub fn len(&self) -> usize {
+        self.arrivals_s.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.arrivals_s.is_empty()
+    }
+
+    /// Total span of the trace, seconds.
+    pub fn duration_s(&self) -> f64 {
+        self.arrivals_s.last().copied().unwrap_or(0.0)
+            - self.arrivals_s.first().copied().unwrap_or(0.0)
+    }
+
+    /// Achieved average rate (requests per second).
+    pub fn rate_hz(&self) -> f64 {
+        if self.arrivals_s.len() < 2 {
+            return 0.0;
+        }
+        (self.arrivals_s.len() - 1) as f64 / self.duration_s()
+    }
+
+    /// Inter-arrival gaps, seconds.
+    pub fn gaps(&self) -> Vec<f64> {
+        self.arrivals_s.windows(2).map(|w| w[1] - w[0]).collect()
+    }
+
+    /// Peak arrivals inside any window of `window_s` seconds — the burst
+    /// factor backpressure sizing cares about.
+    pub fn peak_in_window(&self, window_s: f64) -> usize {
+        let a = &self.arrivals_s;
+        let mut best = 0;
+        let mut lo = 0;
+        for hi in 0..a.len() {
+            while a[hi] - a[lo] > window_s {
+                lo += 1;
+            }
+            best = best.max(hi - lo + 1);
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_hits_target_rate() {
+        let t = Trace::generate(Process::Poisson { rate_hz: 100.0 }, 5000, 1);
+        assert_eq!(t.len(), 5000);
+        let r = t.rate_hz();
+        assert!((r - 100.0).abs() / 100.0 < 0.05, "rate {r}");
+    }
+
+    #[test]
+    fn poisson_is_deterministic_per_seed() {
+        let a = Trace::generate(Process::Poisson { rate_hz: 50.0 }, 100, 7);
+        let b = Trace::generate(Process::Poisson { rate_hz: 50.0 }, 100, 7);
+        let c = Trace::generate(Process::Poisson { rate_hz: 50.0 }, 100, 8);
+        assert_eq!(a.arrivals_s, b.arrivals_s);
+        assert_ne!(a.arrivals_s, c.arrivals_s);
+    }
+
+    #[test]
+    fn uniform_gaps_are_constant() {
+        let t = Trace::generate(Process::Uniform { rate_hz: 200.0 }, 50, 0);
+        for g in t.gaps() {
+            assert!((g - 0.005).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn arrivals_monotone_for_all_processes() {
+        for p in [
+            Process::Poisson { rate_hz: 10.0 },
+            Process::Uniform { rate_hz: 10.0 },
+            Process::Burst { rate_hz: 10.0, burst_len: 4 },
+        ] {
+            let t = Trace::generate(p, 200, 3);
+            for w in t.arrivals_s.windows(2) {
+                assert!(w[1] >= w[0], "{p:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn burst_peaks_exceed_poisson_peaks() {
+        let bursty = Trace::generate(
+            Process::Burst { rate_hz: 100.0, burst_len: 16 },
+            400,
+            5,
+        );
+        let smooth =
+            Trace::generate(Process::Uniform { rate_hz: 100.0 }, 400, 5);
+        assert!(
+            bursty.peak_in_window(0.01) > smooth.peak_in_window(0.01),
+            "bursts must concentrate arrivals"
+        );
+        // average rate still matches the target within tolerance
+        let r = bursty.rate_hz();
+        assert!((r - 100.0).abs() / 100.0 < 0.15, "burst avg rate {r}");
+    }
+
+    #[test]
+    fn peak_window_full_trace() {
+        let t = Trace::generate(Process::Uniform { rate_hz: 10.0 }, 20, 0);
+        assert_eq!(t.peak_in_window(1e9), 20);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let t = Trace::generate(Process::Uniform { rate_hz: 1.0 }, 0, 0);
+        assert!(t.is_empty());
+        assert_eq!(t.rate_hz(), 0.0);
+        let t = Trace::generate(Process::Uniform { rate_hz: 1.0 }, 1, 0);
+        assert_eq!(t.duration_s(), 0.0);
+    }
+}

@@ -1,0 +1,21 @@
+//! Foundation substrates built in-repo (the offline environment vendors no
+//! rand/serde/rayon/tokio): PRNG, stats, JSON codec, tensors, thread pool.
+
+pub mod json;
+pub mod pool;
+pub mod rng;
+pub mod stats;
+pub mod tensor;
+
+pub use json::Json;
+pub use pool::ThreadPool;
+pub use rng::Rng;
+pub use stats::{Samples, Summary};
+pub use tensor::Tensor;
+
+/// Wall-clock helper used by benches and the measured-time device path.
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, std::time::Duration) {
+    let t0 = std::time::Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}

@@ -1,0 +1,147 @@
+//! Config-system integration: files on disk -> typed configs -> running
+//! components; plus malformed-input failure modes.
+
+use cnnlab::config::{
+    network_from_toml, parse_toml, DseConfig, ServingConfig,
+};
+use cnnlab::sched::{simulate, Choice, EstimateSource, Mapping};
+
+fn write_tmp(name: &str, contents: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("cnnlab-config-tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(name);
+    std::fs::write(&path, contents).unwrap();
+    path
+}
+
+#[test]
+fn full_config_file_roundtrip() {
+    let path = write_tmp(
+        "serve.toml",
+        r#"
+        # CNNLab serving configuration
+        [serving]
+        network = "tinynet"
+        max_batch = 4
+        max_wait_us = 750
+        queue_capacity = 32
+        requests = 10
+        arrival_rate_hz = 100.0
+        seed = 7
+
+        [dse]
+        batch = 32
+        objective = "energy"
+        power_cap_w = 80.0
+        "#,
+    );
+    let text = std::fs::read_to_string(&path).unwrap();
+    let doc = parse_toml(&text).unwrap();
+    let serving = ServingConfig::from_toml(&doc).unwrap();
+    assert_eq!(serving.network, "tinynet");
+    assert_eq!(serving.max_batch, 4);
+    assert_eq!(serving.queue_capacity, 32);
+    assert_eq!(serving.seed, 7);
+    let policy = serving.policy();
+    assert_eq!(policy.max_batch, 4);
+
+    let dse = DseConfig::from_toml(&doc).unwrap();
+    assert_eq!(dse.batch, 32);
+    assert_eq!(dse.power_cap_w, Some(80.0));
+}
+
+#[test]
+fn custom_network_config_runs_through_the_simulator() {
+    let doc = parse_toml(
+        r#"
+        name = "confnet"
+        [[layer]]
+        type = "conv"
+        name = "c1"
+        input = [3, 32, 32]
+        cout = 16
+        kernel = 3
+        stride = 1
+        pad = 1
+        [[layer]]
+        type = "lrn"
+        name = "n1"
+        input = [16, 32, 32]
+        size = 5
+        [[layer]]
+        type = "pool"
+        name = "p1"
+        input = [16, 32, 32]
+        size = 2
+        stride = 2
+        [[layer]]
+        type = "fc"
+        name = "f1"
+        nin = 4096
+        nout = 100
+        softmax = true
+        in_volume = [16, 16, 16]
+        "#,
+    )
+    .unwrap();
+    let net = network_from_toml(&doc).unwrap();
+    net.validate().unwrap();
+    assert_eq!(net.name, "confnet");
+    // the configured network is a first-class citizen: device models,
+    // mapping, and pipeline simulation all work on it
+    let src = EstimateSource::new();
+    let m = Mapping::uniform(&net, Choice::Fpga);
+    let t = simulate(&net, &m, &src, 16, 2).unwrap();
+    assert!(t.makespan_s > 0.0);
+    assert!(t.energy_j > 0.0);
+    assert_eq!(t.ops.len(), net.layers.len() * 2);
+}
+
+#[test]
+fn malformed_configs_fail_loudly() {
+    // broken toml
+    assert!(parse_toml("[serving\nmax_batch = 1").is_err());
+    // type errors surface through typed extraction
+    let doc = parse_toml("[serving]\nmax_batch = -3").unwrap();
+    assert!(ServingConfig::from_toml(&doc).is_err());
+    let doc = parse_toml("[dse]\nobjective = \"warp-speed\"").unwrap();
+    assert!(DseConfig::from_toml(&doc).is_err());
+    // network with inconsistent chain
+    let doc = parse_toml(
+        r#"
+        [[layer]]
+        type = "fc"
+        nin = 8
+        nout = 8
+        [[layer]]
+        type = "fc"
+        nin = 16
+        nout = 2
+        "#,
+    )
+    .unwrap();
+    assert!(network_from_toml(&doc).is_err());
+}
+
+#[test]
+fn missing_required_layer_keys_are_reported() {
+    let doc = parse_toml(
+        r#"
+        [[layer]]
+        type = "conv"
+        input = [3, 8, 8]
+        "#,
+    )
+    .unwrap();
+    let err = network_from_toml(&doc).unwrap_err().to_string();
+    assert!(err.contains("cout"), "{err}");
+}
+
+#[test]
+fn defaults_when_sections_missing() {
+    let doc = parse_toml("").unwrap();
+    let serving = ServingConfig::from_toml(&doc).unwrap();
+    assert_eq!(serving, ServingConfig::default());
+    let dse = DseConfig::from_toml(&doc).unwrap();
+    assert_eq!(dse, DseConfig::default());
+}

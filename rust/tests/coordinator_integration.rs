@@ -1,0 +1,265 @@
+//! Coordinator integration: batcher + leader loop + router against both the
+//! hermetic mock engine and (when artifacts exist) the real PJRT engine.
+
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+use cnnlab::coordinator::{
+    BatchPolicy, InferenceEngine, MockEngine, PjrtEngine, RoutePolicy,
+    Router, Server, ServerConfig,
+};
+use cnnlab::model::tinynet;
+use cnnlab::runtime::ExecutorService;
+use cnnlab::util::{Rng, Tensor};
+
+fn artifacts_dir() -> Option<String> {
+    let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    if std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn image(rng: &mut Rng) -> Tensor {
+    Tensor::randn(&[3, 8, 8], rng, 0.1)
+}
+
+#[test]
+fn serves_all_requests_exactly_once() {
+    let server = Server::spawn(
+        MockEngine::new(vec![1, 2, 4, 8]),
+        ServerConfig {
+            policy: BatchPolicy::new(4, Duration::from_millis(1)),
+            queue_capacity: 128,
+        },
+    );
+    let client = server.client();
+    let mut rng = Rng::new(1);
+    let mut rxs = Vec::new();
+    for _ in 0..50 {
+        rxs.push(client.submit(image(&mut rng)).unwrap());
+    }
+    let mut ids = Vec::new();
+    for rx in rxs {
+        let resp = rx.recv().unwrap().unwrap();
+        ids.push(resp.id);
+        assert!(resp.latency_s >= 0.0);
+        assert!(resp.batch_size >= 1 && resp.batch_size <= 4);
+    }
+    ids.sort();
+    ids.dedup();
+    assert_eq!(ids.len(), 50, "every request answered exactly once");
+    assert_eq!(server.metrics().completed.load(Ordering::Relaxed), 50);
+    assert_eq!(server.metrics().errors.load(Ordering::Relaxed), 0);
+}
+
+#[test]
+fn batching_actually_batches_under_load() {
+    let mut engine = MockEngine::new(vec![1, 2, 4, 8]);
+    engine.delay = Duration::from_millis(2);
+    let server = Server::spawn(
+        engine,
+        ServerConfig {
+            policy: BatchPolicy::new(8, Duration::from_millis(4)),
+            queue_capacity: 256,
+        },
+    );
+    let client = server.client();
+    let mut rng = Rng::new(2);
+    // burst: all 64 requests land before the first batch closes
+    let rxs: Vec<_> = (0..64)
+        .map(|_| client.submit(image(&mut rng)).unwrap())
+        .collect();
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+    let mean_batch = server.metrics().mean_batch_size();
+    assert!(
+        mean_batch > 2.0,
+        "bursty load should form real batches, got mean {mean_batch}"
+    );
+}
+
+#[test]
+fn engine_failure_propagates_as_errors_not_hangs() {
+    let mut engine = MockEngine::new(vec![1, 2, 4, 8]);
+    engine.fail_every = 2; // every second batch call dies
+    let server = Server::spawn(
+        engine,
+        ServerConfig {
+            policy: BatchPolicy::immediate(),
+            queue_capacity: 64,
+        },
+    );
+    let client = server.client();
+    let mut rng = Rng::new(3);
+    let mut ok = 0;
+    let mut err = 0;
+    for _ in 0..20 {
+        match client.infer(image(&mut rng)) {
+            Ok(_) => ok += 1,
+            Err(_) => err += 1,
+        }
+    }
+    assert_eq!(ok + err, 20);
+    assert!(ok >= 8 && err >= 8, "ok={ok} err={err}");
+    assert_eq!(
+        server.metrics().errors.load(Ordering::Relaxed) as usize,
+        err
+    );
+}
+
+#[test]
+fn backpressure_rejects_when_queue_full() {
+    let mut engine = MockEngine::new(vec![1]);
+    engine.delay = Duration::from_millis(50); // slow engine
+    let server = Server::spawn(
+        engine,
+        ServerConfig {
+            policy: BatchPolicy::immediate(),
+            queue_capacity: 2,
+        },
+    );
+    let client = server.client();
+    let mut rng = Rng::new(4);
+    let mut rejected = 0u64;
+    let mut accepted = Vec::new();
+    for _ in 0..30 {
+        match client.submit(image(&mut rng)) {
+            Ok(rx) => accepted.push(rx),
+            Err(e) => {
+                assert!(e.to_string().contains("ServerBusy"), "{e}");
+                rejected += 1;
+            }
+        }
+    }
+    assert!(rejected > 0, "tiny queue + slow engine must shed load");
+    for rx in accepted {
+        rx.recv().unwrap().unwrap();
+    }
+    assert_eq!(
+        server.metrics().rejected.load(Ordering::Relaxed),
+        rejected
+    );
+}
+
+#[test]
+fn shutdown_drains_pending_requests() {
+    let mut engine = MockEngine::new(vec![1, 2, 4, 8]);
+    engine.delay = Duration::from_millis(1);
+    let server = Server::spawn(
+        engine,
+        ServerConfig {
+            // huge wait: only shutdown can flush the queue
+            policy: BatchPolicy::new(64, Duration::from_secs(60)),
+            queue_capacity: 64,
+        },
+    );
+    let client = server.client();
+    let mut rng = Rng::new(5);
+    let rxs: Vec<_> = (0..5)
+        .map(|_| client.submit(image(&mut rng)).unwrap())
+        .collect();
+    drop(server); // leader must drain before exiting
+    for rx in rxs {
+        let resp = rx.recv().expect("reply channel alive").unwrap();
+        assert!(resp.batch_size >= 1);
+    }
+}
+
+#[test]
+fn router_balances_across_backends() {
+    let mk = || {
+        let mut e = MockEngine::new(vec![1, 2, 4, 8]);
+        e.delay = Duration::from_micros(500);
+        Server::spawn(
+            e,
+            ServerConfig {
+                policy: BatchPolicy::new(4, Duration::from_micros(200)),
+                queue_capacity: 64,
+            },
+        )
+    };
+    let (s1, s2, s3) = (mk(), mk(), mk());
+    let router = Router::new(
+        vec![s1.client(), s2.client(), s3.client()],
+        RoutePolicy::RoundRobin,
+    );
+    let mut rng = Rng::new(6);
+    for _ in 0..30 {
+        router.infer(image(&mut rng)).unwrap();
+    }
+    for s in [&s1, &s2, &s3] {
+        let done = s.metrics().completed.load(Ordering::Relaxed);
+        assert_eq!(done, 10, "round robin should balance exactly");
+    }
+}
+
+// ------------------------------------------------------------------
+// Real-engine integration (requires artifacts)
+// ------------------------------------------------------------------
+
+#[test]
+fn pjrt_engine_pads_batches_and_splits_outputs() {
+    let Some(dir) = artifacts_dir() else { return };
+    let svc = ExecutorService::spawn(&dir).unwrap();
+    let net = tinynet();
+    let engine =
+        PjrtEngine::new(svc.handle(), &net, vec![1, 2], 42).unwrap();
+    let mut rng = Rng::new(7);
+    // 1 image -> b1 artifact; outputs sum to 1 (softmax)
+    let (outs, _) = engine.infer(&[image(&mut rng)]).unwrap();
+    assert_eq!(outs.len(), 1);
+    let s: f32 = outs[0].data().iter().sum();
+    assert!((s - 1.0).abs() < 1e-5);
+    // 2 images -> b2 artifact, one distribution each
+    let imgs = [image(&mut rng), image(&mut rng)];
+    let (outs, _) = engine.infer(&imgs).unwrap();
+    assert_eq!(outs.len(), 2);
+    for o in &outs {
+        let s: f32 = o.data().iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+    }
+    // identical image => identical output regardless of batch-mate
+    let fixed = Tensor::randn(&[3, 8, 8], &mut Rng::new(99), 0.1);
+    let (solo, _) = engine.infer(std::slice::from_ref(&fixed)).unwrap();
+    let (pair, _) = engine
+        .infer(&[fixed.clone(), image(&mut rng)])
+        .unwrap();
+    assert!(
+        solo[0].max_abs_diff(&pair[0]) < 1e-5,
+        "padding must not change results"
+    );
+}
+
+#[test]
+fn end_to_end_serving_on_pjrt() {
+    let Some(dir) = artifacts_dir() else { return };
+    let svc = ExecutorService::spawn(&dir).unwrap();
+    let net = tinynet();
+    let engine =
+        PjrtEngine::new(svc.handle(), &net, vec![1, 2], 42).unwrap();
+    let server = Server::spawn(
+        engine,
+        ServerConfig {
+            policy: BatchPolicy::new(2, Duration::from_micros(300)),
+            queue_capacity: 64,
+        },
+    );
+    let client = server.client();
+    let mut rng = Rng::new(8);
+    let rxs: Vec<_> = (0..12)
+        .map(|_| client.submit(image(&mut rng)).unwrap())
+        .collect();
+    for rx in rxs {
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.probs.shape(), &[1, 10]);
+        let s: f32 = resp.probs.data().iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+    }
+    let lat = server.metrics().latency_summary();
+    assert!(lat.p99 < 5.0, "p99 {} s looks wrong", lat.p99);
+    assert_eq!(server.metrics().errors.load(Ordering::Relaxed), 0);
+}

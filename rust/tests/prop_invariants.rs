@@ -1,0 +1,325 @@
+//! Property-based invariants over the coordinator and scheduler, via the
+//! in-repo `cnnlab::prop` framework (no proptest offline).
+
+use std::time::{Duration, Instant};
+
+use cnnlab::coordinator::{BatchPolicy, Batcher, Request};
+use cnnlab::fpga::{self, EngineConfig};
+use cnnlab::model::{alexnet, cost, LayerKind};
+use cnnlab::power::KernelLib;
+use cnnlab::prop::{check, f64_in, usize_in, vec_of, Gen, PropResult};
+use cnnlab::sched::{
+    frontier, simulate, Choice, EstimateSource, Mapping, Point,
+};
+use cnnlab::util::{Rng, Tensor};
+
+fn expect_ok<T: std::fmt::Debug>(r: PropResult<T>) {
+    r.unwrap();
+}
+
+// ---------------------------------------------------------------- batcher
+
+/// Batcher conservation: for any policy and any request arrival pattern,
+/// every pushed request comes back exactly once across pop_ready +
+/// drain_all, in FIFO order, and no batch exceeds max_batch.
+#[test]
+fn prop_batcher_conserves_requests() {
+    let gen = vec_of(usize_in(0, 3), usize_in(0, 60)); // inter-arrival codes
+    expect_ok(check(11, 150, &gen, |arrivals: &Vec<usize>| {
+        for &max_batch in &[1usize, 2, 5, 8] {
+            let mut b = Batcher::new(BatchPolicy::new(
+                max_batch,
+                Duration::from_micros(50),
+            ));
+            let t0 = Instant::now();
+            let mut popped: Vec<u64> = Vec::new();
+            for (i, &gap) in arrivals.iter().enumerate() {
+                let at = t0 + Duration::from_micros((i * 7 + gap) as u64);
+                b.push(Request {
+                    id: i as u64,
+                    image: Tensor::zeros(&[1]),
+                    arrived: at,
+                });
+                // poll at a moving "now"
+                while let Some(batch) =
+                    b.pop_ready(at + Duration::from_micros(gap as u64))
+                {
+                    if batch.len() > max_batch {
+                        return Err(format!(
+                            "batch of {} exceeds max {max_batch}",
+                            batch.len()
+                        ));
+                    }
+                    popped.extend(batch.iter().map(|r| r.id));
+                }
+            }
+            for batch in b.drain_all() {
+                popped.extend(batch.iter().map(|r| r.id));
+            }
+            let want: Vec<u64> = (0..arrivals.len() as u64).collect();
+            if popped != want {
+                return Err(format!(
+                    "requests lost/duplicated/reordered: {popped:?}"
+                ));
+            }
+        }
+        Ok(())
+    }));
+}
+
+// ---------------------------------------------------------------- schedule
+
+/// Timeline invariants for random by-layer mappings: chain order per batch,
+/// no overlap on a physical device, makespan = max end.
+#[test]
+fn prop_schedule_is_consistent() {
+    let net = alexnet();
+    let n_layers = net.layers.len();
+    let gen = vec_of(usize_in(0, 2), usize_in(n_layers, n_layers));
+    let src = EstimateSource::new();
+    expect_ok(check(12, 40, &gen, |codes: &Vec<usize>| {
+        if codes.len() != n_layers {
+            return Ok(()); // shrunk vectors out of contract: skip
+        }
+        let mut m = Mapping::uniform(&net, Choice::Fpga);
+        for (l, &c) in net.layers.iter().zip(codes) {
+            m.set(&l.name, Choice::CANDIDATES[c]);
+        }
+        let t = simulate(&net, &m, &src, 8, 3)
+            .map_err(|e| e.to_string())?;
+        // 1. chain order per batch
+        for b in 0..3 {
+            let mut prev_end = 0.0;
+            for layer in &net.layers {
+                let op = t
+                    .ops
+                    .iter()
+                    .find(|o| o.batch_idx == b && o.layer == layer.name)
+                    .ok_or("missing op")?;
+                if op.start_s + 1e-12 < prev_end {
+                    return Err(format!(
+                        "chain violated at {} b{b}",
+                        layer.name
+                    ));
+                }
+                prev_end = op.end_s;
+            }
+        }
+        // 2. physical device exclusivity
+        let phys = |c: Choice| match c {
+            Choice::Gpu(_) => 0,
+            Choice::Fpga => 1,
+            Choice::CpuPjrt => 2,
+        };
+        for dev in 0..3 {
+            let mut spans: Vec<(f64, f64)> = t
+                .ops
+                .iter()
+                .filter(|o| phys(o.choice) == dev)
+                .map(|o| (o.start_s, o.end_s))
+                .collect();
+            spans.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            for w in spans.windows(2) {
+                if w[1].0 + 1e-12 < w[0].1 {
+                    return Err(format!(
+                        "device {dev} overlap: {w:?}"
+                    ));
+                }
+            }
+        }
+        // 3. makespan is the max end
+        let max_end = t
+            .ops
+            .iter()
+            .map(|o| o.end_s)
+            .fold(0.0f64, f64::max);
+        if (max_end - t.makespan_s).abs() > 1e-9 {
+            return Err("makespan mismatch".into());
+        }
+        Ok(())
+    }));
+}
+
+// ---------------------------------------------------------------- pareto
+
+/// No frontier point may dominate another; every input point must be
+/// dominated-by-or-equal-to some frontier point.
+#[test]
+fn prop_pareto_frontier_sound_and_complete() {
+    let gen = vec_of(usize_in(0, 1000), usize_in(1, 40));
+    expect_ok(check(13, 200, &gen, |codes: &Vec<usize>| {
+        let pts: Vec<Point<usize>> = codes
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| Point {
+                x: (c % 33) as f64,
+                y: (c / 33) as f64,
+                item: i,
+            })
+            .collect();
+        let front = frontier(&pts);
+        for a in &front {
+            for b in &front {
+                if a.item != b.item
+                    && cnnlab::sched::dominates(a.x, a.y, b.x, b.y)
+                {
+                    return Err("frontier point dominated".into());
+                }
+            }
+        }
+        for p in &pts {
+            let covered = front.iter().any(|f| {
+                (f.x <= p.x && f.y <= p.y)
+            });
+            if !covered {
+                return Err(format!("point ({}, {}) uncovered", p.x, p.y));
+            }
+        }
+        Ok(())
+    }));
+}
+
+// ---------------------------------------------------------------- fpga
+
+/// The fitter never returns a configuration that exceeds device capacity,
+/// and resource accounting is monotone in PE count.
+#[test]
+fn prop_fitter_never_overallocates() {
+    let gen = vec_of(usize_in(1, 80), usize_in(4, 4));
+    expect_ok(check(14, 120, &gen, |pes: &Vec<usize>| {
+        if pes.len() != 4 {
+            return Ok(());
+        }
+        let engines: Vec<EngineConfig> = LayerKind::ALL
+            .iter()
+            .zip(pes)
+            .map(|(&kind, &p)| EngineConfig { kind, pes: p as u64 })
+            .collect();
+        if let Some(fitted) = fpga::shrink_to_fit(&engines, &fpga::DE5) {
+            let rep = fpga::fit(&fitted, &fpga::DE5);
+            if !rep.fits {
+                return Err("shrink_to_fit returned non-fitting".into());
+            }
+            for (orig, fit) in engines.iter().zip(&fitted) {
+                if fit.pes > orig.pes {
+                    return Err("shrink grew an engine".into());
+                }
+                if fit.pes == 0 {
+                    return Err("engine lost all PEs".into());
+                }
+            }
+        }
+        Ok(())
+    }));
+}
+
+/// Clock model: more PEs never clocks faster.
+#[test]
+fn prop_fmax_monotone_nonincreasing() {
+    let gen = usize_in(1, 200);
+    expect_ok(check(15, 200, &gen, |&pes| {
+        for kind in LayerKind::ALL {
+            let f1 = fpga::clock::fmax_mhz(kind, pes as u64);
+            let f2 = fpga::clock::fmax_mhz(kind, pes as u64 + 1);
+            if f2 > f1 + 1e-9 {
+                return Err(format!("{kind:?}: fmax grew at {pes}"));
+            }
+        }
+        Ok(())
+    }));
+}
+
+// ---------------------------------------------------------------- costs
+
+/// Device-model sanity across random batches: time and energy positive,
+/// throughput below the respective roofline, FLOPs scale linearly.
+#[test]
+fn prop_device_estimates_bounded() {
+    use cnnlab::device::{Accelerator, FpgaDevice, GpuDevice};
+    use cnnlab::runtime::Pass;
+    let net = alexnet();
+    let gen = usize_in(1, 256);
+    let gpu = GpuDevice::new(KernelLib::CuDnn);
+    let fpga_dev = FpgaDevice::new();
+    expect_ok(check(16, 60, &gen, |&batch| {
+        for l in &net.layers {
+            for dev in [&gpu as &dyn Accelerator, &fpga_dev] {
+                let e = dev
+                    .estimate(l, batch, Pass::Forward)
+                    .map_err(|e| e.to_string())?;
+                if !(e.time_s > 0.0) || !(e.power_w > 0.0) {
+                    return Err(format!(
+                        "{}: non-positive estimate",
+                        l.name
+                    ));
+                }
+                if e.flops
+                    != cost::forward_flops(l) * batch as u64
+                {
+                    return Err("flops scaling broken".into());
+                }
+                let roof = match dev.kind() {
+                    cnnlab::device::DeviceKind::Gpu => 4290.0,
+                    _ => 120.0,
+                };
+                if e.gflops() > roof {
+                    return Err(format!(
+                        "{} exceeds roofline: {}",
+                        l.name,
+                        e.gflops()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }));
+}
+
+// ---------------------------------------------------------------- rng
+
+/// Tensor::randn must be shape-true and deterministic per seed.
+#[test]
+fn prop_randn_deterministic() {
+    let gen = vec_of(usize_in(1, 6), usize_in(1, 3));
+    expect_ok(check(17, 100, &gen, |shape: &Vec<usize>| {
+        if shape.is_empty() {
+            return Ok(());
+        }
+        let a = Tensor::randn(shape, &mut Rng::new(5), 1.0);
+        let b = Tensor::randn(shape, &mut Rng::new(5), 1.0);
+        if a != b {
+            return Err("nondeterministic".into());
+        }
+        if a.len() != shape.iter().product::<usize>() {
+            return Err("shape/len mismatch".into());
+        }
+        Ok(())
+    }));
+}
+
+/// f64_in respects its bounds (self-test of the prop framework on a
+/// nontrivial generator).
+#[test]
+fn prop_f64_in_bounds() {
+    let gen = f64_in(2.5, 9.5);
+    expect_ok(check(18, 500, &gen, |&x| {
+        if (2.5..9.5).contains(&x) {
+            Ok(())
+        } else {
+            Err(format!("{x} out of bounds"))
+        }
+    }));
+}
+
+/// Gen::map composes.
+#[test]
+fn prop_gen_map() {
+    let gen: Gen<usize> = usize_in(0, 10).map(|x| x * 2);
+    expect_ok(check(19, 200, &gen, |&x| {
+        if x % 2 == 0 && x <= 20 {
+            Ok(())
+        } else {
+            Err(format!("{x}"))
+        }
+    }));
+}

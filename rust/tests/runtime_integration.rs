@@ -1,0 +1,232 @@
+//! Integration: AOT artifacts × PJRT runtime × golden vectors.
+//!
+//! `python/compile/golden.py` evaluates selected artifacts in JAX with
+//! hash-generated inputs and stores the outputs; here we regenerate the same
+//! inputs bit-identically, execute the same HLO through the Rust PJRT
+//! runtime, and assert allclose.  This is the proof that the three layers
+//! compose: Pallas kernel -> JAX lowering -> HLO text -> xla crate ->
+//! numbers.
+//!
+//! Requires `make artifacts` (skips politely otherwise).
+
+use cnnlab::runtime::{ExecutorService, Runtime};
+use cnnlab::util::{Json, Tensor};
+
+const SALT_STRIDE: u64 = 1000003;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    if std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+/// Bit-identical twin of `golden.py::hash_fill`.
+fn hash_fill(shape: &[usize], salt: u64) -> Tensor {
+    let n: usize = shape.iter().product();
+    let data: Vec<f32> = (0..n as u64)
+        .map(|i| {
+            let h = (i + salt).wrapping_mul(2654435761) & 0xFFFF_FFFF;
+            (h as f64 / 2f64.powi(32) * 0.2 - 0.1) as f32
+        })
+        .collect();
+    Tensor::from_vec(shape, data).unwrap()
+}
+
+struct GoldenCase {
+    name: String,
+    input_shapes: Vec<Vec<usize>>,
+    outputs: Vec<Tensor>,
+}
+
+fn load_golden(dir: &str) -> Vec<GoldenCase> {
+    let text = std::fs::read_to_string(format!("{dir}/golden.json"))
+        .expect("golden.json (run `make artifacts`)");
+    let j = Json::parse(&text).unwrap();
+    assert_eq!(
+        j.get("salt_stride").and_then(Json::as_i64),
+        Some(SALT_STRIDE as i64),
+        "salt stride drifted between golden.py and this test"
+    );
+    j.get("cases")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|c| {
+            let shapes = c
+                .get("input_shapes")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|s| {
+                    s.as_arr()
+                        .unwrap()
+                        .iter()
+                        .map(|x| x.as_usize().unwrap())
+                        .collect()
+                })
+                .collect();
+            let outputs = c
+                .get("outputs")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|o| {
+                    let shape: Vec<usize> = o
+                        .get("shape")
+                        .unwrap()
+                        .as_arr()
+                        .unwrap()
+                        .iter()
+                        .map(|x| x.as_usize().unwrap())
+                        .collect();
+                    let data: Vec<f32> = o
+                        .get("data")
+                        .unwrap()
+                        .as_arr()
+                        .unwrap()
+                        .iter()
+                        .map(|x| x.as_f64().unwrap() as f32)
+                        .collect();
+                    Tensor::from_vec(&shape, data).unwrap()
+                })
+                .collect();
+            GoldenCase {
+                name: c.get("name").unwrap().as_str().unwrap().to_string(),
+                input_shapes: shapes,
+                outputs,
+            }
+        })
+        .collect()
+}
+
+fn assert_allclose(got: &Tensor, want: &Tensor, tol: f32, ctx: &str) {
+    assert_eq!(got.shape(), want.shape(), "{ctx}: shape");
+    for (i, (g, w)) in got.data().iter().zip(want.data()).enumerate() {
+        let err = (g - w).abs();
+        let bound = tol * (1.0 + w.abs());
+        assert!(
+            err <= bound,
+            "{ctx}: element {i}: got {g}, want {w} (|err|={err})"
+        );
+    }
+}
+
+#[test]
+fn golden_cases_match_jax() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let cases = load_golden(&dir);
+    assert!(cases.len() >= 6, "expected >=6 golden cases");
+    for case in &cases {
+        let inputs: Vec<Tensor> = case
+            .input_shapes
+            .iter()
+            .enumerate()
+            .map(|(i, s)| hash_fill(s, i as u64 * SALT_STRIDE))
+            .collect();
+        let outs = rt.run(&case.name, &inputs).unwrap();
+        assert_eq!(outs.len(), case.outputs.len(), "{}", case.name);
+        for (k, (got, want)) in
+            outs.iter().zip(&case.outputs).enumerate()
+        {
+            assert_allclose(got, want, 1e-4, &format!("{}[{k}]", case.name));
+        }
+    }
+}
+
+#[test]
+fn executable_cache_reuses_compilations() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    assert_eq!(rt.cached(), 0);
+    rt.load("tconv1_b1").unwrap();
+    rt.load("tconv1_b1").unwrap();
+    assert_eq!(rt.cached(), 1);
+    rt.load("tpool1_b1").unwrap();
+    assert_eq!(rt.cached(), 2);
+}
+
+#[test]
+fn input_shape_mismatch_is_rejected() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let exe = rt.load("tpool1_b1").unwrap();
+    let bad = Tensor::zeros(&[1, 4, 7, 7]); // manifest says 1x4x8x8
+    assert!(exe.run(&[bad]).is_err());
+    let wrong_count = [
+        Tensor::zeros(&[1, 4, 8, 8]),
+        Tensor::zeros(&[1, 4, 8, 8]),
+    ];
+    assert!(exe.run(&wrong_count).is_err());
+}
+
+#[test]
+fn missing_artifact_is_a_clean_error() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let err = match rt.load("no_such_artifact") {
+        Ok(_) => panic!("expected an error"),
+        Err(e) => e.to_string(),
+    };
+    assert!(err.contains("no_such_artifact"), "{err}");
+}
+
+#[test]
+fn executor_service_runs_jobs_from_other_threads() {
+    let Some(dir) = artifacts_dir() else { return };
+    let svc = ExecutorService::spawn(&dir).unwrap();
+    let handle = svc.handle();
+    handle.warm("tfc2_b1").unwrap();
+
+    let mut joins = Vec::new();
+    for t in 0..4 {
+        let h = handle.clone();
+        joins.push(std::thread::spawn(move || {
+            let x = hash_fill(&[1, 4, 4, 4], t);
+            let w = hash_fill(&[64, 10], 1000 + t);
+            let b = hash_fill(&[10], 2000 + t);
+            let out = h.run("tfc2_b1", vec![x, w, b]).unwrap();
+            assert_eq!(out.outputs.len(), 1);
+            assert_eq!(out.outputs[0].shape(), &[1, 10]);
+            // softmax output: sums to 1
+            let s: f32 = out.outputs[0].data().iter().sum();
+            assert!((s - 1.0).abs() < 1e-5, "sum {s}");
+            assert!(out.elapsed.as_nanos() > 0);
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+}
+
+#[test]
+fn executor_service_fails_fast_on_bad_dir() {
+    assert!(ExecutorService::spawn("/nonexistent/artifacts").is_err());
+}
+
+#[test]
+fn full_network_runs_and_is_distribution() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let entry = rt.manifest.full_entry("tinynet", 2).unwrap().clone();
+    let inputs: Vec<Tensor> = entry
+        .inputs
+        .iter()
+        .enumerate()
+        .map(|(i, m)| hash_fill(&m.shape, 31 * i as u64))
+        .collect();
+    let outs = rt.run(&entry.name, &inputs).unwrap();
+    assert_eq!(outs[0].shape(), &[2, 10]);
+    for row in 0..2 {
+        let s: f32 = outs[0].data()[row * 10..(row + 1) * 10].iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+    }
+    assert!(outs[0].all_finite());
+}
