@@ -51,10 +51,12 @@ fn main() -> anyhow::Result<()> {
         "rate",
         if net_name == "alexnet" { 4.0 } else { 300.0 },
     )?;
+    let workers = args.get_usize("workers", 1)?.max(1);
 
     println!(
-        "== CNNLab E2E serving: {} | {} requests | Poisson {} req/s ==",
-        net.name, requests, rate
+        "== CNNLab E2E serving: {} | {} requests | Poisson {} req/s | \
+         {} worker(s) ==",
+        net.name, requests, rate, workers
     );
     let manifest = Manifest::load(dir)?;
     let batches = manifest.batches_for(&net.name);
@@ -65,7 +67,11 @@ fn main() -> anyhow::Result<()> {
     );
     println!("artifact batch sizes: {batches:?}");
 
-    let svc = ExecutorService::spawn(dir)?;
+    // one executor service (device thread) per worker; each policy run
+    // builds one engine replica on each service
+    let services: Vec<ExecutorService> = (0..workers)
+        .map(|_| ExecutorService::spawn(dir))
+        .collect::<anyhow::Result<_>>()?;
     let image_shape: Vec<usize> =
         cnnlab::model::shape::input_shape(&net.layers[0], 1)[1..].to_vec();
 
@@ -89,10 +95,14 @@ fn main() -> anyhow::Result<()> {
     );
 
     for (label, policy) in policies {
-        let engine =
-            PjrtEngine::new(svc.handle(), &net, batches.clone(), 42)?;
-        let server = Server::spawn(
-            engine,
+        let engines: Vec<PjrtEngine> = services
+            .iter()
+            .map(|svc| {
+                PjrtEngine::new(svc.handle(), &net, batches.clone(), 42)
+            })
+            .collect::<anyhow::Result<_>>()?;
+        let server = Server::spawn_pool(
+            engines,
             ServerConfig { policy, queue_capacity: 512 },
         );
         let client = server.client();
@@ -102,17 +112,19 @@ fn main() -> anyhow::Result<()> {
         for _ in 0..requests {
             let gap = rng.next_exp(rate);
             std::thread::sleep(Duration::from_secs_f64(gap.min(0.1)));
-            let img = Tensor::randn(&image_shape, &mut rng, 0.1);
-            // block politely under backpressure
+            let mut img = Tensor::randn(&image_shape, &mut rng, 0.1);
+            // block politely under backpressure (the image is handed
+            // back on rejection — no clone per retry)
             loop {
-                match client.submit(img.clone()) {
+                match client.submit_or_return(img) {
                     Ok(rx) => {
                         pending.push(rx);
                         break;
                     }
-                    Err(_) => std::thread::sleep(
-                        Duration::from_millis(1),
-                    ),
+                    Err((back, _)) => {
+                        img = back;
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
                 }
             }
         }

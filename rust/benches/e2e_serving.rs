@@ -1,23 +1,141 @@
-//! Bench: end-to-end serving on the real PJRT runtime (measured, not
-//! modeled) — tinynet for statistical runs plus an AlexNet spot check.
-//! Reports throughput and latency percentiles per batching policy.
+//! Bench: end-to-end serving.
 //!
-//! Run: `cargo bench --bench e2e_serving` (requires `make artifacts`)
+//! Part 1 (always runs, hermetic): the pipelined leader/worker hot path
+//! on `MockEngine` with nonzero device delay — sustained throughput and
+//! tail latency vs. engine worker count.  This is the §Perf instrument
+//! for the coordinator itself: with the leader only forming batches,
+//! throughput is bounded by device time and scales with workers.
+//!
+//! Part 2 (requires `make artifacts`): the real PJRT runtime (measured,
+//! not modeled) — tinynet policy sweep plus an AlexNet spot check.
+//!
+//! Run: `cargo bench --bench e2e_serving`
 
 use std::time::{Duration, Instant};
 
 use cnnlab::coordinator::{
-    BatchPolicy, PjrtEngine, Server, ServerConfig,
+    BatchPolicy, MockEngine, PjrtEngine, Server, ServerConfig,
 };
 use cnnlab::model::{alexnet, tinynet};
 use cnnlab::report::{f2, si_time, Table};
 use cnnlab::runtime::{ExecutorService, Manifest};
 use cnnlab::util::{Rng, Samples, Tensor};
 
+/// Serve `requests` images through a pool of `workers` mock engines with
+/// the given per-batch device delay; returns (req/s, p50, p99).
+fn mock_round(
+    workers: usize,
+    requests: usize,
+    delay: Duration,
+    policy: BatchPolicy,
+    arrival_rate_hz: Option<f64>,
+) -> (f64, f64, f64) {
+    let engines: Vec<MockEngine> = (0..workers)
+        .map(|_| {
+            let mut e = MockEngine::new(vec![1, 2, 4, 8]);
+            e.delay = delay;
+            e
+        })
+        .collect();
+    let server = Server::spawn_pool(
+        engines,
+        ServerConfig { policy, queue_capacity: 1024 },
+    );
+    let client = server.client();
+    let mut rng = Rng::new(3);
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(requests);
+    for _ in 0..requests {
+        if let Some(rate) = arrival_rate_hz {
+            std::thread::sleep(Duration::from_secs_f64(
+                rng.next_exp(rate).min(0.01),
+            ));
+        }
+        let mut img = Tensor::randn(&[3, 8, 8], &mut rng, 0.1);
+        loop {
+            match client.submit_or_return(img) {
+                Ok(rx) => {
+                    pending.push(rx);
+                    break;
+                }
+                Err((back, _)) => {
+                    img = back;
+                    std::thread::sleep(Duration::from_micros(100));
+                }
+            }
+        }
+    }
+    let mut lat = Samples::new();
+    for rx in pending {
+        lat.push(rx.recv().unwrap().unwrap().latency_s);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    (requests as f64 / wall, lat.p50(), lat.p99())
+}
+
+fn mock_pipeline_section() {
+    let requests = 400;
+    let delay = Duration::from_millis(1);
+    let policy = BatchPolicy::new(4, Duration::from_micros(300));
+
+    // saturating load: throughput must scale with workers because the
+    // leader never executes batches itself
+    let mut t = Table::new(
+        &format!(
+            "Pipelined serving, MockEngine 1ms/batch, saturating load, \
+             {requests} reqs"
+        ),
+        &["workers", "req/s", "p50", "p99", "speedup"],
+    );
+    let mut base = 0.0;
+    for workers in [1usize, 2, 4] {
+        let (rps, p50, p99) =
+            mock_round(workers, requests, delay, policy, None);
+        if workers == 1 {
+            base = rps;
+        }
+        t.row(&[
+            workers.to_string(),
+            f2(rps),
+            si_time(p50),
+            si_time(p99),
+            format!("{:.2}x", rps / base),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // fixed open-loop load near 1-worker capacity: adding workers must
+    // collapse queueing delay (the p99 column)
+    let rate = 900.0; // ~0.9 of one worker's ~1k batches/s ceiling
+    let mut t = Table::new(
+        &format!(
+            "Pipelined serving, fixed Poisson {rate} req/s, {requests} reqs"
+        ),
+        &["workers", "req/s", "p50", "p99"],
+    );
+    for workers in [1usize, 2, 4] {
+        let (rps, p50, p99) =
+            mock_round(workers, requests, delay, policy, Some(rate));
+        t.row(&[
+            workers.to_string(),
+            f2(rps),
+            si_time(p50),
+            si_time(p99),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "expected shape: >=2x sustained req/s at 2+ workers under \
+         saturating load; p99 drops with workers at fixed load.\n"
+    );
+}
+
 fn main() -> anyhow::Result<()> {
+    mock_pipeline_section();
+
     let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
     if !std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
-        println!("SKIP: artifacts not built (run `make artifacts`)");
+        println!("SKIP PJRT sections: artifacts not built (run `make artifacts`)");
         return Ok(());
     }
     let manifest = Manifest::load(&dir)?;
@@ -55,14 +173,17 @@ fn main() -> anyhow::Result<()> {
             std::thread::sleep(Duration::from_secs_f64(
                 rng.next_exp(600.0).min(0.01),
             ));
-            let img = Tensor::randn(&image_shape, &mut rng, 0.1);
+            let mut img = Tensor::randn(&image_shape, &mut rng, 0.1);
             loop {
-                match client.submit(img.clone()) {
+                match client.submit_or_return(img) {
                     Ok(rx) => {
                         pending.push(rx);
                         break;
                     }
-                    Err(_) => std::thread::sleep(Duration::from_micros(200)),
+                    Err((back, _)) => {
+                        img = back;
+                        std::thread::sleep(Duration::from_micros(200));
+                    }
                 }
             }
         }

@@ -7,10 +7,10 @@
 
 use std::time::{Duration, Instant};
 
-use cnnlab::coordinator::{BatchPolicy, Batcher, Request};
+use cnnlab::coordinator::{BatchPolicy, Batcher, Envelope, Request};
 use cnnlab::report::{si_time, Table};
 use cnnlab::runtime::ExecutorService;
-use cnnlab::util::{Rng, Samples, Tensor};
+use cnnlab::util::{BufferPool, Rng, Samples, Tensor};
 
 /// Criterion-ish measurement: warmup then timed iterations, report
 /// mean/p50/p99 per iteration.
@@ -50,19 +50,20 @@ fn main() -> anyhow::Result<()> {
     );
     let mut rng = Rng::new(17);
 
-    // 1. batcher push+pop (pure coordinator overhead)
+    // 1. batcher push+pop (pure coordinator overhead, reply senders
+    //    travelling inside the envelopes as on the real hot path)
     {
         let mut b = Batcher::new(BatchPolicy::new(8, Duration::ZERO));
         let img = Tensor::zeros(&[3, 8, 8]);
+        let (reply, _rx) = std::sync::mpsc::channel();
         let mut i = 0u64;
         bench("batcher push+pop x8", &mut table, 100, 2000, || {
             let now = Instant::now();
             for _ in 0..8 {
-                b.push(Request {
-                    id: i,
-                    image: img.clone(),
-                    arrived: now,
-                });
+                b.push(Envelope::new(
+                    Request { id: i, image: img.clone(), arrived: now },
+                    reply.clone(),
+                ));
                 i += 1;
             }
             let batch = b.pop_ready(now).unwrap();
@@ -76,13 +77,41 @@ fn main() -> anyhow::Result<()> {
         std::hint::black_box(&t);
     });
 
+    // 3. batch assembly: stack 8 images into a fresh zeroed tensor
+    //    (old hot path) vs. a recycled pooled buffer (new hot path)
+    {
+        let imgs: Vec<Tensor> = (0..8)
+            .map(|_| Tensor::randn(&[3, 224, 224], &mut rng, 0.1))
+            .collect();
+        let per = 3 * 224 * 224;
+        bench("stack x8 fresh alloc", &mut table, 10, 200, || {
+            let mut stacked = Tensor::zeros(&[8, 3, 224, 224]);
+            for (i, img) in imgs.iter().enumerate() {
+                stacked.data_mut()[i * per..(i + 1) * per]
+                    .copy_from_slice(img.data());
+            }
+            std::hint::black_box(&stacked);
+        });
+        let pool = BufferPool::new();
+        bench("stack x8 pooled buffer", &mut table, 10, 200, || {
+            let mut buf = pool.take(8 * per);
+            for (i, img) in imgs.iter().enumerate() {
+                buf[i * per..(i + 1) * per].copy_from_slice(img.data());
+            }
+            let stacked =
+                Tensor::from_vec(&[8, 3, 224, 224], buf).unwrap();
+            std::hint::black_box(&stacked);
+            pool.put(stacked.into_vec());
+        });
+    }
+
     if have_artifacts {
         let svc = ExecutorService::spawn(&dir)?;
         let handle = svc.handle();
         handle.warm("tfc2_b1")?;
         handle.warm("tinynet_full_b1")?;
 
-        // 3. tiny artifact execution round trip (channel + PJRT + literal)
+        // 4. tiny artifact execution round trip (channel + PJRT + literal)
         let x = Tensor::randn(&[1, 4, 4, 4], &mut rng, 0.1);
         let w = Tensor::randn(&[64, 10], &mut rng, 0.1);
         let b = Tensor::randn(&[10], &mut rng, 0.1);
@@ -93,7 +122,7 @@ fn main() -> anyhow::Result<()> {
             std::hint::black_box(&out);
         });
 
-        // 4. full tinynet forward
+        // 5. full tinynet forward
         let img = Tensor::randn(&[1, 3, 8, 8], &mut rng, 0.1);
         let params: Vec<Tensor> = vec![
             Tensor::randn(&[4, 3, 3, 3], &mut rng, 0.1),

@@ -3,11 +3,22 @@
 //! Policy: close a batch when it reaches `max_batch` requests OR when the
 //! oldest queued request has waited `max_wait`.  This is the classic
 //! latency/throughput dial the serving ablation sweeps.
+//!
+//! The batcher queues [`Envelope`]s (request + reply channel), so a
+//! popped batch is self-contained: whichever worker executes it can
+//! answer every request directly, out of order with other batches.
+//! When constructed with [`Batcher::with_alignment`], batch cuts prefer
+//! the engine's compiled artifact sizes to avoid zero-padding waste.
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
-use super::request::Request;
+use super::request::Envelope;
+
+/// Maximum tolerated zero-padding when shipping a partial batch whole:
+/// waste <= 1/MAX_PAD_WASTE_DENOM of the padded artifact rides along in
+/// one dispatch; anything worse is trimmed to an exact artifact size.
+const MAX_PAD_WASTE_DENOM: usize = 4;
 
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct BatchPolicy {
@@ -31,47 +42,94 @@ impl BatchPolicy {
 #[derive(Debug)]
 pub struct Batcher {
     policy: BatchPolicy,
-    queue: VecDeque<Request>,
+    queue: VecDeque<Envelope>,
+    /// Compiled artifact batch sizes, ascending; empty = no alignment.
+    align: Vec<usize>,
 }
 
 impl Batcher {
     pub fn new(policy: BatchPolicy) -> Batcher {
-        Batcher { policy, queue: VecDeque::new() }
+        Batcher { policy, queue: VecDeque::new(), align: Vec::new() }
+    }
+
+    /// Like [`Batcher::new`], but batch cuts are aware of the engine's
+    /// compiled artifact sizes (`sizes`, ascending) and of padding
+    /// waste: a closing batch whose count sits just below an artifact
+    /// size ships as-is (the engine pads it — one dispatch, bounded
+    /// waste), while one that would waste more than a quarter of the
+    /// padded artifact is trimmed to the largest artifact size <= n
+    /// instead (an extra dispatch beats computing mostly-zero rows).
+    /// The trimmed remainder stays queued and closes on the next poll
+    /// (its deadline is unchanged).
+    pub fn with_alignment(policy: BatchPolicy, sizes: &[usize]) -> Batcher {
+        let mut align = sizes.to_vec();
+        align.sort_unstable();
+        align.dedup();
+        Batcher { policy, queue: VecDeque::new(), align }
     }
 
     pub fn policy(&self) -> BatchPolicy {
         self.policy
     }
 
-    pub fn push(&mut self, req: Request) {
-        self.queue.push_back(req);
+    pub fn push(&mut self, env: Envelope) {
+        self.queue.push_back(env);
     }
 
     pub fn pending(&self) -> usize {
         self.queue.len()
     }
 
+    /// How a closing batch of n requests is sized against the artifact
+    /// grid.  Padding up costs wasted device rows but only one
+    /// dispatch; cutting down costs an extra dispatch for the
+    /// remainder.  Whole-network artifacts have a large fixed dispatch
+    /// cost, so prefer padding unless the waste exceeds the
+    /// MAX_PAD_WASTE_DENOM bound.
+    fn cut(&self, n: usize) -> usize {
+        if self.align.is_empty() {
+            return n;
+        }
+        let largest = *self.align.last().unwrap();
+        if n > largest {
+            // one full-artifact dispatch now; remainder requeued
+            return largest;
+        }
+        // smallest artifact that can hold all n (always exists here)
+        let padded = *self.align.iter().find(|&&a| a >= n).unwrap();
+        if (padded - n) * MAX_PAD_WASTE_DENOM <= padded {
+            n // ship whole; the engine pads to `padded`
+        } else {
+            // waste too high: trim to the largest artifact <= n (if the
+            // grid has nothing <= n, padding is the only option)
+            match self.align.iter().rev().find(|&&a| a <= n) {
+                Some(&a) => a,
+                None => n,
+            }
+        }
+    }
+
     /// Pop a ready batch, if any, according to the policy at time `now`.
-    pub fn pop_ready(&mut self, now: Instant) -> Option<Vec<Request>> {
+    pub fn pop_ready(&mut self, now: Instant) -> Option<Vec<Envelope>> {
         if self.queue.is_empty() {
             return None;
         }
         let full = self.queue.len() >= self.policy.max_batch;
         let expired = now
-            .duration_since(self.queue.front().unwrap().arrived)
+            .duration_since(self.queue.front().unwrap().req.arrived)
             >= self.policy.max_wait;
         if !(full || expired) {
             return None;
         }
-        let n = self.queue.len().min(self.policy.max_batch);
+        let n = self.cut(self.queue.len().min(self.policy.max_batch));
         Some(self.queue.drain(..n).collect())
     }
 
     /// Flush everything (shutdown path), in max_batch chunks.
-    pub fn drain_all(&mut self) -> Vec<Vec<Request>> {
+    pub fn drain_all(&mut self) -> Vec<Vec<Envelope>> {
         let mut out = Vec::new();
         while !self.queue.is_empty() {
-            let n = self.queue.len().min(self.policy.max_batch);
+            let n = self.cut(self.queue.len().min(self.policy.max_batch));
             out.push(self.queue.drain(..n).collect());
         }
         out
@@ -82,29 +140,40 @@ impl Batcher {
     pub fn next_deadline(&self) -> Option<Instant> {
         self.queue
             .front()
-            .map(|r| r.arrived + self.policy.max_wait)
+            .map(|e| e.req.arrived + self.policy.max_wait)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::request::Request;
     use crate::util::Tensor;
+    use std::sync::mpsc::channel;
 
-    fn req(id: u64, arrived: Instant) -> Request {
-        Request { id, image: Tensor::zeros(&[1]), arrived }
+    fn env(id: u64, arrived: Instant) -> Envelope {
+        // reply receiver dropped: these tests inspect batches, never send
+        let (tx, _) = channel();
+        Envelope::new(
+            Request { id, image: Tensor::zeros(&[1]), arrived },
+            tx,
+        )
+    }
+
+    fn ids(batch: &[Envelope]) -> Vec<u64> {
+        batch.iter().map(|e| e.req.id).collect()
     }
 
     #[test]
     fn batch_closes_on_size() {
         let mut b = Batcher::new(BatchPolicy::new(3, Duration::from_secs(10)));
         let t0 = Instant::now();
-        b.push(req(1, t0));
-        b.push(req(2, t0));
+        b.push(env(1, t0));
+        b.push(env(2, t0));
         assert!(b.pop_ready(t0).is_none(), "not full, not expired");
-        b.push(req(3, t0));
+        b.push(env(3, t0));
         let batch = b.pop_ready(t0).unwrap();
-        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), [1, 2, 3]);
+        assert_eq!(ids(&batch), [1, 2, 3]);
         assert_eq!(b.pending(), 0);
     }
 
@@ -113,7 +182,7 @@ mod tests {
         let mut b =
             Batcher::new(BatchPolicy::new(8, Duration::from_millis(5)));
         let t0 = Instant::now();
-        b.push(req(1, t0));
+        b.push(env(1, t0));
         assert!(b.pop_ready(t0).is_none());
         let later = t0 + Duration::from_millis(6);
         let batch = b.pop_ready(later).unwrap();
@@ -125,7 +194,7 @@ mod tests {
         let mut b = Batcher::new(BatchPolicy::new(2, Duration::ZERO));
         let t0 = Instant::now();
         for i in 0..5 {
-            b.push(req(i, t0));
+            b.push(env(i, t0));
         }
         assert_eq!(b.pop_ready(t0).unwrap().len(), 2);
         assert_eq!(b.pop_ready(t0).unwrap().len(), 2);
@@ -137,7 +206,7 @@ mod tests {
     fn immediate_policy_never_waits() {
         let mut b = Batcher::new(BatchPolicy::immediate());
         let t0 = Instant::now();
-        b.push(req(9, t0));
+        b.push(env(9, t0));
         assert_eq!(b.pop_ready(t0).unwrap().len(), 1);
     }
 
@@ -146,11 +215,9 @@ mod tests {
         let mut b = Batcher::new(BatchPolicy::new(10, Duration::ZERO));
         let t0 = Instant::now();
         for i in 0..7 {
-            b.push(req(i, t0));
+            b.push(env(i, t0));
         }
-        let ids: Vec<u64> =
-            b.pop_ready(t0).unwrap().iter().map(|r| r.id).collect();
-        assert_eq!(ids, (0..7).collect::<Vec<_>>());
+        assert_eq!(ids(&b.pop_ready(t0).unwrap()), (0..7).collect::<Vec<_>>());
     }
 
     #[test]
@@ -158,7 +225,7 @@ mod tests {
         let mut b = Batcher::new(BatchPolicy::new(4, Duration::from_secs(1)));
         let t0 = Instant::now();
         for i in 0..10 {
-            b.push(req(i, t0));
+            b.push(env(i, t0));
         }
         let chunks = b.drain_all();
         assert_eq!(
@@ -173,7 +240,76 @@ mod tests {
             Batcher::new(BatchPolicy::new(4, Duration::from_millis(10)));
         assert!(b.next_deadline().is_none());
         let t0 = Instant::now();
-        b.push(req(1, t0));
+        b.push(env(1, t0));
         assert_eq!(b.next_deadline(), Some(t0 + Duration::from_millis(10)));
+    }
+
+    #[test]
+    fn alignment_caps_at_largest_artifact_then_pads_remainder() {
+        // artifacts {2, 4}: 7 queued with max_batch 8 -> one full b=4
+        // dispatch, then 3 ships whole (engine pads to 4: waste 1/4,
+        // within bound — one dispatch beats cutting into 2 + 1)
+        let mut b = Batcher::with_alignment(
+            BatchPolicy::new(8, Duration::ZERO),
+            &[2, 4],
+        );
+        let t0 = Instant::now();
+        for i in 0..7 {
+            b.push(env(i, t0));
+        }
+        assert_eq!(b.pop_ready(t0).unwrap().len(), 4);
+        assert_eq!(b.pop_ready(t0).unwrap().len(), 3);
+        assert!(b.pop_ready(t0).is_none());
+    }
+
+    #[test]
+    fn alignment_prefers_one_padded_dispatch_for_small_waste() {
+        // artifacts {1, 2, 4, 8}: 7 queued -> pad to 8 (waste 1/8) in a
+        // single dispatch, never 4 + 2 + 1
+        let mut b = Batcher::with_alignment(
+            BatchPolicy::new(8, Duration::ZERO),
+            &[1, 2, 4, 8],
+        );
+        let t0 = Instant::now();
+        for i in 0..7 {
+            b.push(env(i, t0));
+        }
+        assert_eq!(b.pop_ready(t0).unwrap().len(), 7);
+        assert!(b.pop_ready(t0).is_none());
+    }
+
+    #[test]
+    fn alignment_cuts_when_padding_waste_is_high() {
+        // artifacts {1, 2, 4, 8}: 5 queued -> padding to 8 would waste
+        // 3/8 (> 1/4), so cut an exact b=4, then the leftover 1 is an
+        // exact artifact
+        let mut b = Batcher::with_alignment(
+            BatchPolicy::new(8, Duration::ZERO),
+            &[1, 2, 4, 8],
+        );
+        let t0 = Instant::now();
+        for i in 0..5 {
+            b.push(env(i, t0));
+        }
+        assert_eq!(b.pop_ready(t0).unwrap().len(), 4);
+        assert_eq!(b.pop_ready(t0).unwrap().len(), 1);
+        assert!(b.pop_ready(t0).is_none());
+    }
+
+    #[test]
+    fn alignment_conserves_fifo_across_cuts() {
+        let mut b = Batcher::with_alignment(
+            BatchPolicy::new(16, Duration::ZERO),
+            &[1, 2, 4, 8],
+        );
+        let t0 = Instant::now();
+        for i in 0..11 {
+            b.push(env(i, t0));
+        }
+        let mut seen = Vec::new();
+        while let Some(batch) = b.pop_ready(t0) {
+            seen.extend(ids(&batch));
+        }
+        assert_eq!(seen, (0..11).collect::<Vec<_>>());
     }
 }

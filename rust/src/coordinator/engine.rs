@@ -1,28 +1,92 @@
-//! Inference engine abstraction: the batcher hands a formed batch to an
-//! engine; the production engine stacks the images, runs the whole-network
-//! PJRT artifact at the nearest available batch size, and splits the
-//! outputs.  A mock engine keeps the coordinator tests hermetic.
+//! Inference engine abstraction: the coordinator hands a formed batch to
+//! an engine; the production engine stacks the images into a recycled
+//! buffer, runs the whole-network PJRT artifact at the nearest available
+//! batch size, and returns the **stacked** output for the server to split
+//! into zero-copy per-request views.  A mock engine keeps the coordinator
+//! tests hermetic.
 
+use std::sync::Arc;
 use std::time::Duration;
 
 use crate::model::Network;
 use crate::runtime::ExecutorHandle;
-use crate::util::{Rng, Tensor};
+use crate::util::{BufferPool, Rng, Tensor};
+
+/// One executed batch on the hot path: the stacked output tensor shared
+/// by every response of the batch (split into `TensorView`s by the
+/// server — no per-image allocation), plus the execution wall time.
+#[derive(Debug)]
+pub struct BatchOutput {
+    /// Stacked outputs, row-major `[b, per_image]` with `b >= n` (the
+    /// artifact batch may be padded past the request count).
+    pub outputs: Arc<Tensor>,
+    /// Elements per image inside `outputs`.
+    pub per_image: usize,
+    /// Device execution wall time (summed across chunks if the batch
+    /// exceeded the largest compiled artifact).
+    pub exec: Duration,
+}
 
 /// Runs batches of images through a network.
 pub trait InferenceEngine: Send + 'static {
     /// Batch sizes for which a compiled executable exists, ascending.
     fn available_batches(&self) -> &[usize];
 
-    /// Run `images` (n <= max available batch); returns one output tensor
-    /// per image plus the execution wall time.
+    /// Per-image input shape (without batch dim).
+    fn image_shape(&self) -> &[usize];
+
+    /// Hot path: consume the images (moved, never cloned — engines may
+    /// reclaim the buffers) and return the stacked batch output.
+    fn infer_batch(&self, images: Vec<Tensor>)
+        -> anyhow::Result<BatchOutput>;
+
+    /// Convenience/diagnostic path: run `images` and split the result
+    /// into one owned tensor per image.  Clones the inputs; the serving
+    /// hot path uses [`InferenceEngine::infer_batch`] instead.
     fn infer(
         &self,
         images: &[Tensor],
-    ) -> anyhow::Result<(Vec<Tensor>, Duration)>;
+    ) -> anyhow::Result<(Vec<Tensor>, Duration)> {
+        let n = images.len();
+        let out = self.infer_batch(images.to_vec())?;
+        let k = out.per_image;
+        anyhow::ensure!(
+            out.outputs.len() >= n * k,
+            "engine returned {} elems for {} images x {} elems",
+            out.outputs.len(),
+            n,
+            k
+        );
+        let per_image = (0..n)
+            .map(|i| {
+                Tensor::from_vec(
+                    &[1, k],
+                    out.outputs.data()[i * k..(i + 1) * k].to_vec(),
+                )
+                .unwrap()
+            })
+            .collect();
+        Ok((per_image, out.exec))
+    }
+}
 
-    /// Per-image input shape (without batch dim).
-    fn image_shape(&self) -> &[usize];
+/// Largest compiled batch across `sizes` (None when empty).
+pub(crate) fn largest_batch(sizes: &[usize]) -> Option<usize> {
+    sizes.last().copied()
+}
+
+/// Split an oversized batch of `n` images into chunk lengths, each at
+/// most `largest` (the biggest compiled artifact batch).
+pub fn plan_chunks(n: usize, largest: usize) -> Vec<usize> {
+    assert!(largest > 0);
+    let mut out = Vec::with_capacity(n.div_ceil(largest));
+    let mut rem = n;
+    while rem > 0 {
+        let take = rem.min(largest);
+        out.push(take);
+        rem -= take;
+    }
+    out
 }
 
 /// Production engine: whole-network artifacts + fixed synthetic weights.
@@ -37,6 +101,9 @@ pub struct PjrtEngine {
     /// executor restart and for tests that inspect the weights.
     pub params: Vec<Tensor>,
     out_elems_per_image: usize,
+    /// Recycles the stacked-activation scratch buffers across batches
+    /// (the executor hands activations back after upload).
+    pool: BufferPool,
 }
 
 impl PjrtEngine {
@@ -78,6 +145,7 @@ impl PjrtEngine {
             image_shape,
             params,
             out_elems_per_image: out_shape[1..].iter().product(),
+            pool: BufferPool::new(),
         })
     }
 
@@ -89,6 +157,65 @@ impl PjrtEngine {
             .find(|&&b| b >= n)
             .unwrap_or_else(|| self.batches.last().unwrap())
     }
+
+    /// Idle pooled stacking buffers of the given element count
+    /// (test/bench hook for the recycling behaviour).
+    pub fn pooled_buffers(&self, elems: usize) -> usize {
+        self.pool.idle(elems)
+    }
+
+    fn check_image(&self, i: usize, img: &Tensor) -> anyhow::Result<()> {
+        let want = self.image_shape.as_slice();
+        let ok = img.shape() == want
+            || (img.shape().len() == want.len() + 1
+                && img.shape()[0] == 1
+                && &img.shape()[1..] == want);
+        anyhow::ensure!(
+            ok,
+            "image {i} shape {:?} != {:?}",
+            img.shape(),
+            want
+        );
+        Ok(())
+    }
+
+    /// Stack `images[start..start + len]` into a pooled buffer padded to
+    /// the nearest artifact batch, execute, recycle the buffer, and
+    /// return the raw `[b, k]` output tensor plus device time.
+    fn run_chunk(
+        &self,
+        images: &[Tensor],
+        start: usize,
+        len: usize,
+    ) -> anyhow::Result<(Tensor, Duration)> {
+        let b = self.pick_batch(len);
+        let per: usize = self.image_shape.iter().product();
+        // recycled scratch: write every live row, zero only the padding
+        let mut buf = self.pool.take(b * per);
+        for (i, img) in images[start..start + len].iter().enumerate() {
+            buf[i * per..(i + 1) * per].copy_from_slice(img.data());
+        }
+        buf[len * per..].fill(0.0);
+        let mut shape = vec![b];
+        shape.extend_from_slice(&self.image_shape);
+        let stacked = Tensor::from_vec(&shape, buf)?;
+        // weights are resident on the device (preloaded in `new`): only
+        // the stacked activation crosses the channel
+        let out = self.handle.run_cached(
+            &format!("{}_full_b{b}", self.network),
+            vec![stacked],
+        )?;
+        // the executor hands activations back after upload: recycle
+        for t in out.reclaimed {
+            self.pool.put(t.into_vec());
+        }
+        let probs = out
+            .outputs
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("artifact returned no output"))?;
+        Ok((probs, out.elapsed))
+    }
 }
 
 impl InferenceEngine for PjrtEngine {
@@ -96,56 +223,59 @@ impl InferenceEngine for PjrtEngine {
         &self.batches
     }
 
-    fn infer(
-        &self,
-        images: &[Tensor],
-    ) -> anyhow::Result<(Vec<Tensor>, Duration)> {
-        let n = images.len();
-        anyhow::ensure!(n > 0, "empty batch");
-        let b = self.pick_batch(n);
-        anyhow::ensure!(
-            n <= b,
-            "batch of {n} exceeds largest artifact batch {b}"
-        );
-        // stack + zero-pad to the artifact batch
-        let mut shape = vec![b];
-        shape.extend_from_slice(&self.image_shape);
-        let per: usize = self.image_shape.iter().product();
-        let mut stacked = Tensor::zeros(&shape);
-        for (i, img) in images.iter().enumerate() {
-            anyhow::ensure!(
-                img.shape() == self.image_shape
-                    || (img.shape().len() == self.image_shape.len() + 1
-                        && img.shape()[0] == 1
-                        && &img.shape()[1..] == self.image_shape.as_slice()),
-                "image {i} shape {:?} != {:?}",
-                img.shape(),
-                self.image_shape
-            );
-            stacked.data_mut()[i * per..(i + 1) * per]
-                .copy_from_slice(img.data());
-        }
-        // weights are resident on the device (preloaded in `new`): only
-        // the stacked activation crosses the channel
-        let out = self
-            .handle
-            .run_cached(&format!("{}_full_b{b}", self.network), vec![stacked])?;
-        let probs = &out.outputs[0];
-        let k = self.out_elems_per_image;
-        let per_image: Vec<Tensor> = (0..n)
-            .map(|i| {
-                Tensor::from_vec(
-                    &[1, k],
-                    probs.data()[i * k..(i + 1) * k].to_vec(),
-                )
-                .unwrap()
-            })
-            .collect();
-        Ok((per_image, out.elapsed))
-    }
-
     fn image_shape(&self) -> &[usize] {
         &self.image_shape
+    }
+
+    fn infer_batch(
+        &self,
+        images: Vec<Tensor>,
+    ) -> anyhow::Result<BatchOutput> {
+        let n = images.len();
+        anyhow::ensure!(n > 0, "empty batch");
+        for (i, img) in images.iter().enumerate() {
+            self.check_image(i, img)?;
+        }
+        let largest = largest_batch(&self.batches).unwrap();
+        let k = self.out_elems_per_image;
+        if n <= largest {
+            // common case: one artifact call, its padded [b, k] output
+            // is shared as-is (views only touch the first n rows)
+            let (probs, exec) = self.run_chunk(&images, 0, n)?;
+            anyhow::ensure!(
+                probs.len() >= n * k,
+                "artifact output {} elems < {n} images x {k}",
+                probs.len()
+            );
+            return Ok(BatchOutput {
+                outputs: Arc::new(probs),
+                per_image: k,
+                exec,
+            });
+        }
+        // oversized batch (policy raced an engine swap, or a caller
+        // bypassed the server clamp): chunk across artifact calls
+        // instead of erroring out
+        let mut combined = vec![0.0f32; n * k];
+        let mut exec = Duration::ZERO;
+        let mut start = 0;
+        for len in plan_chunks(n, largest) {
+            let (probs, d) = self.run_chunk(&images, start, len)?;
+            anyhow::ensure!(
+                probs.len() >= len * k,
+                "artifact output {} elems < {len} images x {k}",
+                probs.len()
+            );
+            combined[start * k..(start + len) * k]
+                .copy_from_slice(&probs.data()[..len * k]);
+            exec += d;
+            start += len;
+        }
+        Ok(BatchOutput {
+            outputs: Arc::new(Tensor::from_vec(&[n, k], combined)?),
+            per_image: k,
+            exec,
+        })
     }
 }
 
@@ -170,6 +300,11 @@ impl MockEngine {
             calls: std::sync::atomic::AtomicUsize::new(0),
         }
     }
+
+    /// Total `infer_batch` calls so far (test hook).
+    pub fn calls(&self) -> usize {
+        self.calls.load(std::sync::atomic::Ordering::SeqCst)
+    }
 }
 
 impl InferenceEngine for MockEngine {
@@ -177,10 +312,15 @@ impl InferenceEngine for MockEngine {
         &self.batches
     }
 
-    fn infer(
+    fn image_shape(&self) -> &[usize] {
+        &self.image_shape
+    }
+
+    fn infer_batch(
         &self,
-        images: &[Tensor],
-    ) -> anyhow::Result<(Vec<Tensor>, Duration)> {
+        images: Vec<Tensor>,
+    ) -> anyhow::Result<BatchOutput> {
+        anyhow::ensure!(!images.is_empty(), "empty batch");
         let c = self
             .calls
             .fetch_add(1, std::sync::atomic::Ordering::SeqCst)
@@ -191,20 +331,20 @@ impl InferenceEngine for MockEngine {
         if !self.delay.is_zero() {
             std::thread::sleep(self.delay);
         }
-        let outs = images
-            .iter()
-            .map(|img| {
-                // echo a fingerprint of the input so tests can check routing
-                let sum: f32 = img.data().iter().sum();
-                Tensor::from_vec(&[1, 2], vec![sum, img.len() as f32])
-                    .unwrap()
-            })
-            .collect();
-        Ok((outs, self.delay))
-    }
-
-    fn image_shape(&self) -> &[usize] {
-        &self.image_shape
+        // echo a fingerprint of each input so tests can check routing:
+        // one stacked [n, 2] tensor, no per-image allocation
+        let n = images.len();
+        let mut data = Vec::with_capacity(n * 2);
+        for img in &images {
+            let sum: f32 = img.data().iter().sum();
+            data.push(sum);
+            data.push(img.len() as f32);
+        }
+        Ok(BatchOutput {
+            outputs: Arc::new(Tensor::from_vec(&[n, 2], data)?),
+            per_image: 2,
+            exec: self.delay,
+        })
     }
 }
 
@@ -229,5 +369,28 @@ mod tests {
         assert!(e.infer(std::slice::from_ref(&img)).is_ok());
         assert!(e.infer(std::slice::from_ref(&img)).is_err());
         assert!(e.infer(std::slice::from_ref(&img)).is_ok());
+    }
+
+    #[test]
+    fn mock_engine_stacks_batch_output() {
+        let e = MockEngine::new(vec![4]);
+        let imgs = vec![
+            Tensor::from_vec(&[2], vec![1.0, 2.0]).unwrap(),
+            Tensor::from_vec(&[2], vec![3.0, 4.0]).unwrap(),
+        ];
+        let out = e.infer_batch(imgs).unwrap();
+        assert_eq!(out.per_image, 2);
+        assert_eq!(out.outputs.shape(), &[2, 2]);
+        // fingerprints: [sum, len] per image
+        assert_eq!(out.outputs.data(), &[3.0, 2.0, 7.0, 2.0]);
+    }
+
+    #[test]
+    fn chunk_plan_covers_oversized_batches() {
+        assert_eq!(plan_chunks(3, 8), vec![3]);
+        assert_eq!(plan_chunks(8, 8), vec![8]);
+        assert_eq!(plan_chunks(9, 8), vec![8, 1]);
+        assert_eq!(plan_chunks(20, 8), vec![8, 8, 4]);
+        assert_eq!(plan_chunks(20, 8).iter().sum::<usize>(), 20);
     }
 }

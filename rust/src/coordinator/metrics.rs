@@ -1,0 +1,136 @@
+//! Sharded serving metrics.
+//!
+//! Each engine worker records into its **own** shard (one mutex per
+//! worker, never contended on the hot path since a shard has exactly
+//! one writer); the read side merges shards on demand.  This replaces
+//! the old single global mutex that every response of every worker
+//! serialized on.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::{Samples, Summary};
+
+use super::request::Response;
+
+/// Aggregated serving metrics (the E2E experiment's output).
+pub struct ServerMetrics {
+    pub completed: AtomicU64,
+    pub errors: AtomicU64,
+    pub rejected: AtomicU64,
+    shards: Vec<Mutex<MetricsShard>>,
+}
+
+#[derive(Default)]
+struct MetricsShard {
+    latency: Samples,
+    queue_delay: Samples,
+    batch_sizes: Samples,
+}
+
+impl Default for ServerMetrics {
+    fn default() -> Self {
+        ServerMetrics::new(1)
+    }
+}
+
+impl ServerMetrics {
+    /// One shard per engine worker.
+    pub fn new(workers: usize) -> ServerMetrics {
+        let workers = workers.max(1);
+        ServerMetrics {
+            completed: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            shards: (0..workers)
+                .map(|_| Mutex::new(MetricsShard::default()))
+                .collect(),
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Record a completed response into `worker`'s shard.  The lock is
+    /// uncontended in steady state: each worker owns one shard and the
+    /// read side only merges on demand.
+    pub fn record(&self, worker: usize, resp: &Response) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        let mut m = self.shards[worker % self.shards.len()].lock().unwrap();
+        m.latency.push(resp.latency_s);
+        m.queue_delay.push(resp.queue_s);
+        m.batch_sizes.push(resp.batch_size as f64);
+    }
+
+    fn merged(&self) -> MetricsShard {
+        let mut out = MetricsShard::default();
+        for shard in &self.shards {
+            let m = shard.lock().unwrap();
+            out.latency.merge_from(&m.latency);
+            out.queue_delay.merge_from(&m.queue_delay);
+            out.batch_sizes.merge_from(&m.batch_sizes);
+        }
+        out
+    }
+
+    pub fn latency_summary(&self) -> Summary {
+        self.merged().latency.summary()
+    }
+
+    pub fn queue_delay_summary(&self) -> Summary {
+        self.merged().queue_delay.summary()
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        self.merged().batch_sizes.mean()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{Tensor, TensorView};
+    use std::sync::Arc;
+
+    fn resp(latency_s: f64, batch_size: usize) -> Response {
+        let batch = Arc::new(Tensor::zeros(&[1, 2]));
+        Response {
+            id: 0,
+            probs: TensorView::slice_of(batch, 0, 2),
+            queue_s: latency_s / 2.0,
+            exec_s: 0.0,
+            latency_s,
+            batch_size,
+        }
+    }
+
+    #[test]
+    fn shards_merge_on_read() {
+        let m = ServerMetrics::new(3);
+        m.record(0, &resp(1.0, 2));
+        m.record(1, &resp(3.0, 4));
+        m.record(2, &resp(5.0, 6));
+        assert_eq!(m.completed.load(Ordering::Relaxed), 3);
+        let lat = m.latency_summary();
+        assert_eq!(lat.n, 3);
+        assert!((lat.mean - 3.0).abs() < 1e-12);
+        assert!((m.mean_batch_size() - 4.0).abs() < 1e-12);
+        assert_eq!(m.queue_delay_summary().n, 3);
+    }
+
+    #[test]
+    fn worker_index_wraps() {
+        let m = ServerMetrics::new(2);
+        m.record(7, &resp(1.0, 1)); // lands in shard 7 % 2 == 1
+        assert_eq!(m.latency_summary().n, 1);
+    }
+
+    #[test]
+    fn default_is_single_shard() {
+        let m = ServerMetrics::default();
+        assert_eq!(m.workers(), 1);
+        m.record(0, &resp(2.0, 1));
+        assert!((m.latency_summary().mean - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,15 +1,25 @@
 //! Serving coordinator — the paper's middleware runtime (Fig 2/4): uniform
 //! request API in front, dynamic batching, bounded-queue backpressure,
-//! router over accelerator workers, per-request latency metrics.
+//! a pipelined pool of engine workers per coordinator, a router over
+//! coordinator instances, per-request latency metrics.
+//!
+//! Hot-path anatomy (see docs/SERVING.md):
+//! leader thread (batch formation only) -> batch channel -> N engine
+//! workers (parallel execution, out-of-order completion) -> reply
+//! senders embedded in each batch -> callers.
 
 pub mod batcher;
 pub mod engine;
+pub mod metrics;
 pub mod request;
 pub mod router;
 pub mod server;
 
 pub use batcher::{BatchPolicy, Batcher};
-pub use engine::{InferenceEngine, MockEngine, PjrtEngine};
-pub use request::{Request, Response};
+pub use engine::{
+    plan_chunks, BatchOutput, InferenceEngine, MockEngine, PjrtEngine,
+};
+pub use metrics::ServerMetrics;
+pub use request::{Envelope, Request, Response};
 pub use router::{RoutePolicy, Router};
-pub use server::{Client, Server, ServerConfig, ServerMetrics};
+pub use server::{Client, ReplyReceiver, Server, ServerConfig};

@@ -1,8 +1,9 @@
 //! Request/response types for the serving coordinator.
 
+use std::sync::mpsc::Sender;
 use std::time::Instant;
 
-use crate::util::Tensor;
+use crate::util::{Tensor, TensorView};
 
 /// A single inference request (one image).
 #[derive(Debug)]
@@ -12,11 +13,35 @@ pub struct Request {
     pub arrived: Instant,
 }
 
+/// A request travelling with its reply channel — the unit the batcher
+/// queues and the worker pool consumes.  Because the reply `Sender`
+/// rides *inside* the batch, any worker can answer any request and
+/// batches may complete out of order; no leader-owned routing table
+/// exists on the hot path.
+#[derive(Debug)]
+pub struct Envelope {
+    pub req: Request,
+    pub reply: Sender<anyhow::Result<Response>>,
+}
+
+impl Envelope {
+    pub fn new(
+        req: Request,
+        reply: Sender<anyhow::Result<Response>>,
+    ) -> Envelope {
+        Envelope { req, reply }
+    }
+}
+
 /// The response: class probabilities plus latency accounting.
+///
+/// `probs` is a zero-copy view into the batch's stacked output tensor
+/// (shared via `Arc` by every response of the batch); call
+/// [`TensorView::to_tensor`] for an owned copy.
 #[derive(Debug)]
 pub struct Response {
     pub id: u64,
-    pub probs: Tensor,
+    pub probs: TensorView,
     /// queueing delay before the batch was formed
     pub queue_s: f64,
     /// batch execution time (shared across the batch)
@@ -30,6 +55,8 @@ pub struct Response {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::mpsc::channel;
+    use std::sync::Arc;
 
     #[test]
     fn request_construction() {
@@ -40,5 +67,31 @@ mod tests {
         };
         assert_eq!(r.id, 7);
         assert_eq!(r.image.shape(), &[1, 3, 8, 8]);
+    }
+
+    #[test]
+    fn envelope_reply_travels_with_request() {
+        let (tx, rx) = channel();
+        let env = Envelope::new(
+            Request {
+                id: 1,
+                image: Tensor::zeros(&[2]),
+                arrived: Instant::now(),
+            },
+            tx,
+        );
+        let batch = Arc::new(Tensor::from_vec(&[1, 2], vec![0.5, 0.5]).unwrap());
+        let resp = Response {
+            id: env.req.id,
+            probs: TensorView::slice_of(batch, 0, 2),
+            queue_s: 0.0,
+            exec_s: 0.0,
+            latency_s: 0.0,
+            batch_size: 1,
+        };
+        env.reply.send(Ok(resp)).unwrap();
+        let got = rx.recv().unwrap().unwrap();
+        assert_eq!(got.id, 1);
+        assert_eq!(got.probs.data(), &[0.5, 0.5]);
     }
 }

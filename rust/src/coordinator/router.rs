@@ -50,20 +50,26 @@ impl Router {
     }
 
     /// Route and run one request (blocking).  On backpressure from the
-    /// picked backend, fails over to the others before giving up.
+    /// picked backend, fails over to the others before giving up.  The
+    /// image is *moved* from backend to backend (rejected submissions
+    /// hand it back), never cloned.
     pub fn infer(&self, image: Tensor) -> anyhow::Result<Response> {
         let first = self.pick();
         let n = self.clients.len();
+        let mut image = image;
         let mut last_err = None;
         for k in 0..n {
             let idx = (first + k) % n;
-            match self.clients[idx].submit(image.clone()) {
+            match self.clients[idx].submit_or_return(image) {
                 Ok(rx) => {
                     return rx.recv().map_err(|_| {
                         anyhow::anyhow!("backend dropped the reply")
                     })?;
                 }
-                Err(e) => last_err = Some(e),
+                Err((img, e)) => {
+                    image = img;
+                    last_err = Some(e);
+                }
             }
         }
         Err(last_err.unwrap_or_else(|| anyhow::anyhow!("no backends")))

@@ -1,65 +1,39 @@
-//! The serving coordinator: a leader thread that owns the dynamic batcher
-//! and an inference engine, plus a `Client` handle for submitters.
+//! The serving coordinator: a leader thread that owns the dynamic
+//! batcher, plus a pool of engine workers (one per engine replica /
+//! simulated device) and a `Client` handle for submitters.
 //!
 //! Flow (the paper's Fig 2: cloud users -> uniform API -> middleware ->
-//! accelerators): requests enter through a *bounded* channel (backpressure),
-//! the leader forms batches per [`BatchPolicy`], executes them on the
-//! engine, and answers each request with its latency breakdown.
+//! accelerators): requests enter through a *bounded* channel
+//! (backpressure); the leader only drains the channel and forms batches
+//! per [`BatchPolicy`]; closed batches go over a second channel to the
+//! worker pool, which executes them on its engines **in parallel** and
+//! answers each request directly.  Each request's reply sender travels
+//! inside its batch, so batches complete out of order without any
+//! leader-owned routing table — the batcher refills while every worker
+//! runs, which is what pipelines batch formation with device execution.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
+use std::sync::mpsc::{
+    channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender,
+};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::util::{Samples, Tensor};
+use crate::util::{Tensor, TensorView};
 
 use super::batcher::{BatchPolicy, Batcher};
-use super::engine::InferenceEngine;
-use super::request::{Request, Response};
+use super::engine::{largest_batch, InferenceEngine};
+use super::metrics::ServerMetrics;
+use super::request::{Envelope, Request, Response};
 
-struct Envelope {
-    req: Request,
-    reply: Sender<anyhow::Result<Response>>,
-}
+/// How often the idle leader wakes to poll the shutdown flag; also the
+/// bound on shutdown latency.
+const SHUTDOWN_POLL: Duration = Duration::from_millis(20);
 
-/// Aggregated serving metrics (the E2E experiment's output).
-#[derive(Default)]
-pub struct ServerMetrics {
-    pub completed: AtomicU64,
-    pub errors: AtomicU64,
-    pub rejected: AtomicU64,
-    inner: Mutex<MetricsInner>,
-}
-
-#[derive(Default)]
-struct MetricsInner {
-    latency: Samples,
-    queue_delay: Samples,
-    batch_sizes: Samples,
-}
-
-impl ServerMetrics {
-    fn record(&self, resp: &Response) {
-        self.completed.fetch_add(1, Ordering::Relaxed);
-        let mut m = self.inner.lock().unwrap();
-        m.latency.push(resp.latency_s);
-        m.queue_delay.push(resp.queue_s);
-        m.batch_sizes.push(resp.batch_size as f64);
-    }
-
-    pub fn latency_summary(&self) -> crate::util::Summary {
-        self.inner.lock().unwrap().latency.summary()
-    }
-
-    pub fn queue_delay_summary(&self) -> crate::util::Summary {
-        self.inner.lock().unwrap().queue_delay.summary()
-    }
-
-    pub fn mean_batch_size(&self) -> f64 {
-        self.inner.lock().unwrap().batch_sizes.mean()
-    }
-}
+/// The receiver handed back by [`Client::submit`]: yields exactly one
+/// reply for the submitted request.
+pub type ReplyReceiver = Receiver<anyhow::Result<Response>>;
 
 /// Submission handle (clone freely across threads).
 #[derive(Clone)]
@@ -68,6 +42,10 @@ pub struct Client {
     next_id: Arc<AtomicU64>,
     outstanding: Arc<AtomicUsize>,
     metrics: Arc<ServerMetrics>,
+    /// Backpressure threshold on *outstanding* requests (queued, batched,
+    /// or executing).  The request channel alone cannot bound in-flight
+    /// work because the leader drains it eagerly while workers execute.
+    capacity: usize,
 }
 
 impl Client {
@@ -81,10 +59,31 @@ impl Client {
     /// Submit without waiting; returns the reply channel.
     /// Errors with `ServerBusy` when the bounded queue is full
     /// (backpressure) — callers decide whether to retry or shed.
-    pub fn submit(
+    pub fn submit(&self, image: Tensor) -> anyhow::Result<ReplyReceiver> {
+        self.submit_or_return(image).map_err(|(_, e)| e)
+    }
+
+    /// Like [`Client::submit`], but hands the image back on failure so
+    /// callers (e.g. the router's failover path) can retry elsewhere
+    /// without ever cloning the tensor.
+    pub fn submit_or_return(
         &self,
         image: Tensor,
-    ) -> anyhow::Result<Receiver<anyhow::Result<Response>>> {
+    ) -> Result<ReplyReceiver, (Tensor, anyhow::Error)> {
+        // Reserve the outstanding slot *before* handing the request to
+        // the leader: a worker may complete (and decrement) it before
+        // this thread resumes, so incrementing after the send could
+        // underflow the counter.  Every reservation is released either
+        // here (rejection) or by the worker that answers the request.
+        let prev = self.outstanding.fetch_add(1, Ordering::Relaxed);
+        if prev >= self.capacity {
+            self.outstanding.fetch_sub(1, Ordering::Relaxed);
+            self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err((
+                image,
+                anyhow::anyhow!("ServerBusy: request queue full"),
+            ));
+        }
         let (reply, rx) = channel();
         let env = Envelope {
             req: Request {
@@ -95,16 +94,18 @@ impl Client {
             reply,
         };
         match self.tx.try_send(env) {
-            Ok(()) => {
-                self.outstanding.fetch_add(1, Ordering::Relaxed);
-                Ok(rx)
-            }
-            Err(std::sync::mpsc::TrySendError::Full(_)) => {
+            Ok(()) => Ok(rx),
+            Err(std::sync::mpsc::TrySendError::Full(env)) => {
+                self.outstanding.fetch_sub(1, Ordering::Relaxed);
                 self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
-                anyhow::bail!("ServerBusy: request queue full")
+                Err((
+                    env.req.image,
+                    anyhow::anyhow!("ServerBusy: request queue full"),
+                ))
             }
-            Err(std::sync::mpsc::TrySendError::Disconnected(_)) => {
-                anyhow::bail!("server is down")
+            Err(std::sync::mpsc::TrySendError::Disconnected(env)) => {
+                self.outstanding.fetch_sub(1, Ordering::Relaxed);
+                Err((env.req.image, anyhow::anyhow!("server is down")))
             }
         }
     }
@@ -122,7 +123,9 @@ impl Client {
 #[derive(Clone, Copy, Debug)]
 pub struct ServerConfig {
     pub policy: BatchPolicy,
-    /// Bounded request-queue capacity (backpressure threshold).
+    /// Backpressure threshold: maximum outstanding requests (queued,
+    /// batched, or executing) before submissions are shed with
+    /// `ServerBusy`.  Also sizes the bounded submit channel.
     pub queue_capacity: usize,
 }
 
@@ -135,20 +138,49 @@ impl Default for ServerConfig {
     }
 }
 
-/// The leader: owns the batcher loop thread.
+/// The coordinator: owns the leader thread and the engine worker pool.
 pub struct Server {
     client: Client,
     shutdown: Arc<AtomicBool>,
-    join: Option<JoinHandle<()>>,
+    leader: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
 }
 
 impl Server {
+    /// Single-engine server: a pool of one.
     pub fn spawn<E: InferenceEngine>(
         engine: E,
         config: ServerConfig,
     ) -> Server {
+        Server::spawn_pool(vec![engine], config)
+    }
+
+    /// Multi-worker server: one worker thread per engine replica, all
+    /// fed by one leader/batcher.  Batches execute in parallel across
+    /// engines and complete out of order; every reply still reaches the
+    /// right caller because reply senders travel inside the batches.
+    ///
+    /// The batch policy is clamped to the engines' largest compiled
+    /// artifact batch (a batch no artifact can run would otherwise
+    /// error), and batch cuts align to artifact sizes to avoid
+    /// zero-padding waste.
+    pub fn spawn_pool<E: InferenceEngine>(
+        engines: Vec<E>,
+        config: ServerConfig,
+    ) -> Server {
+        assert!(!engines.is_empty(), "server needs at least one engine");
+        let mut policy = config.policy;
+        let cap = engines
+            .iter()
+            .filter_map(|e| largest_batch(e.available_batches()))
+            .min();
+        if let Some(cap) = cap {
+            policy.max_batch = policy.max_batch.min(cap);
+        }
+        let align: Vec<usize> = engines[0].available_batches().to_vec();
+
         let (tx, rx) = sync_channel::<Envelope>(config.queue_capacity);
-        let metrics = Arc::new(ServerMetrics::default());
+        let metrics = Arc::new(ServerMetrics::new(engines.len()));
         let outstanding = Arc::new(AtomicUsize::new(0));
         let shutdown = Arc::new(AtomicBool::new(false));
         let client = Client {
@@ -156,15 +188,42 @@ impl Server {
             next_id: Arc::new(AtomicU64::new(0)),
             outstanding: Arc::clone(&outstanding),
             metrics: Arc::clone(&metrics),
+            capacity: config.queue_capacity,
         };
+
+        // leader -> workers: unbounded (depth already bounded by the
+        // request queue); receiver shared by the pool
+        let (batch_tx, batch_rx) = channel::<Vec<Envelope>>();
+        let batch_rx = Arc::new(Mutex::new(batch_rx));
+        let workers = engines
+            .into_iter()
+            .enumerate()
+            .map(|(i, engine)| {
+                let rx = Arc::clone(&batch_rx);
+                let metrics = Arc::clone(&metrics);
+                let outstanding = Arc::clone(&outstanding);
+                std::thread::Builder::new()
+                    .name(format!("cnnlab-engine-{i}"))
+                    .spawn(move || {
+                        worker_loop(i, engine, rx, metrics, outstanding)
+                    })
+                    .expect("spawn engine worker")
+            })
+            .collect();
+
         let sd = Arc::clone(&shutdown);
-        let join = std::thread::Builder::new()
+        let leader = std::thread::Builder::new()
             .name("cnnlab-leader".into())
             .spawn(move || {
-                leader_loop(engine, config, rx, metrics, outstanding, sd)
+                leader_loop(policy, align, rx, batch_tx, sd)
             })
             .expect("spawn leader");
-        Server { client, shutdown, join: Some(join) }
+        Server {
+            client,
+            shutdown,
+            leader: Some(leader),
+            workers,
+        }
     }
 
     pub fn client(&self) -> Client {
@@ -174,129 +233,177 @@ impl Server {
     pub fn metrics(&self) -> Arc<ServerMetrics> {
         Arc::clone(&self.client.metrics)
     }
+
+    /// Engine workers backing this server.
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
 }
 
 impl Drop for Server {
     fn drop(&mut self) {
         // signal shutdown (Client clones may outlive the server, so the
-        // channel alone cannot signal it); the leader drains, then exits
+        // channel alone cannot signal it); the leader drains the request
+        // queue into final batches, drops the batch channel, and the
+        // workers finish whatever is in flight before exiting
         self.shutdown.store(true, Ordering::SeqCst);
-        if let Some(j) = self.join.take() {
+        if let Some(j) = self.leader.take() {
             let _ = j.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
         }
     }
 }
 
-fn leader_loop<E: InferenceEngine>(
-    engine: E,
-    config: ServerConfig,
+/// The leader only batches: drain the request channel, cut batches per
+/// policy, hand them to the worker pool.  It never touches an engine.
+fn leader_loop(
+    policy: BatchPolicy,
+    align: Vec<usize>,
     rx: Receiver<Envelope>,
-    metrics: Arc<ServerMetrics>,
-    outstanding: Arc<AtomicUsize>,
+    batch_tx: Sender<Vec<Envelope>>,
     shutdown: Arc<AtomicBool>,
 ) {
-    let mut batcher = Batcher::new(config.policy);
-    let mut replies: std::collections::HashMap<
-        u64,
-        Sender<anyhow::Result<Response>>,
-    > = std::collections::HashMap::new();
+    let mut batcher = Batcher::with_alignment(policy, &align);
     let mut open = true;
 
     while open || batcher.pending() > 0 {
-        if shutdown.load(Ordering::SeqCst) {
+        if open && shutdown.load(Ordering::SeqCst) {
             open = false;
-            // absorb anything already queued so it gets drained below
+            // absorb anything already queued so it drains below
             while let Ok(env) = rx.try_recv() {
-                replies.insert(env.req.id, env.reply);
-                batcher.push(env.req);
+                batcher.push(env);
             }
         }
-        // 1. wait for work: block until a request arrives, the oldest
-        //    queued request's deadline passes, or shutdown is signaled
         if open {
+            // Sleep until the oldest queued request's deadline, bounded
+            // by SHUTDOWN_POLL so shutdown latency stays flat.  A
+            // deadline already in the past means a batch is ready: skip
+            // the blocking receive entirely instead of busy-spinning a
+            // zero-timeout recv.
             let wait = batcher
                 .next_deadline()
                 .map(|d| d.saturating_duration_since(Instant::now()))
-                .unwrap_or(Duration::from_millis(50))
-                .min(Duration::from_millis(20)); // bound shutdown latency
-            match rx.recv_timeout(wait) {
-                Ok(env) => {
-                    replies.insert(env.req.id, env.reply);
-                    batcher.push(env.req);
-                    // opportunistically drain whatever else is queued
-                    while let Ok(env) = rx.try_recv() {
-                        replies.insert(env.req.id, env.reply);
-                        batcher.push(env.req);
-                    }
+                .unwrap_or(SHUTDOWN_POLL)
+                .min(SHUTDOWN_POLL);
+            if wait.is_zero() {
+                while let Ok(env) = rx.try_recv() {
+                    batcher.push(env);
                 }
-                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
-                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
-                    open = false;
+            } else {
+                match rx.recv_timeout(wait) {
+                    Ok(env) => {
+                        batcher.push(env);
+                        // opportunistically drain whatever else arrived
+                        while let Ok(env) = rx.try_recv() {
+                            batcher.push(env);
+                        }
+                    }
+                    Err(RecvTimeoutError::Timeout) => {}
+                    Err(RecvTimeoutError::Disconnected) => {
+                        open = false;
+                    }
                 }
             }
         }
 
-        // 2. execute every ready batch
+        // hand every ready batch to the pool; workers run concurrently
+        // while this loop returns to batching
         let now = Instant::now();
-        let mut batches = Vec::new();
-        while let Some(b) = batcher.pop_ready(now) {
-            batches.push(b);
+        while let Some(batch) = batcher.pop_ready(now) {
+            let _ = batch_tx.send(batch);
         }
-        if !open && batcher.pending() > 0 {
-            batches.extend(batcher.drain_all());
+        if !open {
+            for batch in batcher.drain_all() {
+                let _ = batch_tx.send(batch);
+            }
         }
-        for batch in batches {
-            run_batch(&engine, batch, &mut replies, &metrics, &outstanding);
+    }
+    // batch_tx drops here: workers drain the channel, then exit
+}
+
+/// One engine worker: pull closed batches, execute, reply.
+fn worker_loop<E: InferenceEngine>(
+    worker: usize,
+    engine: E,
+    batch_rx: Arc<Mutex<Receiver<Vec<Envelope>>>>,
+    metrics: Arc<ServerMetrics>,
+    outstanding: Arc<AtomicUsize>,
+) {
+    loop {
+        let batch = {
+            let guard = batch_rx.lock().unwrap();
+            guard.recv()
+        };
+        match batch {
+            Ok(batch) => {
+                run_batch(&engine, batch, worker, &metrics, &outstanding)
+            }
+            Err(_) => break, // leader gone and channel drained
         }
     }
 }
 
 fn run_batch<E: InferenceEngine>(
     engine: &E,
-    batch: Vec<Request>,
-    replies: &mut std::collections::HashMap<
-        u64,
-        Sender<anyhow::Result<Response>>,
-    >,
+    batch: Vec<Envelope>,
+    worker: usize,
     metrics: &ServerMetrics,
     outstanding: &AtomicUsize,
 ) {
     let formed = Instant::now();
-    let images: Vec<Tensor> =
-        batch.iter().map(|r| r.image.clone()).collect();
-    let result = engine.infer(&images);
-    let done = Instant::now();
+    let n = batch.len();
+    // move (never clone) each image into the stacked batch; the reply
+    // sender rides along so this batch can be answered right here
+    let mut images = Vec::with_capacity(n);
+    let mut routes = Vec::with_capacity(n);
+    for env in batch {
+        images.push(env.req.image);
+        routes.push((env.req.id, env.req.arrived, env.reply));
+    }
+    // A short or mis-shaped BatchOutput must become an error reply, not
+    // a slice_of panic that would kill this worker and leak the batch's
+    // outstanding slots.
+    let result = engine.infer_batch(images).and_then(|out| {
+        anyhow::ensure!(
+            out.outputs.len() >= n * out.per_image,
+            "engine returned {} elems for {} images x {} elems",
+            out.outputs.len(),
+            n,
+            out.per_image
+        );
+        Ok(out)
+    });
     match result {
-        Ok((outputs, exec)) => {
-            for (req, probs) in batch.into_iter().zip(outputs) {
+        Ok(out) => {
+            let done = Instant::now();
+            for (i, (id, arrived, reply)) in routes.into_iter().enumerate()
+            {
                 let resp = Response {
-                    id: req.id,
-                    probs,
-                    queue_s: formed
-                        .duration_since(req.arrived)
-                        .as_secs_f64(),
-                    exec_s: exec.as_secs_f64(),
-                    latency_s: done
-                        .duration_since(req.arrived)
-                        .as_secs_f64(),
-                    batch_size: images.len(),
+                    id,
+                    probs: TensorView::slice_of(
+                        Arc::clone(&out.outputs),
+                        i,
+                        out.per_image,
+                    ),
+                    queue_s: formed.duration_since(arrived).as_secs_f64(),
+                    exec_s: out.exec.as_secs_f64(),
+                    latency_s: done.duration_since(arrived).as_secs_f64(),
+                    batch_size: n,
                 };
-                metrics.record(&resp);
+                metrics.record(worker, &resp);
                 outstanding.fetch_sub(1, Ordering::Relaxed);
-                if let Some(tx) = replies.remove(&resp.id) {
-                    let _ = tx.send(Ok(resp));
-                }
+                let _ = reply.send(Ok(resp));
             }
         }
         Err(e) => {
-            for req in batch {
+            for (_, _, reply) in routes {
                 metrics.errors.fetch_add(1, Ordering::Relaxed);
                 outstanding.fetch_sub(1, Ordering::Relaxed);
-                if let Some(tx) = replies.remove(&req.id) {
-                    let _ = tx.send(Err(anyhow::anyhow!(
-                        "batch execution failed: {e}"
-                    )));
-                }
+                let _ = reply.send(Err(anyhow::anyhow!(
+                    "batch execution failed: {e}"
+                )));
             }
         }
     }

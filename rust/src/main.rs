@@ -87,7 +87,8 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// `cnnlab serve --network tinynet --requests 64 --rate 200 --max-batch 8`
+/// `cnnlab serve --network tinynet --requests 64 --rate 200 --max-batch 8
+///  --workers 2`
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let net = network_by_name(args.get_or("network", "tinynet"))?;
     let dir = args.get_or("artifacts", cnnlab::DEFAULT_ARTIFACTS_DIR);
@@ -95,16 +96,29 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let rate = args.get_f64("rate", 200.0)?;
     let max_batch = args.get_usize("max-batch", 8)?;
     let max_wait_us = args.get_usize("max-wait-us", 2000)?;
+    let workers = args.get_usize("workers", 1)?.max(1);
 
-    let svc = ExecutorService::spawn(dir)?;
     let rt_manifest = cnnlab::runtime::Manifest::load(dir)?;
     let batches = rt_manifest.batches_for(&net.name);
     anyhow::ensure!(!batches.is_empty(), "no artifacts for {}", net.name);
-    let engine = PjrtEngine::new(svc.handle(), &net, batches, 42)?;
-    let image_shape: Vec<usize> = engine.image_shape().to_vec();
+    // one executor service (device thread) + engine replica per worker:
+    // batches from one shared batcher execute on them in parallel
+    let mut services = Vec::with_capacity(workers);
+    let mut engines = Vec::with_capacity(workers);
+    for _ in 0..workers {
+        let svc = ExecutorService::spawn(dir)?;
+        engines.push(PjrtEngine::new(
+            svc.handle(),
+            &net,
+            batches.clone(),
+            42,
+        )?);
+        services.push(svc);
+    }
+    let image_shape: Vec<usize> = engines[0].image_shape().to_vec();
 
-    let server = Server::spawn(
-        engine,
+    let server = Server::spawn_pool(
+        engines,
         ServerConfig {
             policy: cnnlab::coordinator::BatchPolicy::new(
                 max_batch,
@@ -130,7 +144,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let m = server.metrics();
     let lat = m.latency_summary();
     println!(
-        "served {requests} requests in {} ({:.1} req/s)",
+        "served {requests} requests on {workers} worker(s) in {} \
+         ({:.1} req/s)",
         si_time(wall),
         requests as f64 / wall
     );

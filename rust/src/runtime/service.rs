@@ -27,6 +27,10 @@ pub struct JobOutput {
     pub outputs: Vec<Tensor>,
     /// Wall-clock of the PJRT execute call (the `measured` timing mode).
     pub elapsed: Duration,
+    /// The caller's input tensors, handed back after the device upload
+    /// so hot-path callers can recycle the buffers (see
+    /// `util::BufferPool`).  Empty when execution failed early.
+    pub reclaimed: Vec<Tensor>,
 }
 
 enum Msg {
@@ -155,22 +159,34 @@ impl ExecutorService {
                 for msg in rx {
                     match msg {
                         Msg::Run(job) => {
-                            let res = rt
+                            let run = rt
                                 .load(&job.artifact)
-                                .and_then(|exe| exe.run_timed(&job.inputs))
-                                .map(|(outputs, elapsed)| JobOutput {
+                                .and_then(|exe| exe.run_timed(&job.inputs));
+                            let res = run.map(|(outputs, elapsed)| {
+                                JobOutput {
                                     outputs,
                                     elapsed,
-                                });
+                                    reclaimed: job.inputs,
+                                }
+                            });
                             let _ = job.reply.send(res);
                         }
                         Msg::RunCached(job) => {
-                            let res = run_cached_job(
+                            let run = run_cached_job(
                                 &rt,
                                 &param_cache,
                                 &job.artifact,
                                 &job.inputs,
                             );
+                            let res = run.map(|(outputs, elapsed)| {
+                                JobOutput {
+                                    outputs,
+                                    elapsed,
+                                    // hand the activations back so the
+                                    // engine's buffer pool reuses them
+                                    reclaimed: job.inputs,
+                                }
+                            });
                             let _ = job.reply.send(res);
                         }
                         Msg::Warm(name, reply) => {
@@ -222,13 +238,15 @@ impl Drop for ExecutorService {
 }
 
 /// Execute with cached trailing params: upload the activations, chain with
-/// the resident parameter buffers, run via `execute_b`.
+/// the resident parameter buffers, run via `execute_b`.  Returns the raw
+/// outputs + wall time; the caller assembles the [`JobOutput`] (including
+/// handing the activation tensors back for buffer recycling).
 fn run_cached_job(
     rt: &Runtime,
     param_cache: &std::collections::HashMap<String, Vec<xla::PjRtBuffer>>,
     artifact: &str,
     activations: &[Tensor],
-) -> anyhow::Result<JobOutput> {
+) -> anyhow::Result<(Vec<Tensor>, Duration)> {
     let exe = rt.load(artifact)?;
     let params = param_cache.get(artifact).ok_or_else(|| {
         anyhow::anyhow!("{artifact}: params not preloaded")
@@ -262,5 +280,5 @@ fn run_cached_job(
     all.extend(fresh.iter());
     all.extend(params.iter());
     let outputs = exe.run_buffers(&all)?;
-    Ok(JobOutput { outputs, elapsed: t0.elapsed() })
+    Ok((outputs, t0.elapsed()))
 }

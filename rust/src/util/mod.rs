@@ -8,10 +8,10 @@ pub mod stats;
 pub mod tensor;
 
 pub use json::Json;
-pub use pool::ThreadPool;
+pub use pool::{BufferPool, ThreadPool};
 pub use rng::Rng;
 pub use stats::{Samples, Summary};
-pub use tensor::Tensor;
+pub use tensor::{Tensor, TensorView};
 
 /// Wall-clock helper used by benches and the measured-time device path.
 pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, std::time::Duration) {

@@ -1,11 +1,13 @@
-//! Fixed-size worker thread pool.
+//! Worker thread pool + recycled buffer pool.
 //!
 //! The offline environment has no tokio; the coordinator's concurrency model
 //! is plain OS threads + channels (which is also the honest model for a
-//! CPU-bound PJRT backend: one executor thread per device).  This pool backs
-//! the coordinator's worker side and anything embarrassingly parallel in the
-//! benches.
+//! CPU-bound PJRT backend: one executor thread per device).  [`ThreadPool`]
+//! backs anything embarrassingly parallel in the benches; [`BufferPool`]
+//! recycles the stacked-batch scratch buffers on the serving hot path so
+//! batch assembly stops allocating a fresh tensor per batch.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Mutex};
@@ -80,6 +82,81 @@ impl Drop for ThreadPool {
     }
 }
 
+/// Recycles equally-sized `f32` scratch buffers across batches.
+///
+/// The serving hot path stacks every batch into one contiguous buffer
+/// sized to the chosen artifact batch; without pooling that is a fresh
+/// multi-hundred-KB allocation per batch.  Buffers are keyed by length
+/// and bounded per size class, so a traffic burst cannot pin memory
+/// forever.  Shareable across worker threads (`Clone` bumps an `Arc`).
+#[derive(Clone)]
+pub struct BufferPool {
+    slots: Arc<Mutex<HashMap<usize, Vec<Vec<f32>>>>>,
+    per_class: usize,
+}
+
+impl Default for BufferPool {
+    fn default() -> Self {
+        BufferPool::new()
+    }
+}
+
+impl BufferPool {
+    /// Default: keep at most 4 idle buffers per size class (the serving
+    /// pipeline has at most a few batches in flight per worker).
+    pub fn new() -> BufferPool {
+        BufferPool::with_capacity(4)
+    }
+
+    pub fn with_capacity(per_class: usize) -> BufferPool {
+        BufferPool {
+            slots: Arc::new(Mutex::new(HashMap::new())),
+            per_class: per_class.max(1),
+        }
+    }
+
+    /// Take a buffer of exactly `len` elements with **arbitrary**
+    /// contents — callers must overwrite every element they read back
+    /// (the batch-stacking path writes images then zeroes the padding
+    /// tail explicitly).
+    pub fn take(&self, len: usize) -> Vec<f32> {
+        let recycled = {
+            let mut slots = self.slots.lock().unwrap();
+            slots.get_mut(&len).and_then(Vec::pop)
+        };
+        recycled.unwrap_or_else(|| vec![0.0; len])
+    }
+
+    /// Take a buffer of `len` elements, all zero.
+    pub fn take_zeroed(&self, len: usize) -> Vec<f32> {
+        let mut buf = self.take(len);
+        buf.fill(0.0);
+        buf
+    }
+
+    /// Return a buffer for reuse.  Buffers whose size class is already
+    /// full are simply dropped.
+    pub fn put(&self, buf: Vec<f32>) {
+        if buf.is_empty() {
+            return;
+        }
+        let mut slots = self.slots.lock().unwrap();
+        let class = slots.entry(buf.len()).or_default();
+        if class.len() < self.per_class {
+            class.push(buf);
+        }
+    }
+
+    /// Number of idle pooled buffers of the given length (test hook).
+    pub fn idle(&self, len: usize) -> usize {
+        self.slots
+            .lock()
+            .unwrap()
+            .get(&len)
+            .map_or(0, Vec::len)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -113,6 +190,43 @@ mod tests {
             }
         } // drop waits for queued jobs
         assert_eq!(counter.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn buffer_pool_recycles_by_size() {
+        let pool = BufferPool::new();
+        let mut a = pool.take(64);
+        a[0] = 42.0;
+        pool.put(a);
+        assert_eq!(pool.idle(64), 1);
+        // same size class: recycled (contents arbitrary until zeroed)
+        let b = pool.take(64);
+        assert_eq!(b.len(), 64);
+        assert_eq!(pool.idle(64), 0);
+        pool.put(b);
+        // different size class: fresh allocation, pooled one untouched
+        let c = pool.take(128);
+        assert_eq!(c.len(), 128);
+        assert_eq!(pool.idle(64), 1);
+    }
+
+    #[test]
+    fn buffer_pool_zeroes_on_request() {
+        let pool = BufferPool::new();
+        let mut a = pool.take(16);
+        a.fill(7.0);
+        pool.put(a);
+        let b = pool.take_zeroed(16);
+        assert!(b.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn buffer_pool_bounds_idle_buffers() {
+        let pool = BufferPool::with_capacity(2);
+        for _ in 0..5 {
+            pool.put(vec![0.0; 8]);
+        }
+        assert_eq!(pool.idle(8), 2, "per-class cap enforced");
     }
 
     #[test]

@@ -16,6 +16,13 @@ impl Samples {
         self.xs.push(x);
     }
 
+    /// Append every sample of `other` — the read-side merge for sharded
+    /// collectors (each serving worker records into its own `Samples`;
+    /// summaries fold the shards together with this).
+    pub fn merge_from(&mut self, other: &Samples) {
+        self.xs.extend_from_slice(&other.xs);
+    }
+
     pub fn len(&self) -> usize {
         self.xs.len()
     }
@@ -142,6 +149,25 @@ mod tests {
         let s = Samples::new();
         assert_eq!(s.mean(), 0.0);
         assert_eq!(s.percentile(50.0), 0.0);
+    }
+
+    #[test]
+    fn merge_preserves_all_samples() {
+        let mut a = Samples::new();
+        let mut b = Samples::new();
+        for x in [1.0, 2.0] {
+            a.push(x);
+        }
+        for x in [3.0, 4.0, 5.0] {
+            b.push(x);
+        }
+        a.merge_from(&b);
+        assert_eq!(a.len(), 5);
+        assert!((a.mean() - 3.0).abs() < 1e-12);
+        assert_eq!(a.max(), 5.0);
+        // merging an empty shard is a no-op
+        a.merge_from(&Samples::new());
+        assert_eq!(a.len(), 5);
     }
 
     #[test]

@@ -94,6 +94,61 @@ impl std::fmt::Display for Tensor {
     }
 }
 
+/// Zero-copy view of one row-range of a shared tensor — how a batched
+/// output is split into per-request responses without one heap
+/// allocation per image.  Cloning bumps the `Arc` refcount; the backing
+/// batch buffer lives until the last view drops.
+///
+/// The view presents itself as a `[1, elems]` tensor (one image's
+/// probability row), matching what the per-image split used to return.
+#[derive(Clone, Debug)]
+pub struct TensorView {
+    src: std::sync::Arc<Tensor>,
+    offset: usize,
+    shape: [usize; 2],
+}
+
+impl TensorView {
+    /// View of image `index` inside a stacked batch tensor laid out
+    /// row-major with `elems` elements per image.  Panics if the slice
+    /// would run past the end of the backing tensor (a stacking bug).
+    pub fn slice_of(
+        src: std::sync::Arc<Tensor>,
+        index: usize,
+        elems: usize,
+    ) -> TensorView {
+        let offset = index * elems;
+        assert!(
+            offset + elems <= src.len(),
+            "view [{offset}, {}) exceeds backing tensor of {} elems",
+            offset + elems,
+            src.len()
+        );
+        TensorView { src, offset, shape: [1, elems] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.src.data()[self.offset..self.offset + self.shape[1]]
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape[1]
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shape[1] == 0
+    }
+
+    /// Materialize an owned copy (cold paths that outlive the batch).
+    pub fn to_tensor(&self) -> Tensor {
+        Tensor::from_vec(&self.shape, self.data().to_vec()).unwrap()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -137,5 +192,28 @@ mod tests {
         let a = Tensor::from_vec(&[3], vec![1.0, 2.0, 3.0]).unwrap();
         let b = Tensor::from_vec(&[3], vec![1.0, 2.5, 2.0]).unwrap();
         assert_eq!(a.max_abs_diff(&b), 1.0);
+    }
+
+    #[test]
+    fn view_slices_batch_rows() {
+        let batch = std::sync::Arc::new(
+            Tensor::from_vec(&[3, 2], (0..6).map(|x| x as f32).collect())
+                .unwrap(),
+        );
+        let v0 = TensorView::slice_of(std::sync::Arc::clone(&batch), 0, 2);
+        let v2 = TensorView::slice_of(std::sync::Arc::clone(&batch), 2, 2);
+        assert_eq!(v0.shape(), &[1, 2]);
+        assert_eq!(v0.data(), &[0.0, 1.0]);
+        assert_eq!(v2.data(), &[4.0, 5.0]);
+        let owned = v2.to_tensor();
+        assert_eq!(owned.shape(), &[1, 2]);
+        assert_eq!(owned.data(), &[4.0, 5.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds backing tensor")]
+    fn view_rejects_out_of_range() {
+        let batch = std::sync::Arc::new(Tensor::zeros(&[2, 2]));
+        let _ = TensorView::slice_of(batch, 2, 2);
     }
 }

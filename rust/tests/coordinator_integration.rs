@@ -235,6 +235,38 @@ fn pjrt_engine_pads_batches_and_splits_outputs() {
 }
 
 #[test]
+fn pjrt_engine_chunks_oversized_batches() {
+    let Some(dir) = artifacts_dir() else { return };
+    let svc = ExecutorService::spawn(&dir).unwrap();
+    let net = tinynet();
+    let engine =
+        PjrtEngine::new(svc.handle(), &net, vec![1, 2], 42).unwrap();
+    let mut rng = Rng::new(9);
+    let imgs: Vec<Tensor> = (0..5).map(|_| image(&mut rng)).collect();
+    // 5 images > largest artifact batch (2): must chunk across multiple
+    // run_cached calls instead of erroring (regression: this used to be
+    // "batch of 5 exceeds largest artifact batch 2")
+    let (outs, _) = engine.infer(&imgs).unwrap();
+    assert_eq!(outs.len(), 5);
+    for o in &outs {
+        let s: f32 = o.data().iter().sum();
+        assert!((s - 1.0).abs() < 1e-5, "chunked output not a softmax");
+    }
+    // chunked results identical to a solo run of the same image
+    let (solo, _) = engine.infer(std::slice::from_ref(&imgs[0])).unwrap();
+    assert!(
+        solo[0].max_abs_diff(&outs[0]) < 1e-5,
+        "chunking must not change results"
+    );
+    // the stacked activation buffers came back through the pool
+    let per: usize = engine.image_shape().iter().product();
+    assert!(
+        engine.pooled_buffers(2 * per) > 0,
+        "stacking buffers should be recycled after run_cached"
+    );
+}
+
+#[test]
 fn end_to_end_serving_on_pjrt() {
     let Some(dir) = artifacts_dir() else { return };
     let svc = ExecutorService::spawn(&dir).unwrap();

@@ -3,7 +3,7 @@
 
 use std::time::{Duration, Instant};
 
-use cnnlab::coordinator::{BatchPolicy, Batcher, Request};
+use cnnlab::coordinator::{BatchPolicy, Batcher, Envelope, Request};
 use cnnlab::fpga::{self, EngineConfig};
 use cnnlab::model::{alexnet, cost, LayerKind};
 use cnnlab::power::KernelLib;
@@ -32,14 +32,20 @@ fn prop_batcher_conserves_requests() {
                 Duration::from_micros(50),
             ));
             let t0 = Instant::now();
+            // reply receiver is irrelevant here: the property inspects
+            // batches, it never sends responses
+            let (reply, _rx) = std::sync::mpsc::channel();
             let mut popped: Vec<u64> = Vec::new();
             for (i, &gap) in arrivals.iter().enumerate() {
                 let at = t0 + Duration::from_micros((i * 7 + gap) as u64);
-                b.push(Request {
-                    id: i as u64,
-                    image: Tensor::zeros(&[1]),
-                    arrived: at,
-                });
+                b.push(Envelope::new(
+                    Request {
+                        id: i as u64,
+                        image: Tensor::zeros(&[1]),
+                        arrived: at,
+                    },
+                    reply.clone(),
+                ));
                 // poll at a moving "now"
                 while let Some(batch) =
                     b.pop_ready(at + Duration::from_micros(gap as u64))
@@ -50,11 +56,11 @@ fn prop_batcher_conserves_requests() {
                             batch.len()
                         ));
                     }
-                    popped.extend(batch.iter().map(|r| r.id));
+                    popped.extend(batch.iter().map(|e| e.req.id));
                 }
             }
             for batch in b.drain_all() {
-                popped.extend(batch.iter().map(|r| r.id));
+                popped.extend(batch.iter().map(|e| e.req.id));
             }
             let want: Vec<u64> = (0..arrivals.len() as u64).collect();
             if popped != want {

@@ -1,0 +1,123 @@
+//! Minimal, API-compatible substitute for the subset of crates.io
+//! `anyhow` this workspace uses: [`Result`], [`Error`], and the
+//! `anyhow!` / `bail!` / `ensure!` macros.  The error is a flattened
+//! message string (no backtraces, no downcasting) — enough for the
+//! repo's error reporting, and trivially swappable for the real crate
+//! when a registry is available.
+
+use std::fmt;
+
+/// A flattened, `Send + Sync` error value.
+///
+/// Like the real `anyhow::Error`, this type deliberately does **not**
+/// implement `std::error::Error`, which is what allows the blanket
+/// `From<E: std::error::Error>` conversion below to exist without
+/// overlapping `From<Error> for Error`.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>` — `std::result::Result` defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string (or any displayable).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(
+                concat!("condition failed: ", stringify!($cond))
+            ));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn helper(flag: bool) -> Result<u32> {
+        ensure!(flag, "flag was {}", flag);
+        Ok(7)
+    }
+
+    #[test]
+    fn macros_and_conversions() {
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+        let x = 3;
+        let e = anyhow!("value {x} and {}", 4);
+        assert_eq!(e.to_string(), "value 3 and 4");
+        assert!(helper(true).is_ok());
+        assert_eq!(helper(false).unwrap_err().to_string(), "flag was false");
+        // `?` conversion from std errors
+        fn io() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/here")?;
+            Ok(s)
+        }
+        assert!(io().is_err());
+    }
+
+    #[test]
+    fn bail_returns_early() {
+        fn f() -> Result<()> {
+            bail!("stopped at {}", 9);
+        }
+        assert_eq!(f().unwrap_err().to_string(), "stopped at 9");
+    }
+}

@@ -1,0 +1,180 @@
+//! Type-complete **stub** of the `xla` bindings (xla_extension 0.5.1)
+//! used by `cnnlab::runtime`.  The offline build environment ships no
+//! PJRT shared library, so every runtime entry point here returns
+//! [`XlaError::Unavailable`]; the surrounding repo gates all PJRT use
+//! behind `artifacts/manifest.json` existing, which keeps tests and
+//! benches green without an accelerator runtime.
+//!
+//! Swap this path dependency for the real bindings to execute
+//! artifacts (see `rust/vendor/README.md`).
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type matching how the repo consumes `xla` errors: it is
+/// `std::error::Error + Send + Sync`, so `?` converts it into
+/// `anyhow::Error` at every call site.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum XlaError {
+    /// The stub is in use — no PJRT runtime is linked in this build.
+    Unavailable(&'static str),
+}
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            XlaError::Unavailable(what) => write!(
+                f,
+                "{what}: PJRT runtime unavailable (offline `xla` stub; \
+                 link the real xla_extension bindings to execute \
+                 artifacts)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+fn unavailable<T>(what: &'static str) -> Result<T> {
+    Err(XlaError::Unavailable(what))
+}
+
+/// Host-side literal (stub): carries nothing; all conversions error.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    _priv: (),
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a host slice.
+    pub fn vec1<T: Copy>(_data: &[T]) -> Literal {
+        Literal { _priv: () }
+    }
+
+    /// Reshape to the given dimensions.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable("Literal::reshape")
+    }
+
+    /// Decompose a tuple literal into its elements.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+
+    /// Copy out as a host vector.
+    pub fn to_vec<T: Copy>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+}
+
+/// Device-resident buffer handle (stub).
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    /// Synchronously copy the buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Parsed HLO module proto (stub).
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    /// Parse HLO *text* from a file (the repo's interchange format).
+    pub fn from_text_file<P: AsRef<Path>>(
+        _path: P,
+    ) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// Compilable computation (stub).
+#[derive(Debug)]
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+/// Compiled executable handle (stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with host literals as inputs.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+
+    /// Execute with pre-uploaded device buffers (zero-copy input path).
+    pub fn execute_b(
+        &self,
+        _args: &[&PjRtBuffer],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute_b")
+    }
+}
+
+/// PJRT client handle (stub) — construction fails, which is the single
+/// choke point that keeps every downstream path unreachable.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    /// Open the CPU PJRT client.
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Compile a computation for this client.
+    pub fn compile(
+        &self,
+        _comp: &XlaComputation,
+    ) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+
+    /// Upload a host buffer to the device.
+    pub fn buffer_from_host_buffer<T: Copy>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        unavailable("PjRtClient::buffer_from_host_buffer")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_errors_are_descriptive() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("PJRT runtime unavailable"));
+        let e = HloModuleProto::from_text_file("/nope").unwrap_err();
+        assert!(e.to_string().contains("from_text_file"));
+    }
+}
