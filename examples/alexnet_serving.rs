@@ -18,12 +18,12 @@ use std::time::{Duration, Instant};
 
 use cnnlab::cli::Args;
 use cnnlab::coordinator::{
-    BatchPolicy, PjrtEngine, Server, ServerConfig,
+    BatchPolicy, DispatchPolicy, PjrtEngine, Server, ServerConfig,
 };
 use cnnlab::model::{alexnet, tinynet};
 use cnnlab::report::{f2, si_time, Table};
 use cnnlab::runtime::{ExecutorService, Manifest};
-use cnnlab::util::{Rng, Samples, Tensor};
+use cnnlab::util::{ImagePool, Rng, Samples};
 
 fn main() -> anyhow::Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -52,10 +52,13 @@ fn main() -> anyhow::Result<()> {
         if net_name == "alexnet" { 4.0 } else { 300.0 },
     )?;
     let workers = args.get_usize("workers", 1)?.max(1);
+    let dispatch: DispatchPolicy =
+        args.get_or("dispatch", "join-idle").parse()?;
+    let predictive = args.has_flag("predictive");
 
     println!(
         "== CNNLab E2E serving: {} | {} requests | Poisson {} req/s | \
-         {} worker(s) ==",
+         {} worker(s) | {dispatch:?} dispatch ==",
         net.name, requests, rate, workers
     );
     let manifest = Manifest::load(dir)?;
@@ -74,10 +77,13 @@ fn main() -> anyhow::Result<()> {
         .collect::<anyhow::Result<_>>()?;
     let image_shape: Vec<usize> =
         cnnlab::model::shape::input_shape(&net.layers[0], 1)[1..].to_vec();
+    // submit-side image recycling: request tensors come from this pool
+    // and their buffers flow back after the engine stacks them
+    let image_pool = ImagePool::new(&image_shape, 64);
 
     // Sweep batching policies: the serving ablation.
     let max_b = *batches.last().unwrap();
-    let policies: Vec<(String, BatchPolicy)> = vec![
+    let mut policies: Vec<(String, BatchPolicy)> = vec![
         ("no-batching".into(), BatchPolicy::immediate()),
         (
             format!("batch<={max_b}, 2ms"),
@@ -88,6 +94,13 @@ fn main() -> anyhow::Result<()> {
             BatchPolicy::new(max_b, Duration::from_millis(20)),
         ),
     ];
+    if predictive {
+        policies.push((
+            format!("batch<={max_b}, 20ms, predictive"),
+            BatchPolicy::new(max_b, Duration::from_millis(20))
+                .with_predictive_close(),
+        ));
+    }
 
     let mut table = Table::new(
         "Serving latency/throughput by batching policy",
@@ -99,11 +112,12 @@ fn main() -> anyhow::Result<()> {
             .iter()
             .map(|svc| {
                 PjrtEngine::new(svc.handle(), &net, batches.clone(), 42)
+                    .map(|e| e.with_image_pool(image_pool.buffers()))
             })
             .collect::<anyhow::Result<_>>()?;
         let server = Server::spawn_pool(
             engines,
-            ServerConfig { policy, queue_capacity: 512 },
+            ServerConfig { policy, queue_capacity: 512, dispatch },
         );
         let client = server.client();
         let mut rng = Rng::new(42);
@@ -112,7 +126,7 @@ fn main() -> anyhow::Result<()> {
         for _ in 0..requests {
             let gap = rng.next_exp(rate);
             std::thread::sleep(Duration::from_secs_f64(gap.min(0.1)));
-            let mut img = Tensor::randn(&image_shape, &mut rng, 0.1);
+            let mut img = image_pool.take_randn(&mut rng, 0.1);
             // block politely under backpressure (the image is handed
             // back on rejection — no clone per retry)
             loop {
@@ -156,6 +170,10 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
     println!("{}", table.render());
+    println!(
+        "recycled image buffers idle in pool: {}",
+        image_pool.idle()
+    );
     println!(
         "(measured wall-clock on the CPU PJRT backend; see EXPERIMENTS.md \
          §E2E for the recorded run)"

@@ -50,14 +50,16 @@ fn main() -> anyhow::Result<()> {
         gt.energy_j,
         gt.makespan_s * gt.energy_j
     );
-    let ex = exhaustive_by_kind(&net, &src, batch, obj, &Constraints::default())?;
+    let ex =
+        exhaustive_by_kind(&net, &src, batch, obj, &Constraints::default())?;
     println!(
         "  exhaustive  : latency {} energy {:.2} J edp {:.4}",
         si_time(ex.latency_s),
         ex.energy_j,
         ex.score
     );
-    let ls = local_search(&net, &src, batch, obj, &Constraints::default(), 6)?;
+    let ls =
+        local_search(&net, &src, batch, obj, &Constraints::default(), 6)?;
     println!(
         "  local search: latency {} energy {:.2} J edp {:.4}",
         si_time(ls.latency_s),

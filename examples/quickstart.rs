@@ -12,7 +12,9 @@ use cnnlab::model::{
 use cnnlab::power::KernelLib;
 use cnnlab::report::{f2, Table};
 use cnnlab::runtime::Pass;
-use cnnlab::sched::{greedy, simulate, Choice, EstimateSource, Mapping, Objective};
+use cnnlab::sched::{
+    greedy, simulate, Choice, EstimateSource, Mapping, Objective,
+};
 
 fn main() -> anyhow::Result<()> {
     // 1. Describe a small ConvNet exactly the way the paper's users do:

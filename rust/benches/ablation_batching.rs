@@ -8,7 +8,9 @@
 
 use std::time::{Duration, Instant};
 
-use cnnlab::coordinator::{BatchPolicy, Server, ServerConfig};
+use cnnlab::coordinator::{
+    BatchPolicy, CurveEngine, DispatchPolicy, Server, ServerConfig,
+};
 use cnnlab::report::{f2, si_time, Table};
 use cnnlab::util::{Rng, Samples, Tensor};
 
@@ -20,12 +22,16 @@ fn run(
 ) -> (f64, f64, f64, f64) {
     // model a device whose batch cost is sublinear (the whole point of
     // batching): 300us fixed + 50us per image
-    let engines: Vec<BatchCostEngine> = (0..workers)
-        .map(|_| BatchCostEngine { base_us: 300, per_img_us: 50 })
+    let engines: Vec<CurveEngine> = (0..workers)
+        .map(|_| CurveEngine::new(300, 50).with_batches(vec![1, 2, 4, 8, 16]))
         .collect();
     let server = Server::spawn_pool(
         engines,
-        ServerConfig { policy, queue_capacity: 1024 },
+        ServerConfig {
+            policy,
+            queue_capacity: 1024,
+            dispatch: DispatchPolicy::JoinIdle,
+        },
     );
     let client = server.client();
     let mut rng = Rng::new(11);
@@ -41,6 +47,11 @@ fn run(
             // saturating: submit as fast as the queue accepts, so
             // throughput is engine-bound, not arrival-bound
             "flood" => {}
+            // low rate: gaps far above max_wait, the predictive-close
+            // regime
+            "trickle" => std::thread::sleep(Duration::from_secs_f64(
+                rng.next_exp(150.0).min(0.02),
+            )),
             _ => std::thread::sleep(Duration::from_secs_f64(
                 rng.next_exp(2000.0).min(0.005),
             )),
@@ -72,43 +83,13 @@ fn run(
     )
 }
 
-/// Engine whose cost is base + per-image (sublinear per image in batch).
-struct BatchCostEngine {
-    base_us: u64,
-    per_img_us: u64,
-}
-
-impl cnnlab::coordinator::InferenceEngine for BatchCostEngine {
-    fn available_batches(&self) -> &[usize] {
-        &[1, 2, 4, 8, 16]
-    }
-
-    fn image_shape(&self) -> &[usize] {
-        &[3, 8, 8]
-    }
-
-    fn infer_batch(
-        &self,
-        images: Vec<Tensor>,
-    ) -> anyhow::Result<cnnlab::coordinator::BatchOutput> {
-        let n = images.len();
-        let d = Duration::from_micros(
-            self.base_us + self.per_img_us * n as u64,
-        );
-        std::thread::sleep(d);
-        Ok(cnnlab::coordinator::BatchOutput {
-            outputs: std::sync::Arc::new(Tensor::zeros(&[n, 2])),
-            per_image: 2,
-            exec: d,
-        })
-    }
-}
-
 fn main() {
     let requests = 256;
     for arrival in ["steady", "burst"] {
         let mut t = Table::new(
-            &format!("Batching ablation — {arrival} arrivals, {requests} reqs"),
+            &format!(
+                "Batching ablation — {arrival} arrivals, {requests} reqs"
+            ),
             &["policy", "req/s", "p50", "p99", "mean batch"],
         );
         for (label, policy) in [
@@ -128,6 +109,37 @@ fn main() {
     println!(
         "expected shape: batching raises throughput (amortized base cost) \
          at some p50 latency cost; burst arrivals benefit most.\n"
+    );
+
+    // predictive closing: at trickle arrivals the deadline-only batcher
+    // burns max_wait on every batch; the predictive batcher learns the
+    // arrival gap and closes as soon as the next artifact size is out
+    // of reach
+    let mut t = Table::new(
+        &format!(
+            "Predictive vs deadline-only closing — trickle arrivals \
+             (~150 req/s), {requests} reqs"
+        ),
+        &["policy", "req/s", "p50", "p99", "mean batch"],
+    );
+    for (label, policy) in [
+        (
+            "b<=8 w=6ms deadline".to_string(),
+            BatchPolicy::new(8, Duration::from_millis(6)),
+        ),
+        (
+            "b<=8 w=6ms predictive".to_string(),
+            BatchPolicy::new(8, Duration::from_millis(6))
+                .with_predictive_close(),
+        ),
+    ] {
+        let (rps, p50, p99, mb) = run(policy, "trickle", requests, 1);
+        t.row(&[label, f2(rps), si_time(p50), si_time(p99), f2(mb)]);
+    }
+    println!("{}", t.render());
+    println!(
+        "expected shape: predictive closing trades a little mean batch \
+         size for a large p50/p99 drop at low arrival rates.\n"
     );
 
     // worker-pool scaling: fixed policy, saturating arrivals; the

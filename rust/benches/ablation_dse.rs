@@ -46,7 +46,8 @@ fn main() -> anyhow::Result<()> {
     ]);
 
     let t0 = Instant::now();
-    let ls = local_search(&net, &src, batch, obj, &Constraints::default(), 6)?;
+    let ls =
+        local_search(&net, &src, batch, obj, &Constraints::default(), 6)?;
     let ls_time = t0.elapsed();
     t.row(&[
         "greedy + local search".into(),
@@ -57,7 +58,8 @@ fn main() -> anyhow::Result<()> {
     ]);
 
     let t0 = Instant::now();
-    let ex = exhaustive_by_kind(&net, &src, batch, obj, &Constraints::default())?;
+    let ex =
+        exhaustive_by_kind(&net, &src, batch, obj, &Constraints::default())?;
     let ex_time = t0.elapsed();
     t.row(&[
         "exhaustive by kind (81)".into(),

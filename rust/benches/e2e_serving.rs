@@ -2,9 +2,10 @@
 //!
 //! Part 1 (always runs, hermetic): the pipelined leader/worker hot path
 //! on `MockEngine` with nonzero device delay — sustained throughput and
-//! tail latency vs. engine worker count.  This is the §Perf instrument
-//! for the coordinator itself: with the leader only forming batches,
-//! throughput is bounded by device time and scales with workers.
+//! tail latency vs. engine worker count, predictive vs. deadline-only
+//! batch closing at a slow arrival rate, and cost-model-driven affinity
+//! dispatch vs. join-idle on a mixed-batch-size workload over
+//! heterogeneous (latency-shaped / throughput-shaped) engines.
 //!
 //! Part 2 (requires `make artifacts`): the real PJRT runtime (measured,
 //! not modeled) — tinynet policy sweep plus an AlexNet spot check.
@@ -14,15 +15,18 @@
 use std::time::{Duration, Instant};
 
 use cnnlab::coordinator::{
-    BatchPolicy, MockEngine, PjrtEngine, Server, ServerConfig,
+    BatchPolicy, CurveEngine, DispatchPolicy, MockEngine, PjrtEngine,
+    Server, ServerConfig,
 };
+use cnnlab::device::DeviceKind;
 use cnnlab::model::{alexnet, tinynet};
 use cnnlab::report::{f2, si_time, Table};
 use cnnlab::runtime::{ExecutorService, Manifest};
-use cnnlab::util::{Rng, Samples, Tensor};
+use cnnlab::util::{ImagePool, Rng, Samples, Tensor};
 
 /// Serve `requests` images through a pool of `workers` mock engines with
 /// the given per-batch device delay; returns (req/s, p50, p99).
+/// Request tensors are recycled through a submit-side `ImagePool`.
 fn mock_round(
     workers: usize,
     requests: usize,
@@ -30,16 +34,22 @@ fn mock_round(
     policy: BatchPolicy,
     arrival_rate_hz: Option<f64>,
 ) -> (f64, f64, f64) {
+    let image_pool = ImagePool::new(&[3, 8, 8], 64);
     let engines: Vec<MockEngine> = (0..workers)
         .map(|_| {
             let mut e = MockEngine::new(vec![1, 2, 4, 8]);
             e.delay = delay;
+            e.image_pool = Some(image_pool.buffers());
             e
         })
         .collect();
     let server = Server::spawn_pool(
         engines,
-        ServerConfig { policy, queue_capacity: 1024 },
+        ServerConfig {
+            policy,
+            queue_capacity: 1024,
+            dispatch: DispatchPolicy::JoinIdle,
+        },
     );
     let client = server.client();
     let mut rng = Rng::new(3);
@@ -51,7 +61,7 @@ fn mock_round(
                 rng.next_exp(rate).min(0.01),
             ));
         }
-        let mut img = Tensor::randn(&[3, 8, 8], &mut rng, 0.1);
+        let mut img = image_pool.take_randn(&mut rng, 0.1);
         loop {
             match client.submit_or_return(img) {
                 Ok(rx) => {
@@ -130,12 +140,160 @@ fn mock_pipeline_section() {
     );
 }
 
+/// Deadline-only vs predictive batch closing at a slow, steady arrival
+/// rate: the predictor learns the gap, sees the next artifact size is
+/// unreachable within `max_wait`, and stops burning the deadline.
+fn predictive_close_section() {
+    let requests = 40;
+    let gap = Duration::from_millis(10);
+    let base = BatchPolicy::new(8, Duration::from_millis(8));
+    let mut t = Table::new(
+        &format!(
+            "Predictive batch closing — 1 worker, {requests} reqs, \
+             steady gap {}, max_wait {}",
+            si_time(gap.as_secs_f64()),
+            si_time(base.max_wait.as_secs_f64()),
+        ),
+        &["closing", "mean", "p50", "p99", "early closes"],
+    );
+    for (label, policy) in [
+        ("deadline-only", base),
+        ("predictive", base.with_predictive_close()),
+    ] {
+        let mut e = MockEngine::new(vec![1, 2, 4, 8]);
+        e.delay = Duration::from_micros(100);
+        let server = Server::spawn(
+            e,
+            ServerConfig {
+                policy,
+                queue_capacity: 256,
+                dispatch: DispatchPolicy::JoinIdle,
+            },
+        );
+        let client = server.client();
+        let mut rng = Rng::new(7);
+        let mut pending = Vec::with_capacity(requests);
+        for _ in 0..requests {
+            let img = Tensor::randn(&[3, 8, 8], &mut rng, 0.1);
+            pending.push(client.submit(img));
+            std::thread::sleep(gap);
+        }
+        for rx in pending {
+            let _ = rx.unwrap().recv().unwrap().unwrap();
+        }
+        let m = server.metrics();
+        let lat = m.latency_summary();
+        t.row(&[
+            label.to_string(),
+            si_time(lat.mean),
+            si_time(lat.p50),
+            si_time(lat.p99),
+            m.early_closes
+                .load(std::sync::atomic::Ordering::Relaxed)
+                .to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "expected shape: predictive closing collapses mean/p50 toward the \
+         device time at slow arrivals (it never waits for arrivals that \
+         cannot reach the next artifact size).\n"
+    );
+}
+
+/// Mixed batch sizes over heterogeneous engines: affinity dispatch
+/// steers big batches to the throughput-shaped worker and singles to the
+/// latency-shaped one; join-idle hands them out by pull order.
+fn affinity_dispatch_section() {
+    let rounds = 8;
+    let run = |dispatch: DispatchPolicy| -> (f64, Vec<u64>) {
+        let latency_dev = CurveEngine::new(0, 4_000);
+        let throughput_dev = CurveEngine::new(16_000, 0);
+        let profiles = [
+            latency_dev.profile(DeviceKind::Gpu),
+            throughput_dev.profile(DeviceKind::Fpga),
+        ];
+        let server = Server::spawn_pool_profiled(
+            vec![
+                (latency_dev, profiles[0].clone()),
+                (throughput_dev, profiles[1].clone()),
+            ],
+            ServerConfig {
+                policy: BatchPolicy::new(8, Duration::from_millis(2)),
+                queue_capacity: 1024,
+                dispatch,
+            },
+        );
+        let client = server.client();
+        let mut rng = Rng::new(9);
+        let t0 = Instant::now();
+        let mut pending = Vec::new();
+        for _ in 0..rounds {
+            // a full batch of 8 (closes on size), then a lone request
+            // (closes on deadline)
+            for _ in 0..8 {
+                pending.push(
+                    client
+                        .submit(Tensor::randn(&[3, 8, 8], &mut rng, 0.1))
+                        .unwrap(),
+                );
+            }
+            std::thread::sleep(Duration::from_millis(4));
+            pending.push(
+                client
+                    .submit(Tensor::randn(&[3, 8, 8], &mut rng, 0.1))
+                    .unwrap(),
+            );
+            std::thread::sleep(Duration::from_millis(4));
+        }
+        for rx in pending {
+            rx.recv().unwrap().unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let per_worker = server
+            .worker_snapshots()
+            .iter()
+            .map(|s| s.dispatched)
+            .collect();
+        (rounds as f64 * 9.0 / wall, per_worker)
+    };
+    let mut t = Table::new(
+        &format!(
+            "Affinity dispatch — mixed b=8/b=1 workload x{rounds}, \
+             latency-dev (4ms/img) + throughput-dev (16ms flat)"
+        ),
+        &["dispatch", "req/s", "batches@latency-dev", "batches@tput-dev"],
+    );
+    for (label, dispatch) in [
+        ("join-idle", DispatchPolicy::JoinIdle),
+        ("affinity", DispatchPolicy::Affinity),
+    ] {
+        let (rps, per_worker) = run(dispatch);
+        t.row(&[
+            label.to_string(),
+            f2(rps),
+            per_worker[0].to_string(),
+            per_worker[1].to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "expected shape: affinity routes per predicted completion time \
+         (singles to the latency device, full batches mostly to the \
+         throughput device) and sustains higher req/s than join-idle.\n"
+    );
+}
+
 fn main() -> anyhow::Result<()> {
     mock_pipeline_section();
+    predictive_close_section();
+    affinity_dispatch_section();
 
     let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
     if !std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
-        println!("SKIP PJRT sections: artifacts not built (run `make artifacts`)");
+        println!(
+            "SKIP PJRT sections: artifacts not built (run `make artifacts`)"
+        );
         return Ok(());
     }
     let manifest = Manifest::load(&dir)?;
@@ -163,7 +321,11 @@ fn main() -> anyhow::Result<()> {
             PjrtEngine::new(svc.handle(), &net, batches.clone(), 1)?;
         let server = Server::spawn(
             engine,
-            ServerConfig { policy, queue_capacity: 512 },
+            ServerConfig {
+                policy,
+                queue_capacity: 512,
+                dispatch: DispatchPolicy::JoinIdle,
+            },
         );
         let client = server.client();
         let mut rng = Rng::new(3);

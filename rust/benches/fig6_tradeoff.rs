@@ -115,18 +115,34 @@ fn main() {
         .filter(|(rg, _)| rg.kind == LayerKind::Fc)
         .map(|(rg, rf)| rf.est.time_s / rg.est.time_s)
         .fold(0.0f64, f64::max);
-    t.row(&["GPU peak GFLOPS (conv4)".into(), "1632".into(), f2(peak_gpu)]);
-    t.row(&["FPGA peak GFLOPS (conv2)".into(), "25.56".into(), f2(peak_fpga)]);
+    t.row(&[
+        "GPU peak GFLOPS (conv4)".into(),
+        "1632".into(),
+        f2(peak_gpu),
+    ]);
+    t.row(&[
+        "FPGA peak GFLOPS (conv2)".into(),
+        "25.56".into(),
+        f2(peak_fpga),
+    ]);
     t.row(&["max FC speedup GPU vs FPGA".into(), "~1000x".into(),
             format!("{:.0}x", fc_speedup)]);
-    t.row(&["GPU conv power (W)".into(), "97".into(), f2(g_conv.mean_power_w)]);
+    t.row(&[
+        "GPU conv power (W)".into(),
+        "97".into(),
+        f2(g_conv.mean_power_w),
+    ]);
     t.row(&["FPGA conv power (W)".into(), "2.23".into(),
             f2(f_conv.mean_power_w)]);
     t.row(&["GPU conv energy (J)".into(), "8.67".into(),
             f2(g_conv.mean_energy_j)]);
     t.row(&["FPGA conv energy (J)".into(), "10.24".into(),
             f2(f_conv.mean_energy_j)]);
-    t.row(&["GPU FC energy (J)".into(), "0.64".into(), f2(g_fc.mean_energy_j)]);
+    t.row(&[
+        "GPU FC energy (J)".into(),
+        "0.64".into(),
+        f2(g_fc.mean_energy_j),
+    ]);
     t.row(&["FPGA FC energy (J)".into(), "12.24".into(),
             f2(f_fc.mean_energy_j)]);
     t.row(&["GPU conv density (GFLOPS/W)".into(), "14.12".into(),
@@ -141,7 +157,11 @@ fn main() {
 
     // shape assertions (who wins, and roughly by how much)
     for (rg, rf) in g.iter().zip(&f) {
-        assert!(rg.est.time_s < rf.est.time_s, "GPU wins {} on time", rg.layer);
+        assert!(
+            rg.est.time_s < rf.est.time_s,
+            "GPU wins {} on time",
+            rg.layer
+        );
     }
     assert!(fc_speedup > 300.0 && fc_speedup < 2000.0, "FC gap ~1000x");
     assert!(g_conv.mean_power_w / f_conv.mean_power_w > 35.0, "power gap");

@@ -50,7 +50,8 @@ fn main() {
     println!("{}", t.render());
 
     let speedup = sum_d / sum_b;
-    let mut s = Table::new("Fig 7 summary vs paper", &["metric", "paper", "repro"]);
+    let mut s =
+        Table::new("Fig 7 summary vs paper", &["metric", "paper", "repro"]);
     s.row(&["cuBLAS speedup (time)".into(), "1.69x".into(),
             format!("{speedup:.2}x")]);
     s.row(&["cuDNN avg power (W)".into(), "79.12".into(), f2(pw_d / 3.0)]);

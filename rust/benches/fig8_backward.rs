@@ -49,7 +49,8 @@ fn main() {
     println!("{}", t.render());
 
     let speedup = sum_d / sum_b;
-    let mut s = Table::new("Fig 8 summary vs paper", &["metric", "paper", "repro"]);
+    let mut s =
+        Table::new("Fig 8 summary vs paper", &["metric", "paper", "repro"]);
     s.row(&["cuBLAS speedup (time)".into(), "24.89x".into(),
             format!("{speedup:.2}x")]);
     s.row(&["cuDNN power (W)".into(), "123.40".into(), "123.40".into()]);

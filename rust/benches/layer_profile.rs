@@ -27,8 +27,8 @@ fn main() -> anyhow::Result<()> {
     let mut total = 0.0;
     for layer in &net.layers {
         let name = format!("{}_b{batch}", layer.name);
-        let mut inputs =
-            vec![Tensor::randn(&shape::input_shape(layer, batch), &mut rng, 0.05)];
+        let in_shape = shape::input_shape(layer, batch);
+        let mut inputs = vec![Tensor::randn(&in_shape, &mut rng, 0.05)];
         for ps in shape::param_shapes(layer) {
             inputs.push(Tensor::randn(&ps, &mut rng, 0.05));
         }

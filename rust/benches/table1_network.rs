@@ -30,16 +30,19 @@ fn main() {
                 format!("{}x{}x{}x{}", c.cout, c.input.c, c.kh, c.kw),
                 c.stride.to_string(),
             ),
-            LayerSpec::Lrn(n) => {
-                ("Norm-LRN".to_string(), format!("size {}", n.size), "-".into())
-            }
+            LayerSpec::Lrn(n) => (
+                "Norm-LRN".to_string(),
+                format!("size {}", n.size),
+                "-".into(),
+            ),
             LayerSpec::Pool(p) => (
                 format!("Pool-{}", p.kind.name()),
                 format!("{}x{}", p.size, p.size),
                 p.stride.to_string(),
             ),
             LayerSpec::Fc(f) => (
-                if f.softmax { "FC-softmax" } else { "FC-dropout" }.to_string(),
+                if f.softmax { "FC-softmax" } else { "FC-dropout" }
+                    .to_string(),
                 format!("{}x{}", f.nin, f.nout),
                 "-".into(),
             ),

@@ -59,21 +59,25 @@ impl Args {
         self.get(key).unwrap_or(default)
     }
 
-    pub fn get_usize(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+    pub fn get_usize(
+        &self,
+        key: &str,
+        default: usize,
+    ) -> anyhow::Result<usize> {
         match self.get(key) {
             None => Ok(default),
-            Some(v) => v
-                .parse()
-                .map_err(|_| anyhow::anyhow!("--{key} needs an integer, got {v:?}")),
+            Some(v) => v.parse().map_err(|_| {
+                anyhow::anyhow!("--{key} needs an integer, got {v:?}")
+            }),
         }
     }
 
     pub fn get_f64(&self, key: &str, default: f64) -> anyhow::Result<f64> {
         match self.get(key) {
             None => Ok(default),
-            Some(v) => v
-                .parse()
-                .map_err(|_| anyhow::anyhow!("--{key} needs a number, got {v:?}")),
+            Some(v) => v.parse().map_err(|_| {
+                anyhow::anyhow!("--{key} needs a number, got {v:?}")
+            }),
         }
     }
 

@@ -5,7 +5,7 @@ pub mod toml;
 
 use std::time::Duration;
 
-use crate::coordinator::BatchPolicy;
+use crate::coordinator::{BatchPolicy, DispatchPolicy, ServerConfig};
 use crate::model::{
     Act, ConvSpec, FcSpec, Layer, LrnSpec, Network, PoolKind, PoolSpec,
     Volume,
@@ -25,6 +25,11 @@ pub struct ServingConfig {
     pub requests: usize,
     pub arrival_rate_hz: f64,
     pub seed: u64,
+    /// Close batches early when predicted arrivals cannot reach the
+    /// next artifact size within the deadline budget.
+    pub predictive_close: bool,
+    /// Batch-to-worker routing: `"join-idle"` or `"affinity"`.
+    pub dispatch: DispatchPolicy,
 }
 
 impl Default for ServingConfig {
@@ -38,19 +43,36 @@ impl Default for ServingConfig {
             requests: 64,
             arrival_rate_hz: 200.0,
             seed: 42,
+            predictive_close: false,
+            dispatch: DispatchPolicy::JoinIdle,
         }
     }
 }
 
 impl ServingConfig {
     pub fn policy(&self) -> BatchPolicy {
-        BatchPolicy::new(self.max_batch, self.max_wait)
+        let policy = BatchPolicy::new(self.max_batch, self.max_wait);
+        if self.predictive_close {
+            policy.with_predictive_close()
+        } else {
+            policy
+        }
+    }
+
+    /// The coordinator configuration this serving config describes.
+    pub fn server_config(&self) -> ServerConfig {
+        ServerConfig {
+            policy: self.policy(),
+            queue_capacity: self.queue_capacity,
+            dispatch: self.dispatch,
+        }
     }
 
     pub fn from_toml(doc: &TomlValue) -> anyhow::Result<ServingConfig> {
         let mut cfg = ServingConfig::default();
         if let Some(t) = doc.get("serving") {
-            if let Some(v) = t.get("artifacts_dir").and_then(TomlValue::as_str)
+            if let Some(v) =
+                t.get("artifacts_dir").and_then(TomlValue::as_str)
             {
                 cfg.artifacts_dir = v.to_string();
             }
@@ -84,6 +106,14 @@ impl ServingConfig {
             if let Some(v) = t.get("seed").and_then(TomlValue::as_int) {
                 cfg.seed = v as u64;
             }
+            if let Some(v) =
+                t.get("predictive_close").and_then(TomlValue::as_bool)
+            {
+                cfg.predictive_close = v;
+            }
+            if let Some(v) = t.get("dispatch").and_then(TomlValue::as_str) {
+                cfg.dispatch = v.parse()?;
+            }
         }
         Ok(cfg)
     }
@@ -99,7 +129,11 @@ pub struct DseConfig {
 
 impl Default for DseConfig {
     fn default() -> Self {
-        DseConfig { batch: 128, objective: Objective::Latency, power_cap_w: None }
+        DseConfig {
+            batch: 128,
+            objective: Objective::Latency,
+            power_cap_w: None,
+        }
     }
 }
 
@@ -284,6 +318,34 @@ mod tests {
         assert_eq!(cfg.arrival_rate_hz, 50.0);
         // untouched fields keep defaults
         assert_eq!(cfg.queue_capacity, 256);
+        assert!(!cfg.predictive_close);
+        assert_eq!(cfg.dispatch, DispatchPolicy::JoinIdle);
+    }
+
+    #[test]
+    fn serving_dispatch_knobs() {
+        let doc = parse_toml(
+            r#"
+            [serving]
+            predictive_close = true
+            dispatch = "affinity"
+        "#,
+        )
+        .unwrap();
+        let cfg = ServingConfig::from_toml(&doc).unwrap();
+        assert!(cfg.predictive_close);
+        assert_eq!(cfg.dispatch, DispatchPolicy::Affinity);
+        assert!(cfg.policy().predictive);
+        let sc = cfg.server_config();
+        assert_eq!(sc.dispatch, DispatchPolicy::Affinity);
+        assert_eq!(sc.queue_capacity, cfg.queue_capacity);
+    }
+
+    #[test]
+    fn serving_rejects_unknown_dispatch() {
+        let doc =
+            parse_toml("[serving]\ndispatch = \"magic\"").unwrap();
+        assert!(ServingConfig::from_toml(&doc).is_err());
     }
 
     #[test]

@@ -2,7 +2,12 @@
 //!
 //! Policy: close a batch when it reaches `max_batch` requests OR when the
 //! oldest queued request has waited `max_wait`.  This is the classic
-//! latency/throughput dial the serving ablation sweeps.
+//! latency/throughput dial the serving ablation sweeps.  With
+//! [`BatchPolicy::with_predictive_close`] the batcher additionally
+//! tracks the arrival rate (EWMA of inter-arrival gaps) and closes
+//! *early* once the expected marginal wait cannot reach the next
+//! compiled artifact size — at low arrival rates this shaves most of the
+//! deadline off the tail without ever exceeding `max_wait`.
 //!
 //! The batcher queues [`Envelope`]s (request + reply channel), so a
 //! popped batch is self-contained: whichever worker executes it can
@@ -13,6 +18,8 @@
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
+use crate::util::Ewma;
+
 use super::request::Envelope;
 
 /// Maximum tolerated zero-padding when shipping a partial batch whole:
@@ -20,21 +27,43 @@ use super::request::Envelope;
 /// one dispatch; anything worse is trimmed to an exact artifact size.
 const MAX_PAD_WASTE_DENOM: usize = 4;
 
+/// EWMA weight for inter-arrival gaps: tracks rate shifts within a few
+/// requests while smoothing Poisson jitter.
+const GAP_ALPHA: f64 = 0.3;
+
+/// Inter-arrival observations before the predictor is trusted; below
+/// this, closing stays deadline-only.
+const MIN_GAP_OBS: u64 = 2;
+
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct BatchPolicy {
     pub max_batch: usize,
     pub max_wait: Duration,
+    /// Close early when the predicted arrivals within the remaining
+    /// `max_wait` budget cannot reach the next artifact size (never
+    /// closes *later* than the deadline).
+    pub predictive: bool,
 }
 
 impl BatchPolicy {
     pub fn new(max_batch: usize, max_wait: Duration) -> BatchPolicy {
         assert!(max_batch > 0);
-        BatchPolicy { max_batch, max_wait }
+        BatchPolicy { max_batch, max_wait, predictive: false }
     }
 
     /// No batching: every request goes out alone, immediately.
     pub fn immediate() -> BatchPolicy {
-        BatchPolicy { max_batch: 1, max_wait: Duration::ZERO }
+        BatchPolicy {
+            max_batch: 1,
+            max_wait: Duration::ZERO,
+            predictive: false,
+        }
+    }
+
+    /// Enable predictive (arrival-rate-aware) early closing.
+    pub fn with_predictive_close(mut self) -> BatchPolicy {
+        self.predictive = true;
+        self
     }
 }
 
@@ -45,11 +74,17 @@ pub struct Batcher {
     queue: VecDeque<Envelope>,
     /// Compiled artifact batch sizes, ascending; empty = no alignment.
     align: Vec<usize>,
+    /// EWMA of inter-arrival gaps (seconds) — the predictive-close
+    /// arrival-rate estimator.
+    gap: Ewma,
+    last_arrival: Option<Instant>,
+    /// Batches closed before their deadline by the predictive rule.
+    early_closes: u64,
 }
 
 impl Batcher {
     pub fn new(policy: BatchPolicy) -> Batcher {
-        Batcher { policy, queue: VecDeque::new(), align: Vec::new() }
+        Batcher::with_alignment(policy, &[])
     }
 
     /// Like [`Batcher::new`], but batch cuts are aware of the engine's
@@ -65,7 +100,14 @@ impl Batcher {
         let mut align = sizes.to_vec();
         align.sort_unstable();
         align.dedup();
-        Batcher { policy, queue: VecDeque::new(), align }
+        Batcher {
+            policy,
+            queue: VecDeque::new(),
+            align,
+            gap: Ewma::new(GAP_ALPHA),
+            last_arrival: None,
+            early_closes: 0,
+        }
     }
 
     pub fn policy(&self) -> BatchPolicy {
@@ -73,11 +115,84 @@ impl Batcher {
     }
 
     pub fn push(&mut self, env: Envelope) {
+        let arrived = env.req.arrived;
+        if let Some(prev) = self.last_arrival {
+            // non-monotone timestamps (tests with synthetic clocks)
+            // observe as a zero gap rather than panicking
+            let gap = arrived.saturating_duration_since(prev);
+            self.gap.observe(gap.as_secs_f64());
+        }
+        self.last_arrival = Some(arrived);
         self.queue.push_back(env);
     }
 
     pub fn pending(&self) -> usize {
         self.queue.len()
+    }
+
+    /// Batches the predictive rule closed ahead of their deadline.
+    pub fn early_closes(&self) -> u64 {
+        self.early_closes
+    }
+
+    /// Estimated mean inter-arrival gap (None until warm).
+    pub fn mean_gap(&self) -> Option<Duration> {
+        if self.gap.is_warm(MIN_GAP_OBS) {
+            self.gap.value().map(Duration::from_secs_f64)
+        } else {
+            None
+        }
+    }
+
+    /// The next count at which a closing batch would use a *larger*
+    /// artifact: the smallest aligned size (capped by `max_batch`)
+    /// strictly above the current queue depth, else `max_batch` itself.
+    /// `None` when the queue already fills the largest target (the size
+    /// trigger will close it).
+    fn next_growth_target(&self) -> Option<usize> {
+        let n = self.queue.len();
+        let aligned = self
+            .align
+            .iter()
+            .copied()
+            .filter(|&a| a > n && a <= self.policy.max_batch)
+            .min();
+        match aligned {
+            Some(a) => Some(a),
+            None => {
+                (self.policy.max_batch > n).then_some(self.policy.max_batch)
+            }
+        }
+    }
+
+    /// The instant at which the predictive rule would close the current
+    /// batch: the moment the arrival stream can no longer deliver
+    /// enough requests to reach the next artifact size before the
+    /// deadline.  `None` when prediction is off, cold, or moot.
+    fn predictive_close_at(&self) -> Option<Instant> {
+        if !self.policy.predictive {
+            return None;
+        }
+        let oldest = self.queue.front()?.req.arrived;
+        let gap = self.mean_gap()?;
+        let target = self.next_growth_target()?;
+        let needed = (target - self.queue.len()) as u32;
+        let last = self.last_arrival.unwrap_or(oldest);
+        let deadline = oldest + self.policy.max_wait;
+        // arrivals are predicted at mean-gap intervals *from the last
+        // one seen* — not from the evaluation instant — so the batch is
+        // expected to reach `target` at `last + needed * gap`
+        let reach = last.checked_add(gap.checked_mul(needed)?)?;
+        if reach > deadline {
+            // even the predicted stream cannot fill the batch in time:
+            // waiting buys nothing, close as soon as possible
+            return Some(oldest);
+        }
+        // the target is reachable on schedule; it stops being so once
+        // the stream runs late enough that the remaining needed-1
+        // arrivals no longer fit before the deadline
+        let slack = gap.checked_mul(needed.saturating_sub(1))?;
+        Some(deadline.checked_sub(slack).map_or(oldest, |t| t.max(oldest)))
     }
 
     /// How a closing batch of n requests is sized against the artifact
@@ -110,16 +225,26 @@ impl Batcher {
     }
 
     /// Pop a ready batch, if any, according to the policy at time `now`.
+    /// Predictive closing only ever *advances* the close (it closes a
+    /// batch the deadline would have closed later); the `max_wait` bound
+    /// is never exceeded.
     pub fn pop_ready(&mut self, now: Instant) -> Option<Vec<Envelope>> {
         if self.queue.is_empty() {
             return None;
         }
         let full = self.queue.len() >= self.policy.max_batch;
         let expired = now
-            .duration_since(self.queue.front().unwrap().req.arrived)
+            .saturating_duration_since(
+                self.queue.front().unwrap().req.arrived,
+            )
             >= self.policy.max_wait;
-        if !(full || expired) {
+        let predicted = !(full || expired)
+            && self.predictive_close_at().is_some_and(|t| now >= t);
+        if !(full || expired || predicted) {
             return None;
+        }
+        if predicted {
+            self.early_closes += 1;
         }
         let n = self.cut(self.queue.len().min(self.policy.max_batch));
         Some(self.queue.drain(..n).collect())
@@ -135,12 +260,18 @@ impl Batcher {
         out
     }
 
-    /// Earliest moment a timeout-triggered batch could become ready
-    /// (None when the queue is empty) — lets the server sleep precisely.
+    /// Earliest moment a timeout- or prediction-triggered batch could
+    /// become ready (None when the queue is empty) — lets the server
+    /// sleep precisely instead of polling.
     pub fn next_deadline(&self) -> Option<Instant> {
-        self.queue
+        let deadline = self
+            .queue
             .front()
-            .map(|e| e.req.arrived + self.policy.max_wait)
+            .map(|e| e.req.arrived + self.policy.max_wait)?;
+        Some(match self.predictive_close_at() {
+            Some(early) => early.min(deadline),
+            None => deadline,
+        })
     }
 }
 
@@ -166,7 +297,8 @@ mod tests {
 
     #[test]
     fn batch_closes_on_size() {
-        let mut b = Batcher::new(BatchPolicy::new(3, Duration::from_secs(10)));
+        let mut b =
+            Batcher::new(BatchPolicy::new(3, Duration::from_secs(10)));
         let t0 = Instant::now();
         b.push(env(1, t0));
         b.push(env(2, t0));
@@ -217,7 +349,8 @@ mod tests {
         for i in 0..7 {
             b.push(env(i, t0));
         }
-        assert_eq!(ids(&b.pop_ready(t0).unwrap()), (0..7).collect::<Vec<_>>());
+        let want: Vec<u64> = (0..7).collect();
+        assert_eq!(ids(&b.pop_ready(t0).unwrap()), want);
     }
 
     #[test]
@@ -294,6 +427,135 @@ mod tests {
         assert_eq!(b.pop_ready(t0).unwrap().len(), 4);
         assert_eq!(b.pop_ready(t0).unwrap().len(), 1);
         assert!(b.pop_ready(t0).is_none());
+    }
+
+    #[test]
+    fn predictive_close_fires_when_next_size_unreachable() {
+        // artifacts {1,2,4,8}, max_wait 15ms, arrivals 20ms apart: once
+        // the gap estimator warms, a lone request closes immediately
+        // instead of burning the full deadline.
+        let mut b = Batcher::with_alignment(
+            BatchPolicy::new(8, Duration::from_millis(15))
+                .with_predictive_close(),
+            &[1, 2, 4, 8],
+        );
+        let t0 = Instant::now();
+        let gap = Duration::from_millis(20);
+        // request 0: no gaps observed yet -> deadline-only behaviour
+        b.push(env(0, t0));
+        assert!(b.pop_ready(t0).is_none(), "cold predictor must not close");
+        assert_eq!(
+            b.pop_ready(t0 + Duration::from_millis(15)).unwrap().len(),
+            1
+        );
+        // request 1: one gap observed, still below the warm threshold
+        b.push(env(1, t0 + gap));
+        assert!(b.pop_ready(t0 + gap).is_none());
+        assert_eq!(
+            b.pop_ready(t0 + gap + Duration::from_millis(15))
+                .unwrap()
+                .len(),
+            1
+        );
+        assert_eq!(b.early_closes(), 0);
+        // request 2: warm (mean gap 20ms > 15ms budget to reach size 2)
+        // -> closes at push time, not 15ms later
+        b.push(env(2, t0 + gap * 2));
+        assert_eq!(b.pop_ready(t0 + gap * 2).unwrap().len(), 1);
+        assert_eq!(b.early_closes(), 1);
+    }
+
+    #[test]
+    fn predictive_close_waits_while_next_size_is_reachable() {
+        // gap 1ms << max_wait 15ms: the next artifact size is reachable,
+        // so the batch stays open exactly until it stops being so
+        let mut b = Batcher::with_alignment(
+            BatchPolicy::new(8, Duration::from_millis(15))
+                .with_predictive_close(),
+            &[1, 2, 4, 8],
+        );
+        let t0 = Instant::now();
+        let ms = Duration::from_millis(1);
+        for i in 0..4u64 {
+            b.push(env(i, t0 + ms * i as u32));
+        }
+        // warm (gap ~1ms): n=4, next target 8 needs 4 more arrivals,
+        // expected to land by t0+7ms — reachable, so the batch stays
+        // open until the stream would have to deliver the remaining 3
+        // after the close decision: deadline 15ms - 3x1ms = t0+12ms
+        assert!(b.pop_ready(t0 + ms * 5).is_none());
+        assert!(b.pop_ready(t0 + ms * 11).is_none());
+        let batch = b.pop_ready(t0 + ms * 12).unwrap();
+        assert_eq!(batch.len(), 4);
+        assert_eq!(b.early_closes(), 1);
+    }
+
+    #[test]
+    fn predictive_close_still_batches_when_gap_fits_budget() {
+        // gap 10ms < max_wait 15ms: the second request is predicted to
+        // arrive inside the deadline budget, so the predictor must NOT
+        // degenerate to singletons — it waits, batches {0, 1}, and only
+        // then closes (size 4 now needs 2 more gaps = 20ms > budget)
+        let mut b = Batcher::with_alignment(
+            BatchPolicy::new(8, Duration::from_millis(15))
+                .with_predictive_close(),
+            &[1, 2, 4, 8],
+        );
+        let t0 = Instant::now();
+        let gap = Duration::from_millis(10);
+        // warm the estimator on two singleton rounds first
+        b.push(env(0, t0));
+        let _ = b.pop_ready(t0 + Duration::from_millis(15));
+        b.push(env(1, t0 + gap));
+        let _ = b.pop_ready(t0 + gap + Duration::from_millis(15));
+        // warm now: request 2 must wait for request 3, not close alone
+        b.push(env(2, t0 + gap * 2));
+        assert!(
+            b.pop_ready(t0 + gap * 2).is_none(),
+            "a reachable next size must keep the batch open"
+        );
+        b.push(env(3, t0 + gap * 3));
+        let batch = b.pop_ready(t0 + gap * 3).unwrap();
+        assert_eq!(batch.len(), 2, "pair batched, then closed early");
+        assert_eq!(b.early_closes(), 1);
+    }
+
+    #[test]
+    fn predictive_close_never_extends_the_deadline() {
+        let policy = BatchPolicy::new(8, Duration::from_millis(5))
+            .with_predictive_close();
+        let mut b = Batcher::with_alignment(policy, &[1, 2, 4, 8]);
+        let t0 = Instant::now();
+        b.push(env(0, t0));
+        b.push(env(1, t0 + Duration::from_millis(1)));
+        b.push(env(2, t0 + Duration::from_millis(2)));
+        // whatever the predictor thinks, the deadline still closes
+        let late = t0 + Duration::from_millis(5);
+        assert!(b.pop_ready(late).is_some(), "deadline close must fire");
+        // and next_deadline never reports later than arrival + max_wait
+        b.push(env(3, t0 + Duration::from_millis(40)));
+        let d = b.next_deadline().unwrap();
+        assert!(
+            d <= t0 + Duration::from_millis(45),
+            "predictive next_deadline may only advance the wakeup"
+        );
+    }
+
+    #[test]
+    fn deadline_only_policy_never_closes_early() {
+        let mut b = Batcher::with_alignment(
+            BatchPolicy::new(8, Duration::from_millis(15)),
+            &[1, 2, 4, 8],
+        );
+        let t0 = Instant::now();
+        let gap = Duration::from_millis(20);
+        for i in 0..4u64 {
+            b.push(env(i, t0 + gap * i as u32));
+            // at push time the oldest has expired (gap > max_wait), so
+            // each pop is a deadline close, never an early one
+            let _ = b.pop_ready(t0 + gap * i as u32);
+        }
+        assert_eq!(b.early_closes(), 0);
     }
 
     #[test]

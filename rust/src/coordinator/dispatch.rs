@@ -1,0 +1,476 @@
+//! Cost-model-driven batch dispatch — the paper's "leverage the
+//! trade-offs between GPU and FPGA *before* offloading" applied to the
+//! serving hot path.
+//!
+//! Each engine worker carries a [`DeviceProfile`] (GPU-modeled,
+//! FPGA-modeled, or CPU/PJRT-measured) and a [`WorkerState`]: an online
+//! per-artifact-batch-size latency table seeded from the analytic device
+//! cost models and refined by EWMA over observed `BatchOutput::exec`
+//! times, plus a predicted-backlog accumulator.  The leader routes each
+//! closed batch to the worker minimizing *predicted completion time*
+//! (queue backlog + predicted execution); when any worker's estimate is
+//! still cold it falls back to join-shortest-queue, which is the
+//! anonymous-pool behaviour the dispatcher replaces.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::device::{Accelerator, DeviceKind};
+use crate::model::Network;
+use crate::runtime::Pass;
+use crate::util::Ewma;
+
+/// EWMA weight for observed batch execution times: heavy enough to track
+/// drift (engine warm-up, host contention), light enough that one
+/// outlier does not flip routing.
+const EXEC_ALPHA: f64 = 0.25;
+
+/// How closed batches reach the engine workers.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum DispatchPolicy {
+    /// Anonymous pool: one shared queue, idle workers pull — treats all
+    /// engines as interchangeable.
+    #[default]
+    JoinIdle,
+    /// Cost-model-driven: route each closed batch to the worker with the
+    /// minimum predicted completion time (backlog + predicted exec).
+    Affinity,
+}
+
+impl std::str::FromStr for DispatchPolicy {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<DispatchPolicy> {
+        match s {
+            "join-idle" => Ok(DispatchPolicy::JoinIdle),
+            "affinity" => Ok(DispatchPolicy::Affinity),
+            other => anyhow::bail!(
+                "unknown dispatch policy {other:?} (join-idle|affinity)"
+            ),
+        }
+    }
+}
+
+/// What an engine worker's silicon looks like to the dispatcher: a
+/// device tag plus a seed latency table `(artifact batch, exec seconds)`
+/// from the analytic cost models.  Measured devices (CPU/PJRT) start
+/// with an empty seed and warm purely from observations.
+#[derive(Clone, Debug)]
+pub struct DeviceProfile {
+    pub kind: DeviceKind,
+    /// `(batch, exec_s)` ascending by batch; empty = no prior.
+    seed: Vec<(usize, f64)>,
+}
+
+impl DeviceProfile {
+    /// No prior: predictions stay cold until the EWMA table warms from
+    /// observed execution times.
+    pub fn unmodeled(kind: DeviceKind) -> DeviceProfile {
+        DeviceProfile { kind, seed: Vec::new() }
+    }
+
+    /// Explicit seed table (tests, calibration files).
+    pub fn from_seed(
+        kind: DeviceKind,
+        mut seed: Vec<(usize, f64)>,
+    ) -> DeviceProfile {
+        seed.retain(|&(b, t)| b > 0 && t.is_finite() && t > 0.0);
+        seed.sort_by_key(|&(b, _)| b);
+        seed.dedup_by_key(|&mut (b, _)| b);
+        DeviceProfile { kind, seed }
+    }
+
+    /// Seed from an analytic accelerator model: whole-network forward
+    /// time at each compiled artifact batch size (the sum of per-layer
+    /// estimates, transfers included — the same cost the `sched` layer
+    /// plans with).
+    pub fn from_accelerator(
+        acc: &dyn Accelerator,
+        net: &Network,
+        batches: &[usize],
+    ) -> anyhow::Result<DeviceProfile> {
+        let mut seed = Vec::with_capacity(batches.len());
+        for &b in batches {
+            let mut total = 0.0;
+            for layer in &net.layers {
+                let est = acc.estimate(layer, b, Pass::Forward)?;
+                total += est.total_time_s();
+            }
+            seed.push((b, total));
+        }
+        Ok(DeviceProfile::from_seed(acc.kind(), seed))
+    }
+
+    /// Prior execution time for an artifact batch, piecewise-linear over
+    /// the seed table (clamped at the ends).  `None` without a seed.
+    fn seed_exec_s(&self, batch: usize) -> Option<f64> {
+        let first = self.seed.first()?;
+        if batch <= first.0 {
+            return Some(first.1);
+        }
+        let last = self.seed.last()?;
+        if batch >= last.0 {
+            return Some(last.1);
+        }
+        for w in self.seed.windows(2) {
+            let ((b0, t0), (b1, t1)) = (w[0], w[1]);
+            if batch <= b1 {
+                let frac = (batch - b0) as f64 / (b1 - b0) as f64;
+                return Some(t0 + frac * (t1 - t0));
+            }
+        }
+        None
+    }
+}
+
+/// Per-worker dispatcher state, shared between the leader (predict,
+/// account backlog) and the worker thread (observe, complete).
+pub struct WorkerState {
+    profile: DeviceProfile,
+    /// Compiled artifact batch sizes, ascending (prediction key: a batch
+    /// of n requests runs as the smallest artifact >= n).
+    artifacts: Vec<usize>,
+    /// Online latency table: artifact batch size -> EWMA of observed
+    /// execution seconds.  One write per *batch* (not per request), so
+    /// the mutex is effectively uncontended.
+    table: Mutex<HashMap<usize, Ewma>>,
+    /// Predicted outstanding work in microseconds (queued + executing).
+    backlog_us: AtomicU64,
+    /// Dispatched-but-not-completed batches (the cold-fallback queue
+    /// depth signal).
+    queued: AtomicUsize,
+    /// Outstanding batches that were dispatched with a cold (zero)
+    /// cost: invisible to `backlog_us`, so the warm scoring key charges
+    /// them at the current prediction instead of pretending the worker
+    /// is idle right after warm-up.
+    uncosted: AtomicUsize,
+    /// Total batches ever routed here (starvation diagnostics).
+    dispatched: AtomicU64,
+}
+
+/// Read-only view of a worker's dispatcher state.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkerSnapshot {
+    pub kind: DeviceKind,
+    pub dispatched: u64,
+    pub queued: usize,
+    pub backlog_us: u64,
+}
+
+impl WorkerState {
+    pub fn new(profile: DeviceProfile, artifacts: &[usize]) -> WorkerState {
+        let mut artifacts = artifacts.to_vec();
+        artifacts.sort_unstable();
+        artifacts.dedup();
+        WorkerState {
+            profile,
+            artifacts,
+            table: Mutex::new(HashMap::new()),
+            backlog_us: AtomicU64::new(0),
+            queued: AtomicUsize::new(0),
+            uncosted: AtomicUsize::new(0),
+            dispatched: AtomicU64::new(0),
+        }
+    }
+
+    /// The artifact batch a request count actually runs as: smallest
+    /// compiled size >= n (the engine pads), else the largest (the
+    /// engine chunks).
+    pub fn artifact_for(&self, n: usize) -> usize {
+        match self.artifacts.iter().find(|&&a| a >= n) {
+            Some(&a) => a,
+            None => self.artifacts.last().copied().unwrap_or(n),
+        }
+    }
+
+    /// Predicted execution time in µs for a batch of `n` requests:
+    /// observed EWMA for the padded artifact if warm, else the device
+    /// model's seed estimate, else `None` (cold).
+    pub fn predict_us(&self, n: usize) -> Option<u64> {
+        let artifact = self.artifact_for(n);
+        let ewma = self
+            .table
+            .lock()
+            .unwrap()
+            .get(&artifact)
+            .and_then(Ewma::value);
+        ewma.or_else(|| self.profile.seed_exec_s(artifact))
+            .map(|s| (s * 1e6).max(0.0) as u64)
+    }
+
+    /// Leader-side accounting at dispatch time.
+    pub fn begin(&self, cost_us: u64) {
+        self.backlog_us.fetch_add(cost_us, Ordering::Relaxed);
+        self.queued.fetch_add(1, Ordering::Relaxed);
+        if cost_us == 0 {
+            self.uncosted.fetch_add(1, Ordering::Relaxed);
+        }
+        self.dispatched.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Worker-side accounting at completion time; `observed` is the
+    /// engine-reported execution wall time (absent when the batch
+    /// errored before timing).
+    pub fn finish(
+        &self,
+        cost_us: u64,
+        n: usize,
+        observed: Option<Duration>,
+    ) {
+        // saturating: an unbalanced release must never wrap the
+        // counters to their type maximum
+        let _ = self.backlog_us.fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |b| Some(b.saturating_sub(cost_us)),
+        );
+        let _ = self.queued.fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |q| Some(q.saturating_sub(1)),
+        );
+        if cost_us == 0 {
+            let _ = self.uncosted.fetch_update(
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+                |u| Some(u.saturating_sub(1)),
+            );
+        }
+        if let Some(exec) = observed {
+            let artifact = self.artifact_for(n);
+            self.table
+                .lock()
+                .unwrap()
+                .entry(artifact)
+                .or_insert_with(|| Ewma::new(EXEC_ALPHA))
+                .observe(exec.as_secs_f64());
+        }
+    }
+
+    pub fn snapshot(&self) -> WorkerSnapshot {
+        WorkerSnapshot {
+            kind: self.profile.kind,
+            dispatched: self.dispatched.load(Ordering::Relaxed),
+            queued: self.queued.load(Ordering::Relaxed),
+            backlog_us: self.backlog_us.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A routing decision.
+#[derive(Clone, Copy, Debug)]
+pub struct Pick {
+    pub worker: usize,
+    /// Predicted execution cost charged to the worker's backlog (0 when
+    /// the estimate was cold).
+    pub cost_us: u64,
+    /// True when the decision fell back to join-shortest-queue because
+    /// some worker had no estimate for this batch size.
+    pub cold: bool,
+}
+
+/// Index in `0..n` minimizing `key(i)`.  The scan starts at a position
+/// that rotates per call (`rr`) and ties keep the first index scanned,
+/// so exact ties share load round-robin instead of herding onto the
+/// lowest index.  Shared by the batch dispatcher and the request
+/// router's least-outstanding policy.
+pub(crate) fn rotating_argmin(
+    n: usize,
+    rr: &AtomicUsize,
+    key: impl Fn(usize) -> u64,
+) -> usize {
+    debug_assert!(n > 0);
+    let start = rr.fetch_add(1, Ordering::Relaxed) % n;
+    let mut best = start;
+    let mut best_key = key(start);
+    for off in 1..n {
+        let i = (start + off) % n;
+        let k = key(i);
+        if k < best_key {
+            best = i;
+            best_key = k;
+        }
+    }
+    best
+}
+
+/// Route a batch of `n` requests: minimum predicted completion time
+/// (backlog + predicted exec) when every worker has an estimate, else
+/// join-shortest-queue.  Ties rotate via `rr` so equal workers share
+/// load instead of herding onto the lowest index.
+pub fn pick_worker(
+    states: &[Arc<WorkerState>],
+    n: usize,
+    rr: &AtomicUsize,
+) -> Pick {
+    debug_assert!(!states.is_empty());
+    let preds: Vec<Option<u64>> =
+        states.iter().map(|s| s.predict_us(n)).collect();
+    let all_warm = preds.iter().all(Option::is_some);
+    let worker = rotating_argmin(states.len(), rr, |i| {
+        if all_warm {
+            // batches dispatched cold carry no backlog cost; approximate
+            // each with this batch's prediction so the warm-up handover
+            // doesn't pile work onto an already-loaded worker
+            let uncosted =
+                states[i].uncosted.load(Ordering::Relaxed) as u64;
+            states[i].backlog_us.load(Ordering::Relaxed)
+                + preds[i].unwrap_or(0) * (1 + uncosted)
+        } else {
+            states[i].queued.load(Ordering::Relaxed) as u64
+        }
+    });
+    Pick {
+        worker,
+        cost_us: if all_warm { preds[worker].unwrap_or(0) } else { 0 },
+        cold: !all_warm,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state(seed: Vec<(usize, f64)>) -> Arc<WorkerState> {
+        Arc::new(WorkerState::new(
+            DeviceProfile::from_seed(DeviceKind::Gpu, seed),
+            &[1, 2, 4, 8],
+        ))
+    }
+
+    #[test]
+    fn seed_table_interpolates_and_clamps() {
+        let p = DeviceProfile::from_seed(
+            DeviceKind::Fpga,
+            vec![(2, 2.0), (8, 8.0)],
+        );
+        assert_eq!(p.seed_exec_s(1), Some(2.0)); // clamp low
+        assert_eq!(p.seed_exec_s(2), Some(2.0));
+        assert!((p.seed_exec_s(5).unwrap() - 5.0).abs() < 1e-12);
+        assert_eq!(p.seed_exec_s(16), Some(8.0)); // clamp high
+        assert_eq!(
+            DeviceProfile::unmodeled(DeviceKind::CpuPjrt).seed_exec_s(4),
+            None
+        );
+    }
+
+    #[test]
+    fn artifact_padding_key() {
+        let s = state(vec![(1, 0.001)]);
+        assert_eq!(s.artifact_for(1), 1);
+        assert_eq!(s.artifact_for(3), 4);
+        assert_eq!(s.artifact_for(8), 8);
+        assert_eq!(s.artifact_for(20), 8); // beyond largest: chunked
+    }
+
+    #[test]
+    fn observation_overrides_seed() {
+        let s = state(vec![(1, 1.0), (8, 1.0)]);
+        assert_eq!(s.predict_us(4), Some(1_000_000));
+        s.finish(0, 4, Some(Duration::from_millis(10)));
+        // first observation seeds the EWMA directly
+        assert_eq!(s.predict_us(4), Some(10_000));
+        // other sizes still come from the seed table
+        assert_eq!(s.predict_us(1), Some(1_000_000));
+    }
+
+    #[test]
+    fn backlog_accounting_round_trips() {
+        let s = state(vec![(1, 0.5)]);
+        s.begin(500);
+        s.begin(250);
+        assert_eq!(s.snapshot().backlog_us, 750);
+        assert_eq!(s.snapshot().queued, 2);
+        s.finish(500, 1, None);
+        assert_eq!(s.snapshot().backlog_us, 250);
+        // over-subtraction saturates instead of wrapping
+        s.finish(9999, 1, None);
+        assert_eq!(s.snapshot().backlog_us, 0);
+        assert_eq!(s.snapshot().queued, 0);
+        assert_eq!(s.snapshot().dispatched, 2);
+    }
+
+    #[test]
+    fn warm_pick_minimizes_completion_time() {
+        // worker 0: cheap small batches; worker 1: cheap large batches
+        let gpu = state(vec![(1, 0.001), (8, 0.064)]);
+        let fpga = state(vec![(1, 0.020), (8, 0.020)]);
+        let rr = AtomicUsize::new(0);
+        let workers = vec![Arc::clone(&gpu), Arc::clone(&fpga)];
+        assert_eq!(pick_worker(&workers, 1, &rr).worker, 0);
+        let p = pick_worker(&workers, 8, &rr);
+        assert_eq!(p.worker, 1);
+        assert!(!p.cold);
+        assert_eq!(p.cost_us, 20_000);
+        // backlog shifts the decision: pile work on the fpga worker and
+        // big batches overflow to the gpu worker
+        fpga.begin(100_000);
+        assert_eq!(pick_worker(&workers, 8, &rr).worker, 0);
+    }
+
+    #[test]
+    fn warm_key_charges_cold_dispatched_batches() {
+        let a = state(vec![(1, 0.010), (8, 0.010)]);
+        let b = state(vec![(1, 0.010), (8, 0.010)]);
+        // a cold-phase batch landed on `a` with zero predicted cost:
+        // its backlog reads 0, but the warm key must still see it
+        a.begin(0);
+        let rr = AtomicUsize::new(0);
+        let workers = vec![Arc::clone(&a), Arc::clone(&b)];
+        for _ in 0..3 {
+            assert_eq!(
+                pick_worker(&workers, 4, &rr).worker,
+                1,
+                "uncosted cold batch must weigh against worker 0"
+            );
+        }
+        // completion releases the uncosted charge: ties rotate again
+        a.finish(0, 4, None);
+        let p0 = pick_worker(&workers, 4, &rr);
+        let p1 = pick_worker(&workers, 4, &rr);
+        assert_ne!(p0.worker, p1.worker);
+    }
+
+    #[test]
+    fn profile_seeds_from_analytic_device_model() {
+        use crate::device::GpuDevice;
+        use crate::power::KernelLib;
+        let net = crate::model::tinynet();
+        let gpu = GpuDevice::new(KernelLib::CuDnn);
+        let p = DeviceProfile::from_accelerator(&gpu, &net, &[1, 8])
+            .unwrap();
+        assert_eq!(p.kind, DeviceKind::Gpu);
+        let t1 = p.seed_exec_s(1).unwrap();
+        let t8 = p.seed_exec_s(8).unwrap();
+        assert!(t1 > 0.0, "whole-net estimate must be positive");
+        assert!(t8 >= t1, "more images cannot take less time");
+    }
+
+    #[test]
+    fn cold_pick_joins_shortest_queue_and_rotates_ties() {
+        let a = Arc::new(WorkerState::new(
+            DeviceProfile::unmodeled(DeviceKind::CpuPjrt),
+            &[1, 8],
+        ));
+        let b = Arc::new(WorkerState::new(
+            DeviceProfile::unmodeled(DeviceKind::CpuPjrt),
+            &[1, 8],
+        ));
+        let rr = AtomicUsize::new(0);
+        let workers = vec![a, b];
+        let p0 = pick_worker(&workers, 4, &rr);
+        let p1 = pick_worker(&workers, 4, &rr);
+        assert!(p0.cold && p1.cold);
+        assert_eq!(p0.cost_us, 0);
+        // equal queues: consecutive ties alternate, no herding
+        assert_ne!(p0.worker, p1.worker);
+        // a deeper queue loses even against rotation
+        workers[0].begin(0);
+        workers[0].begin(0);
+        for _ in 0..4 {
+            assert_eq!(pick_worker(&workers, 4, &rr).worker, 1);
+        }
+    }
+}

@@ -104,6 +104,10 @@ pub struct PjrtEngine {
     /// Recycles the stacked-activation scratch buffers across batches
     /// (the executor hands activations back after upload).
     pool: BufferPool,
+    /// When set, consumed request-image buffers are returned here after
+    /// stacking — the engine half of the client-side recycling loop
+    /// (see `util::ImagePool`).
+    image_pool: Option<BufferPool>,
 }
 
 impl PjrtEngine {
@@ -146,7 +150,16 @@ impl PjrtEngine {
             params,
             out_elems_per_image: out_shape[1..].iter().product(),
             pool: BufferPool::new(),
+            image_pool: None,
         })
+    }
+
+    /// Return consumed request-image buffers to `pool` after stacking,
+    /// so submitters drawing from the matching `util::ImagePool` stop
+    /// allocating per request.
+    pub fn with_image_pool(mut self, pool: BufferPool) -> PjrtEngine {
+        self.image_pool = Some(pool);
+        self
     }
 
     /// Smallest available batch >= n (or the largest available).
@@ -238,7 +251,7 @@ impl InferenceEngine for PjrtEngine {
         }
         let largest = largest_batch(&self.batches).unwrap();
         let k = self.out_elems_per_image;
-        if n <= largest {
+        let out = if n <= largest {
             // common case: one artifact call, its padded [b, k] output
             // is shared as-is (views only touch the first n rows)
             let (probs, exec) = self.run_chunk(&images, 0, n)?;
@@ -247,35 +260,40 @@ impl InferenceEngine for PjrtEngine {
                 "artifact output {} elems < {n} images x {k}",
                 probs.len()
             );
-            return Ok(BatchOutput {
-                outputs: Arc::new(probs),
+            BatchOutput { outputs: Arc::new(probs), per_image: k, exec }
+        } else {
+            // oversized batch (policy raced an engine swap, or a caller
+            // bypassed the server clamp): chunk across artifact calls
+            // instead of erroring out
+            let mut combined = vec![0.0f32; n * k];
+            let mut exec = Duration::ZERO;
+            let mut start = 0;
+            for len in plan_chunks(n, largest) {
+                let (probs, d) = self.run_chunk(&images, start, len)?;
+                anyhow::ensure!(
+                    probs.len() >= len * k,
+                    "artifact output {} elems < {len} images x {k}",
+                    probs.len()
+                );
+                combined[start * k..(start + len) * k]
+                    .copy_from_slice(&probs.data()[..len * k]);
+                exec += d;
+                start += len;
+            }
+            BatchOutput {
+                outputs: Arc::new(Tensor::from_vec(&[n, k], combined)?),
                 per_image: k,
                 exec,
-            });
+            }
+        };
+        // images were moved in and are now fully stacked: recycle their
+        // buffers to the submit-side pool instead of freeing them
+        if let Some(pool) = &self.image_pool {
+            for img in images {
+                pool.put(img.into_vec());
+            }
         }
-        // oversized batch (policy raced an engine swap, or a caller
-        // bypassed the server clamp): chunk across artifact calls
-        // instead of erroring out
-        let mut combined = vec![0.0f32; n * k];
-        let mut exec = Duration::ZERO;
-        let mut start = 0;
-        for len in plan_chunks(n, largest) {
-            let (probs, d) = self.run_chunk(&images, start, len)?;
-            anyhow::ensure!(
-                probs.len() >= len * k,
-                "artifact output {} elems < {len} images x {k}",
-                probs.len()
-            );
-            combined[start * k..(start + len) * k]
-                .copy_from_slice(&probs.data()[..len * k]);
-            exec += d;
-            start += len;
-        }
-        Ok(BatchOutput {
-            outputs: Arc::new(Tensor::from_vec(&[n, k], combined)?),
-            per_image: k,
-            exec,
-        })
+        Ok(out)
     }
 }
 
@@ -287,6 +305,9 @@ pub struct MockEngine {
     pub delay: Duration,
     /// fail every Nth call (0 = never)
     pub fail_every: usize,
+    /// When set, consumed image buffers return here (mirrors the
+    /// production engine's submit-side recycling loop hermetically).
+    pub image_pool: Option<BufferPool>,
     calls: std::sync::atomic::AtomicUsize,
 }
 
@@ -297,6 +318,7 @@ impl MockEngine {
             image_shape: vec![3, 8, 8],
             delay: Duration::from_micros(200),
             fail_every: 0,
+            image_pool: None,
             calls: std::sync::atomic::AtomicUsize::new(0),
         }
     }
@@ -340,10 +362,87 @@ impl InferenceEngine for MockEngine {
             data.push(sum);
             data.push(img.len() as f32);
         }
+        if let Some(pool) = &self.image_pool {
+            for img in images {
+                pool.put(img.into_vec());
+            }
+        }
         Ok(BatchOutput {
             outputs: Arc::new(Tensor::from_vec(&[n, 2], data)?),
             per_image: 2,
             exec: self.delay,
+        })
+    }
+}
+
+/// Hermetic engine with an affine batch cost `base + per_image * n`,
+/// compiled artifacts {1, 2, 4, 8}.  A latency-shaped device (zero
+/// base, cost linear in batch) and a throughput-shaped one (high fixed
+/// cost, flat in batch) reproduce the paper's GPU/FPGA trade-off in
+/// miniature — the dispatcher benches and acceptance tests build their
+/// heterogeneous pools from this.
+pub struct CurveEngine {
+    pub base_us: u64,
+    pub per_img_us: u64,
+    batches: Vec<usize>,
+}
+
+impl CurveEngine {
+    /// Affine-cost engine with the default artifact grid {1, 2, 4, 8}.
+    pub fn new(base_us: u64, per_img_us: u64) -> CurveEngine {
+        CurveEngine { base_us, per_img_us, batches: vec![1, 2, 4, 8] }
+    }
+
+    /// Override the compiled artifact batch sizes.
+    pub fn with_batches(mut self, batches: Vec<usize>) -> CurveEngine {
+        assert!(!batches.is_empty());
+        self.batches = batches;
+        self.batches.sort_unstable();
+        self.batches.dedup();
+        self
+    }
+
+    /// Device time for a batch of `n` images.
+    pub fn exec(&self, n: usize) -> Duration {
+        Duration::from_micros(self.base_us + self.per_img_us * n as u64)
+    }
+
+    /// An exact [`DeviceProfile`] for this engine's cost curve — what a
+    /// perfectly calibrated analytic model would seed.
+    pub fn profile(
+        &self,
+        kind: crate::device::DeviceKind,
+    ) -> super::dispatch::DeviceProfile {
+        super::dispatch::DeviceProfile::from_seed(
+            kind,
+            self.batches
+                .iter()
+                .map(|&b| (b, self.exec(b).as_secs_f64()))
+                .collect(),
+        )
+    }
+}
+
+impl InferenceEngine for CurveEngine {
+    fn available_batches(&self) -> &[usize] {
+        &self.batches
+    }
+
+    fn image_shape(&self) -> &[usize] {
+        &[3, 8, 8]
+    }
+
+    fn infer_batch(
+        &self,
+        images: Vec<Tensor>,
+    ) -> anyhow::Result<BatchOutput> {
+        let n = images.len();
+        let d = self.exec(n);
+        std::thread::sleep(d);
+        Ok(BatchOutput {
+            outputs: Arc::new(Tensor::zeros(&[n, 2])),
+            per_image: 2,
+            exec: d,
         })
     }
 }

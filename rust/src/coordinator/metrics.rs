@@ -18,6 +18,13 @@ pub struct ServerMetrics {
     pub completed: AtomicU64,
     pub errors: AtomicU64,
     pub rejected: AtomicU64,
+    /// Batches the predictive rule closed ahead of their deadline.
+    pub early_closes: AtomicU64,
+    /// Batches routed by predicted completion time (affinity dispatch).
+    pub affinity_routed: AtomicU64,
+    /// Batches that fell back to join-shortest-queue because some
+    /// worker's latency estimate was still cold.
+    pub cold_fallbacks: AtomicU64,
     shards: Vec<Mutex<MetricsShard>>,
 }
 
@@ -42,6 +49,9 @@ impl ServerMetrics {
             completed: AtomicU64::new(0),
             errors: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
+            early_closes: AtomicU64::new(0),
+            affinity_routed: AtomicU64::new(0),
+            cold_fallbacks: AtomicU64::new(0),
             shards: (0..workers)
                 .map(|_| Mutex::new(MetricsShard::default()))
                 .collect(),

@@ -9,6 +9,7 @@
 //! senders embedded in each batch -> callers.
 
 pub mod batcher;
+pub mod dispatch;
 pub mod engine;
 pub mod metrics;
 pub mod request;
@@ -16,8 +17,12 @@ pub mod router;
 pub mod server;
 
 pub use batcher::{BatchPolicy, Batcher};
+pub use dispatch::{
+    pick_worker, DeviceProfile, DispatchPolicy, WorkerSnapshot, WorkerState,
+};
 pub use engine::{
-    plan_chunks, BatchOutput, InferenceEngine, MockEngine, PjrtEngine,
+    plan_chunks, BatchOutput, CurveEngine, InferenceEngine, MockEngine,
+    PjrtEngine,
 };
 pub use metrics::ServerMetrics;
 pub use request::{Envelope, Request, Response};

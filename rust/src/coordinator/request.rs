@@ -80,7 +80,8 @@ mod tests {
             },
             tx,
         );
-        let batch = Arc::new(Tensor::from_vec(&[1, 2], vec![0.5, 0.5]).unwrap());
+        let batch =
+            Arc::new(Tensor::from_vec(&[1, 2], vec![0.5, 0.5]).unwrap());
         let resp = Response {
             id: env.req.id,
             probs: TensorView::slice_of(batch, 0, 2),

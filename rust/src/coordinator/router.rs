@@ -8,6 +8,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::util::Tensor;
 
+use super::dispatch::rotating_argmin;
 use super::request::Response;
 use super::server::Client;
 
@@ -39,13 +40,13 @@ impl Router {
             RoutePolicy::RoundRobin => {
                 self.rr.fetch_add(1, Ordering::Relaxed) % self.clients.len()
             }
-            RoutePolicy::LeastOutstanding => self
-                .clients
-                .iter()
-                .enumerate()
-                .min_by_key(|(_, c)| c.outstanding())
-                .map(|(i, _)| i)
-                .unwrap(),
+            // rotating scan start: equal queue depths share load
+            // round-robin instead of herding onto backend 0
+            RoutePolicy::LeastOutstanding => rotating_argmin(
+                self.clients.len(),
+                &self.rr,
+                |i| self.clients[i].outstanding() as u64,
+            ),
         }
     }
 
@@ -100,6 +101,7 @@ mod tests {
             ServerConfig {
                 policy: BatchPolicy::new(4, Duration::from_micros(100)),
                 queue_capacity: 64,
+                ..Default::default()
             },
         )
     }
@@ -131,6 +133,20 @@ mod tests {
         let total = s1.metrics().completed.load(Ordering::Relaxed)
             + s2.metrics().completed.load(Ordering::Relaxed);
         assert_eq!(total, 10);
+    }
+
+    #[test]
+    fn least_outstanding_ties_rotate_round_robin() {
+        let s1 = spawn_backend(10);
+        let s2 = spawn_backend(10);
+        let r = Router::new(
+            vec![s1.client(), s2.client()],
+            RoutePolicy::LeastOutstanding,
+        );
+        // both backends idle (equal depth): successive picks must not
+        // herd onto backend 0
+        let picks: Vec<usize> = (0..4).map(|_| r.pick()).collect();
+        assert_eq!(picks, vec![0, 1, 0, 1]);
     }
 
     #[test]

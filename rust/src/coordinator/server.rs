@@ -5,12 +5,15 @@
 //! Flow (the paper's Fig 2: cloud users -> uniform API -> middleware ->
 //! accelerators): requests enter through a *bounded* channel
 //! (backpressure); the leader only drains the channel and forms batches
-//! per [`BatchPolicy`]; closed batches go over a second channel to the
-//! worker pool, which executes them on its engines **in parallel** and
-//! answers each request directly.  Each request's reply sender travels
-//! inside its batch, so batches complete out of order without any
-//! leader-owned routing table — the batcher refills while every worker
-//! runs, which is what pipelines batch formation with device execution.
+//! per [`BatchPolicy`]; closed batches are dispatched to the worker
+//! pool per [`DispatchPolicy`] — either an anonymous shared queue
+//! (join-idle-worker) or cost-model-driven affinity routing to the
+//! worker with minimum predicted completion time — and each worker
+//! executes them on its engine **in parallel** and answers each request
+//! directly.  Each request's reply sender travels inside its batch, so
+//! batches complete out of order without any leader-owned routing
+//! table — the batcher refills while every worker runs, which is what
+//! pipelines batch formation with device execution.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{
@@ -20,9 +23,13 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::device::DeviceKind;
 use crate::util::{Tensor, TensorView};
 
 use super::batcher::{BatchPolicy, Batcher};
+use super::dispatch::{
+    pick_worker, DeviceProfile, DispatchPolicy, WorkerSnapshot, WorkerState,
+};
 use super::engine::{largest_batch, InferenceEngine};
 use super::metrics::ServerMetrics;
 use super::request::{Envelope, Request, Response};
@@ -127,6 +134,8 @@ pub struct ServerConfig {
     /// batched, or executing) before submissions are shed with
     /// `ServerBusy`.  Also sizes the bounded submit channel.
     pub queue_capacity: usize,
+    /// How closed batches reach the worker pool.
+    pub dispatch: DispatchPolicy,
 }
 
 impl Default for ServerConfig {
@@ -134,6 +143,67 @@ impl Default for ServerConfig {
         ServerConfig {
             policy: BatchPolicy::new(8, Duration::from_millis(2)),
             queue_capacity: 256,
+            dispatch: DispatchPolicy::JoinIdle,
+        }
+    }
+}
+
+/// A closed batch in flight to a worker: the envelopes plus the
+/// predicted execution cost charged to that worker's backlog (0 under
+/// join-idle dispatch or a cold estimate).
+struct DispatchedBatch {
+    envs: Vec<Envelope>,
+    cost_us: u64,
+}
+
+/// Leader-side batch routing per [`DispatchPolicy`].
+enum BatchRouter {
+    /// One shared queue; idle workers pull.
+    Shared(Sender<DispatchedBatch>),
+    /// Per-worker queues; the leader picks by predicted completion time.
+    Affinity {
+        txs: Vec<Sender<DispatchedBatch>>,
+        states: Vec<Arc<WorkerState>>,
+        rr: AtomicUsize,
+        metrics: Arc<ServerMetrics>,
+    },
+}
+
+impl BatchRouter {
+    fn dispatch(&self, envs: Vec<Envelope>) {
+        match self {
+            BatchRouter::Shared(tx) => {
+                let _ = tx.send(DispatchedBatch { envs, cost_us: 0 });
+            }
+            BatchRouter::Affinity { txs, states, rr, metrics } => {
+                let pick = pick_worker(states, envs.len(), rr);
+                let counter = if pick.cold {
+                    &metrics.cold_fallbacks
+                } else {
+                    &metrics.affinity_routed
+                };
+                counter.fetch_add(1, Ordering::Relaxed);
+                states[pick.worker].begin(pick.cost_us);
+                let _ = txs[pick.worker]
+                    .send(DispatchedBatch { envs, cost_us: pick.cost_us });
+            }
+        }
+    }
+}
+
+/// Worker-side batch intake: the shared pool queue or this worker's own.
+enum BatchSource {
+    Shared(Arc<Mutex<Receiver<DispatchedBatch>>>),
+    Own(Receiver<DispatchedBatch>),
+}
+
+impl BatchSource {
+    /// Next batch, or `None` once the leader is gone and the queue is
+    /// drained.
+    fn next(&self) -> Option<DispatchedBatch> {
+        match self {
+            BatchSource::Shared(rx) => rx.lock().unwrap().recv().ok(),
+            BatchSource::Own(rx) => rx.recv().ok(),
         }
     }
 }
@@ -144,6 +214,7 @@ pub struct Server {
     shutdown: Arc<AtomicBool>,
     leader: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
+    states: Vec<Arc<WorkerState>>,
 }
 
 impl Server {
@@ -155,29 +226,57 @@ impl Server {
         Server::spawn_pool(vec![engine], config)
     }
 
-    /// Multi-worker server: one worker thread per engine replica, all
-    /// fed by one leader/batcher.  Batches execute in parallel across
-    /// engines and complete out of order; every reply still reaches the
-    /// right caller because reply senders travel inside the batches.
+    /// Multi-worker server over interchangeable replicas: every worker
+    /// gets an unmodeled (measured-only) device profile, so affinity
+    /// dispatch starts cold and warms from observed execution times.
+    pub fn spawn_pool<E: InferenceEngine>(
+        engines: Vec<E>,
+        config: ServerConfig,
+    ) -> Server {
+        let profiled = engines
+            .into_iter()
+            .map(|e| (e, DeviceProfile::unmodeled(DeviceKind::CpuPjrt)))
+            .collect();
+        Server::spawn_pool_profiled(profiled, config)
+    }
+
+    /// Multi-worker server over *heterogeneous* engines: one worker
+    /// thread per engine replica, all fed by one leader/batcher.
+    /// Batches execute in parallel across engines and complete out of
+    /// order; every reply still reaches the right caller because reply
+    /// senders travel inside the batches.
+    ///
+    /// Each engine's [`DeviceProfile`] seeds the dispatcher's latency
+    /// table (see [`DispatchPolicy::Affinity`]); profiles are ignored
+    /// under [`DispatchPolicy::JoinIdle`].
     ///
     /// The batch policy is clamped to the engines' largest compiled
     /// artifact batch (a batch no artifact can run would otherwise
     /// error), and batch cuts align to artifact sizes to avoid
     /// zero-padding waste.
-    pub fn spawn_pool<E: InferenceEngine>(
-        engines: Vec<E>,
+    pub fn spawn_pool_profiled<E: InferenceEngine>(
+        engines: Vec<(E, DeviceProfile)>,
         config: ServerConfig,
     ) -> Server {
         assert!(!engines.is_empty(), "server needs at least one engine");
         let mut policy = config.policy;
         let cap = engines
             .iter()
-            .filter_map(|e| largest_batch(e.available_batches()))
+            .filter_map(|(e, _)| largest_batch(e.available_batches()))
             .min();
         if let Some(cap) = cap {
             policy.max_batch = policy.max_batch.min(cap);
         }
-        let align: Vec<usize> = engines[0].available_batches().to_vec();
+        // batch cuts may land on ANY worker, so only sizes compiled on
+        // every engine are safe alignment targets; with disjoint grids
+        // alignment is disabled (engines still pad/chunk correctness-
+        // wise, the padding-waste bound just stops applying)
+        let mut align: Vec<usize> = engines[0].0.available_batches().to_vec();
+        align.retain(|a| {
+            engines
+                .iter()
+                .all(|(e, _)| e.available_batches().contains(a))
+        });
 
         let (tx, rx) = sync_channel::<Envelope>(config.queue_capacity);
         let metrics = Arc::new(ServerMetrics::new(engines.len()));
@@ -191,31 +290,77 @@ impl Server {
             capacity: config.queue_capacity,
         };
 
+        let states: Vec<Arc<WorkerState>> = engines
+            .iter()
+            .map(|(e, profile)| {
+                Arc::new(WorkerState::new(
+                    profile.clone(),
+                    e.available_batches(),
+                ))
+            })
+            .collect();
+
         // leader -> workers: unbounded (depth already bounded by the
-        // request queue); receiver shared by the pool
-        let (batch_tx, batch_rx) = channel::<Vec<Envelope>>();
-        let batch_rx = Arc::new(Mutex::new(batch_rx));
+        // request queue).  Join-idle shares one receiver across the
+        // pool; affinity gives each worker its own queue so the leader
+        // can steer batches by predicted completion time.
+        let (router, sources) = match config.dispatch {
+            DispatchPolicy::JoinIdle => {
+                let (batch_tx, batch_rx) = channel::<DispatchedBatch>();
+                let batch_rx = Arc::new(Mutex::new(batch_rx));
+                let sources = (0..engines.len())
+                    .map(|_| BatchSource::Shared(Arc::clone(&batch_rx)))
+                    .collect::<Vec<_>>();
+                (BatchRouter::Shared(batch_tx), sources)
+            }
+            DispatchPolicy::Affinity => {
+                let mut txs = Vec::with_capacity(engines.len());
+                let mut sources = Vec::with_capacity(engines.len());
+                for _ in 0..engines.len() {
+                    let (tx, rx) = channel::<DispatchedBatch>();
+                    txs.push(tx);
+                    sources.push(BatchSource::Own(rx));
+                }
+                let router = BatchRouter::Affinity {
+                    txs,
+                    states: states.clone(),
+                    rr: AtomicUsize::new(0),
+                    metrics: Arc::clone(&metrics),
+                };
+                (router, sources)
+            }
+        };
+
         let workers = engines
             .into_iter()
+            .zip(sources)
             .enumerate()
-            .map(|(i, engine)| {
-                let rx = Arc::clone(&batch_rx);
+            .map(|(i, ((engine, _), source))| {
+                let state = Arc::clone(&states[i]);
                 let metrics = Arc::clone(&metrics);
                 let outstanding = Arc::clone(&outstanding);
                 std::thread::Builder::new()
                     .name(format!("cnnlab-engine-{i}"))
                     .spawn(move || {
-                        worker_loop(i, engine, rx, metrics, outstanding)
+                        worker_loop(
+                            i,
+                            engine,
+                            source,
+                            state,
+                            metrics,
+                            outstanding,
+                        )
                     })
                     .expect("spawn engine worker")
             })
             .collect();
 
         let sd = Arc::clone(&shutdown);
+        let leader_metrics = Arc::clone(&metrics);
         let leader = std::thread::Builder::new()
             .name("cnnlab-leader".into())
             .spawn(move || {
-                leader_loop(policy, align, rx, batch_tx, sd)
+                leader_loop(policy, align, rx, router, sd, leader_metrics)
             })
             .expect("spawn leader");
         Server {
@@ -223,6 +368,7 @@ impl Server {
             shutdown,
             leader: Some(leader),
             workers,
+            states,
         }
     }
 
@@ -237,6 +383,12 @@ impl Server {
     /// Engine workers backing this server.
     pub fn workers(&self) -> usize {
         self.workers.len()
+    }
+
+    /// Per-worker dispatcher state (routing counts, queue depth,
+    /// predicted backlog) — diagnostics for benches and tests.
+    pub fn worker_snapshots(&self) -> Vec<WorkerSnapshot> {
+        self.states.iter().map(|s| s.snapshot()).collect()
     }
 }
 
@@ -257,13 +409,14 @@ impl Drop for Server {
 }
 
 /// The leader only batches: drain the request channel, cut batches per
-/// policy, hand them to the worker pool.  It never touches an engine.
+/// policy, hand them to the router.  It never touches an engine.
 fn leader_loop(
     policy: BatchPolicy,
     align: Vec<usize>,
     rx: Receiver<Envelope>,
-    batch_tx: Sender<Vec<Envelope>>,
+    router: BatchRouter,
     shutdown: Arc<AtomicBool>,
+    metrics: Arc<ServerMetrics>,
 ) {
     let mut batcher = Batcher::with_alignment(policy, &align);
     let mut open = true;
@@ -277,16 +430,19 @@ fn leader_loop(
             }
         }
         if open {
-            // Sleep until the oldest queued request's deadline, bounded
-            // by SHUTDOWN_POLL so shutdown latency stays flat.  A
-            // deadline already in the past means a batch is ready: skip
-            // the blocking receive entirely instead of busy-spinning a
-            // zero-timeout recv.
+            // Sleep until the oldest queued request's close time
+            // (deadline, or earlier when the predictive rule will fire
+            // first), bounded by SHUTDOWN_POLL so shutdown latency
+            // stays flat.  A close time already in the past means a
+            // batch is ready: skip the blocking receive entirely
+            // instead of busy-spinning a zero-timeout recv.
             let wait = batcher
                 .next_deadline()
-                .map(|d| d.saturating_duration_since(Instant::now()))
-                .unwrap_or(SHUTDOWN_POLL)
-                .min(SHUTDOWN_POLL);
+                .map(|d| {
+                    d.saturating_duration_since(Instant::now())
+                        .min(SHUTDOWN_POLL)
+                })
+                .unwrap_or(SHUTDOWN_POLL);
             if wait.is_zero() {
                 while let Ok(env) = rx.try_recv() {
                     batcher.push(env);
@@ -312,46 +468,55 @@ fn leader_loop(
         // while this loop returns to batching
         let now = Instant::now();
         while let Some(batch) = batcher.pop_ready(now) {
-            let _ = batch_tx.send(batch);
+            router.dispatch(batch);
         }
         if !open {
             for batch in batcher.drain_all() {
-                let _ = batch_tx.send(batch);
+                router.dispatch(batch);
             }
         }
+        metrics
+            .early_closes
+            .store(batcher.early_closes(), Ordering::Relaxed);
     }
-    // batch_tx drops here: workers drain the channel, then exit
+    // router drops here (with every batch sender): workers drain their
+    // queues, then exit
 }
 
-/// One engine worker: pull closed batches, execute, reply.
+/// One engine worker: pull closed batches, execute, reply, and feed the
+/// dispatcher's latency table with observed execution times.
 fn worker_loop<E: InferenceEngine>(
     worker: usize,
     engine: E,
-    batch_rx: Arc<Mutex<Receiver<Vec<Envelope>>>>,
+    source: BatchSource,
+    state: Arc<WorkerState>,
     metrics: Arc<ServerMetrics>,
     outstanding: Arc<AtomicUsize>,
 ) {
-    loop {
-        let batch = {
-            let guard = batch_rx.lock().unwrap();
-            guard.recv()
-        };
-        match batch {
-            Ok(batch) => {
-                run_batch(&engine, batch, worker, &metrics, &outstanding)
-            }
-            Err(_) => break, // leader gone and channel drained
+    while let Some(DispatchedBatch { envs, cost_us }) = source.next() {
+        // under join-idle the leader does no per-worker accounting;
+        // register receipt here so finish() stays balanced and
+        // snapshots count batches in both modes
+        if matches!(source, BatchSource::Shared(_)) {
+            state.begin(cost_us);
         }
+        let n = envs.len();
+        let exec = run_batch(&engine, envs, worker, &metrics, &outstanding);
+        // release the predicted backlog and (on success) refine the
+        // per-artifact EWMA with the measured execution time
+        state.finish(cost_us, n, exec);
     }
 }
 
+/// Execute one batch and answer every request in it; returns the
+/// engine-reported execution time (None when the batch failed).
 fn run_batch<E: InferenceEngine>(
     engine: &E,
     batch: Vec<Envelope>,
     worker: usize,
     metrics: &ServerMetrics,
     outstanding: &AtomicUsize,
-) {
+) -> Option<Duration> {
     let formed = Instant::now();
     let n = batch.len();
     // move (never clone) each image into the stacked batch; the reply
@@ -396,6 +561,7 @@ fn run_batch<E: InferenceEngine>(
                 outstanding.fetch_sub(1, Ordering::Relaxed);
                 let _ = reply.send(Ok(resp));
             }
+            Some(out.exec)
         }
         Err(e) => {
             for (_, _, reply) in routes {
@@ -405,6 +571,7 @@ fn run_batch<E: InferenceEngine>(
                     "batch execution failed: {e}"
                 )));
             }
+            None
         }
     }
 }

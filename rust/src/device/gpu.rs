@@ -161,7 +161,8 @@ mod tests {
     fn conv4_is_the_conv_throughput_peak() {
         let gf = |l| est(l, KernelLib::CuDnn, Pass::Forward).gflops();
         for l in ["conv1", "conv2", "conv3", "conv5"] {
-            assert!(gf("conv4") >= gf(l), "{l}: {} vs {}", gf(l), gf("conv4"));
+            let (a, b) = (gf("conv4"), gf(l));
+            assert!(a >= b, "{l}: {b} vs {a}");
         }
         // conv1 (tiny K=363 GEMM) is the weakest
         for l in ["conv2", "conv3", "conv4", "conv5"] {
@@ -239,7 +240,8 @@ mod tests {
     #[test]
     fn pcie_adds_transfer_time() {
         let net = alexnet();
-        let with = GpuDevice::with_pcie(KernelLib::CuDnn, PcieModel::gen2_x8());
+        let with =
+            GpuDevice::with_pcie(KernelLib::CuDnn, PcieModel::gen2_x8());
         let without = GpuDevice::new(KernelLib::CuDnn);
         let l = net.layer("conv1").unwrap();
         let a = with.estimate(l, 8, Pass::Forward).unwrap();

@@ -64,7 +64,10 @@ mod tests {
     #[test]
     fn smaller_engines_clock_faster() {
         let t = engine_template(LayerKind::Conv);
-        assert!(fmax_mhz(LayerKind::Conv, 10) > fmax_mhz(LayerKind::Conv, t.default_pes));
+        assert!(
+            fmax_mhz(LayerKind::Conv, 10)
+                > fmax_mhz(LayerKind::Conv, t.default_pes)
+        );
     }
 
     #[test]

@@ -316,7 +316,8 @@ mod tests {
     fn table3_percentages_match_paper() {
         // Table III prints logic 73%/22%/42%/17%, DSP 63%/1%/51%/0%,
         // RAM blocks 56%/17%/25%/11%, membits 16%/8%/11%/3%.
-        let pct = |num: u64, den: u64| (num as f64 / den as f64 * 100.0).round();
+        let pct =
+            |num: u64, den: u64| (num as f64 / den as f64 * 100.0).round();
         let conv = table3_row(LayerKind::Conv);
         assert_eq!(pct(conv.alms, DE5.alms), 73.0);
         assert_eq!(pct(conv.dsp_blocks, DE5.dsp_blocks), 63.0);

@@ -10,7 +10,9 @@
 use std::time::{Duration, Instant};
 
 use cnnlab::cli::Args;
-use cnnlab::coordinator::{InferenceEngine, PjrtEngine, Server, ServerConfig};
+use cnnlab::coordinator::{
+    DeviceProfile, InferenceEngine, PjrtEngine, Server, ServerConfig,
+};
 use cnnlab::device::{Accelerator, FpgaDevice, GpuDevice};
 use cnnlab::fpga;
 use cnnlab::model::{alexnet, tinynet, Network};
@@ -88,7 +90,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
 }
 
 /// `cnnlab serve --network tinynet --requests 64 --rate 200 --max-batch 8
-///  --workers 2`
+///  --workers 2 --dispatch affinity --profiles gpu,fpga --predictive`
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let net = network_by_name(args.get_or("network", "tinynet"))?;
     let dir = args.get_or("artifacts", cnnlab::DEFAULT_ARTIFACTS_DIR);
@@ -97,6 +99,13 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let max_batch = args.get_usize("max-batch", 8)?;
     let max_wait_us = args.get_usize("max-wait-us", 2000)?;
     let workers = args.get_usize("workers", 1)?.max(1);
+    let dispatch: cnnlab::coordinator::DispatchPolicy =
+        args.get_or("dispatch", "join-idle").parse()?;
+    let predictive = args.has_flag("predictive");
+    // `--profiles gpu,fpga` tags worker i with the i-th entry (cycled):
+    // analytic GPU/FPGA cost models seed the dispatcher's latency
+    // table; `cpu` starts unmodeled and warms from measurements only
+    let profiles = args.get("profiles");
 
     let rt_manifest = cnnlab::runtime::Manifest::load(dir)?;
     let batches = rt_manifest.batches_for(&net.name);
@@ -117,16 +126,49 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     }
     let image_shape: Vec<usize> = engines[0].image_shape().to_vec();
 
-    let server = Server::spawn_pool(
-        engines,
-        ServerConfig {
-            policy: cnnlab::coordinator::BatchPolicy::new(
-                max_batch,
-                Duration::from_micros(max_wait_us as u64),
-            ),
-            queue_capacity: 256,
-        },
+    let mut policy = cnnlab::coordinator::BatchPolicy::new(
+        max_batch,
+        Duration::from_micros(max_wait_us as u64),
     );
+    if predictive {
+        policy = policy.with_predictive_close();
+    }
+    let config = ServerConfig { policy, queue_capacity: 256, dispatch };
+    let server = match profiles {
+        None => Server::spawn_pool(engines, config),
+        Some(spec) => {
+            // split(',') always yields at least one element; an empty
+            // or unknown tag fails in the match below
+            let tags: Vec<&str> =
+                spec.split(',').map(str::trim).collect();
+            let profiled = engines
+                .into_iter()
+                .enumerate()
+                .map(|(i, e)| {
+                    let profile = match tags[i % tags.len()] {
+                        "gpu" => DeviceProfile::from_accelerator(
+                            &GpuDevice::new(KernelLib::CuDnn),
+                            &net,
+                            &batches,
+                        )?,
+                        "fpga" => DeviceProfile::from_accelerator(
+                            &FpgaDevice::new(),
+                            &net,
+                            &batches,
+                        )?,
+                        "cpu" => DeviceProfile::unmodeled(
+                            cnnlab::device::DeviceKind::CpuPjrt,
+                        ),
+                        other => anyhow::bail!(
+                            "unknown profile {other:?} (gpu|fpga|cpu)"
+                        ),
+                    };
+                    Ok((e, profile))
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            Server::spawn_pool_profiled(profiled, config)
+        }
+    };
     let client = server.client();
     let mut rng = Rng::new(9);
     let t0 = Instant::now();
@@ -156,6 +198,26 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         si_time(lat.mean)
     );
     println!("mean batch size: {:.2}", m.mean_batch_size());
+    if predictive {
+        println!(
+            "early closes (predictive): {}",
+            m.early_closes.load(std::sync::atomic::Ordering::Relaxed)
+        );
+    }
+    if dispatch == cnnlab::coordinator::DispatchPolicy::Affinity {
+        println!(
+            "affinity routed: {}  cold fallbacks: {}",
+            m.affinity_routed.load(std::sync::atomic::Ordering::Relaxed),
+            m.cold_fallbacks.load(std::sync::atomic::Ordering::Relaxed)
+        );
+        for (i, s) in server.worker_snapshots().iter().enumerate() {
+            println!(
+                "  worker {i} [{}]: {} batches",
+                s.kind.name(),
+                s.dispatched
+            );
+        }
+    }
     Ok(())
 }
 

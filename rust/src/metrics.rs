@@ -102,7 +102,12 @@ mod tests {
     use super::*;
     use crate::device::LayerEstimate;
 
-    fn rec(layer: &str, kind: LayerKind, time_s: f64, power_w: f64) -> LayerRecord {
+    fn rec(
+        layer: &str,
+        kind: LayerKind,
+        time_s: f64,
+        power_w: f64,
+    ) -> LayerRecord {
         LayerRecord {
             layer: layer.into(),
             kind,

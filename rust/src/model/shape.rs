@@ -5,7 +5,12 @@
 use super::layer::{Layer, LayerSpec, Volume};
 
 /// Conv/pool output extent with floor semantics: ⌊(in + 2p − k)/s⌋ + 1.
-pub fn out_extent(input: usize, k: usize, stride: usize, pad: usize) -> usize {
+pub fn out_extent(
+    input: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+) -> usize {
     (input + 2 * pad - k) / stride + 1
 }
 

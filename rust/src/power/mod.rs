@@ -109,8 +109,11 @@ mod tests {
     #[test]
     fn cudnn_backward_power_spike_is_modeled() {
         // the Fig 8 observation: cuDNN BP draws ~1.57x cuBLAS BP power
-        let ratio = gpu_power_w(LayerKind::Fc, KernelLib::CuDnn, Pass::Backward)
-            / gpu_power_w(LayerKind::Fc, KernelLib::CuBlas, Pass::Backward);
+        let cudnn =
+            gpu_power_w(LayerKind::Fc, KernelLib::CuDnn, Pass::Backward);
+        let cublas =
+            gpu_power_w(LayerKind::Fc, KernelLib::CuBlas, Pass::Backward);
+        let ratio = cudnn / cublas;
         assert!((ratio - 1.566).abs() < 0.01, "ratio {ratio}");
     }
 
@@ -125,15 +128,18 @@ mod tests {
     fn fpga_power_far_below_gpu() {
         // the paper's headline: FPGA ~40-50x more power-frugal on conv
         let fpga = fpga_power_w(&EngineConfig::default_for(LayerKind::Conv));
-        let gpu = gpu_power_w(LayerKind::Conv, KernelLib::CuDnn, Pass::Forward);
+        let gpu =
+            gpu_power_w(LayerKind::Conv, KernelLib::CuDnn, Pass::Forward);
         let ratio = gpu / fpga;
         assert!(ratio > 35.0 && ratio < 60.0, "ratio {ratio}");
     }
 
     #[test]
     fn fpga_power_scales_with_pes() {
-        let small = fpga_power_w(&EngineConfig { kind: LayerKind::Conv, pes: 10 });
-        let big = fpga_power_w(&EngineConfig { kind: LayerKind::Conv, pes: 54 });
+        let small =
+            fpga_power_w(&EngineConfig { kind: LayerKind::Conv, pes: 10 });
+        let big =
+            fpga_power_w(&EngineConfig { kind: LayerKind::Conv, pes: 54 });
         assert!(big > small);
     }
 

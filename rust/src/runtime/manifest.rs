@@ -91,7 +91,10 @@ impl Manifest {
             .req("version")?
             .as_i64()
             .ok_or_else(|| anyhow::anyhow!("bad version"))?;
-        anyhow::ensure!(version == 1, "unsupported manifest version {version}");
+        anyhow::ensure!(
+            version == 1,
+            "unsupported manifest version {version}"
+        );
         let mut entries = Vec::new();
         for e in j
             .req("entries")?

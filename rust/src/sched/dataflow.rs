@@ -10,7 +10,9 @@
 
 use std::collections::BTreeMap;
 
-use crate::device::{Accelerator, FpgaDevice, GpuDevice, LayerEstimate, PcieModel};
+use crate::device::{
+    Accelerator, FpgaDevice, GpuDevice, LayerEstimate, PcieModel,
+};
 use crate::model::Network;
 use crate::power::KernelLib;
 use crate::runtime::Pass;
@@ -152,7 +154,9 @@ pub fn simulate(
     let mut hops = Vec::with_capacity(n_layers);
     for (li, layer) in net.layers.iter().enumerate() {
         let choice = mapping.get(&layer.name).unwrap();
-        ests.push(src.estimate(net, &layer.name, choice, batch, Pass::Forward)?);
+        ests.push(
+            src.estimate(net, &layer.name, choice, batch, Pass::Forward)?,
+        );
         let hop_s = if li > 0 {
             let prev = mapping.get(&net.layers[li - 1].name).unwrap();
             if phys(prev) != phys(choice) {

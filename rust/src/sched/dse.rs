@@ -168,7 +168,9 @@ pub fn exhaustive_by_kind(
             best = Some(cand);
         }
     }
-    best.ok_or_else(|| anyhow::anyhow!("no feasible mapping under constraints"))
+    best.ok_or_else(|| {
+        anyhow::anyhow!("no feasible mapping under constraints")
+    })
 }
 
 /// Greedy seed + single-layer hill climbing (hop-aware).

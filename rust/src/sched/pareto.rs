@@ -52,7 +52,8 @@ mod tests {
 
     #[test]
     fn frontier_filters_dominated() {
-        let pts = vec![pt(1.0, 5.0), pt(2.0, 4.0), pt(3.0, 6.0), pt(4.0, 1.0)];
+        let pts =
+            vec![pt(1.0, 5.0), pt(2.0, 4.0), pt(3.0, 6.0), pt(4.0, 1.0)];
         let f = frontier(&pts);
         let coords: Vec<(f64, f64)> = f.iter().map(|p| (p.x, p.y)).collect();
         assert_eq!(coords, vec![(1.0, 5.0), (2.0, 4.0), (4.0, 1.0)]);

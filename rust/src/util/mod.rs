@@ -8,9 +8,9 @@ pub mod stats;
 pub mod tensor;
 
 pub use json::Json;
-pub use pool::{BufferPool, ThreadPool};
+pub use pool::{BufferPool, ImagePool, ThreadPool};
 pub use rng::Rng;
-pub use stats::{Samples, Summary};
+pub use stats::{Ewma, Samples, Summary};
 pub use tensor::{Tensor, TensorView};
 
 /// Wall-clock helper used by benches and the measured-time device path.

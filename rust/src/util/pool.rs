@@ -157,6 +157,61 @@ impl BufferPool {
     }
 }
 
+/// Submit-side image recycling: request tensors drawn from a shared
+/// [`BufferPool`] instead of freshly allocated per request.  The engine
+/// returns each consumed image's buffer to the same pool after stacking
+/// (see `InferenceEngine` implementations), closing the client -> server
+/// -> client loop so a steady-state serving run allocates no per-request
+/// image memory.
+#[derive(Clone)]
+pub struct ImagePool {
+    pool: BufferPool,
+    shape: Vec<usize>,
+    elems: usize,
+}
+
+impl ImagePool {
+    /// Pool for images of the given per-request shape.  The per-class
+    /// cap is sized for a serving pipeline with up to `in_flight`
+    /// requests buffered between client and engine.
+    pub fn new(shape: &[usize], in_flight: usize) -> ImagePool {
+        ImagePool {
+            pool: BufferPool::with_capacity(in_flight.max(1)),
+            shape: shape.to_vec(),
+            elems: shape.iter().product(),
+        }
+    }
+
+    /// The underlying buffer pool — hand a clone to the engine so
+    /// consumed image buffers flow back here.
+    pub fn buffers(&self) -> BufferPool {
+        self.pool.clone()
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// A pooled image filled with N(0, scale) synthetic values (the
+    /// request generators' pattern); recycles a returned buffer when one
+    /// is idle, allocates otherwise.
+    pub fn take_randn(
+        &self,
+        rng: &mut crate::util::Rng,
+        scale: f32,
+    ) -> crate::util::Tensor {
+        let mut buf = self.pool.take(self.elems);
+        rng.fill_normal_f32(&mut buf, scale);
+        crate::util::Tensor::from_vec(&self.shape, buf)
+            .expect("pool buffer sized to shape")
+    }
+
+    /// Idle recycled image buffers (test hook).
+    pub fn idle(&self) -> usize {
+        self.pool.idle(self.elems)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -227,6 +282,21 @@ mod tests {
             pool.put(vec![0.0; 8]);
         }
         assert_eq!(pool.idle(8), 2, "per-class cap enforced");
+    }
+
+    #[test]
+    fn image_pool_recycles_request_buffers() {
+        let pool = ImagePool::new(&[3, 4, 4], 8);
+        let mut rng = crate::util::Rng::new(1);
+        let img = pool.take_randn(&mut rng, 0.1);
+        assert_eq!(img.shape(), &[3, 4, 4]);
+        assert_eq!(pool.idle(), 0);
+        // the engine-side return path: consumed image buffer comes back
+        pool.buffers().put(img.into_vec());
+        assert_eq!(pool.idle(), 1);
+        let again = pool.take_randn(&mut rng, 0.1);
+        assert_eq!(pool.idle(), 0, "second take must reuse the buffer");
+        assert_eq!(again.len(), 48);
     }
 
     #[test]

@@ -95,6 +95,50 @@ impl Samples {
     }
 }
 
+/// Exponentially weighted moving average — the online estimator behind
+/// the dispatcher's per-(worker, batch) latency table and the batcher's
+/// arrival-rate tracker.  `value()` is `None` until the first
+/// observation; the first observation seeds the average directly so a
+/// cold estimator converges in one step instead of decaying from zero.
+#[derive(Clone, Copy, Debug)]
+pub struct Ewma {
+    alpha: f64,
+    value: f64,
+    count: u64,
+}
+
+impl Ewma {
+    /// `alpha` in (0, 1]: the weight of each new observation.
+    pub fn new(alpha: f64) -> Ewma {
+        assert!(alpha > 0.0 && alpha <= 1.0, "alpha must be in (0, 1]");
+        Ewma { alpha, value: 0.0, count: 0 }
+    }
+
+    pub fn observe(&mut self, x: f64) {
+        self.value = if self.count == 0 {
+            x
+        } else {
+            self.alpha * x + (1.0 - self.alpha) * self.value
+        };
+        self.count += 1;
+    }
+
+    pub fn value(&self) -> Option<f64> {
+        (self.count > 0).then_some(self.value)
+    }
+
+    /// Observations folded in so far.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// True once at least `min_obs` observations have been folded in —
+    /// the dispatcher's warm/cold gate.
+    pub fn is_warm(&self, min_obs: u64) -> bool {
+        self.count >= min_obs
+    }
+}
+
 /// Point-in-time snapshot of a `Samples`.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Summary {
@@ -168,6 +212,34 @@ mod tests {
         // merging an empty shard is a no-op
         a.merge_from(&Samples::new());
         assert_eq!(a.len(), 5);
+    }
+
+    #[test]
+    fn ewma_first_observation_seeds() {
+        let mut e = Ewma::new(0.5);
+        assert_eq!(e.value(), None);
+        assert!(!e.is_warm(1));
+        e.observe(10.0);
+        assert_eq!(e.value(), Some(10.0));
+        e.observe(20.0);
+        assert!((e.value().unwrap() - 15.0).abs() < 1e-12);
+        assert_eq!(e.count(), 2);
+        assert!(e.is_warm(2));
+    }
+
+    #[test]
+    fn ewma_converges_to_constant_stream() {
+        let mut e = Ewma::new(0.2);
+        for _ in 0..200 {
+            e.observe(3.0);
+        }
+        assert!((e.value().unwrap() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn ewma_rejects_bad_alpha() {
+        let _ = Ewma::new(0.0);
     }
 
     #[test]

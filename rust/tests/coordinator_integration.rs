@@ -5,8 +5,8 @@ use std::sync::atomic::Ordering;
 use std::time::Duration;
 
 use cnnlab::coordinator::{
-    BatchPolicy, InferenceEngine, MockEngine, PjrtEngine, RoutePolicy,
-    Router, Server, ServerConfig,
+    BatchPolicy, DispatchPolicy, InferenceEngine, MockEngine, PjrtEngine,
+    RoutePolicy, Router, Server, ServerConfig,
 };
 use cnnlab::model::tinynet;
 use cnnlab::runtime::ExecutorService;
@@ -26,14 +26,15 @@ fn image(rng: &mut Rng) -> Tensor {
     Tensor::randn(&[3, 8, 8], rng, 0.1)
 }
 
+fn cfg(policy: BatchPolicy, queue_capacity: usize) -> ServerConfig {
+    ServerConfig { policy, queue_capacity, ..Default::default() }
+}
+
 #[test]
 fn serves_all_requests_exactly_once() {
     let server = Server::spawn(
         MockEngine::new(vec![1, 2, 4, 8]),
-        ServerConfig {
-            policy: BatchPolicy::new(4, Duration::from_millis(1)),
-            queue_capacity: 128,
-        },
+        cfg(BatchPolicy::new(4, Duration::from_millis(1)), 128),
     );
     let client = server.client();
     let mut rng = Rng::new(1);
@@ -61,10 +62,7 @@ fn batching_actually_batches_under_load() {
     engine.delay = Duration::from_millis(2);
     let server = Server::spawn(
         engine,
-        ServerConfig {
-            policy: BatchPolicy::new(8, Duration::from_millis(4)),
-            queue_capacity: 256,
-        },
+        cfg(BatchPolicy::new(8, Duration::from_millis(4)), 256),
     );
     let client = server.client();
     let mut rng = Rng::new(2);
@@ -88,10 +86,7 @@ fn engine_failure_propagates_as_errors_not_hangs() {
     engine.fail_every = 2; // every second batch call dies
     let server = Server::spawn(
         engine,
-        ServerConfig {
-            policy: BatchPolicy::immediate(),
-            queue_capacity: 64,
-        },
+        cfg(BatchPolicy::immediate(), 64),
     );
     let client = server.client();
     let mut rng = Rng::new(3);
@@ -117,10 +112,7 @@ fn backpressure_rejects_when_queue_full() {
     engine.delay = Duration::from_millis(50); // slow engine
     let server = Server::spawn(
         engine,
-        ServerConfig {
-            policy: BatchPolicy::immediate(),
-            queue_capacity: 2,
-        },
+        cfg(BatchPolicy::immediate(), 2),
     );
     let client = server.client();
     let mut rng = Rng::new(4);
@@ -151,11 +143,7 @@ fn shutdown_drains_pending_requests() {
     engine.delay = Duration::from_millis(1);
     let server = Server::spawn(
         engine,
-        ServerConfig {
-            // huge wait: only shutdown can flush the queue
-            policy: BatchPolicy::new(64, Duration::from_secs(60)),
-            queue_capacity: 64,
-        },
+        cfg(BatchPolicy::new(64, Duration::from_secs(60)), 64),
     );
     let client = server.client();
     let mut rng = Rng::new(5);
@@ -170,16 +158,60 @@ fn shutdown_drains_pending_requests() {
 }
 
 #[test]
+fn affinity_dispatch_warms_up_from_cold_and_serves_all() {
+    // unmodeled profiles: the dispatcher starts cold (join-shortest-
+    // queue fallback) and flips to affinity once every worker's EWMA
+    // has an observation for the batch size
+    let engines = vec![
+        MockEngine::new(vec![1, 2, 4, 8]),
+        MockEngine::new(vec![1, 2, 4, 8]),
+    ];
+    let server = Server::spawn_pool(
+        engines,
+        ServerConfig {
+            policy: BatchPolicy::new(4, Duration::from_millis(1)),
+            queue_capacity: 128,
+            dispatch: DispatchPolicy::Affinity,
+        },
+    );
+    let client = server.client();
+    let mut rng = Rng::new(12);
+    let mut rxs = Vec::new();
+    for _ in 0..40 {
+        rxs.push(client.submit(image(&mut rng)).unwrap());
+        std::thread::sleep(Duration::from_micros(400));
+    }
+    let mut ids = Vec::new();
+    for rx in rxs {
+        ids.push(rx.recv().unwrap().unwrap().id);
+    }
+    ids.sort();
+    ids.dedup();
+    assert_eq!(ids.len(), 40, "every request answered exactly once");
+    let m = server.metrics();
+    let cold = m.cold_fallbacks.load(Ordering::Relaxed);
+    let warm = m.affinity_routed.load(Ordering::Relaxed);
+    assert!(cold > 0, "unmodeled profiles must start cold");
+    let dispatched: u64 = server
+        .worker_snapshots()
+        .iter()
+        .map(|s| s.dispatched)
+        .sum();
+    assert_eq!(
+        dispatched,
+        cold + warm,
+        "every batch accounted to exactly one routing decision"
+    );
+}
+
+#[test]
 fn router_balances_across_backends() {
     let mk = || {
         let mut e = MockEngine::new(vec![1, 2, 4, 8]);
         e.delay = Duration::from_micros(500);
         Server::spawn(
             e,
-            ServerConfig {
-                policy: BatchPolicy::new(4, Duration::from_micros(200)),
-                queue_capacity: 64,
-            },
+            cfg(BatchPolicy::new(4, Duration::from_micros(200)), 64),
         )
     };
     let (s1, s2, s3) = (mk(), mk(), mk());
@@ -275,10 +307,7 @@ fn end_to_end_serving_on_pjrt() {
         PjrtEngine::new(svc.handle(), &net, vec![1, 2], 42).unwrap();
     let server = Server::spawn(
         engine,
-        ServerConfig {
-            policy: BatchPolicy::new(2, Duration::from_micros(300)),
-            queue_capacity: 64,
-        },
+        cfg(BatchPolicy::new(2, Duration::from_micros(300)), 64),
     );
     let client = server.client();
     let mut rng = Rng::new(8);

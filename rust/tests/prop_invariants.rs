@@ -1,9 +1,15 @@
 //! Property-based invariants over the coordinator and scheduler, via the
 //! in-repo `cnnlab::prop` framework (no proptest offline).
 
+use std::sync::atomic::AtomicUsize;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use cnnlab::coordinator::{BatchPolicy, Batcher, Envelope, Request};
+use cnnlab::coordinator::{
+    pick_worker, BatchPolicy, Batcher, DeviceProfile, DispatchPolicy,
+    Envelope, MockEngine, Request, Server, ServerConfig, WorkerState,
+};
+use cnnlab::device::DeviceKind;
 use cnnlab::fpga::{self, EngineConfig};
 use cnnlab::model::{alexnet, cost, LayerKind};
 use cnnlab::power::KernelLib;
@@ -68,6 +74,204 @@ fn prop_batcher_conserves_requests() {
                     "requests lost/duplicated/reordered: {popped:?}"
                 ));
             }
+        }
+        Ok(())
+    }));
+}
+
+/// Predictive closing is a pure latency optimization: for any arrival
+/// pattern, (1) a poll at a close instant reported by `next_deadline`
+/// always yields a batch, (2) no batch is ever popped with its oldest
+/// request waiting beyond `max_wait`, (3) whenever the batcher declines
+/// to close, the oldest wait is still within `max_wait`, and (4) every
+/// request comes back exactly once in FIFO order.
+#[test]
+fn prop_predictive_close_never_violates_max_wait() {
+    let gen = vec_of(usize_in(0, 40), usize_in(1, 50)); // gap codes
+    expect_ok(check(21, 120, &gen, |gaps: &Vec<usize>| {
+        let max_wait = Duration::from_micros(500);
+        let policy =
+            BatchPolicy::new(8, max_wait).with_predictive_close();
+        let mut b = Batcher::with_alignment(policy, &[1, 2, 4, 8]);
+        let t0 = Instant::now();
+        let (reply, _rx) = std::sync::mpsc::channel();
+        let mut popped: Vec<u64> = Vec::new();
+        let pop_all = |b: &mut Batcher,
+                       now: Instant,
+                       popped: &mut Vec<u64>|
+         -> Result<usize, String> {
+            let mut batches = 0;
+            while let Some(batch) = b.pop_ready(now) {
+                let wait = now
+                    .saturating_duration_since(batch[0].req.arrived);
+                if wait > max_wait {
+                    return Err(format!(
+                        "batch closed after {wait:?} > max_wait"
+                    ));
+                }
+                popped.extend(batch.iter().map(|e| e.req.id));
+                batches += 1;
+            }
+            Ok(batches)
+        };
+        let mut now = t0;
+        for (i, &code) in gaps.iter().enumerate() {
+            let arrive = now + Duration::from_micros((code * 20) as u64);
+            now = arrive;
+            // fire every close instant before this arrival, exactly on
+            // time (the leader sleeps until next_deadline the same way)
+            while let Some(d) = b.next_deadline() {
+                if d > arrive {
+                    break;
+                }
+                if pop_all(&mut b, d, &mut popped)? == 0 {
+                    return Err(
+                        "next_deadline poll closed nothing".into()
+                    );
+                }
+            }
+            b.push(Envelope::new(
+                Request {
+                    id: i as u64,
+                    image: Tensor::zeros(&[1]),
+                    arrived: arrive,
+                },
+                reply.clone(),
+            ));
+            pop_all(&mut b, arrive, &mut popped)?;
+            // declined close: the next scheduled close must still fall
+            // within max_wait of now (predictive may only advance it)
+            if b.pending() > 0 {
+                let d = b.next_deadline().ok_or("no deadline")?;
+                if d.saturating_duration_since(arrive) > max_wait {
+                    return Err(
+                        "next close scheduled beyond max_wait".into()
+                    );
+                }
+            }
+        }
+        // drain the tail purely via reported close instants
+        while b.pending() > 0 {
+            let d = b.next_deadline().ok_or("no deadline")?;
+            if pop_all(&mut b, d, &mut popped)? == 0 {
+                return Err("tail poll closed nothing".into());
+            }
+        }
+        let want: Vec<u64> = (0..gaps.len() as u64).collect();
+        if popped != want {
+            return Err(format!(
+                "requests lost/duplicated/reordered: {popped:?}"
+            ));
+        }
+        Ok(())
+    }));
+}
+
+/// Affinity dispatch with backlog accounting never starves a worker:
+/// whatever the batch-size mix, the cheap worker's predicted backlog
+/// grows until the expensive worker wins, so over any sustained stream
+/// (no completions at all — the worst case) every worker is eventually
+/// picked.
+#[test]
+fn prop_affinity_dispatch_never_starves() {
+    let gen = vec_of(usize_in(1, 8), usize_in(20, 60)); // batch sizes
+    expect_ok(check(22, 150, &gen, |sizes: &Vec<usize>| {
+        if sizes.len() < 20 {
+            return Ok(()); // shrunk below the sustained-load contract
+        }
+        let artifacts = [1usize, 2, 4, 8];
+        let fast = Arc::new(WorkerState::new(
+            DeviceProfile::from_seed(
+                DeviceKind::Gpu,
+                artifacts.iter().map(|&a| (a, a as f64 * 1e-3)).collect(),
+            ),
+            &artifacts,
+        ));
+        let slow = Arc::new(WorkerState::new(
+            DeviceProfile::from_seed(
+                DeviceKind::Fpga,
+                artifacts.iter().map(|&a| (a, a as f64 * 1e-2)).collect(),
+            ),
+            &artifacts,
+        ));
+        let states = vec![fast, slow];
+        let rr = AtomicUsize::new(0);
+        for &n in sizes {
+            let pick = pick_worker(&states, n, &rr);
+            if pick.cold {
+                return Err("seeded profiles must not be cold".into());
+            }
+            states[pick.worker].begin(pick.cost_us);
+        }
+        for (i, s) in states.iter().enumerate() {
+            if s.snapshot().dispatched == 0 {
+                return Err(format!(
+                    "worker {i} starved over {} batches",
+                    sizes.len()
+                ));
+            }
+        }
+        Ok(())
+    }));
+}
+
+/// End-to-end affinity serving: for any request count, heterogeneous
+/// workers and out-of-order completion, every request is answered
+/// exactly once.
+#[test]
+fn prop_affinity_every_request_answered_exactly_once() {
+    let gen = usize_in(1, 30);
+    expect_ok(check(23, 12, &gen, |&n| {
+        let flat = |delay_us: u64| -> DeviceProfile {
+            DeviceProfile::from_seed(
+                DeviceKind::CpuPjrt,
+                [1usize, 2, 4, 8]
+                    .iter()
+                    .map(|&b| (b, delay_us as f64 * 1e-6))
+                    .collect(),
+            )
+        };
+        let mut fast = MockEngine::new(vec![1, 2, 4, 8]);
+        fast.delay = Duration::from_micros(100);
+        let mut slow = MockEngine::new(vec![1, 2, 4, 8]);
+        slow.delay = Duration::from_millis(1);
+        let server = Server::spawn_pool_profiled(
+            vec![(fast, flat(100)), (slow, flat(1000))],
+            ServerConfig {
+                policy: BatchPolicy::new(
+                    4,
+                    Duration::from_micros(200),
+                ),
+                queue_capacity: 256,
+                dispatch: DispatchPolicy::Affinity,
+            },
+        );
+        let client = server.client();
+        let mut rng = Rng::new(n as u64);
+        let rxs: Vec<_> = (0..n)
+            .map(|_| {
+                client.submit(Tensor::randn(&[3, 8, 8], &mut rng, 0.1))
+            })
+            .collect::<Result<_, _>>()
+            .map_err(|e| e.to_string())?;
+        let mut ids = Vec::new();
+        for rx in rxs {
+            let resp =
+                rx.recv().map_err(|e| e.to_string())?.map_err(|e| {
+                    e.to_string()
+                })?;
+            ids.push(resp.id);
+            if rx.try_recv().is_ok() {
+                return Err("duplicate reply".into());
+            }
+        }
+        ids.sort_unstable();
+        ids.dedup();
+        if ids.len() != n {
+            return Err(format!(
+                "{} unique replies for {n} requests",
+                ids.len()
+            ));
         }
         Ok(())
     }));
