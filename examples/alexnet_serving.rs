@@ -117,7 +117,12 @@ fn main() -> anyhow::Result<()> {
             .collect::<anyhow::Result<_>>()?;
         let server = Server::spawn_pool(
             engines,
-            ServerConfig { policy, queue_capacity: 512, dispatch },
+            ServerConfig {
+                policy,
+                queue_capacity: 512,
+                dispatch,
+                ..Default::default()
+            },
         );
         let client = server.client();
         let mut rng = Rng::new(42);

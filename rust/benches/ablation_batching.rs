@@ -31,6 +31,7 @@ fn run(
             policy,
             queue_capacity: 1024,
             dispatch: DispatchPolicy::JoinIdle,
+            ..Default::default()
         },
     );
     let client = server.client();

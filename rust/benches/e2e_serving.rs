@@ -15,8 +15,8 @@
 use std::time::{Duration, Instant};
 
 use cnnlab::coordinator::{
-    BatchPolicy, CurveEngine, DispatchPolicy, MockEngine, PjrtEngine,
-    Server, ServerConfig,
+    BatchPolicy, CurveEngine, DispatchPolicy, FormationPolicy,
+    MockEngine, PjrtEngine, Server, ServerConfig,
 };
 use cnnlab::device::DeviceKind;
 use cnnlab::model::{alexnet, tinynet};
@@ -49,6 +49,7 @@ fn mock_round(
             policy,
             queue_capacity: 1024,
             dispatch: DispatchPolicy::JoinIdle,
+            ..Default::default()
         },
     );
     let client = server.client();
@@ -83,8 +84,8 @@ fn mock_round(
     (requests as f64 / wall, lat.p50(), lat.p99())
 }
 
-fn mock_pipeline_section() {
-    let requests = 400;
+fn mock_pipeline_section(smoke: bool) {
+    let requests = if smoke { 40 } else { 400 };
     let delay = Duration::from_millis(1);
     let policy = BatchPolicy::new(4, Duration::from_micros(300));
 
@@ -143,8 +144,8 @@ fn mock_pipeline_section() {
 /// Deadline-only vs predictive batch closing at a slow, steady arrival
 /// rate: the predictor learns the gap, sees the next artifact size is
 /// unreachable within `max_wait`, and stops burning the deadline.
-fn predictive_close_section() {
-    let requests = 40;
+fn predictive_close_section(smoke: bool) {
+    let requests = if smoke { 6 } else { 40 };
     let gap = Duration::from_millis(10);
     let base = BatchPolicy::new(8, Duration::from_millis(8));
     let mut t = Table::new(
@@ -168,6 +169,7 @@ fn predictive_close_section() {
                 policy,
                 queue_capacity: 256,
                 dispatch: DispatchPolicy::JoinIdle,
+                ..Default::default()
             },
         );
         let client = server.client();
@@ -204,8 +206,8 @@ fn predictive_close_section() {
 /// Mixed batch sizes over heterogeneous engines: affinity dispatch
 /// steers big batches to the throughput-shaped worker and singles to the
 /// latency-shaped one; join-idle hands them out by pull order.
-fn affinity_dispatch_section() {
-    let rounds = 8;
+fn affinity_dispatch_section(smoke: bool) {
+    let rounds = if smoke { 2 } else { 8 };
     let run = |dispatch: DispatchPolicy| -> (f64, Vec<u64>) {
         let latency_dev = CurveEngine::new(0, 4_000);
         let throughput_dev = CurveEngine::new(16_000, 0);
@@ -222,6 +224,7 @@ fn affinity_dispatch_section() {
                 policy: BatchPolicy::new(8, Duration::from_millis(2)),
                 queue_capacity: 1024,
                 dispatch,
+                ..Default::default()
             },
         );
         let client = server.client();
@@ -284,10 +287,124 @@ fn affinity_dispatch_section() {
     );
 }
 
+/// Per-class formation vs the global batcher on the mixed workload the
+/// acceptance test locks in: bursts of 8 (throughput traffic) + lone
+/// singles (latency traffic) over a latency-shaped and a
+/// throughput-shaped engine.  Formation lanes steer singles to
+/// immediate cuts on the latency device while bursts coalesce for the
+/// throughput device.
+fn per_class_formation_section(smoke: bool) {
+    let rounds = if smoke { 2 } else { 12 };
+    let run = |formation: FormationPolicy| -> (f64, f64, u64, Vec<u64>) {
+        let latency_dev = CurveEngine::latency_shaped(6_000);
+        let throughput_dev = CurveEngine::throughput_shaped(16_000);
+        let lat_profile = latency_dev.profile(DeviceKind::Gpu);
+        let tput_profile = throughput_dev.profile(DeviceKind::Fpga);
+        let server = Server::spawn_pool_profiled(
+            vec![
+                (latency_dev, lat_profile),
+                (throughput_dev, tput_profile),
+            ],
+            ServerConfig {
+                policy: BatchPolicy::new(8, Duration::from_millis(12))
+                    .with_predictive_close(),
+                queue_capacity: 1024,
+                dispatch: DispatchPolicy::Affinity,
+                formation,
+            },
+        );
+        let client = server.client();
+        let mut rng = Rng::new(13);
+        let t0 = Instant::now();
+        let mut bursts = Vec::new();
+        let mut singles = Vec::new();
+        for _ in 0..rounds {
+            for _ in 0..8 {
+                bursts.push(
+                    client
+                        .submit(Tensor::randn(&[3, 8, 8], &mut rng, 0.1))
+                        .unwrap(),
+                );
+            }
+            std::thread::sleep(Duration::from_millis(15));
+            singles.push(
+                client
+                    .submit(Tensor::randn(&[3, 8, 8], &mut rng, 0.1))
+                    .unwrap(),
+            );
+            std::thread::sleep(Duration::from_millis(15));
+        }
+        let mut burst_done = 0usize;
+        for rx in bursts {
+            rx.recv().unwrap().unwrap();
+            burst_done += 1;
+        }
+        let mut lat = Samples::new();
+        for rx in singles {
+            lat.push(rx.recv().unwrap().unwrap().latency_s);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let m = server.metrics();
+        let steered = (0..m.lanes())
+            .map(|i| {
+                m.lane(i)
+                    .steered
+                    .load(std::sync::atomic::Ordering::Relaxed)
+            })
+            .collect();
+        (
+            lat.percentile(95.0),
+            burst_done as f64 / wall,
+            m.stolen.load(std::sync::atomic::Ordering::Relaxed),
+            steered,
+        )
+    };
+    let mut t = Table::new(
+        &format!(
+            "Per-class formation — burst-8 + lone single x{rounds}, \
+             latency-dev (6ms/img) + throughput-dev (16ms flat)"
+        ),
+        &[
+            "formation",
+            "single p95",
+            "burst goodput (req/s)",
+            "stolen",
+            "steered/lane",
+        ],
+    );
+    for (label, formation) in [
+        ("global", FormationPolicy::Global),
+        ("per_class", FormationPolicy::PerClass),
+    ] {
+        let (p95, goodput, stolen, steered) = run(formation);
+        let steered: Vec<String> =
+            steered.iter().map(u64::to_string).collect();
+        t.row(&[
+            label.to_string(),
+            si_time(p95),
+            f2(goodput),
+            stolen.to_string(),
+            steered.join("/"),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "expected shape: per-class formation cuts the lone singles' p95 \
+         (immediate cuts on the latency lane) while burst goodput holds \
+         (bursts coalesce in the throughput lane).\n"
+    );
+}
+
 fn main() -> anyhow::Result<()> {
-    mock_pipeline_section();
-    predictive_close_section();
-    affinity_dispatch_section();
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    mock_pipeline_section(smoke);
+    predictive_close_section(smoke);
+    affinity_dispatch_section(smoke);
+    per_class_formation_section(smoke);
+    if smoke {
+        println!("SMOKE MODE: hermetic sections only, reduced counts");
+        return Ok(());
+    }
 
     let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
     if !std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
@@ -325,6 +442,7 @@ fn main() -> anyhow::Result<()> {
                 policy,
                 queue_capacity: 512,
                 dispatch: DispatchPolicy::JoinIdle,
+                ..Default::default()
             },
         );
         let client = server.client();

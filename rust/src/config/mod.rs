@@ -5,7 +5,9 @@ pub mod toml;
 
 use std::time::Duration;
 
-use crate::coordinator::{BatchPolicy, DispatchPolicy, ServerConfig};
+use crate::coordinator::{
+    BatchPolicy, DispatchPolicy, FormationPolicy, ServerConfig,
+};
 use crate::model::{
     Act, ConvSpec, FcSpec, Layer, LrnSpec, Network, PoolKind, PoolSpec,
     Volume,
@@ -30,6 +32,13 @@ pub struct ServingConfig {
     pub predictive_close: bool,
     /// Batch-to-worker routing: `"join-idle"` or `"affinity"`.
     pub dispatch: DispatchPolicy,
+    /// Batch formation: `"global"` (one batcher, one policy) or
+    /// `"per_class"` (one cost-model-derived lane per device class).
+    pub formation: FormationPolicy,
+    /// Path to a persisted profile state (worker EWMA latency tables +
+    /// arrival-rate estimates): loaded on startup when the file exists,
+    /// written back when a serve run completes.
+    pub profile_state: Option<String>,
 }
 
 impl Default for ServingConfig {
@@ -45,6 +54,8 @@ impl Default for ServingConfig {
             seed: 42,
             predictive_close: false,
             dispatch: DispatchPolicy::JoinIdle,
+            formation: FormationPolicy::Global,
+            profile_state: None,
         }
     }
 }
@@ -65,6 +76,7 @@ impl ServingConfig {
             policy: self.policy(),
             queue_capacity: self.queue_capacity,
             dispatch: self.dispatch,
+            formation: self.formation,
         }
     }
 
@@ -113,6 +125,15 @@ impl ServingConfig {
             }
             if let Some(v) = t.get("dispatch").and_then(TomlValue::as_str) {
                 cfg.dispatch = v.parse()?;
+            }
+            if let Some(v) = t.get("formation").and_then(TomlValue::as_str)
+            {
+                cfg.formation = v.parse()?;
+            }
+            if let Some(v) =
+                t.get("profile_state").and_then(TomlValue::as_str)
+            {
+                cfg.profile_state = Some(v.to_string());
             }
         }
         Ok(cfg)
@@ -345,6 +366,33 @@ mod tests {
     fn serving_rejects_unknown_dispatch() {
         let doc =
             parse_toml("[serving]\ndispatch = \"magic\"").unwrap();
+        assert!(ServingConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn serving_formation_and_profile_state_knobs() {
+        let doc = parse_toml(
+            r#"
+            [serving]
+            formation = "per_class"
+            profile_state = "/tmp/state.json"
+        "#,
+        )
+        .unwrap();
+        let cfg = ServingConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.formation, FormationPolicy::PerClass);
+        assert_eq!(cfg.profile_state.as_deref(), Some("/tmp/state.json"));
+        assert_eq!(
+            cfg.server_config().formation,
+            FormationPolicy::PerClass
+        );
+        // defaults: global formation, no persistence
+        let cfg = ServingConfig::default();
+        assert_eq!(cfg.formation, FormationPolicy::Global);
+        assert!(cfg.profile_state.is_none());
+        // unknown formation strings are rejected
+        let doc =
+            parse_toml("[serving]\nformation = \"chaotic\"").unwrap();
         assert!(ServingConfig::from_toml(&doc).is_err());
     }
 

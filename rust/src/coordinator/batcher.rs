@@ -144,6 +144,21 @@ impl Batcher {
         }
     }
 
+    /// Raw arrival-rate estimator state `(mean gap seconds, observation
+    /// count)`, un-warm-gated — what profile persistence serializes.
+    pub fn gap_snapshot(&self) -> Option<(f64, u64)> {
+        self.gap.value().map(|g| (g, self.gap.count()))
+    }
+
+    /// Restore a persisted arrival-rate estimate (warm redeploys skip
+    /// the cold deadline-only phase).  Ignored when `obs` is zero or
+    /// the gap is not a finite non-negative number.
+    pub fn preload_gap(&mut self, gap_s: f64, obs: u64) {
+        if obs > 0 && gap_s.is_finite() && gap_s >= 0.0 {
+            self.gap = Ewma::preloaded(GAP_ALPHA, gap_s, obs);
+        }
+    }
+
     /// The next count at which a closing batch would use a *larger*
     /// artifact: the smallest aligned size (capped by `max_batch`)
     /// strictly above the current queue depth, else `max_batch` itself.
@@ -250,13 +265,19 @@ impl Batcher {
         Some(self.queue.drain(..n).collect())
     }
 
-    /// Flush everything (shutdown path), in max_batch chunks.
+    /// Flush everything (shutdown / lane-reset path), in max_batch
+    /// chunks.  Also clears `last_arrival`: the stream is interrupted,
+    /// so the next push must not observe an artificial gap spanning the
+    /// drain pause (which would poison the rate estimate the predictive
+    /// close and profile persistence rely on).  The learned gap EWMA
+    /// itself is kept.
     pub fn drain_all(&mut self) -> Vec<Vec<Envelope>> {
         let mut out = Vec::new();
         while !self.queue.is_empty() {
             let n = self.cut(self.queue.len().min(self.policy.max_batch));
             out.push(self.queue.drain(..n).collect());
         }
+        self.last_arrival = None;
         out
     }
 
@@ -556,6 +577,67 @@ mod tests {
             let _ = b.pop_ready(t0 + gap * i as u32);
         }
         assert_eq!(b.early_closes(), 0);
+    }
+
+    #[test]
+    fn zero_wait_deadline_is_the_arrival_instant_and_clears() {
+        // immediate-style policies (max_wait == ZERO) must report the
+        // arrival itself as the close instant, close at that instant,
+        // and leave no stale deadline behind once the queue empties
+        let mut b = Batcher::new(BatchPolicy::immediate());
+        assert!(b.next_deadline().is_none());
+        let t0 = Instant::now();
+        b.push(env(1, t0));
+        assert_eq!(b.next_deadline(), Some(t0));
+        assert_eq!(b.pop_ready(t0).unwrap().len(), 1);
+        assert!(b.next_deadline().is_none(), "stale deadline after pop");
+        // a later push tracks the new arrival, not the old one
+        let t1 = t0 + Duration::from_millis(30);
+        b.push(env(2, t1));
+        assert_eq!(b.next_deadline(), Some(t1));
+        assert_eq!(b.pop_ready(t1).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn drain_all_resets_arrival_tracking() {
+        // predictive batcher: the estimator warms on a steady 10ms
+        // stream, the queue is force-drained, and the next arrival an
+        // hour later must NOT be observed as a 1-hour gap (which would
+        // wreck the persisted rate estimate and the predictive close)
+        let mut b = Batcher::with_alignment(
+            BatchPolicy::new(8, Duration::from_millis(15))
+                .with_predictive_close(),
+            &[1, 2, 4, 8],
+        );
+        let t0 = Instant::now();
+        let gap = Duration::from_millis(10);
+        for i in 0..4u64 {
+            b.push(env(i, t0 + gap * i as u32));
+        }
+        let before = b.mean_gap().unwrap();
+        assert!(!b.drain_all().is_empty());
+        assert!(b.next_deadline().is_none(), "stale deadline after drain");
+        b.push(env(9, t0 + Duration::from_secs(3600)));
+        let after = b.mean_gap().unwrap();
+        assert_eq!(before, after, "drain pause observed as a gap");
+    }
+
+    #[test]
+    fn preloaded_gap_warms_the_predictor_immediately() {
+        // a persisted 20ms-gap estimate against a 15ms budget: the very
+        // first request closes early instead of replaying the cold
+        // deadline-only phase
+        let mut b = Batcher::with_alignment(
+            BatchPolicy::new(8, Duration::from_millis(15))
+                .with_predictive_close(),
+            &[1, 2, 4, 8],
+        );
+        b.preload_gap(0.020, 5);
+        assert_eq!(b.gap_snapshot(), Some((0.020, 5)));
+        let t0 = Instant::now();
+        b.push(env(0, t0));
+        assert_eq!(b.pop_ready(t0).unwrap().len(), 1);
+        assert_eq!(b.early_closes(), 1);
     }
 
     #[test]

@@ -150,13 +150,18 @@ pub struct WorkerState {
     dispatched: AtomicU64,
 }
 
-/// Read-only view of a worker's dispatcher state.
-#[derive(Clone, Copy, Debug)]
+/// Read-only view of a worker's dispatcher state, including the online
+/// per-artifact latency table — what `serve`'s periodic report prints
+/// and what profile persistence serializes.
+#[derive(Clone, Debug)]
 pub struct WorkerSnapshot {
     pub kind: DeviceKind,
     pub dispatched: u64,
     pub queued: usize,
     pub backlog_us: u64,
+    /// `(artifact batch, EWMA exec seconds, observations)`, ascending
+    /// by batch.
+    pub exec_table: Vec<(usize, f64, u64)>,
 }
 
 impl WorkerState {
@@ -172,6 +177,43 @@ impl WorkerState {
             queued: AtomicUsize::new(0),
             uncosted: AtomicUsize::new(0),
             dispatched: AtomicU64::new(0),
+        }
+    }
+
+    /// The device profile this worker was spawned with.
+    pub fn profile(&self) -> &DeviceProfile {
+        &self.profile
+    }
+
+    /// Dispatched-but-not-completed batches (the cold-fallback queue
+    /// depth signal), without the allocation `snapshot()` carries.
+    pub fn queue_depth(&self) -> usize {
+        self.queued.load(Ordering::Relaxed)
+    }
+
+    /// Compiled artifact batch sizes, ascending.
+    pub fn artifacts(&self) -> &[usize] {
+        &self.artifacts
+    }
+
+    /// Cost-curvature of the *current* estimates: per-image predicted
+    /// time at the largest artifact over per-image time at the
+    /// smallest.  Prefers the observed EWMA table (so persisted
+    /// profiles classify measured devices too) and falls back to the
+    /// analytic seed via [`WorkerState::predict_us`].  `None` while
+    /// both ends are cold.
+    pub fn curvature(&self) -> Option<f64> {
+        let &lo = self.artifacts.first()?;
+        let &hi = self.artifacts.last()?;
+        if lo == hi {
+            return Some(1.0);
+        }
+        let cpi_lo = self.predict_us(lo)? as f64 / lo as f64;
+        let cpi_hi = self.predict_us(hi)? as f64 / hi as f64;
+        if cpi_lo > 0.0 {
+            Some(cpi_hi / cpi_lo)
+        } else {
+            None
         }
     }
 
@@ -198,6 +240,55 @@ impl WorkerState {
             .and_then(Ewma::value);
         ewma.or_else(|| self.profile.seed_exec_s(artifact))
             .map(|s| (s * 1e6).max(0.0) as u64)
+    }
+
+    /// Predicted *completion* time in µs for a batch of `n` landing on
+    /// this worker now: predicted backlog plus predicted execution,
+    /// with cold-dispatched in-flight batches charged at the current
+    /// prediction (the same key [`pick_worker`] minimizes).  `None`
+    /// while the execution estimate is cold.  This is the admission-
+    /// time estimate lane steering and work-stealing reuse, so routing
+    /// and formation agree on what "expensive" means.
+    pub fn predicted_completion_us(&self, n: usize) -> Option<u64> {
+        let exec = self.predict_us(n)?;
+        let uncosted = self.uncosted.load(Ordering::Relaxed) as u64;
+        Some(
+            self.backlog_us
+                .load(Ordering::Relaxed)
+                .saturating_add(exec.saturating_mul(1 + uncosted)),
+        )
+    }
+
+    /// The online latency table as `(artifact, EWMA seconds,
+    /// observations)` rows, ascending by artifact — the persistence
+    /// export.
+    pub fn export_table(&self) -> Vec<(usize, f64, u64)> {
+        let mut rows: Vec<(usize, f64, u64)> = self
+            .table
+            .lock()
+            .unwrap()
+            .iter()
+            .filter_map(|(&b, e)| e.value().map(|v| (b, v, e.count())))
+            .collect();
+        rows.sort_unstable_by_key(|&(b, _, _)| b);
+        rows
+    }
+
+    /// Restore persisted latency-table rows (warm redeploys skip the
+    /// join-shortest-queue cold phase).  Rows with no observations, a
+    /// non-positive estimate, or a non-finite value are ignored; live
+    /// observations made after the preload keep folding in as usual.
+    pub fn preload_table(&self, rows: &[(usize, f64, u64)]) {
+        let mut table = self.table.lock().unwrap();
+        for &(batch, exec_s, obs) in rows {
+            if batch > 0 && obs > 0 && exec_s.is_finite() && exec_s > 0.0
+            {
+                table.insert(
+                    batch,
+                    Ewma::preloaded(EXEC_ALPHA, exec_s, obs),
+                );
+            }
+        }
     }
 
     /// Leader-side accounting at dispatch time.
@@ -255,6 +346,7 @@ impl WorkerState {
             dispatched: self.dispatched.load(Ordering::Relaxed),
             queued: self.queued.load(Ordering::Relaxed),
             backlog_us: self.backlog_us.load(Ordering::Relaxed),
+            exec_table: self.export_table(),
         }
     }
 }
@@ -311,13 +403,11 @@ pub fn pick_worker(
     let all_warm = preds.iter().all(Option::is_some);
     let worker = rotating_argmin(states.len(), rr, |i| {
         if all_warm {
-            // batches dispatched cold carry no backlog cost; approximate
-            // each with this batch's prediction so the warm-up handover
-            // doesn't pile work onto an already-loaded worker
-            let uncosted =
-                states[i].uncosted.load(Ordering::Relaxed) as u64;
-            states[i].backlog_us.load(Ordering::Relaxed)
-                + preds[i].unwrap_or(0) * (1 + uncosted)
+            // completion estimate = backlog + predicted exec, with
+            // cold-dispatched batches charged at the prediction so the
+            // warm-up handover doesn't pile work onto an already-loaded
+            // worker (see WorkerState::predicted_completion_us)
+            states[i].predicted_completion_us(n).unwrap_or(u64::MAX)
         } else {
             states[i].queued.load(Ordering::Relaxed) as u64
         }
@@ -431,6 +521,70 @@ mod tests {
         let p0 = pick_worker(&workers, 4, &rr);
         let p1 = pick_worker(&workers, 4, &rr);
         assert_ne!(p0.worker, p1.worker);
+    }
+
+    #[test]
+    fn curvature_separates_device_shapes() {
+        // flat total cost (16ms regardless of batch): per-image cost
+        // collapses with batch size -> strongly throughput-shaped
+        let tput = state(vec![(1, 0.016), (8, 0.016)]);
+        assert!((tput.curvature().unwrap() - 0.125).abs() < 1e-12);
+        // linear total cost: per-image cost flat -> latency-shaped
+        let lat = state(vec![(1, 0.006), (8, 0.048)]);
+        assert!((lat.curvature().unwrap() - 1.0).abs() < 1e-12);
+        // no seed, no observations: unclassifiable
+        let cold = Arc::new(WorkerState::new(
+            DeviceProfile::unmodeled(DeviceKind::CpuPjrt),
+            &[1, 2, 4, 8],
+        ));
+        assert_eq!(cold.curvature(), None);
+        // observed EWMA overrides the seed: b=8 measured at the b=1
+        // cost flips a latency-shaped seed to throughput-shaped
+        lat.finish(0, 8, Some(Duration::from_millis(6)));
+        assert!(lat.curvature().unwrap() < 0.2);
+    }
+
+    #[test]
+    fn predicted_completion_is_backlog_plus_exec() {
+        let s = state(vec![(1, 0.010), (8, 0.010)]);
+        assert_eq!(s.predicted_completion_us(4), Some(10_000));
+        s.begin(7_000);
+        assert_eq!(s.predicted_completion_us(4), Some(17_000));
+        // a cold-dispatched in-flight batch is charged at the prediction
+        s.begin(0);
+        assert_eq!(s.predicted_completion_us(4), Some(27_000));
+        assert_eq!(
+            Arc::new(WorkerState::new(
+                DeviceProfile::unmodeled(DeviceKind::CpuPjrt),
+                &[1, 8],
+            ))
+            .predicted_completion_us(4),
+            None
+        );
+    }
+
+    #[test]
+    fn table_export_preload_roundtrip() {
+        let a = state(vec![]);
+        a.finish(0, 4, Some(Duration::from_millis(12)));
+        a.finish(0, 1, Some(Duration::from_millis(3)));
+        let rows = a.export_table();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].0, 1, "rows sorted by artifact");
+        // a fresh unmodeled worker preloaded with the rows predicts
+        // identically — the warm-redeploy contract
+        let b = Arc::new(WorkerState::new(
+            DeviceProfile::unmodeled(DeviceKind::CpuPjrt),
+            &[1, 2, 4, 8],
+        ));
+        assert_eq!(b.predict_us(4), None);
+        b.preload_table(&rows);
+        assert_eq!(b.predict_us(4), a.predict_us(4));
+        assert_eq!(b.predict_us(1), a.predict_us(1));
+        // junk rows are ignored
+        b.preload_table(&[(0, 1.0, 5), (2, f64::NAN, 5), (2, -1.0, 5)]);
+        assert_eq!(b.predict_us(2), None);
+        assert_eq!(b.snapshot().exec_table, b.export_table());
     }
 
     #[test]

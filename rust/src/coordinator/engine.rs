@@ -393,6 +393,20 @@ impl CurveEngine {
         CurveEngine { base_us, per_img_us, batches: vec![1, 2, 4, 8] }
     }
 
+    /// The latency-shaped half of the paper's trade-off in miniature:
+    /// no fixed cost, `per_img_us` per image — cost-per-image is flat,
+    /// so batching buys nothing and formation should cut immediately.
+    pub fn latency_shaped(per_img_us: u64) -> CurveEngine {
+        CurveEngine::new(0, per_img_us)
+    }
+
+    /// The throughput-shaped half: `base_us` per dispatch regardless of
+    /// batch size — cost-per-image falls steeply with batch, so
+    /// formation should hold out for large aligned cuts.
+    pub fn throughput_shaped(base_us: u64) -> CurveEngine {
+        CurveEngine::new(base_us, 0)
+    }
+
     /// Override the compiled artifact batch sizes.
     pub fn with_batches(mut self, batches: Vec<usize>) -> CurveEngine {
         assert!(!batches.is_empty());

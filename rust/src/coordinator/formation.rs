@@ -1,0 +1,785 @@
+//! Per-device-class batch formation — the paper's trade-off tables
+//! applied to *when batches are cut*, not just where they run.
+//!
+//! PR 2 made dispatch cost-model-aware, but one global [`Batcher`] still
+//! cut one stream with one policy: a latency-shaped worker (cost linear
+//! in batch — batching buys nothing per image) and a throughput-shaped
+//! worker (large fixed cost amortized by batching) were fed
+//! identically-sized batches.  Here the leader owns a [`LaneSet`]
+//! instead: a [`FormationPlan`] derives one *lane* per device class from
+//! the workers' cost models — `immediate()`-style cuts for flat
+//! cost-per-image profiles, large aligned cuts for steep ones — and
+//! requests are steered to lanes at admission by predicted completion
+//! time (the same backlog + predicted-exec estimate `pick_worker`
+//! minimizes at dispatch).  Work-stealing at dispatch keeps any class
+//! from starving when its own workers saturate.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::batcher::{BatchPolicy, Batcher};
+use super::dispatch::{rotating_argmin, WorkerState};
+use super::metrics::ServerMetrics;
+use super::persist::ArrivalState;
+use super::request::Envelope;
+
+/// Curvature (per-image cost at the largest artifact over per-image
+/// cost at the smallest) at or below which a worker counts as
+/// throughput-shaped: batching to the largest artifact must at least
+/// halve the per-image cost to justify holding requests back.
+const THROUGHPUT_CURVATURE: f64 = 0.5;
+
+/// Work-stealing hysteresis: a batch leaves its own lane's workers only
+/// when some foreign-class worker predicts completion at least this
+/// many times sooner.  Keeps batch shapes on matching silicon in steady
+/// state while still unblocking a saturated class.
+const STEAL_ADVANTAGE: u64 = 2;
+
+/// How the leader forms batches from the request stream.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum FormationPolicy {
+    /// One global batcher, one policy (PR 2 behaviour, the default).
+    #[default]
+    Global,
+    /// One batcher lane per device class, each with a policy derived
+    /// from that class's cost model; requests steered by predicted
+    /// completion time, with work-stealing between lanes.
+    PerClass,
+}
+
+impl FormationPolicy {
+    pub fn name(self) -> &'static str {
+        match self {
+            FormationPolicy::Global => "global",
+            FormationPolicy::PerClass => "per_class",
+        }
+    }
+}
+
+impl std::str::FromStr for FormationPolicy {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<FormationPolicy> {
+        match s {
+            "global" => Ok(FormationPolicy::Global),
+            "per_class" | "per-class" => Ok(FormationPolicy::PerClass),
+            other => anyhow::bail!(
+                "unknown formation policy {other:?} (global|per_class)"
+            ),
+        }
+    }
+}
+
+/// The device class a lane serves, by cost-curve shape.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LaneClass {
+    /// Flat cost-per-image (e.g. the paper's GPU on small nets): batches
+    /// don't amortize anything, so cuts are immediate.
+    Latency,
+    /// Steeply falling cost-per-image (fixed dispatch cost dominates,
+    /// e.g. the FPGA engines): cuts wait for large aligned batches.
+    Throughput,
+    /// No cost estimate yet (unmodeled, unobserved): keeps the
+    /// user-configured base policy.
+    Unclassified,
+}
+
+impl LaneClass {
+    pub fn name(self) -> &'static str {
+        match self {
+            LaneClass::Latency => "latency",
+            LaneClass::Throughput => "throughput",
+            LaneClass::Unclassified => "unclassified",
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            LaneClass::Latency => 0,
+            LaneClass::Throughput => 1,
+            LaneClass::Unclassified => 2,
+        }
+    }
+
+    const ALL: [LaneClass; 3] = [
+        LaneClass::Latency,
+        LaneClass::Throughput,
+        LaneClass::Unclassified,
+    ];
+}
+
+/// One lane of the plan: which workers it serves and how it cuts.
+#[derive(Clone, Debug)]
+pub struct LaneSpec {
+    pub class: LaneClass,
+    pub policy: BatchPolicy,
+    /// Artifact sizes compiled on *every* worker of the lane (safe
+    /// alignment targets for its cuts).
+    pub align: Vec<usize>,
+    /// Global worker indices served by this lane.
+    pub workers: Vec<usize>,
+}
+
+/// The per-class formation layout derived from the workers' cost
+/// models.
+#[derive(Clone, Debug)]
+pub struct FormationPlan {
+    pub lanes: Vec<LaneSpec>,
+}
+
+impl FormationPlan {
+    /// Group `states` by cost-curve class and derive each lane's batch
+    /// policy from `base`:
+    ///
+    /// * **latency** lanes cut immediately (`BatchPolicy::immediate`) —
+    ///   with flat cost-per-image, holding a request only adds wait;
+    /// * **throughput** lanes keep the base deadline/size dial, with
+    ///   `max_batch` clamped to the smallest "largest compiled
+    ///   artifact" among the lane's workers;
+    /// * **unclassified** lanes keep the base policy unchanged.
+    pub fn derive(
+        base: BatchPolicy,
+        states: &[Arc<WorkerState>],
+    ) -> FormationPlan {
+        assert!(!states.is_empty(), "formation plan needs workers");
+        let mut groups: [Vec<usize>; 3] = Default::default();
+        for (i, s) in states.iter().enumerate() {
+            let class = match s.curvature() {
+                Some(c) if c <= THROUGHPUT_CURVATURE => {
+                    LaneClass::Throughput
+                }
+                Some(_) => LaneClass::Latency,
+                None => LaneClass::Unclassified,
+            };
+            groups[class.index()].push(i);
+        }
+        let mut lanes = Vec::new();
+        for class in LaneClass::ALL {
+            let members = &groups[class.index()];
+            if members.is_empty() {
+                continue;
+            }
+            let mut align: Vec<usize> =
+                states[members[0]].artifacts().to_vec();
+            align.retain(|a| {
+                members
+                    .iter()
+                    .all(|&m| states[m].artifacts().contains(a))
+            });
+            let policy = match class {
+                LaneClass::Latency => BatchPolicy::immediate(),
+                LaneClass::Throughput | LaneClass::Unclassified => {
+                    let mut p = base;
+                    let cap = members
+                        .iter()
+                        .filter_map(|&m| {
+                            states[m].artifacts().last().copied()
+                        })
+                        .min();
+                    if let Some(cap) = cap {
+                        p.max_batch = p.max_batch.min(cap);
+                    }
+                    p
+                }
+            };
+            lanes.push(LaneSpec {
+                class,
+                policy,
+                align,
+                workers: members.clone(),
+            });
+        }
+        FormationPlan { lanes }
+    }
+
+    /// Lane classes in lane order (diagnostics / persistence labels).
+    pub fn classes(&self) -> Vec<LaneClass> {
+        self.lanes.iter().map(|l| l.class).collect()
+    }
+}
+
+/// A closed batch in flight to a worker: the envelopes plus the
+/// predicted execution cost charged to that worker's backlog (0 under
+/// join-idle dispatch or a cold estimate).
+pub(crate) struct DispatchedBatch {
+    pub(crate) envs: Vec<Envelope>,
+    pub(crate) cost_us: u64,
+}
+
+struct Lane {
+    class: LaneClass,
+    batcher: Batcher,
+    /// Global worker indices this lane prefers.
+    workers: Vec<usize>,
+}
+
+/// The leader's per-class replacement for the single global batcher:
+/// one [`Batcher`] per lane, admission-time steering, work-stealing
+/// dispatch, and a min-heap wakeup over the lanes' close instants.
+pub struct LaneSet {
+    lanes: Vec<Lane>,
+    states: Vec<Arc<WorkerState>>,
+    txs: Vec<Sender<DispatchedBatch>>,
+    rr: AtomicUsize,
+    metrics: Arc<ServerMetrics>,
+    /// Newest admission seen — yields the *instantaneous* inter-arrival
+    /// gap steering uses to tell burst members (gap ~ 0: the batch will
+    /// fill, formation wait ~ 0) from isolated requests (gap >> 0: a
+    /// throughput lane would hold them for the full deadline).
+    last_admission: Option<Instant>,
+}
+
+impl LaneSet {
+    pub(crate) fn new(
+        plan: FormationPlan,
+        states: Vec<Arc<WorkerState>>,
+        txs: Vec<Sender<DispatchedBatch>>,
+        metrics: Arc<ServerMetrics>,
+    ) -> LaneSet {
+        assert!(!plan.lanes.is_empty(), "lane set needs lanes");
+        assert_eq!(states.len(), txs.len());
+        assert!(metrics.lanes() >= plan.lanes.len());
+        let lanes = plan
+            .lanes
+            .into_iter()
+            .map(|spec| Lane {
+                class: spec.class,
+                batcher: Batcher::with_alignment(spec.policy, &spec.align),
+                workers: spec.workers,
+            })
+            .collect();
+        LaneSet {
+            lanes,
+            states,
+            txs,
+            rr: AtomicUsize::new(0),
+            metrics,
+            last_admission: None,
+        }
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    pub fn lane_class(&self, lane: usize) -> LaneClass {
+        self.lanes[lane].class
+    }
+
+    /// Requests queued in one lane's batcher.
+    pub fn lane_pending(&self, lane: usize) -> usize {
+        self.lanes[lane].batcher.pending()
+    }
+
+    /// Requests queued across all lanes.
+    pub fn pending(&self) -> usize {
+        self.lanes.iter().map(|l| l.batcher.pending()).sum()
+    }
+
+    /// Early closes summed across lanes.
+    pub fn early_closes(&self) -> u64 {
+        self.lanes.iter().map(|l| l.batcher.early_closes()).sum()
+    }
+
+    /// Restore persisted per-lane arrival-rate estimates, matched by
+    /// lane class name (see `coordinator::persist`).
+    pub fn preload_arrivals(&mut self, arrivals: &[ArrivalState]) {
+        for lane in &mut self.lanes {
+            if let Some(a) = arrivals
+                .iter()
+                .find(|a| a.lane == lane.class.name())
+            {
+                lane.batcher.preload_gap(a.gap_s, a.obs);
+            }
+        }
+    }
+
+    /// Steer a request to a lane and queue it there.
+    pub fn push(&mut self, env: Envelope) {
+        let arrived = env.req.arrived;
+        let gap = self
+            .last_admission
+            .map(|prev| arrived.saturating_duration_since(prev));
+        self.last_admission = Some(arrived);
+        let lane = self.steer(arrived, gap);
+        self.metrics
+            .lane(lane)
+            .steered
+            .fetch_add(1, Ordering::Relaxed);
+        self.lanes[lane].batcher.push(env);
+    }
+
+    /// Predicted completion for a request admitted to `lane` now: the
+    /// formation wait the lane would impose (how long until its batch
+    /// closes, given the instantaneous arrival gap) plus the best
+    /// backlog + predicted-exec completion among the lane's workers for
+    /// the batch the request is predicted to ride in.  `None` while
+    /// every worker of the lane is cold.
+    fn lane_estimate_us(
+        &self,
+        lane: &Lane,
+        arrived: Instant,
+        inst_gap: Option<Duration>,
+    ) -> Option<u64> {
+        let pending = lane.batcher.pending();
+        let policy = lane.batcher.policy();
+        let remaining =
+            policy.max_batch.saturating_sub(pending + 1) as u64;
+        let max_wait_us = policy.max_wait.as_micros() as u64;
+        let (mut wait_us, close_n) = if remaining == 0 {
+            // the batch closes on size at this push
+            (0, pending + 1)
+        } else {
+            match inst_gap {
+                Some(g) => {
+                    let fill_us = (g.as_micros() as u64)
+                        .saturating_mul(remaining);
+                    if fill_us <= max_wait_us {
+                        // the stream is expected to fill the batch
+                        // before the deadline
+                        (fill_us, policy.max_batch.max(pending + 1))
+                    } else {
+                        (max_wait_us, pending + 1)
+                    }
+                }
+                None => (max_wait_us, pending + 1),
+            }
+        };
+        // an already-open batch bounds the wait by its actual close
+        // instant (deadline- and predictive-aware): a request joining
+        // a batch 11ms into a 12ms deadline waits ~1ms, not max_wait
+        if let Some(close_at) = lane.batcher.next_deadline() {
+            let left = close_at
+                .saturating_duration_since(arrived)
+                .as_micros() as u64;
+            wait_us = wait_us.min(left);
+        }
+        let exec = lane
+            .workers
+            .iter()
+            .filter_map(|&g| {
+                self.states[g].predicted_completion_us(close_n)
+            })
+            .min()?;
+        Some(wait_us.saturating_add(exec))
+    }
+
+    /// Pick the lane minimizing the admission-time completion estimate;
+    /// while any lane is still cold, fall back to joining the
+    /// shallowest lane per worker (the formation-level analogue of the
+    /// dispatcher's join-shortest-queue cold phase).
+    fn steer(&self, arrived: Instant, inst_gap: Option<Duration>) -> usize {
+        if self.lanes.len() == 1 {
+            return 0;
+        }
+        let ests: Vec<Option<u64>> = self
+            .lanes
+            .iter()
+            .map(|lane| self.lane_estimate_us(lane, arrived, inst_gap))
+            .collect();
+        if ests.iter().all(Option::is_some) {
+            let mut best = 0;
+            let mut best_est = ests[0].unwrap();
+            for (i, est) in ests.iter().enumerate().skip(1) {
+                let est = est.unwrap();
+                if est < best_est {
+                    best = i;
+                    best_est = est;
+                }
+            }
+            best
+        } else {
+            let mut best = 0;
+            let mut best_key = u64::MAX;
+            for (i, lane) in self.lanes.iter().enumerate() {
+                let depth: usize = lane.batcher.pending()
+                    + lane
+                        .workers
+                        .iter()
+                        .map(|&g| self.states[g].queue_depth())
+                        .sum::<usize>();
+                let key = (depth as u64 * 1024)
+                    / lane.workers.len().max(1) as u64;
+                if key < best_key {
+                    best = i;
+                    best_key = key;
+                }
+            }
+            best
+        }
+    }
+
+    /// Close and dispatch every ready batch across the lanes.
+    pub fn dispatch_ready(&mut self, now: Instant) {
+        for li in 0..self.lanes.len() {
+            while let Some(batch) =
+                self.lanes[li].batcher.pop_ready(now)
+            {
+                self.dispatch(li, batch);
+            }
+        }
+    }
+
+    /// Flush every lane (shutdown path) through the dispatcher.
+    pub fn drain_dispatch(&mut self) {
+        for li in 0..self.lanes.len() {
+            let batches = self.lanes[li].batcher.drain_all();
+            for batch in batches {
+                self.dispatch(li, batch);
+            }
+        }
+    }
+
+    /// Route one closed batch: best worker of its own lane by predicted
+    /// completion time, unless a foreign-class worker predicts at least
+    /// [`STEAL_ADVANTAGE`]x sooner completion (work-stealing — the
+    /// saturated-class relief valve).  Only the lane's own workers gate
+    /// the warm path — a cold worker elsewhere in the pool merely drops
+    /// out of the steal candidates — and while any *lane* worker is
+    /// cold, the lane falls back to join-shortest-queue among its own.
+    fn dispatch(&self, li: usize, envs: Vec<Envelope>) {
+        let n = envs.len();
+        let lane = &self.lanes[li];
+        let lane_warm = lane
+            .workers
+            .iter()
+            .all(|&g| self.states[g].predict_us(n).is_some());
+        let target = if lane_warm {
+            let own_k = rotating_argmin(
+                lane.workers.len(),
+                &self.rr,
+                |k| {
+                    self.states[lane.workers[k]]
+                        .predicted_completion_us(n)
+                        .unwrap_or(u64::MAX)
+                },
+            );
+            let own = lane.workers[own_k];
+            let own_cost = self.states[own]
+                .predicted_completion_us(n)
+                .unwrap_or(u64::MAX);
+            let foreign = (0..self.states.len())
+                .filter(|g| !lane.workers.contains(g))
+                .filter_map(|g| {
+                    self.states[g]
+                        .predicted_completion_us(n)
+                        .map(|c| (c, g))
+                })
+                .min();
+            match foreign {
+                Some((cost, g))
+                    if cost.saturating_mul(STEAL_ADVANTAGE)
+                        < own_cost =>
+                {
+                    self.metrics.stolen.fetch_add(1, Ordering::Relaxed);
+                    g
+                }
+                _ => own,
+            }
+        } else {
+            let k = rotating_argmin(lane.workers.len(), &self.rr, |k| {
+                self.states[lane.workers[k]].queue_depth() as u64
+            });
+            lane.workers[k]
+        };
+        let cost_us = if lane_warm {
+            self.states[target].predict_us(n).unwrap_or(0)
+        } else {
+            0
+        };
+        let counter = if lane_warm {
+            &self.metrics.affinity_routed
+        } else {
+            &self.metrics.cold_fallbacks
+        };
+        counter.fetch_add(1, Ordering::Relaxed);
+        self.states[target].begin(cost_us);
+        let _ = self.txs[target].send(DispatchedBatch { envs, cost_us });
+    }
+
+    /// Earliest close instant across the lanes (min over each lane
+    /// batcher's `next_deadline`), so the leader sleeps until the
+    /// soonest lane needs it regardless of lane count.
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.lanes
+            .iter()
+            .filter_map(|l| l.batcher.next_deadline())
+            .min()
+    }
+
+    /// Mirror per-lane gauges (occupancy, arrival estimate) and the
+    /// summed early-close count into the shared metrics.
+    pub fn publish(&self) {
+        for (i, lane) in self.lanes.iter().enumerate() {
+            let c = self.metrics.lane(i);
+            c.occupancy.store(
+                lane.batcher.pending() as u64,
+                Ordering::Relaxed,
+            );
+            if let Some((gap_s, obs)) = lane.batcher.gap_snapshot() {
+                c.arrival_gap_ns
+                    .store((gap_s * 1e9) as u64, Ordering::Relaxed);
+                c.arrival_obs.store(obs, Ordering::Relaxed);
+            }
+        }
+        self.metrics
+            .early_closes
+            .store(self.early_closes(), Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::dispatch::DeviceProfile;
+    use crate::coordinator::request::Request;
+    use crate::device::DeviceKind;
+    use crate::util::Tensor;
+    use std::sync::mpsc::{channel, Receiver};
+
+    const ARTIFACTS: [usize; 4] = [1, 2, 4, 8];
+
+    /// 6ms per image, linear — flat cost-per-image (latency-shaped).
+    fn latency_state() -> Arc<WorkerState> {
+        Arc::new(WorkerState::new(
+            DeviceProfile::from_seed(
+                DeviceKind::Gpu,
+                ARTIFACTS
+                    .iter()
+                    .map(|&b| (b, 0.006 * b as f64))
+                    .collect(),
+            ),
+            &ARTIFACTS,
+        ))
+    }
+
+    /// 16ms flat regardless of batch (throughput-shaped).
+    fn throughput_state() -> Arc<WorkerState> {
+        Arc::new(WorkerState::new(
+            DeviceProfile::from_seed(
+                DeviceKind::Fpga,
+                ARTIFACTS.iter().map(|&b| (b, 0.016)).collect(),
+            ),
+            &ARTIFACTS,
+        ))
+    }
+
+    fn env(id: u64, arrived: Instant) -> Envelope {
+        let (tx, _) = channel();
+        Envelope::new(
+            Request { id, image: Tensor::zeros(&[1]), arrived },
+            tx,
+        )
+    }
+
+    fn lane_set(
+        states: Vec<Arc<WorkerState>>,
+        base: BatchPolicy,
+    ) -> (LaneSet, Vec<Receiver<DispatchedBatch>>) {
+        let plan = FormationPlan::derive(base, &states);
+        let mut txs = Vec::new();
+        let mut rxs = Vec::new();
+        for _ in 0..states.len() {
+            let (tx, rx) = channel();
+            txs.push(tx);
+            rxs.push(rx);
+        }
+        let metrics =
+            Arc::new(ServerMetrics::with_lanes(states.len(), 3));
+        (LaneSet::new(plan, states, txs, metrics), rxs)
+    }
+
+    #[test]
+    fn plan_groups_workers_by_cost_shape() {
+        let states = vec![
+            throughput_state(),
+            latency_state(),
+            Arc::new(WorkerState::new(
+                DeviceProfile::unmodeled(DeviceKind::CpuPjrt),
+                &[1, 2, 4],
+            )),
+        ];
+        let base = BatchPolicy::new(8, Duration::from_millis(12))
+            .with_predictive_close();
+        let plan = FormationPlan::derive(base, &states);
+        assert_eq!(
+            plan.classes(),
+            vec![
+                LaneClass::Latency,
+                LaneClass::Throughput,
+                LaneClass::Unclassified
+            ]
+        );
+        let lat = &plan.lanes[0];
+        assert_eq!(lat.workers, vec![1]);
+        assert_eq!(lat.policy, BatchPolicy::immediate());
+        let tput = &plan.lanes[1];
+        assert_eq!(tput.workers, vec![0]);
+        assert_eq!(tput.policy, base, "throughput lane keeps the dial");
+        assert_eq!(tput.align, ARTIFACTS.to_vec());
+        let un = &plan.lanes[2];
+        assert_eq!(un.workers, vec![2]);
+        // base clamped to the unclassified worker's largest artifact
+        assert_eq!(un.policy.max_batch, 4);
+        assert_eq!(un.policy.max_wait, base.max_wait);
+    }
+
+    #[test]
+    fn single_class_pool_forms_one_lane() {
+        let states = vec![latency_state(), latency_state()];
+        let plan = FormationPlan::derive(
+            BatchPolicy::new(8, Duration::from_millis(2)),
+            &states,
+        );
+        assert_eq!(plan.lanes.len(), 1);
+        assert_eq!(plan.lanes[0].workers, vec![0, 1]);
+        assert_eq!(plan.lanes[0].policy, BatchPolicy::immediate());
+    }
+
+    /// The steering contract: burst members (zero inter-arrival gap)
+    /// coalesce in the throughput lane once the latency lane's pileup
+    /// costs more than sharing a big batch; isolated requests stay on
+    /// the latency lane even when it carries some backlog.  Also pins
+    /// the min-heap wakeup and that dispatch honours lane ownership.
+    #[test]
+    fn steering_splits_bursts_from_singles() {
+        let base = BatchPolicy::new(8, Duration::from_millis(12));
+        let (mut ls, rxs) = lane_set(
+            vec![latency_state(), throughput_state()],
+            base,
+        );
+        assert_eq!(ls.lanes(), 2);
+        assert_eq!(ls.lane_class(0), LaneClass::Latency);
+        let t0 = Instant::now();
+        // a burst of 8 at the same instant: the first two cost less as
+        // immediate singles (6ms, 12ms) than a shared 16ms batch; from
+        // the third on the latency pileup loses and the rest coalesce
+        for i in 0..8 {
+            ls.push(env(i, t0));
+        }
+        assert_eq!(ls.lane_pending(0), 2);
+        assert_eq!(ls.lane_pending(1), 6);
+        // min-heap wakeup: the immediate lane's close instant (its
+        // oldest arrival) precedes the throughput lane's deadline
+        assert_eq!(ls.next_deadline(), Some(t0));
+        ls.dispatch_ready(t0);
+        assert_eq!(ls.lane_pending(0), 0, "immediate lane flushes");
+        assert_eq!(ls.lane_pending(1), 6, "deadline lane holds");
+        assert_eq!(
+            ls.next_deadline(),
+            Some(t0 + Duration::from_millis(12))
+        );
+        ls.dispatch_ready(t0 + Duration::from_millis(12));
+        // the isolated request 15ms later steers to the latency lane
+        // despite that lane's backlog (18ms predicted vs a 12ms wait +
+        // 16ms exec + backlog on the throughput worker)
+        let t1 = t0 + Duration::from_millis(15);
+        ls.push(env(9, t1));
+        assert_eq!(ls.lane_pending(0), 1);
+        ls.dispatch_ready(t1);
+        // latency worker got 2 immediate singles + the lone single;
+        // throughput worker got one 6-batch
+        let lat_batches: Vec<usize> =
+            rxs[0].try_iter().map(|b| b.envs.len()).collect();
+        let tput_batches: Vec<usize> =
+            rxs[1].try_iter().map(|b| b.envs.len()).collect();
+        assert_eq!(lat_batches, vec![1, 1, 1]);
+        assert_eq!(tput_batches, vec![6]);
+    }
+
+    /// Work-stealing: a batch formed in the throughput lane whose
+    /// worker is buried in backlog reroutes to the (2x cheaper) latency
+    /// worker instead of starving behind it.
+    #[test]
+    fn dispatch_steals_from_a_saturated_lane() {
+        let lat = latency_state();
+        let tput = throughput_state();
+        let base = BatchPolicy::new(8, Duration::from_millis(12));
+        let (mut ls, rxs) = lane_set(
+            vec![Arc::clone(&lat), Arc::clone(&tput)],
+            base,
+        );
+        let t0 = Instant::now();
+        for i in 0..3 {
+            ls.push(env(i, t0)); // 2 -> latency lane, 1 -> throughput
+        }
+        assert_eq!(ls.lane_pending(1), 1);
+        // bury the throughput worker before its lane closes
+        tput.begin(10_000_000);
+        ls.dispatch_ready(t0 + Duration::from_millis(12));
+        let lat_batches: Vec<usize> =
+            rxs[0].try_iter().map(|b| b.envs.len()).collect();
+        assert_eq!(
+            lat_batches,
+            vec![1, 1, 1],
+            "throughput-lane batch must be stolen by the idle worker"
+        );
+        assert!(rxs[1].try_iter().next().is_none());
+        assert_eq!(
+            ls.metrics.stolen.load(Ordering::Relaxed),
+            1,
+            "steal must be counted"
+        );
+    }
+
+    /// Conservation: whatever the steering did, drain_dispatch hands
+    /// every queued envelope to exactly one worker exactly once.
+    #[test]
+    fn drain_dispatch_conserves_envelopes() {
+        let (mut ls, rxs) = lane_set(
+            vec![latency_state(), throughput_state()],
+            BatchPolicy::new(8, Duration::from_secs(60)),
+        );
+        let t0 = Instant::now();
+        for i in 0..23 {
+            ls.push(env(i, t0 + Duration::from_micros(i * 137)));
+        }
+        assert_eq!(ls.pending(), 23);
+        ls.drain_dispatch();
+        assert_eq!(ls.pending(), 0);
+        let mut ids: Vec<u64> = rxs
+            .iter()
+            .flat_map(|rx| rx.try_iter())
+            .flat_map(|b| b.envs.into_iter().map(|e| e.req.id))
+            .collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..23).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn cold_lanes_steer_by_queue_depth() {
+        // both lanes' workers unmodeled at different artifact grids:
+        // no completion estimates, so steering joins the shallowest
+        // lane per worker and dispatch counts cold fallbacks
+        let a = Arc::new(WorkerState::new(
+            DeviceProfile::unmodeled(DeviceKind::CpuPjrt),
+            &[1, 2],
+        ));
+        let b = latency_state();
+        let (mut ls, _rxs) =
+            lane_set(vec![a, b], BatchPolicy::immediate());
+        let t0 = Instant::now();
+        for i in 0..4 {
+            ls.push(env(i, t0));
+        }
+        // one cold lane forces depth-based steering: pushes alternate
+        // between the two single-worker lanes instead of herding
+        assert_eq!(ls.lane_pending(0), 2);
+        assert_eq!(ls.lane_pending(1), 2);
+        ls.dispatch_ready(t0);
+        assert_eq!(
+            ls.metrics.cold_fallbacks.load(Ordering::Relaxed),
+            2,
+            "the cold lane's dispatches must count as fallbacks"
+        );
+        // warm gating is lane-local: the modeled lane keeps routing by
+        // cost even while the unmodeled lane is cold
+        assert_eq!(
+            ls.metrics.affinity_routed.load(Ordering::Relaxed),
+            2,
+            "the warm lane must not be dragged into the cold path"
+        );
+    }
+}

@@ -20,12 +20,31 @@ pub struct ServerMetrics {
     pub rejected: AtomicU64,
     /// Batches the predictive rule closed ahead of their deadline.
     pub early_closes: AtomicU64,
-    /// Batches routed by predicted completion time (affinity dispatch).
+    /// Batches routed by predicted completion time (affinity dispatch
+    /// or a per-class lane's own workers).
     pub affinity_routed: AtomicU64,
     /// Batches that fell back to join-shortest-queue because some
     /// worker's latency estimate was still cold.
     pub cold_fallbacks: AtomicU64,
+    /// Batches work-stolen across lanes: dispatched to a foreign-class
+    /// worker because every worker of their own lane was saturated.
+    pub stolen: AtomicU64,
     shards: Vec<Mutex<MetricsShard>>,
+    lanes: Vec<LaneCounters>,
+}
+
+/// Per-formation-lane counters and gauges (one slot per lane under
+/// per-class formation; slot 0 mirrors the global batcher otherwise).
+#[derive(Default)]
+pub struct LaneCounters {
+    /// Requests steered to this lane at admission.
+    pub steered: AtomicU64,
+    /// Gauge: requests currently queued in the lane's batcher.
+    pub occupancy: AtomicU64,
+    /// Gauge: the lane batcher's mean inter-arrival gap estimate, ns.
+    pub arrival_gap_ns: AtomicU64,
+    /// Gauge: observations behind `arrival_gap_ns`.
+    pub arrival_obs: AtomicU64,
 }
 
 #[derive(Default)]
@@ -42,8 +61,13 @@ impl Default for ServerMetrics {
 }
 
 impl ServerMetrics {
-    /// One shard per engine worker.
+    /// One shard per engine worker, one lane slot (the global batcher).
     pub fn new(workers: usize) -> ServerMetrics {
+        ServerMetrics::with_lanes(workers, 1)
+    }
+
+    /// One shard per engine worker plus `lanes` per-lane counter slots.
+    pub fn with_lanes(workers: usize, lanes: usize) -> ServerMetrics {
         let workers = workers.max(1);
         ServerMetrics {
             completed: AtomicU64::new(0),
@@ -52,14 +76,28 @@ impl ServerMetrics {
             early_closes: AtomicU64::new(0),
             affinity_routed: AtomicU64::new(0),
             cold_fallbacks: AtomicU64::new(0),
+            stolen: AtomicU64::new(0),
             shards: (0..workers)
                 .map(|_| Mutex::new(MetricsShard::default()))
+                .collect(),
+            lanes: (0..lanes.max(1))
+                .map(|_| LaneCounters::default())
                 .collect(),
         }
     }
 
     pub fn workers(&self) -> usize {
         self.shards.len()
+    }
+
+    /// Formation-lane counter slots.
+    pub fn lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Counters for one formation lane.
+    pub fn lane(&self, lane: usize) -> &LaneCounters {
+        &self.lanes[lane]
     }
 
     /// Record a completed response into `worker`'s shard.  The lock is
@@ -142,5 +180,19 @@ mod tests {
         assert_eq!(m.workers(), 1);
         m.record(0, &resp(2.0, 1));
         assert!((m.latency_summary().mean - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lane_counters_are_sized_and_independent() {
+        let m = ServerMetrics::with_lanes(2, 3);
+        assert_eq!(m.lanes(), 3);
+        m.lane(0).steered.fetch_add(5, Ordering::Relaxed);
+        m.lane(2).occupancy.store(7, Ordering::Relaxed);
+        assert_eq!(m.lane(0).steered.load(Ordering::Relaxed), 5);
+        assert_eq!(m.lane(1).steered.load(Ordering::Relaxed), 0);
+        assert_eq!(m.lane(2).occupancy.load(Ordering::Relaxed), 7);
+        // plain `new` still carries one slot for the global batcher
+        assert_eq!(ServerMetrics::new(1).lanes(), 1);
+        assert_eq!(m.stolen.load(Ordering::Relaxed), 0);
     }
 }

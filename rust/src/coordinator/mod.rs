@@ -11,7 +11,9 @@
 pub mod batcher;
 pub mod dispatch;
 pub mod engine;
+pub mod formation;
 pub mod metrics;
+pub mod persist;
 pub mod request;
 pub mod router;
 pub mod server;
@@ -24,7 +26,9 @@ pub use engine::{
     plan_chunks, BatchOutput, CurveEngine, InferenceEngine, MockEngine,
     PjrtEngine,
 };
-pub use metrics::ServerMetrics;
+pub use formation::{FormationPlan, FormationPolicy, LaneClass, LaneSet};
+pub use metrics::{LaneCounters, ServerMetrics};
+pub use persist::{ArrivalState, ProfileState, WorkerTable};
 pub use request::{Envelope, Request, Response};
 pub use router::{RoutePolicy, Router};
 pub use server::{Client, ReplyReceiver, Server, ServerConfig};

@@ -1,0 +1,235 @@
+//! Profile persistence — serialize the dispatcher's learned state so a
+//! warm redeploy skips the cold join-shortest-queue phase.
+//!
+//! What survives a restart (ROADMAP "profile persistence"):
+//! * each worker's per-artifact EWMA latency table
+//!   ([`WorkerState::export_table`] / `preload_table`), keyed by worker
+//!   index with the device kind as a sanity tag;
+//! * each batcher's arrival-rate estimate
+//!   ([`Batcher::gap_snapshot`] / `preload_gap`), keyed by lane label —
+//!   `"global"` for the single global batcher, the lane class name
+//!   (`"latency"` / `"throughput"` / `"unclassified"`) under per-class
+//!   formation.
+//!
+//! The format is plain `util::json` (no serde offline):
+//!
+//! ```json
+//! {"version": 1,
+//!  "workers": [{"kind": "gpu",
+//!               "table": [{"batch": 8, "exec_s": 0.016, "obs": 12}]}],
+//!  "arrivals": [{"lane": "global", "gap_s": 0.012, "obs": 40}]}
+//! ```
+//!
+//! Wired through `cnnlab serve --profile-state <path>` and the
+//! `[serving] profile_state` TOML key: loaded before the server spawns,
+//! written back when the run completes.
+
+use std::collections::BTreeMap;
+
+use crate::util::Json;
+
+/// Schema version written to and required from the JSON file.
+pub const PROFILE_STATE_VERSION: i64 = 1;
+
+/// One worker's persisted latency table.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkerTable {
+    /// `DeviceKind::name()` of the worker that produced the table; a
+    /// mismatched kind on load means the deployment changed shape and
+    /// the table is skipped rather than poisoning predictions.
+    pub kind: String,
+    /// `(artifact batch, EWMA exec seconds, observations)`.
+    pub rows: Vec<(usize, f64, u64)>,
+}
+
+/// One batcher's persisted arrival-rate estimate.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArrivalState {
+    /// `"global"` or a lane class name.
+    pub lane: String,
+    pub gap_s: f64,
+    pub obs: u64,
+}
+
+/// Everything the serving stack learns online that is worth keeping
+/// across restarts.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ProfileState {
+    pub workers: Vec<WorkerTable>,
+    pub arrivals: Vec<ArrivalState>,
+}
+
+impl ProfileState {
+    pub fn to_json(&self) -> Json {
+        let workers = self
+            .workers
+            .iter()
+            .map(|w| {
+                let rows = w
+                    .rows
+                    .iter()
+                    .map(|&(batch, exec_s, obs)| {
+                        obj([
+                            ("batch", Json::Num(batch as f64)),
+                            ("exec_s", Json::Num(exec_s)),
+                            ("obs", Json::Num(obs as f64)),
+                        ])
+                    })
+                    .collect();
+                obj([
+                    ("kind", Json::Str(w.kind.clone())),
+                    ("table", Json::Arr(rows)),
+                ])
+            })
+            .collect();
+        let arrivals = self
+            .arrivals
+            .iter()
+            .map(|a| {
+                obj([
+                    ("lane", Json::Str(a.lane.clone())),
+                    ("gap_s", Json::Num(a.gap_s)),
+                    ("obs", Json::Num(a.obs as f64)),
+                ])
+            })
+            .collect();
+        obj([
+            ("version", Json::Num(PROFILE_STATE_VERSION as f64)),
+            ("workers", Json::Arr(workers)),
+            ("arrivals", Json::Arr(arrivals)),
+        ])
+    }
+
+    pub fn from_json(doc: &Json) -> anyhow::Result<ProfileState> {
+        let version = doc
+            .req("version")?
+            .as_i64()
+            .ok_or_else(|| anyhow::anyhow!("version must be a number"))?;
+        anyhow::ensure!(
+            version == PROFILE_STATE_VERSION,
+            "unsupported profile state version {version} \
+             (want {PROFILE_STATE_VERSION})"
+        );
+        let mut state = ProfileState::default();
+        for w in doc.req("workers")?.as_arr().unwrap_or(&[]) {
+            let kind = w.req("kind")?.as_str().unwrap_or("").to_string();
+            let mut rows = Vec::new();
+            for row in w.req("table")?.as_arr().unwrap_or(&[]) {
+                let batch = row.req("batch")?.as_usize();
+                let exec_s = row.req("exec_s")?.as_f64();
+                let obs = row.req("obs")?.as_f64();
+                if let (Some(batch), Some(exec_s), Some(obs)) =
+                    (batch, exec_s, obs)
+                {
+                    rows.push((batch, exec_s, obs as u64));
+                }
+            }
+            state.workers.push(WorkerTable { kind, rows });
+        }
+        for a in doc.req("arrivals")?.as_arr().unwrap_or(&[]) {
+            let lane = a.req("lane")?.as_str().unwrap_or("").to_string();
+            let gap_s = a.req("gap_s")?.as_f64().unwrap_or(0.0);
+            let obs = a.req("obs")?.as_f64().unwrap_or(0.0) as u64;
+            state.arrivals.push(ArrivalState { lane, gap_s, obs });
+        }
+        Ok(state)
+    }
+
+    /// Load from a JSON file written by [`ProfileState::save`].
+    pub fn load(path: &str) -> anyhow::Result<ProfileState> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            anyhow::anyhow!("cannot read profile state {path}: {e}")
+        })?;
+        let doc = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        ProfileState::from_json(&doc)
+    }
+
+    /// Write to `path` (atomically via a sibling temp file, so a crash
+    /// mid-write never leaves a truncated state behind).
+    pub fn save(&self, path: &str) -> anyhow::Result<()> {
+        let tmp = format!("{path}.tmp");
+        std::fs::write(&tmp, self.to_json().to_string()).map_err(
+            |e| anyhow::anyhow!("cannot write profile state {tmp}: {e}"),
+        )?;
+        std::fs::rename(&tmp, path).map_err(|e| {
+            anyhow::anyhow!("cannot move profile state into {path}: {e}")
+        })?;
+        Ok(())
+    }
+}
+
+fn obj<const N: usize>(entries: [(&str, Json); N]) -> Json {
+    Json::Obj(
+        entries
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect::<BTreeMap<_, _>>(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ProfileState {
+        ProfileState {
+            workers: vec![
+                WorkerTable {
+                    kind: "gpu".into(),
+                    rows: vec![(1, 0.006, 3), (8, 0.048, 12)],
+                },
+                WorkerTable { kind: "fpga".into(), rows: vec![] },
+            ],
+            arrivals: vec![
+                ArrivalState {
+                    lane: "latency".into(),
+                    gap_s: 0.015,
+                    obs: 40,
+                },
+                ArrivalState {
+                    lane: "throughput".into(),
+                    gap_s: 0.001,
+                    obs: 200,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_everything() {
+        let s = sample();
+        let j = s.to_json();
+        let back = ProfileState::from_json(&j).unwrap();
+        assert_eq!(s, back);
+        // and through the textual form too
+        let reparsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(ProfileState::from_json(&reparsed).unwrap(), s);
+    }
+
+    #[test]
+    fn file_roundtrip_and_atomic_write() {
+        let dir = std::env::temp_dir().join("cnnlab-persist-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("state.json");
+        let path = path.to_str().unwrap();
+        let s = sample();
+        s.save(path).unwrap();
+        assert_eq!(ProfileState::load(path).unwrap(), s);
+        // overwrite works and leaves no temp file behind
+        s.save(path).unwrap();
+        assert!(!std::path::Path::new(&format!("{path}.tmp")).exists());
+    }
+
+    #[test]
+    fn rejects_wrong_version_and_garbage() {
+        let j = Json::parse(
+            r#"{"version": 2, "workers": [], "arrivals": []}"#,
+        )
+        .unwrap();
+        assert!(ProfileState::from_json(&j).is_err());
+        assert!(ProfileState::load("/nonexistent/state.json").is_err());
+        let j = Json::parse(r#"{"workers": []}"#).unwrap();
+        assert!(ProfileState::from_json(&j).is_err(), "missing version");
+    }
+}

@@ -5,10 +5,12 @@
 //! Flow (the paper's Fig 2: cloud users -> uniform API -> middleware ->
 //! accelerators): requests enter through a *bounded* channel
 //! (backpressure); the leader only drains the channel and forms batches
-//! per [`BatchPolicy`]; closed batches are dispatched to the worker
-//! pool per [`DispatchPolicy`] — either an anonymous shared queue
-//! (join-idle-worker) or cost-model-driven affinity routing to the
-//! worker with minimum predicted completion time — and each worker
+//! per [`BatchPolicy`] — one global batcher, or one lane per device
+//! class under [`FormationPolicy::PerClass`]; closed batches are
+//! dispatched to the worker pool per [`DispatchPolicy`] — either an
+//! anonymous shared queue (join-idle-worker) or cost-model-driven
+//! affinity routing to the worker with minimum predicted completion
+//! time (always the latter under per-class lanes) — and each worker
 //! executes them on its engine **in parallel** and answers each request
 //! directly.  Each request's reply sender travels inside its batch, so
 //! batches complete out of order without any leader-owned routing
@@ -31,7 +33,11 @@ use super::dispatch::{
     pick_worker, DeviceProfile, DispatchPolicy, WorkerSnapshot, WorkerState,
 };
 use super::engine::{largest_batch, InferenceEngine};
+use super::formation::{
+    DispatchedBatch, FormationPlan, FormationPolicy, LaneClass, LaneSet,
+};
 use super::metrics::ServerMetrics;
+use super::persist::{ArrivalState, ProfileState, WorkerTable};
 use super::request::{Envelope, Request, Response};
 
 /// How often the idle leader wakes to poll the shutdown flag; also the
@@ -134,8 +140,15 @@ pub struct ServerConfig {
     /// batched, or executing) before submissions are shed with
     /// `ServerBusy`.  Also sizes the bounded submit channel.
     pub queue_capacity: usize,
-    /// How closed batches reach the worker pool.
+    /// How closed batches reach the worker pool.  Ignored under
+    /// [`FormationPolicy::PerClass`], whose lanes always route by
+    /// predicted completion time.
     pub dispatch: DispatchPolicy,
+    /// How batches are formed: one global batcher (`policy` applies to
+    /// every request) or one cost-model-derived lane per device class
+    /// (`policy` becomes the throughput-lane dial; see
+    /// `coordinator::formation`).
+    pub formation: FormationPolicy,
 }
 
 impl Default for ServerConfig {
@@ -144,16 +157,9 @@ impl Default for ServerConfig {
             policy: BatchPolicy::new(8, Duration::from_millis(2)),
             queue_capacity: 256,
             dispatch: DispatchPolicy::JoinIdle,
+            formation: FormationPolicy::Global,
         }
     }
-}
-
-/// A closed batch in flight to a worker: the envelopes plus the
-/// predicted execution cost charged to that worker's backlog (0 under
-/// join-idle dispatch or a cold estimate).
-struct DispatchedBatch {
-    envs: Vec<Envelope>,
-    cost_us: u64,
 }
 
 /// Leader-side batch routing per [`DispatchPolicy`].
@@ -197,6 +203,21 @@ enum BatchSource {
     Own(Receiver<DispatchedBatch>),
 }
 
+/// One unbounded leader->worker queue per worker — the channel layout
+/// affinity dispatch and per-class formation share.
+fn per_worker_queues(
+    n: usize,
+) -> (Vec<Sender<DispatchedBatch>>, Vec<BatchSource>) {
+    let mut txs = Vec::with_capacity(n);
+    let mut sources = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (tx, rx) = channel::<DispatchedBatch>();
+        txs.push(tx);
+        sources.push(BatchSource::Own(rx));
+    }
+    (txs, sources)
+}
+
 impl BatchSource {
     /// Next batch, or `None` once the leader is gone and the queue is
     /// drained.
@@ -215,6 +236,9 @@ pub struct Server {
     leader: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
     states: Vec<Arc<WorkerState>>,
+    /// Formation lane classes in lane order (empty under the global
+    /// batcher) — persistence labels and report headings.
+    lane_classes: Vec<LaneClass>,
 }
 
 impl Server {
@@ -258,28 +282,52 @@ impl Server {
         engines: Vec<(E, DeviceProfile)>,
         config: ServerConfig,
     ) -> Server {
+        Server::spawn_pool_profiled_with_state(engines, config, None)
+    }
+
+    /// Like [`Server::spawn_pool_profiled`], plus a persisted
+    /// [`ProfileState`] restored before the first request: worker EWMA
+    /// latency tables (matched by index, sanity-checked by device kind)
+    /// and batcher arrival-rate estimates (matched by lane label), so a
+    /// warm redeploy skips the cold join-shortest-queue phase.
+    pub fn spawn_pool_profiled_with_state<E: InferenceEngine>(
+        engines: Vec<(E, DeviceProfile)>,
+        config: ServerConfig,
+        state: Option<&ProfileState>,
+    ) -> Server {
         assert!(!engines.is_empty(), "server needs at least one engine");
-        let mut policy = config.policy;
-        let cap = engines
+
+        // worker states first: profile preloading and formation
+        // planning both read them
+        let states: Vec<Arc<WorkerState>> = engines
             .iter()
-            .filter_map(|(e, _)| largest_batch(e.available_batches()))
-            .min();
-        if let Some(cap) = cap {
-            policy.max_batch = policy.max_batch.min(cap);
+            .map(|(e, profile)| {
+                Arc::new(WorkerState::new(
+                    profile.clone(),
+                    e.available_batches(),
+                ))
+            })
+            .collect();
+        if let Some(ps) = state {
+            for (i, table) in ps.workers.iter().enumerate() {
+                if let Some(s) = states.get(i) {
+                    if table.kind == s.profile().kind.name() {
+                        s.preload_table(&table.rows);
+                    }
+                }
+            }
         }
-        // batch cuts may land on ANY worker, so only sizes compiled on
-        // every engine are safe alignment targets; with disjoint grids
-        // alignment is disabled (engines still pad/chunk correctness-
-        // wise, the padding-waste bound just stops applying)
-        let mut align: Vec<usize> = engines[0].0.available_batches().to_vec();
-        align.retain(|a| {
-            engines
-                .iter()
-                .all(|(e, _)| e.available_batches().contains(a))
-        });
+        let plan = (config.formation == FormationPolicy::PerClass)
+            .then(|| FormationPlan::derive(config.policy, &states));
+        let lane_classes =
+            plan.as_ref().map(FormationPlan::classes).unwrap_or_default();
+        let lane_slots = lane_classes.len().max(1);
 
         let (tx, rx) = sync_channel::<Envelope>(config.queue_capacity);
-        let metrics = Arc::new(ServerMetrics::new(engines.len()));
+        let metrics = Arc::new(ServerMetrics::with_lanes(
+            engines.len(),
+            lane_slots,
+        ));
         let outstanding = Arc::new(AtomicUsize::new(0));
         let shutdown = Arc::new(AtomicBool::new(false));
         let client = Client {
@@ -290,44 +338,86 @@ impl Server {
             capacity: config.queue_capacity,
         };
 
-        let states: Vec<Arc<WorkerState>> = engines
-            .iter()
-            .map(|(e, profile)| {
-                Arc::new(WorkerState::new(
-                    profile.clone(),
-                    e.available_batches(),
-                ))
-            })
-            .collect();
-
         // leader -> workers: unbounded (depth already bounded by the
         // request queue).  Join-idle shares one receiver across the
-        // pool; affinity gives each worker its own queue so the leader
-        // can steer batches by predicted completion time.
-        let (router, sources) = match config.dispatch {
-            DispatchPolicy::JoinIdle => {
-                let (batch_tx, batch_rx) = channel::<DispatchedBatch>();
-                let batch_rx = Arc::new(Mutex::new(batch_rx));
-                let sources = (0..engines.len())
-                    .map(|_| BatchSource::Shared(Arc::clone(&batch_rx)))
-                    .collect::<Vec<_>>();
-                (BatchRouter::Shared(batch_tx), sources)
-            }
-            DispatchPolicy::Affinity => {
-                let mut txs = Vec::with_capacity(engines.len());
-                let mut sources = Vec::with_capacity(engines.len());
-                for _ in 0..engines.len() {
-                    let (tx, rx) = channel::<DispatchedBatch>();
-                    txs.push(tx);
-                    sources.push(BatchSource::Own(rx));
-                }
-                let router = BatchRouter::Affinity {
+        // pool; affinity and per-class formation give each worker its
+        // own queue so the leader can steer batches by predicted
+        // completion time.
+        let (driver, sources) = match plan {
+            Some(plan) => {
+                let (txs, sources) = per_worker_queues(engines.len());
+                let mut lanes = LaneSet::new(
+                    plan,
+                    states.clone(),
                     txs,
-                    states: states.clone(),
-                    rr: AtomicUsize::new(0),
-                    metrics: Arc::clone(&metrics),
+                    Arc::clone(&metrics),
+                );
+                if let Some(ps) = state {
+                    lanes.preload_arrivals(&ps.arrivals);
+                }
+                (FormationDriver::PerClass(lanes), sources)
+            }
+            None => {
+                let mut policy = config.policy;
+                let cap = engines
+                    .iter()
+                    .filter_map(|(e, _)| {
+                        largest_batch(e.available_batches())
+                    })
+                    .min();
+                if let Some(cap) = cap {
+                    policy.max_batch = policy.max_batch.min(cap);
+                }
+                // batch cuts may land on ANY worker, so only sizes
+                // compiled on every engine are safe alignment targets;
+                // with disjoint grids alignment is disabled (engines
+                // still pad/chunk correctness-wise, the padding-waste
+                // bound just stops applying)
+                let mut align: Vec<usize> =
+                    engines[0].0.available_batches().to_vec();
+                align.retain(|a| {
+                    engines
+                        .iter()
+                        .all(|(e, _)| e.available_batches().contains(a))
+                });
+                let mut batcher = Batcher::with_alignment(policy, &align);
+                if let Some(arrival) = state.and_then(|ps| {
+                    ps.arrivals.iter().find(|a| a.lane == "global")
+                }) {
+                    batcher.preload_gap(arrival.gap_s, arrival.obs);
+                }
+                let (router, sources) = match config.dispatch {
+                    DispatchPolicy::JoinIdle => {
+                        let (batch_tx, batch_rx) =
+                            channel::<DispatchedBatch>();
+                        let batch_rx = Arc::new(Mutex::new(batch_rx));
+                        let sources = (0..engines.len())
+                            .map(|_| {
+                                BatchSource::Shared(Arc::clone(&batch_rx))
+                            })
+                            .collect::<Vec<_>>();
+                        (BatchRouter::Shared(batch_tx), sources)
+                    }
+                    DispatchPolicy::Affinity => {
+                        let (txs, sources) =
+                            per_worker_queues(engines.len());
+                        let router = BatchRouter::Affinity {
+                            txs,
+                            states: states.clone(),
+                            rr: AtomicUsize::new(0),
+                            metrics: Arc::clone(&metrics),
+                        };
+                        (router, sources)
+                    }
                 };
-                (router, sources)
+                (
+                    FormationDriver::Global {
+                        batcher,
+                        router,
+                        admitted: 0,
+                    },
+                    sources,
+                )
             }
         };
 
@@ -359,9 +449,7 @@ impl Server {
         let leader_metrics = Arc::clone(&metrics);
         let leader = std::thread::Builder::new()
             .name("cnnlab-leader".into())
-            .spawn(move || {
-                leader_loop(policy, align, rx, router, sd, leader_metrics)
-            })
+            .spawn(move || leader_loop(driver, rx, sd, leader_metrics))
             .expect("spawn leader");
         Server {
             client,
@@ -369,6 +457,7 @@ impl Server {
             leader: Some(leader),
             workers,
             states,
+            lane_classes,
         }
     }
 
@@ -386,9 +475,69 @@ impl Server {
     }
 
     /// Per-worker dispatcher state (routing counts, queue depth,
-    /// predicted backlog) — diagnostics for benches and tests.
+    /// predicted backlog, EWMA latency table) — diagnostics for the
+    /// periodic serve report, benches, and tests.
     pub fn worker_snapshots(&self) -> Vec<WorkerSnapshot> {
         self.states.iter().map(|s| s.snapshot()).collect()
+    }
+
+    /// Formation lane classes in lane order; empty under the global
+    /// batcher.
+    pub fn lane_classes(&self) -> &[LaneClass] {
+        &self.lane_classes
+    }
+
+    /// One label per metrics lane slot: the lane class names under
+    /// per-class formation, `["global"]` otherwise.  The single source
+    /// for persistence keys ([`Server::profile_state`] /
+    /// `LaneSet::preload_arrivals` matching) and report headings.
+    pub fn lane_labels(&self) -> Vec<&'static str> {
+        if self.lane_classes.is_empty() {
+            vec!["global"]
+        } else {
+            self.lane_classes.iter().map(|c| c.name()).collect()
+        }
+    }
+
+    /// Everything the serving stack has learned online, in persistable
+    /// form: per-worker EWMA latency tables plus per-lane arrival-rate
+    /// estimates (the gauges the leader mirrors into the metrics).
+    /// Feed the result back through
+    /// [`Server::spawn_pool_profiled_with_state`] on the next deploy.
+    pub fn profile_state(&self) -> ProfileState {
+        let workers = self
+            .states
+            .iter()
+            .map(|s| {
+                let snap = s.snapshot();
+                WorkerTable {
+                    kind: snap.kind.name().to_string(),
+                    rows: snap.exec_table,
+                }
+            })
+            .collect();
+        let metrics = &self.client.metrics;
+        let arrivals = self
+            .lane_labels()
+            .into_iter()
+            .map(str::to_string)
+            .enumerate()
+            .filter_map(|(i, lane)| {
+                let c = metrics.lane(i);
+                let obs = c.arrival_obs.load(Ordering::Relaxed);
+                let gap_ns = c.arrival_gap_ns.load(Ordering::Relaxed);
+                if obs > 0 {
+                    Some(ArrivalState {
+                        lane,
+                        gap_s: gap_ns as f64 / 1e9,
+                        obs,
+                    })
+                } else {
+                    None
+                }
+            })
+            .collect();
+        ProfileState { workers, arrivals }
     }
 }
 
@@ -408,35 +557,121 @@ impl Drop for Server {
     }
 }
 
-/// The leader only batches: drain the request channel, cut batches per
-/// policy, hand them to the router.  It never touches an engine.
+/// Leader-side batch formation: the single global batcher plus its
+/// router, or the per-class [`LaneSet`].  One enum so `leader_loop`
+/// stays a single control flow for both modes.
+enum FormationDriver {
+    Global {
+        batcher: Batcher,
+        router: BatchRouter,
+        /// Requests admitted so far — mirrored into the lane-0
+        /// `steered` counter so the serve report reads the same in
+        /// both formation modes.
+        admitted: u64,
+    },
+    PerClass(LaneSet),
+}
+
+impl FormationDriver {
+    fn push(&mut self, env: Envelope) {
+        match self {
+            FormationDriver::Global { batcher, admitted, .. } => {
+                *admitted += 1;
+                batcher.push(env);
+            }
+            FormationDriver::PerClass(lanes) => lanes.push(env),
+        }
+    }
+
+    fn pending(&self) -> usize {
+        match self {
+            FormationDriver::Global { batcher, .. } => batcher.pending(),
+            FormationDriver::PerClass(lanes) => lanes.pending(),
+        }
+    }
+
+    fn next_deadline(&self) -> Option<Instant> {
+        match self {
+            FormationDriver::Global { batcher, .. } => {
+                batcher.next_deadline()
+            }
+            FormationDriver::PerClass(lanes) => lanes.next_deadline(),
+        }
+    }
+
+    fn dispatch_ready(&mut self, now: Instant) {
+        match self {
+            FormationDriver::Global { batcher, router, .. } => {
+                while let Some(batch) = batcher.pop_ready(now) {
+                    router.dispatch(batch);
+                }
+            }
+            FormationDriver::PerClass(lanes) => lanes.dispatch_ready(now),
+        }
+    }
+
+    fn drain_dispatch(&mut self) {
+        match self {
+            FormationDriver::Global { batcher, router, .. } => {
+                for batch in batcher.drain_all() {
+                    router.dispatch(batch);
+                }
+            }
+            FormationDriver::PerClass(lanes) => lanes.drain_dispatch(),
+        }
+    }
+
+    /// Mirror formation-side counters into the shared metrics: early
+    /// closes, plus the lane-0 (global) or per-lane occupancy and
+    /// arrival-rate gauges that profile persistence snapshots.
+    fn publish(&self, metrics: &ServerMetrics) {
+        match self {
+            FormationDriver::Global { batcher, admitted, .. } => {
+                metrics
+                    .early_closes
+                    .store(batcher.early_closes(), Ordering::Relaxed);
+                let lane = metrics.lane(0);
+                lane.steered.store(*admitted, Ordering::Relaxed);
+                lane.occupancy
+                    .store(batcher.pending() as u64, Ordering::Relaxed);
+                if let Some((gap_s, obs)) = batcher.gap_snapshot() {
+                    lane.arrival_gap_ns
+                        .store((gap_s * 1e9) as u64, Ordering::Relaxed);
+                    lane.arrival_obs.store(obs, Ordering::Relaxed);
+                }
+            }
+            FormationDriver::PerClass(lanes) => lanes.publish(),
+        }
+    }
+}
+
+/// The leader only forms batches: drain the request channel, steer and
+/// cut per the formation driver, hand closed batches to the workers.
+/// It never touches an engine.
 fn leader_loop(
-    policy: BatchPolicy,
-    align: Vec<usize>,
+    mut driver: FormationDriver,
     rx: Receiver<Envelope>,
-    router: BatchRouter,
     shutdown: Arc<AtomicBool>,
     metrics: Arc<ServerMetrics>,
 ) {
-    let mut batcher = Batcher::with_alignment(policy, &align);
     let mut open = true;
 
-    while open || batcher.pending() > 0 {
+    while open || driver.pending() > 0 {
         if open && shutdown.load(Ordering::SeqCst) {
             open = false;
             // absorb anything already queued so it drains below
             while let Ok(env) = rx.try_recv() {
-                batcher.push(env);
+                driver.push(env);
             }
         }
         if open {
-            // Sleep until the oldest queued request's close time
-            // (deadline, or earlier when the predictive rule will fire
-            // first), bounded by SHUTDOWN_POLL so shutdown latency
+            // Sleep until the earliest close time across the formation
+            // (a lane deadline, or earlier when a predictive rule will
+            // fire first), bounded by SHUTDOWN_POLL so shutdown latency
             // stays flat.  A close time already in the past means a
             // batch is ready: skip the blocking receive entirely
             // instead of busy-spinning a zero-timeout recv.
-            let wait = batcher
+            let wait = driver
                 .next_deadline()
                 .map(|d| {
                     d.saturating_duration_since(Instant::now())
@@ -445,15 +680,15 @@ fn leader_loop(
                 .unwrap_or(SHUTDOWN_POLL);
             if wait.is_zero() {
                 while let Ok(env) = rx.try_recv() {
-                    batcher.push(env);
+                    driver.push(env);
                 }
             } else {
                 match rx.recv_timeout(wait) {
                     Ok(env) => {
-                        batcher.push(env);
+                        driver.push(env);
                         // opportunistically drain whatever else arrived
                         while let Ok(env) = rx.try_recv() {
-                            batcher.push(env);
+                            driver.push(env);
                         }
                     }
                     Err(RecvTimeoutError::Timeout) => {}
@@ -466,21 +701,14 @@ fn leader_loop(
 
         // hand every ready batch to the pool; workers run concurrently
         // while this loop returns to batching
-        let now = Instant::now();
-        while let Some(batch) = batcher.pop_ready(now) {
-            router.dispatch(batch);
-        }
+        driver.dispatch_ready(Instant::now());
         if !open {
-            for batch in batcher.drain_all() {
-                router.dispatch(batch);
-            }
+            driver.drain_dispatch();
         }
-        metrics
-            .early_closes
-            .store(batcher.early_closes(), Ordering::Relaxed);
+        driver.publish(&metrics);
     }
-    // router drops here (with every batch sender): workers drain their
-    // queues, then exit
+    // the driver drops here (with every batch sender): workers drain
+    // their queues, then exit
 }
 
 /// One engine worker: pull closed batches, execute, reply, and feed the

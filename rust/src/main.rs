@@ -11,7 +11,8 @@ use std::time::{Duration, Instant};
 
 use cnnlab::cli::Args;
 use cnnlab::coordinator::{
-    DeviceProfile, InferenceEngine, PjrtEngine, Server, ServerConfig,
+    DeviceProfile, FormationPolicy, InferenceEngine, PjrtEngine,
+    ProfileState, Server, ServerConfig,
 };
 use cnnlab::device::{Accelerator, FpgaDevice, GpuDevice};
 use cnnlab::fpga;
@@ -90,7 +91,8 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
 }
 
 /// `cnnlab serve --network tinynet --requests 64 --rate 200 --max-batch 8
-///  --workers 2 --dispatch affinity --profiles gpu,fpga --predictive`
+///  --workers 2 --dispatch affinity --profiles gpu,fpga --predictive
+///  --formation per_class --profile-state state.json --report-every 32`
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let net = network_by_name(args.get_or("network", "tinynet"))?;
     let dir = args.get_or("artifacts", cnnlab::DEFAULT_ARTIFACTS_DIR);
@@ -101,6 +103,12 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let workers = args.get_usize("workers", 1)?.max(1);
     let dispatch: cnnlab::coordinator::DispatchPolicy =
         args.get_or("dispatch", "join-idle").parse()?;
+    let formation: FormationPolicy =
+        args.get_or("formation", "global").parse()?;
+    // learned-state persistence: load if the file exists, save on exit
+    let profile_state_path = args.get("profile-state");
+    // print worker/lane snapshots every N submissions (0 = only at end)
+    let report_every = args.get_usize("report-every", 0)?;
     let predictive = args.has_flag("predictive");
     // `--profiles gpu,fpga` tags worker i with the i-th entry (cycled):
     // analytic GPU/FPGA cost models seed the dispatcher's latency
@@ -133,15 +141,43 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     if predictive {
         policy = policy.with_predictive_close();
     }
-    let config = ServerConfig { policy, queue_capacity: 256, dispatch };
-    let server = match profiles {
-        None => Server::spawn_pool(engines, config),
+    let config = ServerConfig {
+        policy,
+        queue_capacity: 256,
+        dispatch,
+        formation,
+    };
+    let loaded_state = match profile_state_path {
+        Some(path) if std::path::Path::new(path).exists() => {
+            let state = ProfileState::load(path)?;
+            println!(
+                "profile state: loaded {} worker table(s), {} arrival \
+                 estimate(s) from {path}",
+                state.workers.len(),
+                state.arrivals.len()
+            );
+            Some(state)
+        }
+        _ => None,
+    };
+    let profiled = match profiles {
+        None => engines
+            .into_iter()
+            .map(|e| {
+                (
+                    e,
+                    DeviceProfile::unmodeled(
+                        cnnlab::device::DeviceKind::CpuPjrt,
+                    ),
+                )
+            })
+            .collect(),
         Some(spec) => {
             // split(',') always yields at least one element; an empty
             // or unknown tag fails in the match below
             let tags: Vec<&str> =
                 spec.split(',').map(str::trim).collect();
-            let profiled = engines
+            engines
                 .into_iter()
                 .enumerate()
                 .map(|(i, e)| {
@@ -165,19 +201,34 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                     };
                     Ok((e, profile))
                 })
-                .collect::<anyhow::Result<Vec<_>>>()?;
-            Server::spawn_pool_profiled(profiled, config)
+                .collect::<anyhow::Result<Vec<_>>>()?
         }
     };
+    let server = Server::spawn_pool_profiled_with_state(
+        profiled,
+        config,
+        loaded_state.as_ref(),
+    );
+    if formation == FormationPolicy::PerClass {
+        let classes: Vec<&str> = server
+            .lane_classes()
+            .iter()
+            .map(|c| c.name())
+            .collect();
+        println!("formation lanes: {}", classes.join(", "));
+    }
     let client = server.client();
     let mut rng = Rng::new(9);
     let t0 = Instant::now();
     let mut pending = Vec::new();
-    for _ in 0..requests {
+    for i in 0..requests {
         let gap = rng.next_exp(rate);
         std::thread::sleep(Duration::from_secs_f64(gap.min(0.05)));
         let img = Tensor::randn(&image_shape, &mut rng, 0.1);
         pending.push(client.submit(img)?);
+        if report_every > 0 && (i + 1) % report_every == 0 {
+            print_snapshot_report(&server, i + 1);
+        }
     }
     for rx in pending {
         rx.recv()??;
@@ -204,21 +255,59 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             m.early_closes.load(std::sync::atomic::Ordering::Relaxed)
         );
     }
-    if dispatch == cnnlab::coordinator::DispatchPolicy::Affinity {
+    if dispatch == cnnlab::coordinator::DispatchPolicy::Affinity
+        || formation == FormationPolicy::PerClass
+    {
         println!(
-            "affinity routed: {}  cold fallbacks: {}",
+            "affinity routed: {}  cold fallbacks: {}  stolen: {}",
             m.affinity_routed.load(std::sync::atomic::Ordering::Relaxed),
-            m.cold_fallbacks.load(std::sync::atomic::Ordering::Relaxed)
+            m.cold_fallbacks.load(std::sync::atomic::Ordering::Relaxed),
+            m.stolen.load(std::sync::atomic::Ordering::Relaxed)
         );
-        for (i, s) in server.worker_snapshots().iter().enumerate() {
-            println!(
-                "  worker {i} [{}]: {} batches",
-                s.kind.name(),
-                s.dispatched
-            );
-        }
+    }
+    print_snapshot_report(&server, requests);
+    if let Some(path) = profile_state_path {
+        server.profile_state().save(path)?;
+        println!("profile state: saved to {path}");
     }
     Ok(())
+}
+
+/// One observability block per call: per-lane occupancy/steering and
+/// per-worker dispatcher state including the learned EWMA latency
+/// table — `Server::worker_snapshots` surfaced without a debugger.
+fn print_snapshot_report(server: &Server, submitted: usize) {
+    use std::sync::atomic::Ordering;
+    let m = server.metrics();
+    println!("-- snapshot after {submitted} submissions --");
+    for (i, label) in server.lane_labels().iter().enumerate() {
+        let lane = m.lane(i);
+        let gap_ns = lane.arrival_gap_ns.load(Ordering::Relaxed);
+        println!(
+            "  lane {i} [{label}]: steered={} occupancy={} \
+             arrival_gap={}",
+            lane.steered.load(Ordering::Relaxed),
+            lane.occupancy.load(Ordering::Relaxed),
+            si_time(gap_ns as f64 / 1e9),
+        );
+    }
+    for (i, s) in server.worker_snapshots().iter().enumerate() {
+        let table: Vec<String> = s
+            .exec_table
+            .iter()
+            .map(|&(b, exec_s, obs)| {
+                format!("b{b}={} (n={obs})", si_time(exec_s))
+            })
+            .collect();
+        println!(
+            "  worker {i} [{}]: batches={} queued={} backlog={} ewma[{}]",
+            s.kind.name(),
+            s.dispatched,
+            s.queued,
+            si_time(s.backlog_us as f64 / 1e6),
+            table.join(", "),
+        );
+    }
 }
 
 /// `cnnlab dse --batch 128 --objective latency [--power-cap 50]`

@@ -114,6 +114,19 @@ impl Ewma {
         Ewma { alpha, value: 0.0, count: 0 }
     }
 
+    /// An estimator restored from a persisted `(value, count)` snapshot
+    /// — the warm-redeploy path: it answers `value()` immediately and
+    /// `is_warm` as if the original observations had been replayed.
+    /// A zero `count` yields a cold estimator (same as [`Ewma::new`]).
+    pub fn preloaded(alpha: f64, value: f64, count: u64) -> Ewma {
+        let mut e = Ewma::new(alpha);
+        if count > 0 && value.is_finite() {
+            e.value = value;
+            e.count = count;
+        }
+        e
+    }
+
     pub fn observe(&mut self, x: f64) {
         self.value = if self.count == 0 {
             x
@@ -240,6 +253,17 @@ mod tests {
     #[should_panic]
     fn ewma_rejects_bad_alpha() {
         let _ = Ewma::new(0.0);
+    }
+
+    #[test]
+    fn ewma_preloaded_restores_snapshot() {
+        let e = Ewma::preloaded(0.3, 4.5, 7);
+        assert_eq!(e.value(), Some(4.5));
+        assert_eq!(e.count(), 7);
+        assert!(e.is_warm(2));
+        // zero observations or a non-finite value stay cold
+        assert_eq!(Ewma::preloaded(0.3, 4.5, 0).value(), None);
+        assert_eq!(Ewma::preloaded(0.3, f64::NAN, 3).value(), None);
     }
 
     #[test]

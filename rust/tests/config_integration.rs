@@ -51,6 +51,50 @@ fn full_config_file_roundtrip() {
 }
 
 #[test]
+fn formation_and_profile_state_roundtrip_through_files() {
+    use cnnlab::coordinator::{
+        ArrivalState, FormationPolicy, ProfileState, WorkerTable,
+    };
+    let path = write_tmp(
+        "formation.toml",
+        r#"
+        [serving]
+        formation = "per_class"
+        profile_state = "profiles/serve-state.json"
+        dispatch = "affinity"
+        predictive_close = true
+        "#,
+    );
+    let text = std::fs::read_to_string(&path).unwrap();
+    let doc = parse_toml(&text).unwrap();
+    let cfg = ServingConfig::from_toml(&doc).unwrap();
+    assert_eq!(cfg.formation, FormationPolicy::PerClass);
+    assert_eq!(
+        cfg.profile_state.as_deref(),
+        Some("profiles/serve-state.json")
+    );
+    let sc = cfg.server_config();
+    assert_eq!(sc.formation, FormationPolicy::PerClass);
+
+    // the state file the knob points at survives a disk roundtrip
+    let state = ProfileState {
+        workers: vec![WorkerTable {
+            kind: "gpu".into(),
+            rows: vec![(8, 0.0161, 12)],
+        }],
+        arrivals: vec![ArrivalState {
+            lane: "throughput".into(),
+            gap_s: 0.002,
+            obs: 64,
+        }],
+    };
+    let state_path = write_tmp("serve-state.json", "");
+    let state_path = state_path.to_str().unwrap();
+    state.save(state_path).unwrap();
+    assert_eq!(ProfileState::load(state_path).unwrap(), state);
+}
+
+#[test]
 fn custom_network_config_runs_through_the_simulator() {
     let doc = parse_toml(
         r#"

@@ -172,6 +172,7 @@ fn affinity_dispatch_warms_up_from_cold_and_serves_all() {
             policy: BatchPolicy::new(4, Duration::from_millis(1)),
             queue_capacity: 128,
             dispatch: DispatchPolicy::Affinity,
+            ..Default::default()
         },
     );
     let client = server.client();

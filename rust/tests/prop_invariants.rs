@@ -6,8 +6,9 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use cnnlab::coordinator::{
-    pick_worker, BatchPolicy, Batcher, DeviceProfile, DispatchPolicy,
-    Envelope, MockEngine, Request, Server, ServerConfig, WorkerState,
+    pick_worker, BatchPolicy, Batcher, CurveEngine, DeviceProfile,
+    DispatchPolicy, Envelope, FormationPolicy, MockEngine, Request,
+    Server, ServerConfig, WorkerState,
 };
 use cnnlab::device::DeviceKind;
 use cnnlab::fpga::{self, EngineConfig};
@@ -244,6 +245,7 @@ fn prop_affinity_every_request_answered_exactly_once() {
                 ),
                 queue_capacity: 256,
                 dispatch: DispatchPolicy::Affinity,
+                ..Default::default()
             },
         );
         let client = server.client();
@@ -271,6 +273,85 @@ fn prop_affinity_every_request_answered_exactly_once() {
             return Err(format!(
                 "{} unique replies for {n} requests",
                 ids.len()
+            ));
+        }
+        Ok(())
+    }));
+}
+
+/// End-to-end per-class formation: for any request count, every request
+/// is answered exactly once and every admission is steered to exactly
+/// one lane — including under work-stealing, which this setup provokes
+/// by pairing cost models with engines whose real speed contradicts
+/// them (the "cheap" lane's backlog grows until batches steal across).
+#[test]
+fn prop_per_class_formation_answers_every_request_exactly_once() {
+    let gen = usize_in(1, 30);
+    expect_ok(check(29, 10, &gen, |&n| {
+        // profiles claim: worker 0 latency-shaped (0.3ms/img), worker 1
+        // throughput-shaped (2ms flat).  Reality: both are 1ms mocks,
+        // so predictions mis-rank and stealing gets exercised.
+        let lat_profile =
+            CurveEngine::latency_shaped(300).profile(DeviceKind::Gpu);
+        let tput_profile = CurveEngine::throughput_shaped(2_000)
+            .profile(DeviceKind::Fpga);
+        let mut a = MockEngine::new(vec![1, 2, 4, 8]);
+        a.delay = Duration::from_millis(1);
+        let mut b = MockEngine::new(vec![1, 2, 4, 8]);
+        b.delay = Duration::from_millis(1);
+        let server = Server::spawn_pool_profiled(
+            vec![(a, lat_profile), (b, tput_profile)],
+            ServerConfig {
+                policy: BatchPolicy::new(
+                    4,
+                    Duration::from_micros(200),
+                ),
+                queue_capacity: 256,
+                dispatch: DispatchPolicy::JoinIdle,
+                formation: FormationPolicy::PerClass,
+            },
+        );
+        if server.lane_classes().len() != 2 {
+            return Err("expected a lane per device class".into());
+        }
+        let client = server.client();
+        let mut rng = Rng::new(97 + n as u64);
+        let rxs: Vec<_> = (0..n)
+            .map(|_| {
+                client.submit(Tensor::randn(&[3, 8, 8], &mut rng, 0.1))
+            })
+            .collect::<Result<_, _>>()
+            .map_err(|e| e.to_string())?;
+        let mut ids = Vec::new();
+        for rx in rxs {
+            let resp =
+                rx.recv().map_err(|e| e.to_string())?.map_err(|e| {
+                    e.to_string()
+                })?;
+            ids.push(resp.id);
+            if rx.try_recv().is_ok() {
+                return Err("duplicate reply".into());
+            }
+        }
+        ids.sort_unstable();
+        ids.dedup();
+        if ids.len() != n {
+            return Err(format!(
+                "{} unique replies for {n} requests",
+                ids.len()
+            ));
+        }
+        let m = server.metrics();
+        let steered: u64 = (0..m.lanes())
+            .map(|i| {
+                m.lane(i)
+                    .steered
+                    .load(std::sync::atomic::Ordering::Relaxed)
+            })
+            .sum();
+        if steered != n as u64 {
+            return Err(format!(
+                "{steered} steering decisions for {n} admissions"
             ));
         }
         Ok(())
