@@ -16,7 +16,7 @@ use std::time::{Duration, Instant};
 
 use cnnlab::coordinator::{
     BatchPolicy, CurveEngine, DispatchPolicy, FormationPolicy,
-    MockEngine, PjrtEngine, Server, ServerConfig,
+    MockEngine, PjrtEngine, RoutePolicy, Router, Server, ServerConfig,
 };
 use cnnlab::device::DeviceKind;
 use cnnlab::model::{alexnet, tinynet};
@@ -311,6 +311,7 @@ fn per_class_formation_section(smoke: bool) {
                 queue_capacity: 1024,
                 dispatch: DispatchPolicy::Affinity,
                 formation,
+                ..Default::default()
             },
         );
         let client = server.client();
@@ -395,12 +396,138 @@ fn per_class_formation_section(smoke: bool) {
     );
 }
 
+/// Cross-coordinator routing: LeastOutstanding vs Predictive over a
+/// heterogeneous 2-coordinator deployment (latency-shaped 6ms/img vs
+/// throughput-shaped 16ms flat, each behind per-class formation).
+/// Bursts of 8 exercise burst splitting; lone singles at idle instants
+/// expose the tie-rotation blindness predictive routing removes.
+fn multi_coordinator_routing_section(smoke: bool) {
+    let rounds = if smoke { 3 } else { 12 };
+    let sleep_until = |deadline: Instant| {
+        let now = Instant::now();
+        if deadline > now {
+            std::thread::sleep(deadline - now);
+        }
+    };
+    let run = |route: RoutePolicy| -> (f64, f64, u64, u64, u64) {
+        let spawn = |engine: CurveEngine, kind: DeviceKind| -> Server {
+            let profile = engine.profile(kind);
+            Server::spawn_pool_profiled(
+                vec![(engine, profile)],
+                ServerConfig {
+                    policy: BatchPolicy::new(
+                        8,
+                        Duration::from_millis(12),
+                    ),
+                    queue_capacity: 1024,
+                    dispatch: DispatchPolicy::Affinity,
+                    formation: FormationPolicy::PerClass,
+                    ..Default::default()
+                },
+            )
+        };
+        let lat =
+            spawn(CurveEngine::latency_shaped(6_000), DeviceKind::Gpu);
+        let tput = spawn(
+            CurveEngine::throughput_shaped(16_000),
+            DeviceKind::Fpga,
+        );
+        let router =
+            Router::new(vec![lat.client(), tput.client()], route);
+        let mut rng = Rng::new(17);
+        let t0 = Instant::now();
+        let mut pending = Vec::new();
+        let mut singles = Vec::new();
+        for r in 0..rounds {
+            let base = t0 + Duration::from_millis(44 * r as u64);
+            sleep_until(base);
+            for _ in 0..8 {
+                pending.push(
+                    router
+                        .submit(Tensor::randn(&[3, 8, 8], &mut rng, 0.1))
+                        .unwrap(),
+                );
+            }
+            sleep_until(base + Duration::from_millis(34));
+            singles.push(
+                router
+                    .submit(Tensor::randn(&[3, 8, 8], &mut rng, 0.1))
+                    .unwrap(),
+            );
+        }
+        let mut lat_samples = Samples::new();
+        for rx in singles {
+            lat_samples.push(rx.recv().unwrap().unwrap().latency_s);
+        }
+        let mut done = 0usize;
+        for rx in pending {
+            rx.recv().unwrap().unwrap();
+            done += 1;
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let rm = router.metrics();
+        use std::sync::atomic::Ordering;
+        let (mut predictive, mut cold) = (0u64, 0u64);
+        for i in 0..rm.backends() {
+            predictive += rm
+                .backend(i)
+                .predictive_routed
+                .load(Ordering::Relaxed);
+            cold += rm.backend(i).cold_routed.load(Ordering::Relaxed);
+        }
+        (
+            lat_samples.percentile(95.0),
+            (done + rounds) as f64 / wall,
+            predictive,
+            cold,
+            rm.failovers.load(Ordering::Relaxed),
+        )
+    };
+    let mut t = Table::new(
+        &format!(
+            "Cross-coordinator routing — burst-8 + lone single \
+             x{rounds}, latency coord (6ms/img) + throughput coord \
+             (16ms flat)"
+        ),
+        &[
+            "route",
+            "single p95",
+            "req/s",
+            "predictive",
+            "cold",
+            "failovers",
+        ],
+    );
+    for (label, route) in [
+        ("least-outstanding", RoutePolicy::LeastOutstanding),
+        ("predictive", RoutePolicy::Predictive),
+    ] {
+        let (p95, rps, predictive, cold, failovers) = run(route);
+        t.row(&[
+            label.to_string(),
+            si_time(p95),
+            f2(rps),
+            predictive.to_string(),
+            cold.to_string(),
+            failovers.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "expected shape: predictive routing pins lone singles to the \
+         latency coordinator (p95 collapses toward its device time) \
+         while least-outstanding tie-rotates half of them onto the \
+         flat device's formation deadline.\n"
+    );
+}
+
 fn main() -> anyhow::Result<()> {
     let smoke = std::env::args().any(|a| a == "--smoke");
     mock_pipeline_section(smoke);
     predictive_close_section(smoke);
     affinity_dispatch_section(smoke);
     per_class_formation_section(smoke);
+    multi_coordinator_routing_section(smoke);
     if smoke {
         println!("SMOKE MODE: hermetic sections only, reduced counts");
         return Ok(());

@@ -6,7 +6,8 @@ pub mod toml;
 use std::time::Duration;
 
 use crate::coordinator::{
-    BatchPolicy, DispatchPolicy, FormationPolicy, ServerConfig,
+    BatchPolicy, DispatchPolicy, FormationPolicy, LaneBudgets,
+    RoutePolicy, ServerConfig,
 };
 use crate::model::{
     Act, ConvSpec, FcSpec, Layer, LrnSpec, Network, PoolKind, PoolSpec,
@@ -35,6 +36,16 @@ pub struct ServingConfig {
     /// Batch formation: `"global"` (one batcher, one policy) or
     /// `"per_class"` (one cost-model-derived lane per device class).
     pub formation: FormationPolicy,
+    /// Per-lane admission budgets under `formation = "per_class"`,
+    /// e.g. `"latency=8,throughput=10"`; empty keeps the single
+    /// `queue_capacity` bound.
+    pub lane_budgets: LaneBudgets,
+    /// Coordinator instances behind the request router (each gets its
+    /// own leader and worker pool).
+    pub coordinators: usize,
+    /// Cross-coordinator routing: `"round-robin"`,
+    /// `"least-outstanding"`, or `"predictive"`.
+    pub route: RoutePolicy,
     /// Path to a persisted profile state (worker EWMA latency tables +
     /// arrival-rate estimates): loaded on startup when the file exists,
     /// written back when a serve run completes.
@@ -55,6 +66,9 @@ impl Default for ServingConfig {
             predictive_close: false,
             dispatch: DispatchPolicy::JoinIdle,
             formation: FormationPolicy::Global,
+            lane_budgets: LaneBudgets::none(),
+            coordinators: 1,
+            route: RoutePolicy::LeastOutstanding,
             profile_state: None,
         }
     }
@@ -70,13 +84,15 @@ impl ServingConfig {
         }
     }
 
-    /// The coordinator configuration this serving config describes.
+    /// The coordinator configuration this serving config describes
+    /// (one per `coordinators` instance).
     pub fn server_config(&self) -> ServerConfig {
         ServerConfig {
             policy: self.policy(),
             queue_capacity: self.queue_capacity,
             dispatch: self.dispatch,
             formation: self.formation,
+            lane_budgets: self.lane_budgets.clone(),
         }
     }
 
@@ -131,10 +147,29 @@ impl ServingConfig {
                 cfg.formation = v.parse()?;
             }
             if let Some(v) =
+                t.get("lane_budgets").and_then(TomlValue::as_str)
+            {
+                cfg.lane_budgets = v.parse()?;
+            }
+            if let Some(v) =
+                t.get("coordinators").and_then(TomlValue::as_int)
+            {
+                anyhow::ensure!(v > 0, "coordinators must be positive");
+                cfg.coordinators = v as usize;
+            }
+            if let Some(v) = t.get("route").and_then(TomlValue::as_str) {
+                cfg.route = v.parse()?;
+            }
+            if let Some(v) =
                 t.get("profile_state").and_then(TomlValue::as_str)
             {
                 cfg.profile_state = Some(v.to_string());
             }
+            anyhow::ensure!(
+                cfg.lane_budgets.is_empty()
+                    || cfg.formation == FormationPolicy::PerClass,
+                "lane_budgets requires formation = \"per_class\""
+            );
         }
         Ok(cfg)
     }
@@ -393,6 +428,50 @@ mod tests {
         // unknown formation strings are rejected
         let doc =
             parse_toml("[serving]\nformation = \"chaotic\"").unwrap();
+        assert!(ServingConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn serving_router_and_budget_knobs() {
+        use crate::coordinator::LaneClass;
+        let doc = parse_toml(
+            r#"
+            [serving]
+            formation = "per_class"
+            lane_budgets = "latency=8,throughput=10"
+            coordinators = 3
+            route = "predictive"
+        "#,
+        )
+        .unwrap();
+        let cfg = ServingConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.coordinators, 3);
+        assert_eq!(cfg.route, RoutePolicy::Predictive);
+        assert_eq!(cfg.lane_budgets.get(LaneClass::Latency), Some(8));
+        assert_eq!(cfg.lane_budgets.get(LaneClass::Throughput), Some(10));
+        let sc = cfg.server_config();
+        assert_eq!(sc.lane_budgets, cfg.lane_budgets);
+        // defaults: one coordinator, least-outstanding, no budgets
+        let cfg = ServingConfig::default();
+        assert_eq!(cfg.coordinators, 1);
+        assert_eq!(cfg.route, RoutePolicy::LeastOutstanding);
+        assert!(cfg.lane_budgets.is_empty());
+        // budgets without per-class formation are a config error
+        let doc = parse_toml(
+            "[serving]\nlane_budgets = \"latency=8\"",
+        )
+        .unwrap();
+        assert!(ServingConfig::from_toml(&doc).is_err());
+        // junk rejected
+        let doc = parse_toml("[serving]\nroute = \"psychic\"").unwrap();
+        assert!(ServingConfig::from_toml(&doc).is_err());
+        let doc = parse_toml("[serving]\ncoordinators = 0").unwrap();
+        assert!(ServingConfig::from_toml(&doc).is_err());
+        let doc = parse_toml(
+            "[serving]\nformation = \"per_class\"\n\
+             lane_budgets = \"latency=oops\"",
+        )
+        .unwrap();
         assert!(ServingConfig::from_toml(&doc).is_err());
     }
 

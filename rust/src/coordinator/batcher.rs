@@ -65,6 +65,43 @@ impl BatchPolicy {
         self.predictive = true;
         self
     }
+
+    /// The PR 3 admission estimate, closed-form half: predicted
+    /// formation wait (µs) and closing batch size for a request joining
+    /// a batcher with `pending` queued requests, given an inter-arrival
+    /// gap estimate.  When the predicted stream fills the batch before
+    /// the deadline the wait is the fill time and the batch closes at
+    /// `max_batch`; otherwise the request waits out the deadline and
+    /// closes with whatever queued.  Shared by lane steering
+    /// (`LaneSet::lane_estimate_us`), the per-lane `admission_wait_us`
+    /// gauge the leader publishes, and the client-side device-class
+    /// estimate behind per-lane admission budgets.
+    pub fn admission_estimate_us(
+        &self,
+        pending: usize,
+        gap: Option<Duration>,
+    ) -> (u64, usize) {
+        let remaining = self.max_batch.saturating_sub(pending + 1) as u64;
+        let max_wait_us = self.max_wait.as_micros() as u64;
+        if remaining == 0 {
+            // the batch closes on size at this push
+            return (0, pending + 1);
+        }
+        match gap {
+            Some(g) => {
+                let fill_us =
+                    (g.as_micros() as u64).saturating_mul(remaining);
+                if fill_us <= max_wait_us {
+                    // the stream is expected to fill the batch before
+                    // the deadline
+                    (fill_us, self.max_batch.max(pending + 1))
+                } else {
+                    (max_wait_us, pending + 1)
+                }
+            }
+            None => (max_wait_us, pending + 1),
+        }
+    }
 }
 
 /// Accumulates requests and releases batches per policy.
@@ -279,6 +316,28 @@ impl Batcher {
         }
         self.last_arrival = None;
         out
+    }
+
+    /// Predicted formation wait and closing size for a request admitted
+    /// to this batcher at `arrived`: the policy's closed-form estimate
+    /// ([`BatchPolicy::admission_estimate_us`]) bounded by the actual
+    /// close instant of an already-open batch (deadline- and
+    /// predictive-aware) — a request joining a batch 11ms into a 12ms
+    /// deadline waits ~1ms, not `max_wait`.
+    pub fn admission_wait_us(
+        &self,
+        arrived: Instant,
+        gap: Option<Duration>,
+    ) -> (u64, usize) {
+        let (mut wait_us, close_n) =
+            self.policy.admission_estimate_us(self.queue.len(), gap);
+        if let Some(close_at) = self.next_deadline() {
+            let left = close_at
+                .saturating_duration_since(arrived)
+                .as_micros() as u64;
+            wait_us = wait_us.min(left);
+        }
+        (wait_us, close_n)
     }
 
     /// Earliest moment a timeout- or prediction-triggered batch could
@@ -638,6 +697,46 @@ mod tests {
         b.push(env(0, t0));
         assert_eq!(b.pop_ready(t0).unwrap().len(), 1);
         assert_eq!(b.early_closes(), 1);
+    }
+
+    #[test]
+    fn admission_estimate_matches_policy_shape() {
+        let p = BatchPolicy::new(8, Duration::from_millis(12));
+        // closes on size at this push: no wait
+        assert_eq!(p.admission_estimate_us(7, None), (0, 8));
+        // no gap estimate: deadline-bound close with the queue + 1
+        assert_eq!(p.admission_estimate_us(2, None), (12_000, 3));
+        // small gap: the stream fills the batch before the deadline
+        let g = Some(Duration::from_millis(1));
+        assert_eq!(p.admission_estimate_us(2, g), (5_000, 8));
+        // large gap: the batch cannot fill, the deadline closes it
+        let g = Some(Duration::from_millis(20));
+        assert_eq!(p.admission_estimate_us(2, g), (12_000, 3));
+        // immediate policies never wait
+        assert_eq!(
+            BatchPolicy::immediate().admission_estimate_us(0, None),
+            (0, 1)
+        );
+    }
+
+    #[test]
+    fn admission_wait_bounded_by_open_batch_close() {
+        let mut b = Batcher::new(BatchPolicy::new(
+            8,
+            Duration::from_millis(12),
+        ));
+        let t0 = Instant::now();
+        b.push(env(0, t0));
+        // a request joining 11ms into the 12ms deadline waits ~1ms,
+        // whatever the closed-form estimate says
+        let late = t0 + Duration::from_millis(11);
+        let (wait_us, close_n) = b.admission_wait_us(late, None);
+        assert_eq!(wait_us, 1_000);
+        assert_eq!(close_n, 2);
+        // an empty batcher falls back to the closed form
+        let empty =
+            Batcher::new(BatchPolicy::new(8, Duration::from_millis(12)));
+        assert_eq!(empty.admission_wait_us(t0, None), (12_000, 1));
     }
 
     #[test]

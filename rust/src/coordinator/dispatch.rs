@@ -247,8 +247,10 @@ impl WorkerState {
     /// with cold-dispatched in-flight batches charged at the current
     /// prediction (the same key [`pick_worker`] minimizes).  `None`
     /// while the execution estimate is cold.  This is the admission-
-    /// time estimate lane steering and work-stealing reuse, so routing
-    /// and formation agree on what "expensive" means.
+    /// time estimate lane steering, work-stealing, AND the
+    /// cross-coordinator router (`Client::predicted_admission_us` →
+    /// `RoutePolicy::Predictive`) reuse, so routing at every level
+    /// agrees on what "expensive" means.
     pub fn predicted_completion_us(&self, n: usize) -> Option<u64> {
         let exec = self.predict_us(n)?;
         let uncosted = self.uncosted.load(Ordering::Relaxed) as u64;

@@ -110,6 +110,119 @@ impl LaneClass {
     ];
 }
 
+impl std::str::FromStr for LaneClass {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<LaneClass> {
+        match s {
+            "latency" => Ok(LaneClass::Latency),
+            "throughput" => Ok(LaneClass::Throughput),
+            "unclassified" => Ok(LaneClass::Unclassified),
+            other => anyhow::bail!(
+                "unknown lane class {other:?} \
+                 (latency|throughput|unclassified)"
+            ),
+        }
+    }
+}
+
+/// Per-lane admission budgets — the lane-aware replacement for the
+/// single `queue_capacity` bound under [`FormationPolicy::PerClass`].
+/// Each entry caps the *outstanding* requests admitted under that
+/// device class (weighted shedding: a saturated throughput lane sheds
+/// at its own budget instead of consuming the slots latency traffic
+/// needs); classes without an entry stay under the global
+/// `queue_capacity` bound.  Empty = the global bound for everything
+/// (the pre-budget behaviour).  Ignored under
+/// [`FormationPolicy::Global`] (one lane, nothing to weight).
+///
+/// Textual form (TOML `lane_budgets`, CLI `--lane-budget`):
+/// `"latency=8,throughput=10"`.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct LaneBudgets {
+    entries: Vec<(LaneClass, usize)>,
+}
+
+impl LaneBudgets {
+    /// No per-lane budgets: everything under the global bound.
+    pub fn none() -> LaneBudgets {
+        LaneBudgets::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Builder: cap `class` at `budget` outstanding requests.
+    pub fn with(mut self, class: LaneClass, budget: usize) -> LaneBudgets {
+        assert!(budget > 0, "a lane budget must be positive");
+        self.entries.retain(|&(c, _)| c != class);
+        self.entries.push((class, budget));
+        self
+    }
+
+    /// The budget configured for `class`, if any.
+    pub fn get(&self, class: LaneClass) -> Option<usize> {
+        self.entries
+            .iter()
+            .find(|&&(c, _)| c == class)
+            .map(|&(_, b)| b)
+    }
+}
+
+impl std::str::FromStr for LaneBudgets {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<LaneBudgets> {
+        let mut budgets = LaneBudgets::none();
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (class, count) = part.split_once('=').ok_or_else(|| {
+                anyhow::anyhow!(
+                    "lane budget {part:?} is not class=count"
+                )
+            })?;
+            let class: LaneClass = class.trim().parse()?;
+            let count: usize = count.trim().parse().map_err(|_| {
+                anyhow::anyhow!(
+                    "lane budget for {} needs a positive integer, \
+                     got {count:?}",
+                    class.name()
+                )
+            })?;
+            anyhow::ensure!(
+                count > 0,
+                "lane budget for {} must be positive",
+                class.name()
+            );
+            anyhow::ensure!(
+                budgets.get(class).is_none(),
+                "duplicate lane budget for {}",
+                class.name()
+            );
+            budgets = budgets.with(class, count);
+        }
+        Ok(budgets)
+    }
+}
+
+impl std::fmt::Display for LaneBudgets {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut first = true;
+        for &(class, budget) in &self.entries {
+            if !first {
+                write!(f, ",")?;
+            }
+            write!(f, "{}={budget}", class.name())?;
+            first = false;
+        }
+        Ok(())
+    }
+}
+
 /// One lane of the plan: which workers it serves and how it cuts.
 #[derive(Clone, Debug)]
 pub struct LaneSpec {
@@ -323,39 +436,8 @@ impl LaneSet {
         arrived: Instant,
         inst_gap: Option<Duration>,
     ) -> Option<u64> {
-        let pending = lane.batcher.pending();
-        let policy = lane.batcher.policy();
-        let remaining =
-            policy.max_batch.saturating_sub(pending + 1) as u64;
-        let max_wait_us = policy.max_wait.as_micros() as u64;
-        let (mut wait_us, close_n) = if remaining == 0 {
-            // the batch closes on size at this push
-            (0, pending + 1)
-        } else {
-            match inst_gap {
-                Some(g) => {
-                    let fill_us = (g.as_micros() as u64)
-                        .saturating_mul(remaining);
-                    if fill_us <= max_wait_us {
-                        // the stream is expected to fill the batch
-                        // before the deadline
-                        (fill_us, policy.max_batch.max(pending + 1))
-                    } else {
-                        (max_wait_us, pending + 1)
-                    }
-                }
-                None => (max_wait_us, pending + 1),
-            }
-        };
-        // an already-open batch bounds the wait by its actual close
-        // instant (deadline- and predictive-aware): a request joining
-        // a batch 11ms into a 12ms deadline waits ~1ms, not max_wait
-        if let Some(close_at) = lane.batcher.next_deadline() {
-            let left = close_at
-                .saturating_duration_since(arrived)
-                .as_micros() as u64;
-            wait_us = wait_us.min(left);
-        }
+        let (wait_us, close_n) =
+            lane.batcher.admission_wait_us(arrived, inst_gap);
         let exec = lane
             .workers
             .iter()
@@ -509,15 +591,24 @@ impl LaneSet {
             .min()
     }
 
-    /// Mirror per-lane gauges (occupancy, arrival estimate) and the
-    /// summed early-close count into the shared metrics.
-    pub fn publish(&self) {
+    /// Mirror per-lane gauges (occupancy, arrival estimate, predicted
+    /// admission wait) and the summed early-close count into the
+    /// shared metrics.  The `admission_wait_us` gauge is the formation
+    /// wait a request admitted *now* would see (mean-gap flavour of
+    /// the steering estimate) — what `Client::predicted_admission_us`
+    /// and the predictive router read without touching the
+    /// leader-owned batchers.
+    pub fn publish(&self, now: Instant) {
         for (i, lane) in self.lanes.iter().enumerate() {
             let c = self.metrics.lane(i);
             c.occupancy.store(
                 lane.batcher.pending() as u64,
                 Ordering::Relaxed,
             );
+            let (wait_us, _) = lane
+                .batcher
+                .admission_wait_us(now, lane.batcher.mean_gap());
+            c.admission_wait_us.store(wait_us, Ordering::Relaxed);
             if let Some((gap_s, obs)) = lane.batcher.gap_snapshot() {
                 c.arrival_gap_ns
                     .store((gap_s * 1e9) as u64, Ordering::Relaxed);
@@ -746,6 +837,60 @@ mod tests {
             .collect();
         ids.sort_unstable();
         assert_eq!(ids, (0..23).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn lane_budgets_parse_and_roundtrip() {
+        let b: LaneBudgets = "latency=8,throughput=10".parse().unwrap();
+        assert_eq!(b.get(LaneClass::Latency), Some(8));
+        assert_eq!(b.get(LaneClass::Throughput), Some(10));
+        assert_eq!(b.get(LaneClass::Unclassified), None);
+        assert!(!b.is_empty());
+        assert_eq!(b.to_string(), "latency=8,throughput=10");
+        assert_eq!(
+            b.to_string().parse::<LaneBudgets>().unwrap(),
+            b,
+            "Display/FromStr must round-trip"
+        );
+        // whitespace tolerated, empty parts skipped
+        let b: LaneBudgets =
+            " throughput = 24 , ".parse().unwrap();
+        assert_eq!(b.get(LaneClass::Throughput), Some(24));
+        assert!(LaneBudgets::none().is_empty());
+        assert_eq!("".parse::<LaneBudgets>().unwrap(), LaneBudgets::none());
+        // junk rejected
+        assert!("latency".parse::<LaneBudgets>().is_err());
+        assert!("magic=4".parse::<LaneBudgets>().is_err());
+        assert!("latency=0".parse::<LaneBudgets>().is_err());
+        assert!("latency=x".parse::<LaneBudgets>().is_err());
+        assert!("latency=1,latency=2".parse::<LaneBudgets>().is_err());
+        // builder overrides
+        let b = LaneBudgets::none()
+            .with(LaneClass::Latency, 4)
+            .with(LaneClass::Latency, 6);
+        assert_eq!(b.get(LaneClass::Latency), Some(6));
+    }
+
+    #[test]
+    fn publish_mirrors_admission_wait_gauge() {
+        let base = BatchPolicy::new(8, Duration::from_millis(12));
+        let (mut ls, _rxs) = lane_set(
+            vec![latency_state(), throughput_state()],
+            base,
+        );
+        let t0 = Instant::now();
+        ls.push(env(0, t0)); // -> latency lane (cheapest single)
+        ls.publish(t0);
+        // latency lane: immediate cuts, zero predicted wait
+        assert_eq!(
+            ls.metrics.lane(0).admission_wait_us.load(Ordering::Relaxed),
+            0
+        );
+        // throughput lane: empty, gap estimator cold -> full deadline
+        assert_eq!(
+            ls.metrics.lane(1).admission_wait_us.load(Ordering::Relaxed),
+            12_000
+        );
     }
 
     #[test]

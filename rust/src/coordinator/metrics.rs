@@ -39,8 +39,17 @@ pub struct ServerMetrics {
 pub struct LaneCounters {
     /// Requests steered to this lane at admission.
     pub steered: AtomicU64,
+    /// Requests shed at admission while predicted to land in this lane
+    /// (per-lane budget exhausted, or the global bound under a global
+    /// `queue_capacity`).
+    pub shed: AtomicU64,
     /// Gauge: requests currently queued in the lane's batcher.
     pub occupancy: AtomicU64,
+    /// Gauge: predicted formation wait (µs) for a request admitted to
+    /// this lane now — published by the leader each loop so admission
+    /// and the predictive router can estimate without touching the
+    /// leader-owned batchers.
+    pub admission_wait_us: AtomicU64,
     /// Gauge: the lane batcher's mean inter-arrival gap estimate, ns.
     pub arrival_gap_ns: AtomicU64,
     /// Gauge: observations behind `arrival_gap_ns`.
@@ -188,9 +197,17 @@ mod tests {
         assert_eq!(m.lanes(), 3);
         m.lane(0).steered.fetch_add(5, Ordering::Relaxed);
         m.lane(2).occupancy.store(7, Ordering::Relaxed);
+        m.lane(1).shed.fetch_add(3, Ordering::Relaxed);
+        m.lane(1).admission_wait_us.store(250, Ordering::Relaxed);
         assert_eq!(m.lane(0).steered.load(Ordering::Relaxed), 5);
         assert_eq!(m.lane(1).steered.load(Ordering::Relaxed), 0);
         assert_eq!(m.lane(2).occupancy.load(Ordering::Relaxed), 7);
+        assert_eq!(m.lane(0).shed.load(Ordering::Relaxed), 0);
+        assert_eq!(m.lane(1).shed.load(Ordering::Relaxed), 3);
+        assert_eq!(
+            m.lane(1).admission_wait_us.load(Ordering::Relaxed),
+            250
+        );
         // plain `new` still carries one slot for the global batcher
         assert_eq!(ServerMetrics::new(1).lanes(), 1);
         assert_eq!(m.stolen.load(Ordering::Relaxed), 0);

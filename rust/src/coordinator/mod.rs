@@ -26,9 +26,16 @@ pub use engine::{
     plan_chunks, BatchOutput, CurveEngine, InferenceEngine, MockEngine,
     PjrtEngine,
 };
-pub use formation::{FormationPlan, FormationPolicy, LaneClass, LaneSet};
+pub use formation::{
+    FormationPlan, FormationPolicy, LaneBudgets, LaneClass, LaneSet,
+};
 pub use metrics::{LaneCounters, ServerMetrics};
 pub use persist::{ArrivalState, ProfileState, WorkerTable};
 pub use request::{Envelope, Request, Response};
-pub use router::{RoutePolicy, Router};
-pub use server::{Client, ReplyReceiver, Server, ServerConfig};
+pub use router::{
+    BackendCounters, RoutePolicy, Router, RouterMetrics,
+    DEAD_BACKEND_COOLDOWN,
+};
+pub use server::{
+    Client, ReplyReceiver, Server, ServerConfig, BUSY_PREFIX,
+};

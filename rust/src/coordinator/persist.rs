@@ -23,6 +23,15 @@
 //! Wired through `cnnlab serve --profile-state <path>` and the
 //! `[serving] profile_state` TOML key: loaded before the server spawns,
 //! written back when the run completes.
+//!
+//! Multi-coordinator deployments persist **router-level prediction
+//! state** too: `backends` holds one nested `ProfileState` per router
+//! backend (same schema, matched by index), so a warm redeploy
+//! restores every coordinator's worker tables and arrival estimates
+//! and `RoutePolicy::Predictive` routes by real predictions from the
+//! first request instead of replaying the least-outstanding cold
+//! phase.  Files written before this field parse as having no
+//! backends.
 
 use std::collections::BTreeMap;
 
@@ -57,6 +66,10 @@ pub struct ArrivalState {
 pub struct ProfileState {
     pub workers: Vec<WorkerTable>,
     pub arrivals: Vec<ArrivalState>,
+    /// Per-router-backend states in backend order (multi-coordinator
+    /// deployments; empty for a single coordinator).  One nesting
+    /// level: a backend's own `backends` list is ignored.
+    pub backends: Vec<ProfileState>,
 }
 
 impl ProfileState {
@@ -93,14 +106,28 @@ impl ProfileState {
                 ])
             })
             .collect();
+        let backends =
+            self.backends.iter().map(ProfileState::to_json).collect();
         obj([
             ("version", Json::Num(PROFILE_STATE_VERSION as f64)),
             ("workers", Json::Arr(workers)),
             ("arrivals", Json::Arr(arrivals)),
+            ("backends", Json::Arr(backends)),
         ])
     }
 
     pub fn from_json(doc: &Json) -> anyhow::Result<ProfileState> {
+        ProfileState::from_json_at(doc, true)
+    }
+
+    /// `with_backends` enforces the one-nesting-level contract: a
+    /// backend entry's own `backends` list is ignored instead of
+    /// recursing (arbitrarily deep hand-edited files must not blow
+    /// the stack).
+    fn from_json_at(
+        doc: &Json,
+        with_backends: bool,
+    ) -> anyhow::Result<ProfileState> {
         let version = doc
             .req("version")?
             .as_i64()
@@ -131,6 +158,19 @@ impl ProfileState {
             let gap_s = a.req("gap_s")?.as_f64().unwrap_or(0.0);
             let obs = a.req("obs")?.as_f64().unwrap_or(0.0) as u64;
             state.arrivals.push(ArrivalState { lane, gap_s, obs });
+        }
+        // router-level per-backend states: optional (absent in files
+        // written before multi-coordinator serve existed), one level
+        // deep only
+        if with_backends {
+            if let Some(arr) = doc.get("backends").and_then(Json::as_arr)
+            {
+                for b in arr {
+                    state
+                        .backends
+                        .push(ProfileState::from_json_at(b, false)?);
+                }
+            }
         }
         Ok(state)
     }
@@ -193,6 +233,20 @@ mod tests {
                     obs: 200,
                 },
             ],
+            backends: Vec::new(),
+        }
+    }
+
+    /// Router-level state: one nested ProfileState per backend.
+    fn router_sample() -> ProfileState {
+        let mut a = sample();
+        a.arrivals.clear();
+        let mut b = sample();
+        b.workers.truncate(1);
+        ProfileState {
+            workers: Vec::new(),
+            arrivals: Vec::new(),
+            backends: vec![a, b],
         }
     }
 
@@ -205,6 +259,39 @@ mod tests {
         // and through the textual form too
         let reparsed = Json::parse(&j.to_string()).unwrap();
         assert_eq!(ProfileState::from_json(&reparsed).unwrap(), s);
+    }
+
+    #[test]
+    fn router_backends_roundtrip_and_legacy_files_load() {
+        let s = router_sample();
+        let reparsed = Json::parse(&s.to_json().to_string()).unwrap();
+        assert_eq!(ProfileState::from_json(&reparsed).unwrap(), s);
+        // a pre-router file (no "backends" key) still loads
+        let legacy = Json::parse(
+            r#"{"version": 1, "workers": [], "arrivals": []}"#,
+        )
+        .unwrap();
+        let loaded = ProfileState::from_json(&legacy).unwrap();
+        assert!(loaded.backends.is_empty());
+        // one nesting level only: a backend's own backends list is
+        // ignored, however deep a hand-edited file nests them
+        let mut nested = String::new();
+        for _ in 0..64 {
+            nested.push_str(
+                r#"{"version": 1, "workers": [], "arrivals": [],
+                    "backends": ["#,
+            );
+        }
+        nested.push_str(
+            r#"{"version": 1, "workers": [], "arrivals": []}"#,
+        );
+        for _ in 0..64 {
+            nested.push_str("]}");
+        }
+        let deep = Json::parse(&nested).unwrap();
+        let loaded = ProfileState::from_json(&deep).unwrap();
+        assert_eq!(loaded.backends.len(), 1);
+        assert!(loaded.backends[0].backends.is_empty());
     }
 
     #[test]

@@ -22,6 +22,12 @@ pub struct Request {
 pub struct Envelope {
     pub req: Request,
     pub reply: Sender<anyhow::Result<Response>>,
+    /// Metrics-lane slot this request's admission was accounted to
+    /// (its predicted device class under per-lane budgets; 0 under the
+    /// single global lane).  The worker that answers the request
+    /// releases the same slot, so per-lane outstanding counts stay
+    /// balanced even when steering lands the request elsewhere.
+    pub lane: usize,
 }
 
 impl Envelope {
@@ -29,7 +35,7 @@ impl Envelope {
         req: Request,
         reply: Sender<anyhow::Result<Response>>,
     ) -> Envelope {
-        Envelope { req, reply }
+        Envelope { req, reply, lane: 0 }
     }
 }
 

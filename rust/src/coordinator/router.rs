@@ -1,79 +1,311 @@
 //! Request router — spreads the incoming stream over several coordinator
-//! instances (one per accelerator worker), the front door of the paper's
-//! Fig 2 middleware stack.
+//! instances (one per accelerator worker pool), the front door of the
+//! paper's Fig 2 middleware stack.
 //!
-//! Policies: round-robin and least-outstanding (join-shortest-queue).
+//! Policies: round-robin, least-outstanding (join-shortest-queue), and
+//! predictive — the coordinator-level half of "leverage the trade-offs
+//! between GPU and FPGA *before* offloading": each backend exposes the
+//! PR 3 admission estimate ([`Client::predicted_admission_us`]: lane
+//! formation wait + best worker backlog + predicted exec), and the
+//! router picks the argmin with rotating tie-breaks, falling back to
+//! least-outstanding while any backend is cold.
+//!
+//! Failover is prediction-sorted (cheapest-first) rather than a linear
+//! scan, and distinguishes *shed* backends (alive but full — counted
+//! in [`RouterMetrics::failovers`]) from *dead* ones (coordinator
+//! gone), which are cooled down for [`DEAD_BACKEND_COOLDOWN`] so the
+//! hot path stops probing them on every request.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
 
 use crate::util::Tensor;
 
 use super::dispatch::rotating_argmin;
 use super::request::Response;
-use super::server::Client;
+use super::server::{Client, ReplyReceiver, BUSY_PREFIX};
+
+/// How long a backend whose coordinator looks dead (submit channel
+/// disconnected) is skipped by picks and failover before being probed
+/// again.
+pub const DEAD_BACKEND_COOLDOWN: Duration = Duration::from_millis(500);
+
+/// Sort-key offset for backends with no admission estimate, so warm
+/// predictions always order ahead of cold outstanding counts in the
+/// failover order.
+const COLD_KEY_BASE: u64 = 1 << 60;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum RoutePolicy {
     RoundRobin,
     LeastOutstanding,
+    /// Argmin of each backend's predicted admission-to-completion time
+    /// (the PR 3 admission estimate, exposed by
+    /// [`Client::predicted_admission_us`]); least-outstanding while
+    /// any backend is cold.
+    Predictive,
+}
+
+impl RoutePolicy {
+    pub fn name(self) -> &'static str {
+        match self {
+            RoutePolicy::RoundRobin => "round-robin",
+            RoutePolicy::LeastOutstanding => "least-outstanding",
+            RoutePolicy::Predictive => "predictive",
+        }
+    }
+}
+
+impl std::str::FromStr for RoutePolicy {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<RoutePolicy> {
+        match s {
+            "round-robin" | "round_robin" => Ok(RoutePolicy::RoundRobin),
+            "least-outstanding" | "least_outstanding" => {
+                Ok(RoutePolicy::LeastOutstanding)
+            }
+            "predictive" => Ok(RoutePolicy::Predictive),
+            other => anyhow::bail!(
+                "unknown route policy {other:?} \
+                 (round-robin|least-outstanding|predictive)"
+            ),
+        }
+    }
+}
+
+/// Per-backend routing counters (`ServerMetrics`-style atomics).
+#[derive(Default)]
+pub struct BackendCounters {
+    /// Requests routed here by a warm predicted-completion argmin.
+    pub predictive_routed: AtomicU64,
+    /// Requests routed here by the cold least-outstanding fallback
+    /// (some backend had no admission estimate yet).
+    pub cold_routed: AtomicU64,
+}
+
+/// Router observability: failovers, sheds, and per-backend routing
+/// counters — printed by `serve --report-every` next to the worker
+/// EWMA tables.
+pub struct RouterMetrics {
+    /// Backpressure rejections that deflected a request to another
+    /// backend (or, for the last candidate, into a shed).
+    pub failovers: AtomicU64,
+    /// Requests rejected by every live backend and returned to the
+    /// caller as `ServerBusy`.
+    pub shed: AtomicU64,
+    backends: Vec<BackendCounters>,
+}
+
+impl RouterMetrics {
+    fn new(backends: usize) -> RouterMetrics {
+        RouterMetrics {
+            failovers: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            backends: (0..backends)
+                .map(|_| BackendCounters::default())
+                .collect(),
+        }
+    }
+
+    pub fn backends(&self) -> usize {
+        self.backends.len()
+    }
+
+    pub fn backend(&self, idx: usize) -> &BackendCounters {
+        &self.backends[idx]
+    }
 }
 
 pub struct Router {
     clients: Vec<Client>,
     policy: RoutePolicy,
     rr: AtomicUsize,
+    metrics: RouterMetrics,
+    /// Reference instant for the dead-backend clock.
+    epoch: Instant,
+    /// Micros-since-epoch until which each backend is considered dead
+    /// (0 = never marked).
+    dead_until_us: Vec<AtomicU64>,
+    dead_cooldown: Duration,
 }
 
 impl Router {
     pub fn new(clients: Vec<Client>, policy: RoutePolicy) -> Router {
         assert!(!clients.is_empty(), "router needs at least one backend");
-        Router { clients, policy, rr: AtomicUsize::new(0) }
+        let n = clients.len();
+        Router {
+            clients,
+            policy,
+            rr: AtomicUsize::new(0),
+            metrics: RouterMetrics::new(n),
+            epoch: Instant::now(),
+            dead_until_us: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            dead_cooldown: DEAD_BACKEND_COOLDOWN,
+        }
+    }
+
+    /// Override the dead-backend cooldown (tests).
+    pub fn with_dead_cooldown(mut self, cooldown: Duration) -> Router {
+        self.dead_cooldown = cooldown;
+        self
     }
 
     pub fn backends(&self) -> usize {
         self.clients.len()
     }
 
-    /// Pick a backend index per policy.
+    pub fn metrics(&self) -> &RouterMetrics {
+        &self.metrics
+    }
+
+    fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    fn is_dead(&self, idx: usize, now_us: u64) -> bool {
+        let until = self.dead_until_us[idx].load(Ordering::Relaxed);
+        until != 0 && now_us < until
+    }
+
+    /// Cool a backend whose coordinator is gone: picks and failover
+    /// skip it until the cooldown expires, then probe it again.
+    fn mark_dead(&self, idx: usize) {
+        let until =
+            self.now_us() + self.dead_cooldown.as_micros() as u64;
+        self.dead_until_us[idx].store(until.max(1), Ordering::Relaxed);
+    }
+
+    /// Pick a backend index per policy, skipping backends inside
+    /// their dead cooldown (unless every backend is dead, in which
+    /// case all are probed).
     pub fn pick(&self) -> usize {
+        let n = self.clients.len();
+        let now_us = self.now_us();
+        let dead: Vec<bool> =
+            (0..n).map(|i| self.is_dead(i, now_us)).collect();
+        let all_dead = dead.iter().all(|&d| d);
+        let alive = |i: usize| all_dead || !dead[i];
         match self.policy {
             RoutePolicy::RoundRobin => {
-                self.rr.fetch_add(1, Ordering::Relaxed) % self.clients.len()
+                for _ in 0..n {
+                    let i = self.rr.fetch_add(1, Ordering::Relaxed) % n;
+                    if alive(i) {
+                        return i;
+                    }
+                }
+                0
             }
-            // rotating scan start: equal queue depths share load
-            // round-robin instead of herding onto backend 0
-            RoutePolicy::LeastOutstanding => rotating_argmin(
-                self.clients.len(),
-                &self.rr,
-                |i| self.clients[i].outstanding() as u64,
-            ),
+            // rotating scan start: equal keys share load round-robin
+            // instead of herding onto backend 0
+            RoutePolicy::LeastOutstanding => {
+                rotating_argmin(n, &self.rr, |i| {
+                    if alive(i) {
+                        self.clients[i].outstanding() as u64
+                    } else {
+                        u64::MAX
+                    }
+                })
+            }
+            RoutePolicy::Predictive => {
+                let ests: Vec<Option<u64>> = self
+                    .clients
+                    .iter()
+                    .map(Client::predicted_admission_us)
+                    .collect();
+                let warm = (0..n)
+                    .filter(|&i| alive(i))
+                    .all(|i| ests[i].is_some());
+                let pick = rotating_argmin(n, &self.rr, |i| {
+                    if !alive(i) {
+                        u64::MAX
+                    } else if warm {
+                        ests[i].unwrap_or(u64::MAX)
+                    } else {
+                        self.clients[i].outstanding() as u64
+                    }
+                });
+                let counter = if warm {
+                    &self.metrics.backend(pick).predictive_routed
+                } else {
+                    &self.metrics.backend(pick).cold_routed
+                };
+                counter.fetch_add(1, Ordering::Relaxed);
+                pick
+            }
         }
     }
 
-    /// Route and run one request (blocking).  On backpressure from the
-    /// picked backend, fails over to the others before giving up.  The
-    /// image is *moved* from backend to backend (rejected submissions
-    /// hand it back), never cloned.
-    pub fn infer(&self, image: Tensor) -> anyhow::Result<Response> {
+    /// Remaining candidates after `first` rejected: live backends
+    /// sorted by predicted admission-to-completion time (cold backends
+    /// order after warm ones, by outstanding count) — cheapest-first
+    /// failover instead of a linear index scan.
+    fn failover_order(&self, first: usize) -> Vec<usize> {
+        let now_us = self.now_us();
+        let mut rest: Vec<usize> = (0..self.clients.len())
+            .filter(|&i| i != first)
+            .collect();
+        let any_live = !self.is_dead(first, now_us)
+            || rest.iter().any(|&i| !self.is_dead(i, now_us));
+        if any_live {
+            rest.retain(|&i| !self.is_dead(i, now_us));
+        }
+        rest.sort_by_key(|&i| {
+            self.clients[i].predicted_admission_us().unwrap_or_else(
+                || {
+                    COLD_KEY_BASE
+                        .saturating_add(
+                            self.clients[i].outstanding() as u64
+                        )
+                },
+            )
+        });
+        rest
+    }
+
+    /// Route one request without waiting for its reply.  On
+    /// backpressure from the picked backend, fails over through the
+    /// live backends cheapest-predicted-first; a backend whose
+    /// coordinator is gone is cooled down instead of being retried on
+    /// every subsequent request.  The image is *moved* from backend to
+    /// backend (rejected submissions hand it back), never cloned.
+    pub fn submit(&self, image: Tensor) -> anyhow::Result<ReplyReceiver> {
         let first = self.pick();
-        let n = self.clients.len();
+        let mut candidates = vec![first];
+        candidates.extend(self.failover_order(first));
         let mut image = image;
-        let mut last_err = None;
-        for k in 0..n {
-            let idx = (first + k) % n;
+        let mut busy_err = None;
+        for idx in candidates {
             match self.clients[idx].submit_or_return(image) {
-                Ok(rx) => {
-                    return rx.recv().map_err(|_| {
-                        anyhow::anyhow!("backend dropped the reply")
-                    })?;
-                }
+                Ok(rx) => return Ok(rx),
                 Err((img, e)) => {
                     image = img;
-                    last_err = Some(e);
+                    if e.to_string().starts_with(BUSY_PREFIX) {
+                        // alive but full: deflect to the next candidate
+                        self.metrics
+                            .failovers
+                            .fetch_add(1, Ordering::Relaxed);
+                        busy_err = Some(e);
+                    } else {
+                        self.mark_dead(idx);
+                    }
                 }
             }
         }
-        Err(last_err.unwrap_or_else(|| anyhow::anyhow!("no backends")))
+        match busy_err {
+            Some(e) => {
+                self.metrics.shed.fetch_add(1, Ordering::Relaxed);
+                Err(e)
+            }
+            None => Err(anyhow::anyhow!("no live backends")),
+        }
+    }
+
+    /// Route and run one request (blocking); see [`Router::submit`].
+    pub fn infer(&self, image: Tensor) -> anyhow::Result<Response> {
+        let rx = self.submit(image)?;
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("backend dropped the reply"))?
     }
 
     pub fn client(&self, idx: usize) -> &Client {
@@ -84,9 +316,12 @@ impl Router {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::engine::MockEngine;
+    use crate::coordinator::engine::{CurveEngine, MockEngine};
     use crate::coordinator::server::{Server, ServerConfig};
-    use crate::coordinator::BatchPolicy;
+    use crate::coordinator::{
+        BatchPolicy, DispatchPolicy, FormationPolicy,
+    };
+    use crate::device::DeviceKind;
     use std::time::Duration;
 
     fn tiny_image() -> Tensor {
@@ -101,6 +336,22 @@ mod tests {
             ServerConfig {
                 policy: BatchPolicy::new(4, Duration::from_micros(100)),
                 queue_capacity: 64,
+                ..Default::default()
+            },
+        )
+    }
+
+    /// A coordinator whose single worker is seeded with the given
+    /// curve engine's exact cost model (warm from the first request).
+    fn spawn_curve(engine: CurveEngine, kind: DeviceKind) -> Server {
+        let profile = engine.profile(kind);
+        Server::spawn_pool_profiled(
+            vec![(engine, profile)],
+            ServerConfig {
+                policy: BatchPolicy::new(8, Duration::from_millis(12)),
+                queue_capacity: 256,
+                dispatch: DispatchPolicy::Affinity,
+                formation: FormationPolicy::PerClass,
                 ..Default::default()
             },
         )
@@ -133,6 +384,7 @@ mod tests {
         let total = s1.metrics().completed.load(Ordering::Relaxed)
             + s2.metrics().completed.load(Ordering::Relaxed);
         assert_eq!(total, 10);
+        assert_eq!(r.metrics().shed.load(Ordering::Relaxed), 0);
     }
 
     #[test]
@@ -160,5 +412,173 @@ mod tests {
         // submit a slow request to backend 0 manually so it has backlog
         let _pending = s1.client().submit(tiny_image()).unwrap();
         assert_eq!(r.pick(), 1);
+    }
+
+    #[test]
+    fn route_policy_parses() {
+        assert_eq!(
+            "predictive".parse::<RoutePolicy>().unwrap(),
+            RoutePolicy::Predictive
+        );
+        assert_eq!(
+            "least-outstanding".parse::<RoutePolicy>().unwrap(),
+            RoutePolicy::LeastOutstanding
+        );
+        assert_eq!(
+            "round-robin".parse::<RoutePolicy>().unwrap(),
+            RoutePolicy::RoundRobin
+        );
+        assert!("magic".parse::<RoutePolicy>().is_err());
+        assert_eq!(RoutePolicy::Predictive.name(), "predictive");
+    }
+
+    /// Predictive picks minimize the admission estimate: a cheap
+    /// latency-shaped backend wins singles over a 16ms-flat one, and
+    /// the per-backend counters attribute the decisions.
+    #[test]
+    fn predictive_pick_prefers_cheaper_completion() {
+        let fast =
+            spawn_curve(CurveEngine::latency_shaped(1_000), DeviceKind::Gpu);
+        let slow = spawn_curve(
+            CurveEngine::throughput_shaped(16_000),
+            DeviceKind::Fpga,
+        );
+        let r = Router::new(
+            vec![fast.client(), slow.client()],
+            RoutePolicy::Predictive,
+        );
+        // both warm from their analytic seeds: every pick is
+        // predictive and lands on the cheap backend
+        for _ in 0..6 {
+            assert_eq!(r.pick(), 0);
+        }
+        let m = r.metrics();
+        assert_eq!(
+            m.backend(0).predictive_routed.load(Ordering::Relaxed),
+            6
+        );
+        assert_eq!(
+            m.backend(1).predictive_routed.load(Ordering::Relaxed),
+            0
+        );
+        assert_eq!(m.backend(0).cold_routed.load(Ordering::Relaxed), 0);
+    }
+
+    /// With an unmodeled (cold) backend in the set, predictive routing
+    /// falls back to least-outstanding and counts the decision as
+    /// cold.
+    #[test]
+    fn predictive_falls_back_to_least_outstanding_when_cold() {
+        let warm =
+            spawn_curve(CurveEngine::latency_shaped(1_000), DeviceKind::Gpu);
+        let cold = spawn_backend(10); // unmodeled MockEngine: no estimate
+        assert!(cold.client().predicted_admission_us().is_none());
+        assert!(warm.client().predicted_admission_us().is_some());
+        let r = Router::new(
+            vec![warm.client(), cold.client()],
+            RoutePolicy::Predictive,
+        );
+        // equal (zero) outstanding: the cold fallback rotates ties
+        let p0 = r.pick();
+        let p1 = r.pick();
+        assert_ne!(p0, p1, "cold fallback must not herd");
+        let m = r.metrics();
+        let cold_picks = m.backend(0).cold_routed.load(Ordering::Relaxed)
+            + m.backend(1).cold_routed.load(Ordering::Relaxed);
+        assert_eq!(cold_picks, 2);
+    }
+
+    /// Backpressure failover: picks that land on a full backend
+    /// deflect to the live one (counted as failovers, not sheds); with
+    /// no live alternative the request sheds with `ServerBusy`.
+    #[test]
+    fn failover_on_backpressure_reaches_the_other_backend() {
+        let full_backend = || {
+            let mut slow = MockEngine::new(vec![1]);
+            slow.delay = Duration::from_millis(60);
+            Server::spawn(
+                slow,
+                ServerConfig {
+                    policy: BatchPolicy::immediate(),
+                    queue_capacity: 1,
+                    ..Default::default()
+                },
+            )
+        };
+        let tiny = full_backend();
+        let roomy = spawn_backend(10);
+        // round-robin alternates picks, so half of them hit the full
+        // backend and must deflect
+        let r = Router::new(
+            vec![tiny.client(), roomy.client()],
+            RoutePolicy::RoundRobin,
+        );
+        // occupy the tiny backend's single slot for the whole test
+        let _hold = tiny.client().submit(tiny_image()).unwrap();
+        for _ in 0..4 {
+            r.infer(tiny_image()).unwrap();
+        }
+        assert_eq!(r.metrics().shed.load(Ordering::Relaxed), 0);
+        assert_eq!(
+            r.metrics().failovers.load(Ordering::Relaxed),
+            2,
+            "the two picks of the full backend must deflect"
+        );
+        assert_eq!(roomy.metrics().completed.load(Ordering::Relaxed), 4);
+        // a router whose only backend is full sheds the request back
+        let solo = full_backend();
+        let _hold2 = solo.client().submit(tiny_image()).unwrap();
+        let r = Router::new(vec![solo.client()], RoutePolicy::RoundRobin);
+        let err = r.infer(tiny_image()).unwrap_err();
+        assert!(err.to_string().contains("ServerBusy"), "{err}");
+        assert_eq!(r.metrics().shed.load(Ordering::Relaxed), 1);
+        assert_eq!(r.metrics().failovers.load(Ordering::Relaxed), 1);
+    }
+
+    /// THE DEAD-BACKEND REGRESSION (satellite): a backend whose
+    /// coordinator is gone is marked dead on first contact and skipped
+    /// by picks for the cooldown window — instead of being retried on
+    /// every request — then probed again once the window expires.
+    #[test]
+    fn dead_backend_skipped_for_cooldown_window() {
+        let alive = spawn_backend(10);
+        let doomed = spawn_backend(10);
+        let doomed_client = doomed.client();
+        let r = Router::new(
+            vec![alive.client(), doomed_client],
+            RoutePolicy::LeastOutstanding,
+        )
+        .with_dead_cooldown(Duration::from_millis(150));
+        drop(doomed); // the coordinator is gone; its client remains
+        // every request still succeeds via the live backend, and the
+        // first contact with the dead one cools it down
+        for _ in 0..6 {
+            r.infer(tiny_image()).unwrap();
+        }
+        // inside the cooldown window every pick avoids the dead
+        // backend — no 50/50 tie rotation onto it
+        let picks: Vec<usize> = (0..6).map(|_| r.pick()).collect();
+        assert!(
+            picks.iter().all(|&p| p == 0),
+            "dead backend picked during cooldown: {picks:?}"
+        );
+        // dead != shed: nothing was rejected back to the caller
+        assert_eq!(r.metrics().shed.load(Ordering::Relaxed), 0);
+        assert_eq!(r.metrics().failovers.load(Ordering::Relaxed), 0);
+        // after the cooldown the backend is probed again...
+        std::thread::sleep(Duration::from_millis(200));
+        let probed: Vec<usize> = (0..4).map(|_| r.pick()).collect();
+        assert!(
+            probed.contains(&1),
+            "expired cooldown must re-probe: {probed:?}"
+        );
+        // ...and real traffic re-marks it dead while still answering
+        // (two submits cover both tie-rotation parities, so at least
+        // one pick touches the dead backend)
+        for _ in 0..2 {
+            r.infer(tiny_image()).unwrap();
+        }
+        let picks: Vec<usize> = (0..4).map(|_| r.pick()).collect();
+        assert!(picks.iter().all(|&p| p == 0), "re-mark failed: {picks:?}");
     }
 }

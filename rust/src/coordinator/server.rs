@@ -34,7 +34,8 @@ use super::dispatch::{
 };
 use super::engine::{largest_batch, InferenceEngine};
 use super::formation::{
-    DispatchedBatch, FormationPlan, FormationPolicy, LaneClass, LaneSet,
+    DispatchedBatch, FormationPlan, FormationPolicy, LaneBudgets,
+    LaneClass, LaneSet,
 };
 use super::metrics::ServerMetrics;
 use super::persist::{ArrivalState, ProfileState, WorkerTable};
@@ -44,21 +45,225 @@ use super::request::{Envelope, Request, Response};
 /// bound on shutdown latency.
 const SHUTDOWN_POLL: Duration = Duration::from_millis(20);
 
+/// Message prefix of backpressure rejections.  The router keys on it
+/// to tell *shed* (the backend is alive but full: fail over, count a
+/// failover) from *dead* (the coordinator is gone: cool it down) —
+/// the vendored `anyhow` flattens errors to strings, so the prefix is
+/// the contract.
+pub const BUSY_PREFIX: &str = "ServerBusy";
+
 /// The receiver handed back by [`Client::submit`]: yields exactly one
 /// reply for the submitted request.
 pub type ReplyReceiver = Receiver<anyhow::Result<Response>>;
+
+/// Admission bookkeeping shared by every [`Client`] clone and the
+/// worker pool: the global outstanding count, plus per-lane counters
+/// bounded either by the single `queue_capacity` or — under per-class
+/// formation with [`LaneBudgets`] — by each lane's own budget, so a
+/// saturated throughput lane sheds at *its* bound instead of consuming
+/// the slots latency traffic needs (weighted shedding).
+pub(crate) struct Admission {
+    capacity: usize,
+    /// Per-metrics-lane budget; `None` = the global capacity bound.
+    budgets: Vec<Option<usize>>,
+    total: AtomicUsize,
+    /// Outstanding requests accounted per lane (admitted → replied).
+    lane_out: Vec<AtomicUsize>,
+    /// Admitted requests the leader has not steered yet — the live
+    /// submit-to-steer window the admission estimate charges, so a
+    /// tight burst cannot herd onto one backend between leader gauge
+    /// refreshes.
+    unrouted: Vec<AtomicUsize>,
+}
+
+impl Admission {
+    fn new(capacity: usize, budgets: Vec<Option<usize>>) -> Admission {
+        assert!(!budgets.is_empty(), "admission needs at least one lane");
+        let lanes = budgets.len();
+        Admission {
+            capacity,
+            budgets,
+            total: AtomicUsize::new(0),
+            lane_out: (0..lanes).map(|_| AtomicUsize::new(0)).collect(),
+            unrouted: (0..lanes).map(|_| AtomicUsize::new(0)).collect(),
+        }
+    }
+
+    /// Reserve a slot for a request predicted to land in `lane`.
+    /// Returns false (fully rolled back) when the lane's budget — or,
+    /// for unbudgeted lanes, the global capacity — is exhausted.  The
+    /// reservation happens *before* the admission check so a
+    /// concurrent completion can never underflow the counters.
+    fn try_admit(&self, lane: usize) -> bool {
+        let lane_prev = self.lane_out[lane].fetch_add(1, Ordering::Relaxed);
+        let total_prev = self.total.fetch_add(1, Ordering::Relaxed);
+        let ok = match self.budgets[lane] {
+            Some(budget) => lane_prev < budget,
+            None => total_prev < self.capacity,
+        };
+        if !ok {
+            self.lane_out[lane].fetch_sub(1, Ordering::Relaxed);
+            self.total.fetch_sub(1, Ordering::Relaxed);
+            return false;
+        }
+        self.unrouted[lane].fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    /// Roll back an admission whose envelope never reached the leader
+    /// (the bounded channel rejected it).
+    fn cancel(&self, lane: usize) {
+        self.unrouted[lane].fetch_sub(1, Ordering::Relaxed);
+        self.lane_out[lane].fetch_sub(1, Ordering::Relaxed);
+        self.total.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Leader-side: the request left the submit channel and entered a
+    /// batcher — it is no longer in the submit-to-steer window.
+    /// Saturating: a stray envelope (tests drive formation directly)
+    /// must never wrap the counter.
+    pub(crate) fn mark_routed(&self, lane: usize) {
+        let _ = self.unrouted[lane.min(self.unrouted.len() - 1)]
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |u| {
+                Some(u.saturating_sub(1))
+            });
+    }
+
+    /// Worker-side: the request was answered; release its slot.
+    fn release(&self, lane: usize) {
+        let lane = lane.min(self.lane_out.len() - 1);
+        let _ = self.lane_out[lane].fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |v| Some(v.saturating_sub(1)),
+        );
+        let _ = self.total.fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |v| Some(v.saturating_sub(1)),
+        );
+    }
+
+    fn total(&self) -> usize {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    fn lane_out(&self, lane: usize) -> usize {
+        self.lane_out[lane].load(Ordering::Relaxed)
+    }
+
+    fn unrouted(&self, lane: usize) -> usize {
+        self.unrouted[lane].load(Ordering::Relaxed)
+    }
+
+    /// Outstanding count scaled by the lane's bound — the cold
+    /// fallback key for the admission-lane pick (join the emptiest
+    /// lane *relative to its budget*).
+    fn relative_depth(&self, lane: usize) -> u64 {
+        let bound = self.budgets[lane].unwrap_or(self.capacity).max(1);
+        (self.lane_out(lane) as u64) * 1024 / bound as u64
+    }
+}
+
+/// One admission lane as the client sees it: the lane's derived batch
+/// policy (what the formation plan gave its batcher) plus the worker
+/// indices it serves.
+struct LaneView {
+    policy: BatchPolicy,
+    workers: Vec<usize>,
+}
+
+/// Static routing geometry for client-side admission estimates: the
+/// shared per-worker dispatcher states, the lane layout, and the
+/// last-submit clock behind the instantaneous inter-arrival gap (the
+/// PR 3 burst-vs-single signal, observed at the submit edge).
+pub(crate) struct AdmissionView {
+    epoch: Instant,
+    /// Micros since `epoch` of the last *admitted* submit
+    /// (`u64::MAX` until the first).
+    last_submit_us: AtomicU64,
+    states: Vec<Arc<WorkerState>>,
+    lanes: Vec<LaneView>,
+}
+
+impl AdmissionView {
+    fn new(
+        states: Vec<Arc<WorkerState>>,
+        lanes: Vec<LaneView>,
+    ) -> AdmissionView {
+        assert!(!lanes.is_empty());
+        AdmissionView {
+            epoch: Instant::now(),
+            last_submit_us: AtomicU64::new(u64::MAX),
+            states,
+            lanes,
+        }
+    }
+
+    fn since_epoch_us(&self, now: Instant) -> u64 {
+        now.saturating_duration_since(self.epoch).as_micros() as u64
+    }
+
+    /// Instantaneous gap since the last admitted submit (None before
+    /// the first) — mirrors the steering signal `LaneSet::push`
+    /// derives from admitted arrivals.
+    fn gap(&self, now: Instant) -> Option<Duration> {
+        let last = self.last_submit_us.load(Ordering::Relaxed);
+        if last == u64::MAX {
+            return None;
+        }
+        Some(Duration::from_micros(
+            self.since_epoch_us(now).saturating_sub(last),
+        ))
+    }
+
+    fn record_submit(&self, now: Instant) {
+        self.last_submit_us
+            .store(self.since_epoch_us(now), Ordering::Relaxed);
+    }
+
+    /// The lane (device class) a request arriving with `gap` belongs
+    /// to: argmin over lanes of the *congestion-free* per-batch-mate
+    /// completion cost — formation wait plus the lane's predicted
+    /// execution for the batch the stream can fill, divided by that
+    /// batch size.  A burst member (gap ≈ 0) amortizes a throughput
+    /// lane's fixed cost across the whole batch; an isolated single
+    /// does not.  Backlog is deliberately excluded so overload never
+    /// reassigns traffic classes (that is what keeps per-lane budgets
+    /// meaningful under saturation).  `None` while ANY lane's workers
+    /// are cold — a one-sided argmin would misclassify every request
+    /// into the warm class and let foreign traffic exhaust its budget
+    /// (the same all-warm gate `pick_worker` and lane steering use).
+    fn class_lane(&self, gap: Option<Duration>) -> Option<usize> {
+        let mut best: Option<(u64, usize)> = None;
+        for (li, lane) in self.lanes.iter().enumerate() {
+            let (wait_us, close_n) =
+                lane.policy.admission_estimate_us(0, gap);
+            let exec = lane
+                .workers
+                .iter()
+                .filter_map(|&w| self.states[w].predict_us(close_n))
+                .min()?;
+            // scaled before the division so µs-level costs keep
+            // precision across batch sizes
+            let cost = wait_us.saturating_add(exec).saturating_mul(1024)
+                / close_n.max(1) as u64;
+            if best.is_none_or(|(b, _)| cost < b) {
+                best = Some((cost, li));
+            }
+        }
+        best.map(|(_, li)| li)
+    }
+}
 
 /// Submission handle (clone freely across threads).
 #[derive(Clone)]
 pub struct Client {
     tx: SyncSender<Envelope>,
     next_id: Arc<AtomicU64>,
-    outstanding: Arc<AtomicUsize>,
     metrics: Arc<ServerMetrics>,
-    /// Backpressure threshold on *outstanding* requests (queued, batched,
-    /// or executing).  The request channel alone cannot bound in-flight
-    /// work because the leader drains it eagerly while workers execute.
-    capacity: usize,
+    admission: Arc<Admission>,
+    view: Arc<AdmissionView>,
 }
 
 impl Client {
@@ -70,10 +275,33 @@ impl Client {
     }
 
     /// Submit without waiting; returns the reply channel.
-    /// Errors with `ServerBusy` when the bounded queue is full
+    /// Errors with `ServerBusy` when the admission bound is hit
     /// (backpressure) — callers decide whether to retry or shed.
     pub fn submit(&self, image: Tensor) -> anyhow::Result<ReplyReceiver> {
         self.submit_or_return(image).map_err(|(_, e)| e)
+    }
+
+    /// The lane this submission's admission is accounted to: its
+    /// predicted device class when the estimates are warm, else the
+    /// emptiest lane relative to its bound (the admission analogue of
+    /// the dispatcher's join-shortest-queue cold phase).
+    fn admission_lane(&self, gap: Option<Duration>) -> usize {
+        if self.view.lanes.len() == 1 {
+            return 0;
+        }
+        if let Some(lane) = self.view.class_lane(gap) {
+            return lane;
+        }
+        let mut best = 0;
+        let mut best_key = u64::MAX;
+        for lane in 0..self.view.lanes.len() {
+            let key = self.admission.relative_depth(lane);
+            if key < best_key {
+                best = lane;
+                best_key = key;
+            }
+        }
+        best
     }
 
     /// Like [`Client::submit`], but hands the image back on failure so
@@ -83,18 +311,23 @@ impl Client {
         &self,
         image: Tensor,
     ) -> Result<ReplyReceiver, (Tensor, anyhow::Error)> {
-        // Reserve the outstanding slot *before* handing the request to
-        // the leader: a worker may complete (and decrement) it before
-        // this thread resumes, so incrementing after the send could
-        // underflow the counter.  Every reservation is released either
-        // here (rejection) or by the worker that answers the request.
-        let prev = self.outstanding.fetch_add(1, Ordering::Relaxed);
-        if prev >= self.capacity {
-            self.outstanding.fetch_sub(1, Ordering::Relaxed);
+        let now = Instant::now();
+        let gap = self.view.gap(now);
+        let lane = self.admission_lane(gap);
+        // Reserve the slot *before* handing the request to the leader:
+        // a worker may complete (and release) it before this thread
+        // resumes, so reserving after the send could underflow the
+        // counters.  Every reservation is released either here
+        // (rejection) or by the worker that answers the request.
+        if !self.admission.try_admit(lane) {
             self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            self.metrics
+                .lane(lane)
+                .shed
+                .fetch_add(1, Ordering::Relaxed);
             return Err((
                 image,
-                anyhow::anyhow!("ServerBusy: request queue full"),
+                anyhow::anyhow!("{BUSY_PREFIX}: request queue full"),
             ));
         }
         let (reply, rx) = channel();
@@ -102,29 +335,82 @@ impl Client {
             req: Request {
                 id: self.next_id.fetch_add(1, Ordering::Relaxed),
                 image,
-                arrived: Instant::now(),
+                arrived: now,
             },
             reply,
+            lane,
         };
         match self.tx.try_send(env) {
-            Ok(()) => Ok(rx),
+            Ok(()) => {
+                // only a submission the leader will actually see
+                // advances the gap clock — a channel-full rollback
+                // must not make the next single look like a burst mate
+                self.view.record_submit(now);
+                Ok(rx)
+            }
             Err(std::sync::mpsc::TrySendError::Full(env)) => {
-                self.outstanding.fetch_sub(1, Ordering::Relaxed);
+                self.admission.cancel(lane);
                 self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                self.metrics
+                    .lane(lane)
+                    .shed
+                    .fetch_add(1, Ordering::Relaxed);
                 Err((
                     env.req.image,
-                    anyhow::anyhow!("ServerBusy: request queue full"),
+                    anyhow::anyhow!("{BUSY_PREFIX}: request queue full"),
                 ))
             }
             Err(std::sync::mpsc::TrySendError::Disconnected(env)) => {
-                self.outstanding.fetch_sub(1, Ordering::Relaxed);
+                self.admission.cancel(lane);
                 Err((env.req.image, anyhow::anyhow!("server is down")))
             }
         }
     }
 
     pub fn outstanding(&self) -> usize {
-        self.outstanding.load(Ordering::Relaxed)
+        self.admission.total()
+    }
+
+    /// Outstanding requests accounted to one admission lane.
+    pub fn lane_outstanding(&self, lane: usize) -> usize {
+        self.admission.lane_out(lane)
+    }
+
+    /// This coordinator's aggregate admission snapshot: the minimum
+    /// over its lanes of the published formation-wait gauge plus the
+    /// best predicted completion among the lane's workers for a
+    /// request landing now — the PR 3 admission estimate
+    /// ([`WorkerState::predicted_completion_us`] + the lane wait from
+    /// `Batcher::admission_wait_us`) lifted to the router.  Cheap but
+    /// not lock-free: besides the gauges it takes each worker's EWMA
+    /// table mutex, which sees one write per *batch* and is
+    /// effectively uncontended.  Requests admitted but not yet steered
+    /// charge the estimate (via the predicted batch size), so tight
+    /// bursts see their own weight before the leader's gauges refresh.
+    /// `None` while every lane is cold — the router falls back to
+    /// least-outstanding.
+    pub fn predicted_admission_us(&self) -> Option<u64> {
+        let mut best: Option<u64> = None;
+        for (li, lane) in self.view.lanes.iter().enumerate() {
+            let wait = self
+                .metrics
+                .lane(li)
+                .admission_wait_us
+                .load(Ordering::Relaxed);
+            let n = 1 + self.admission.unrouted(li);
+            let exec = lane
+                .workers
+                .iter()
+                .filter_map(|&w| {
+                    self.view.states[w].predicted_completion_us(n)
+                })
+                .min();
+            if let Some(exec) = exec {
+                let est = wait.saturating_add(exec);
+                best = Some(best.map_or(est, |b| b.min(est)));
+            }
+        }
+        best
     }
 
     pub fn metrics(&self) -> &ServerMetrics {
@@ -133,12 +419,14 @@ impl Client {
 }
 
 /// Coordinator configuration.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct ServerConfig {
     pub policy: BatchPolicy,
     /// Backpressure threshold: maximum outstanding requests (queued,
     /// batched, or executing) before submissions are shed with
-    /// `ServerBusy`.  Also sizes the bounded submit channel.
+    /// `ServerBusy`.  Also sizes the bounded submit channel.  Lanes
+    /// with an entry in `lane_budgets` are bounded by their own budget
+    /// instead.
     pub queue_capacity: usize,
     /// How closed batches reach the worker pool.  Ignored under
     /// [`FormationPolicy::PerClass`], whose lanes always route by
@@ -149,6 +437,11 @@ pub struct ServerConfig {
     /// (`policy` becomes the throughput-lane dial; see
     /// `coordinator::formation`).
     pub formation: FormationPolicy,
+    /// Per-lane admission budgets (weighted shedding) under
+    /// [`FormationPolicy::PerClass`]; classes without an entry — and
+    /// everything under [`FormationPolicy::Global`], which has a
+    /// single lane — stay on the `queue_capacity` bound.
+    pub lane_budgets: LaneBudgets,
 }
 
 impl Default for ServerConfig {
@@ -158,6 +451,7 @@ impl Default for ServerConfig {
             queue_capacity: 256,
             dispatch: DispatchPolicy::JoinIdle,
             formation: FormationPolicy::Global,
+            lane_budgets: LaneBudgets::none(),
         }
     }
 }
@@ -323,19 +617,67 @@ impl Server {
             plan.as_ref().map(FormationPlan::classes).unwrap_or_default();
         let lane_slots = lane_classes.len().max(1);
 
-        let (tx, rx) = sync_channel::<Envelope>(config.queue_capacity);
+        // the global batch policy, clamped to what the engines can run
+        // (used by the global batcher AND as the single-lane view the
+        // client estimates with)
+        let mut global_policy = config.policy;
+        if let Some(cap) = engines
+            .iter()
+            .filter_map(|(e, _)| largest_batch(e.available_batches()))
+            .min()
+        {
+            global_policy.max_batch = global_policy.max_batch.min(cap);
+        }
+
+        // per-lane admission budgets only exist under per-class
+        // formation, keyed by each lane's device class; the bounded
+        // submit channel must hold whatever the budgets can admit
+        let budgets: Vec<Option<usize>> = match &plan {
+            Some(p) => p
+                .lanes
+                .iter()
+                .map(|l| config.lane_budgets.get(l.class))
+                .collect(),
+            None => vec![None],
+        };
+        let chan_capacity = config.queue_capacity.max(
+            budgets
+                .iter()
+                .map(|b| b.unwrap_or(config.queue_capacity))
+                .sum(),
+        );
+        let admission =
+            Arc::new(Admission::new(config.queue_capacity, budgets));
+        let view = Arc::new(AdmissionView::new(
+            states.clone(),
+            match &plan {
+                Some(p) => p
+                    .lanes
+                    .iter()
+                    .map(|l| LaneView {
+                        policy: l.policy,
+                        workers: l.workers.clone(),
+                    })
+                    .collect(),
+                None => vec![LaneView {
+                    policy: global_policy,
+                    workers: (0..states.len()).collect(),
+                }],
+            },
+        ));
+
+        let (tx, rx) = sync_channel::<Envelope>(chan_capacity);
         let metrics = Arc::new(ServerMetrics::with_lanes(
             engines.len(),
             lane_slots,
         ));
-        let outstanding = Arc::new(AtomicUsize::new(0));
         let shutdown = Arc::new(AtomicBool::new(false));
         let client = Client {
             tx,
             next_id: Arc::new(AtomicU64::new(0)),
-            outstanding: Arc::clone(&outstanding),
             metrics: Arc::clone(&metrics),
-            capacity: config.queue_capacity,
+            admission: Arc::clone(&admission),
+            view,
         };
 
         // leader -> workers: unbounded (depth already bounded by the
@@ -358,16 +700,7 @@ impl Server {
                 (FormationDriver::PerClass(lanes), sources)
             }
             None => {
-                let mut policy = config.policy;
-                let cap = engines
-                    .iter()
-                    .filter_map(|(e, _)| {
-                        largest_batch(e.available_batches())
-                    })
-                    .min();
-                if let Some(cap) = cap {
-                    policy.max_batch = policy.max_batch.min(cap);
-                }
+                let policy = global_policy;
                 // batch cuts may land on ANY worker, so only sizes
                 // compiled on every engine are safe alignment targets;
                 // with disjoint grids alignment is disabled (engines
@@ -428,7 +761,7 @@ impl Server {
             .map(|(i, ((engine, _), source))| {
                 let state = Arc::clone(&states[i]);
                 let metrics = Arc::clone(&metrics);
-                let outstanding = Arc::clone(&outstanding);
+                let admission = Arc::clone(&admission);
                 std::thread::Builder::new()
                     .name(format!("cnnlab-engine-{i}"))
                     .spawn(move || {
@@ -438,7 +771,7 @@ impl Server {
                             source,
                             state,
                             metrics,
-                            outstanding,
+                            admission,
                         )
                     })
                     .expect("spawn engine worker")
@@ -449,7 +782,9 @@ impl Server {
         let leader_metrics = Arc::clone(&metrics);
         let leader = std::thread::Builder::new()
             .name("cnnlab-leader".into())
-            .spawn(move || leader_loop(driver, rx, sd, leader_metrics))
+            .spawn(move || {
+                leader_loop(driver, rx, sd, leader_metrics, admission)
+            })
             .expect("spawn leader");
         Server {
             client,
@@ -467,6 +802,13 @@ impl Server {
 
     pub fn metrics(&self) -> Arc<ServerMetrics> {
         Arc::clone(&self.client.metrics)
+    }
+
+    /// This coordinator's admission-time completion estimate (see
+    /// [`Client::predicted_admission_us`]) — what a predictive router
+    /// minimizes across coordinators.
+    pub fn predicted_admission_us(&self) -> Option<u64> {
+        self.client.predicted_admission_us()
     }
 
     /// Engine workers backing this server.
@@ -537,7 +879,7 @@ impl Server {
                 }
             })
             .collect();
-        ProfileState { workers, arrivals }
+        ProfileState { workers, arrivals, backends: Vec::new() }
     }
 }
 
@@ -622,9 +964,10 @@ impl FormationDriver {
     }
 
     /// Mirror formation-side counters into the shared metrics: early
-    /// closes, plus the lane-0 (global) or per-lane occupancy and
-    /// arrival-rate gauges that profile persistence snapshots.
-    fn publish(&self, metrics: &ServerMetrics) {
+    /// closes, plus the lane-0 (global) or per-lane occupancy,
+    /// arrival-rate, and predicted-admission-wait gauges that profile
+    /// persistence and the predictive router read.
+    fn publish(&self, metrics: &ServerMetrics, now: Instant) {
         match self {
             FormationDriver::Global { batcher, admitted, .. } => {
                 metrics
@@ -634,13 +977,17 @@ impl FormationDriver {
                 lane.steered.store(*admitted, Ordering::Relaxed);
                 lane.occupancy
                     .store(batcher.pending() as u64, Ordering::Relaxed);
+                let (wait_us, _) =
+                    batcher.admission_wait_us(now, batcher.mean_gap());
+                lane.admission_wait_us
+                    .store(wait_us, Ordering::Relaxed);
                 if let Some((gap_s, obs)) = batcher.gap_snapshot() {
                     lane.arrival_gap_ns
                         .store((gap_s * 1e9) as u64, Ordering::Relaxed);
                     lane.arrival_obs.store(obs, Ordering::Relaxed);
                 }
             }
-            FormationDriver::PerClass(lanes) => lanes.publish(),
+            FormationDriver::PerClass(lanes) => lanes.publish(now),
         }
     }
 }
@@ -653,15 +1000,22 @@ fn leader_loop(
     rx: Receiver<Envelope>,
     shutdown: Arc<AtomicBool>,
     metrics: Arc<ServerMetrics>,
+    admission: Arc<Admission>,
 ) {
     let mut open = true;
+    // every envelope leaving the submit channel exits the
+    // submit-to-steer window the admission estimate charges
+    let absorb = |driver: &mut FormationDriver, env: Envelope| {
+        admission.mark_routed(env.lane);
+        driver.push(env);
+    };
 
     while open || driver.pending() > 0 {
         if open && shutdown.load(Ordering::SeqCst) {
             open = false;
             // absorb anything already queued so it drains below
             while let Ok(env) = rx.try_recv() {
-                driver.push(env);
+                absorb(&mut driver, env);
             }
         }
         if open {
@@ -680,15 +1034,15 @@ fn leader_loop(
                 .unwrap_or(SHUTDOWN_POLL);
             if wait.is_zero() {
                 while let Ok(env) = rx.try_recv() {
-                    driver.push(env);
+                    absorb(&mut driver, env);
                 }
             } else {
                 match rx.recv_timeout(wait) {
                     Ok(env) => {
-                        driver.push(env);
+                        absorb(&mut driver, env);
                         // opportunistically drain whatever else arrived
                         while let Ok(env) = rx.try_recv() {
-                            driver.push(env);
+                            absorb(&mut driver, env);
                         }
                     }
                     Err(RecvTimeoutError::Timeout) => {}
@@ -705,7 +1059,7 @@ fn leader_loop(
         if !open {
             driver.drain_dispatch();
         }
-        driver.publish(&metrics);
+        driver.publish(&metrics, Instant::now());
     }
     // the driver drops here (with every batch sender): workers drain
     // their queues, then exit
@@ -719,7 +1073,7 @@ fn worker_loop<E: InferenceEngine>(
     source: BatchSource,
     state: Arc<WorkerState>,
     metrics: Arc<ServerMetrics>,
-    outstanding: Arc<AtomicUsize>,
+    admission: Arc<Admission>,
 ) {
     while let Some(DispatchedBatch { envs, cost_us }) = source.next() {
         // under join-idle the leader does no per-worker accounting;
@@ -729,7 +1083,7 @@ fn worker_loop<E: InferenceEngine>(
             state.begin(cost_us);
         }
         let n = envs.len();
-        let exec = run_batch(&engine, envs, worker, &metrics, &outstanding);
+        let exec = run_batch(&engine, envs, worker, &metrics, &admission);
         // release the predicted backlog and (on success) refine the
         // per-artifact EWMA with the measured execution time
         state.finish(cost_us, n, exec);
@@ -743,7 +1097,7 @@ fn run_batch<E: InferenceEngine>(
     batch: Vec<Envelope>,
     worker: usize,
     metrics: &ServerMetrics,
-    outstanding: &AtomicUsize,
+    admission: &Admission,
 ) -> Option<Duration> {
     let formed = Instant::now();
     let n = batch.len();
@@ -753,7 +1107,7 @@ fn run_batch<E: InferenceEngine>(
     let mut routes = Vec::with_capacity(n);
     for env in batch {
         images.push(env.req.image);
-        routes.push((env.req.id, env.req.arrived, env.reply));
+        routes.push((env.req.id, env.req.arrived, env.reply, env.lane));
     }
     // A short or mis-shaped BatchOutput must become an error reply, not
     // a slice_of panic that would kill this worker and leak the batch's
@@ -771,7 +1125,8 @@ fn run_batch<E: InferenceEngine>(
     match result {
         Ok(out) => {
             let done = Instant::now();
-            for (i, (id, arrived, reply)) in routes.into_iter().enumerate()
+            for (i, (id, arrived, reply, lane)) in
+                routes.into_iter().enumerate()
             {
                 let resp = Response {
                     id,
@@ -786,20 +1141,147 @@ fn run_batch<E: InferenceEngine>(
                     batch_size: n,
                 };
                 metrics.record(worker, &resp);
-                outstanding.fetch_sub(1, Ordering::Relaxed);
+                admission.release(lane);
                 let _ = reply.send(Ok(resp));
             }
             Some(out.exec)
         }
         Err(e) => {
-            for (_, _, reply) in routes {
+            for (_, _, reply, lane) in routes {
                 metrics.errors.fetch_add(1, Ordering::Relaxed);
-                outstanding.fetch_sub(1, Ordering::Relaxed);
+                admission.release(lane);
                 let _ = reply.send(Err(anyhow::anyhow!(
                     "batch execution failed: {e}"
                 )));
             }
             None
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::{check, usize_in, vec_of};
+
+    #[test]
+    fn admission_budget_bounds_each_lane_independently() {
+        // lane 0: budgeted at 2; lane 1: global bound (capacity 4)
+        let a = Admission::new(4, vec![Some(2), None]);
+        assert!(a.try_admit(0));
+        assert!(a.try_admit(0));
+        assert!(!a.try_admit(0), "lane 0 budget exhausted");
+        assert_eq!(a.lane_out(0), 2);
+        // the failed admit rolled back completely
+        assert_eq!(a.total(), 2);
+        // lane 1 admits against the global capacity regardless
+        assert!(a.try_admit(1));
+        assert!(a.try_admit(1));
+        assert!(
+            !a.try_admit(1),
+            "global bound counts lane-0 traffic too"
+        );
+        // releases free the right lane
+        a.release(0);
+        assert!(a.try_admit(0));
+        assert_eq!(a.total(), 4);
+    }
+
+    #[test]
+    fn admission_cancel_and_routed_round_trip() {
+        let a = Admission::new(8, vec![Some(4)]);
+        assert!(a.try_admit(0));
+        assert_eq!(a.unrouted(0), 1);
+        a.mark_routed(0);
+        assert_eq!(a.unrouted(0), 0);
+        // defensive saturation: an unbalanced mark never wraps
+        a.mark_routed(0);
+        assert_eq!(a.unrouted(0), 0);
+        a.release(0);
+        assert_eq!((a.total(), a.lane_out(0)), (0, 0));
+        // cancel undoes a full reservation (admit incl. unrouted)
+        assert!(a.try_admit(0));
+        a.cancel(0);
+        assert_eq!(
+            (a.total(), a.lane_out(0), a.unrouted(0)),
+            (0, 0, 0)
+        );
+        // over-release saturates instead of wrapping
+        a.release(0);
+        assert_eq!((a.total(), a.lane_out(0)), (0, 0));
+    }
+
+    /// The weighted-shedding contract: whatever the throughput lane's
+    /// saturation state, an admission to the latency lane NEVER fails
+    /// while that lane is below its own budget — and lane counters
+    /// return to zero once everything admitted is released.
+    #[test]
+    fn prop_latency_budget_never_shed_while_throughput_saturated() {
+        let gen = vec_of(usize_in(0, 3), usize_in(1, 120));
+        check(31, 150, &gen, |ops: &Vec<usize>| {
+            let (bl, bt) = (3usize, 5usize);
+            let a = Admission::new(8, vec![Some(bl), Some(bt)]);
+            // saturate the throughput lane completely
+            for _ in 0..bt {
+                if !a.try_admit(1) {
+                    return Err("tput admit under budget failed".into());
+                }
+            }
+            if a.try_admit(1) {
+                return Err("tput admitted beyond budget".into());
+            }
+            let mut lat_in_flight = 0usize;
+            for &op in ops {
+                match op {
+                    // latency admission attempt
+                    0 | 1 => {
+                        let admitted = a.try_admit(0);
+                        if lat_in_flight < bl && !admitted {
+                            return Err(format!(
+                                "shed below latency budget at \
+                                 {lat_in_flight}/{bl}"
+                            ));
+                        }
+                        if lat_in_flight >= bl && admitted {
+                            return Err(
+                                "latency admitted beyond budget".into()
+                            );
+                        }
+                        if admitted {
+                            a.mark_routed(0);
+                            lat_in_flight += 1;
+                        }
+                    }
+                    // latency completion
+                    _ => {
+                        if lat_in_flight > 0 {
+                            a.release(0);
+                            lat_in_flight -= 1;
+                        }
+                    }
+                }
+                if a.lane_out(0) != lat_in_flight {
+                    return Err("latency lane accounting drifted".into());
+                }
+                if a.lane_out(1) != bt {
+                    return Err(
+                        "tput saturation leaked into latency lane"
+                            .into(),
+                    );
+                }
+            }
+            for _ in 0..lat_in_flight {
+                a.release(0);
+            }
+            for _ in 0..bt {
+                a.release(1);
+            }
+            if a.total() != 0 || a.lane_out(0) != 0 || a.lane_out(1) != 0
+            {
+                return Err("counters did not return to zero".into());
+            }
+            Ok(())
+        })
+        .unwrap();
     }
 }

@@ -11,8 +11,8 @@ use std::time::{Duration, Instant};
 
 use cnnlab::cli::Args;
 use cnnlab::coordinator::{
-    DeviceProfile, FormationPolicy, InferenceEngine, PjrtEngine,
-    ProfileState, Server, ServerConfig,
+    DeviceProfile, FormationPolicy, InferenceEngine, LaneBudgets,
+    PjrtEngine, ProfileState, RoutePolicy, Router, Server, ServerConfig,
 };
 use cnnlab::device::{Accelerator, FpgaDevice, GpuDevice};
 use cnnlab::fpga;
@@ -91,8 +91,10 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
 }
 
 /// `cnnlab serve --network tinynet --requests 64 --rate 200 --max-batch 8
-///  --workers 2 --dispatch affinity --profiles gpu,fpga --predictive
-///  --formation per_class --profile-state state.json --report-every 32`
+///  --coordinators 2 --route predictive --workers 2 --dispatch affinity
+///  --profiles gpu,fpga --predictive --formation per_class
+///  --lane-budget latency=8,throughput=10
+///  --profile-state state.json --report-every 32`
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let net = network_by_name(args.get_or("network", "tinynet"))?;
     let dir = args.get_or("artifacts", cnnlab::DEFAULT_ARTIFACTS_DIR);
@@ -101,28 +103,41 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let max_batch = args.get_usize("max-batch", 8)?;
     let max_wait_us = args.get_usize("max-wait-us", 2000)?;
     let workers = args.get_usize("workers", 1)?.max(1);
+    let coordinators = args.get_usize("coordinators", 1)?.max(1);
+    let route: RoutePolicy =
+        args.get_or("route", "least-outstanding").parse()?;
     let dispatch: cnnlab::coordinator::DispatchPolicy =
         args.get_or("dispatch", "join-idle").parse()?;
     let formation: FormationPolicy =
         args.get_or("formation", "global").parse()?;
+    let lane_budgets: LaneBudgets = match args.get("lane-budget") {
+        Some(spec) => spec.parse()?,
+        None => LaneBudgets::none(),
+    };
+    anyhow::ensure!(
+        lane_budgets.is_empty() || formation == FormationPolicy::PerClass,
+        "--lane-budget requires --formation per_class"
+    );
     // learned-state persistence: load if the file exists, save on exit
     let profile_state_path = args.get("profile-state");
     // print worker/lane snapshots every N submissions (0 = only at end)
     let report_every = args.get_usize("report-every", 0)?;
     let predictive = args.has_flag("predictive");
-    // `--profiles gpu,fpga` tags worker i with the i-th entry (cycled):
-    // analytic GPU/FPGA cost models seed the dispatcher's latency
-    // table; `cpu` starts unmodeled and warms from measurements only
+    // `--profiles gpu,fpga` tags worker i (globally, across all
+    // coordinators) with the i-th entry (cycled): analytic GPU/FPGA
+    // cost models seed the dispatcher's latency table; `cpu` starts
+    // unmodeled and warms from measurements only
     let profiles = args.get("profiles");
 
     let rt_manifest = cnnlab::runtime::Manifest::load(dir)?;
     let batches = rt_manifest.batches_for(&net.name);
     anyhow::ensure!(!batches.is_empty(), "no artifacts for {}", net.name);
-    // one executor service (device thread) + engine replica per worker:
-    // batches from one shared batcher execute on them in parallel
-    let mut services = Vec::with_capacity(workers);
-    let mut engines = Vec::with_capacity(workers);
-    for _ in 0..workers {
+    // one executor service (device thread) + engine replica per worker
+    // per coordinator: batches execute on them in parallel
+    let total_workers = coordinators * workers;
+    let mut services = Vec::with_capacity(total_workers);
+    let mut engines = Vec::with_capacity(total_workers);
+    for _ in 0..total_workers {
         let svc = ExecutorService::spawn(dir)?;
         engines.push(PjrtEngine::new(
             svc.handle(),
@@ -146,21 +161,23 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         queue_capacity: 256,
         dispatch,
         formation,
+        lane_budgets,
     };
     let loaded_state = match profile_state_path {
         Some(path) if std::path::Path::new(path).exists() => {
             let state = ProfileState::load(path)?;
             println!(
                 "profile state: loaded {} worker table(s), {} arrival \
-                 estimate(s) from {path}",
+                 estimate(s), {} backend state(s) from {path}",
                 state.workers.len(),
-                state.arrivals.len()
+                state.arrivals.len(),
+                state.backends.len()
             );
             Some(state)
         }
         _ => None,
     };
-    let profiled = match profiles {
+    let profiled: Vec<(PjrtEngine, DeviceProfile)> = match profiles {
         None => engines
             .into_iter()
             .map(|e| {
@@ -204,109 +221,204 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                 .collect::<anyhow::Result<Vec<_>>>()?
         }
     };
-    let server = Server::spawn_pool_profiled_with_state(
-        profiled,
-        config,
-        loaded_state.as_ref(),
-    );
-    if formation == FormationPolicy::PerClass {
-        let classes: Vec<&str> = server
-            .lane_classes()
-            .iter()
-            .map(|c| c.name())
-            .collect();
-        println!("formation lanes: {}", classes.join(", "));
+    // one coordinator per group of `workers` engines, each warmed from
+    // its own slice of the persisted state (flat for a single
+    // coordinator, `backends[i]` behind a router)
+    let mut groups: Vec<Vec<(PjrtEngine, DeviceProfile)>> =
+        (0..coordinators).map(|_| Vec::new()).collect();
+    for (i, pair) in profiled.into_iter().enumerate() {
+        groups[i / workers].push(pair);
     }
-    let client = server.client();
+    let servers: Vec<Server> = groups
+        .into_iter()
+        .enumerate()
+        .map(|(c, group)| {
+            let state = if coordinators == 1 {
+                loaded_state.as_ref()
+            } else {
+                loaded_state.as_ref().and_then(|s| s.backends.get(c))
+            };
+            Server::spawn_pool_profiled_with_state(
+                group,
+                config.clone(),
+                state,
+            )
+        })
+        .collect();
+    if formation == FormationPolicy::PerClass {
+        for (c, server) in servers.iter().enumerate() {
+            let classes: Vec<&str> = server
+                .lane_classes()
+                .iter()
+                .map(|c| c.name())
+                .collect();
+            println!(
+                "coordinator {c} formation lanes: {}",
+                classes.join(", ")
+            );
+        }
+    }
+    let router = Router::new(
+        servers.iter().map(Server::client).collect(),
+        route,
+    );
     let mut rng = Rng::new(9);
     let t0 = Instant::now();
     let mut pending = Vec::new();
+    let mut shed = 0usize;
     for i in 0..requests {
         let gap = rng.next_exp(rate);
         std::thread::sleep(Duration::from_secs_f64(gap.min(0.05)));
         let img = Tensor::randn(&image_shape, &mut rng, 0.1);
-        pending.push(client.submit(img)?);
+        match router.submit(img) {
+            Ok(rx) => pending.push(rx),
+            Err(e)
+                if e.to_string()
+                    .starts_with(cnnlab::coordinator::BUSY_PREFIX) =>
+            {
+                shed += 1;
+            }
+            Err(e) => return Err(e),
+        }
         if report_every > 0 && (i + 1) % report_every == 0 {
-            print_snapshot_report(&server, i + 1);
+            print_snapshot_report(&servers, &router, i + 1);
         }
     }
     for rx in pending {
         rx.recv()??;
     }
     let wall = t0.elapsed().as_secs_f64();
-    let m = server.metrics();
-    let lat = m.latency_summary();
     println!(
-        "served {requests} requests on {workers} worker(s) in {} \
+        "served {} requests ({shed} shed) on {coordinators} \
+         coordinator(s) x {workers} worker(s) [route={}] in {} \
          ({:.1} req/s)",
+        requests - shed,
+        route.name(),
         si_time(wall),
-        requests as f64 / wall
+        (requests - shed) as f64 / wall
     );
-    println!(
-        "latency: p50={} p99={} mean={}",
-        si_time(lat.p50),
-        si_time(lat.p99),
-        si_time(lat.mean)
-    );
-    println!("mean batch size: {:.2}", m.mean_batch_size());
-    if predictive {
+    for (c, server) in servers.iter().enumerate() {
+        let m = server.metrics();
+        let lat = m.latency_summary();
         println!(
-            "early closes (predictive): {}",
-            m.early_closes.load(std::sync::atomic::Ordering::Relaxed)
+            "coordinator {c}: completed={} latency p50={} p99={} \
+             mean={} mean_batch={:.2}",
+            m.completed.load(std::sync::atomic::Ordering::Relaxed),
+            si_time(lat.p50),
+            si_time(lat.p99),
+            si_time(lat.mean),
+            m.mean_batch_size()
         );
+        if predictive {
+            println!(
+                "  early closes (predictive): {}",
+                m.early_closes
+                    .load(std::sync::atomic::Ordering::Relaxed)
+            );
+        }
+        if dispatch == cnnlab::coordinator::DispatchPolicy::Affinity
+            || formation == FormationPolicy::PerClass
+        {
+            println!(
+                "  affinity routed: {}  cold fallbacks: {}  stolen: {}",
+                m.affinity_routed
+                    .load(std::sync::atomic::Ordering::Relaxed),
+                m.cold_fallbacks
+                    .load(std::sync::atomic::Ordering::Relaxed),
+                m.stolen.load(std::sync::atomic::Ordering::Relaxed)
+            );
+        }
     }
-    if dispatch == cnnlab::coordinator::DispatchPolicy::Affinity
-        || formation == FormationPolicy::PerClass
-    {
-        println!(
-            "affinity routed: {}  cold fallbacks: {}  stolen: {}",
-            m.affinity_routed.load(std::sync::atomic::Ordering::Relaxed),
-            m.cold_fallbacks.load(std::sync::atomic::Ordering::Relaxed),
-            m.stolen.load(std::sync::atomic::Ordering::Relaxed)
-        );
-    }
-    print_snapshot_report(&server, requests);
+    print_snapshot_report(&servers, &router, requests);
     if let Some(path) = profile_state_path {
-        server.profile_state().save(path)?;
+        let state = if servers.len() == 1 {
+            servers[0].profile_state()
+        } else {
+            // router-level state: every backend's learned tables ride
+            // in `backends`, so the next deploy routes predictively
+            // from the first request
+            ProfileState {
+                workers: Vec::new(),
+                arrivals: Vec::new(),
+                backends: servers
+                    .iter()
+                    .map(Server::profile_state)
+                    .collect(),
+            }
+        };
+        state.save(path)?;
         println!("profile state: saved to {path}");
     }
     Ok(())
 }
 
-/// One observability block per call: per-lane occupancy/steering and
-/// per-worker dispatcher state including the learned EWMA latency
-/// table — `Server::worker_snapshots` surfaced without a debugger.
-fn print_snapshot_report(server: &Server, submitted: usize) {
+/// One observability block per call: router failover/shed counters and
+/// per-backend routing decisions, then per-coordinator lane and worker
+/// state including the learned EWMA latency tables —
+/// `Server::worker_snapshots` and `Router::metrics` surfaced without a
+/// debugger.
+fn print_snapshot_report(
+    servers: &[Server],
+    router: &Router,
+    submitted: usize,
+) {
     use std::sync::atomic::Ordering;
-    let m = server.metrics();
     println!("-- snapshot after {submitted} submissions --");
-    for (i, label) in server.lane_labels().iter().enumerate() {
-        let lane = m.lane(i);
-        let gap_ns = lane.arrival_gap_ns.load(Ordering::Relaxed);
+    let rm = router.metrics();
+    println!(
+        "  router: failovers={} shed={}",
+        rm.failovers.load(Ordering::Relaxed),
+        rm.shed.load(Ordering::Relaxed),
+    );
+    for (c, server) in servers.iter().enumerate() {
+        let b = rm.backend(c);
+        let est = server
+            .predicted_admission_us()
+            .map(|us| si_time(us as f64 / 1e6))
+            .unwrap_or_else(|| "cold".into());
         println!(
-            "  lane {i} [{label}]: steered={} occupancy={} \
-             arrival_gap={}",
-            lane.steered.load(Ordering::Relaxed),
-            lane.occupancy.load(Ordering::Relaxed),
-            si_time(gap_ns as f64 / 1e9),
+            "  backend {c}: predictive_routed={} cold_routed={} \
+             outstanding={} predicted_admission={est}",
+            b.predictive_routed.load(Ordering::Relaxed),
+            b.cold_routed.load(Ordering::Relaxed),
+            server.client().outstanding(),
         );
-    }
-    for (i, s) in server.worker_snapshots().iter().enumerate() {
-        let table: Vec<String> = s
-            .exec_table
-            .iter()
-            .map(|&(b, exec_s, obs)| {
-                format!("b{b}={} (n={obs})", si_time(exec_s))
-            })
-            .collect();
-        println!(
-            "  worker {i} [{}]: batches={} queued={} backlog={} ewma[{}]",
-            s.kind.name(),
-            s.dispatched,
-            s.queued,
-            si_time(s.backlog_us as f64 / 1e6),
-            table.join(", "),
-        );
+        let m = server.metrics();
+        for (i, label) in server.lane_labels().iter().enumerate() {
+            let lane = m.lane(i);
+            let gap_ns = lane.arrival_gap_ns.load(Ordering::Relaxed);
+            println!(
+                "    lane {i} [{label}]: steered={} shed={} \
+                 occupancy={} admission_wait={} arrival_gap={}",
+                lane.steered.load(Ordering::Relaxed),
+                lane.shed.load(Ordering::Relaxed),
+                lane.occupancy.load(Ordering::Relaxed),
+                si_time(
+                    lane.admission_wait_us.load(Ordering::Relaxed)
+                        as f64
+                        / 1e6
+                ),
+                si_time(gap_ns as f64 / 1e9),
+            );
+        }
+        for (i, s) in server.worker_snapshots().iter().enumerate() {
+            let table: Vec<String> = s
+                .exec_table
+                .iter()
+                .map(|&(b, exec_s, obs)| {
+                    format!("b{b}={} (n={obs})", si_time(exec_s))
+                })
+                .collect();
+            println!(
+                "    worker {i} [{}]: batches={} queued={} backlog={} \
+                 ewma[{}]",
+                s.kind.name(),
+                s.dispatched,
+                s.queued,
+                si_time(s.backlog_us as f64 / 1e6),
+                table.join(", "),
+            );
+        }
     }
 }
 

@@ -7,8 +7,9 @@ use std::time::{Duration, Instant};
 
 use cnnlab::coordinator::{
     pick_worker, BatchPolicy, Batcher, CurveEngine, DeviceProfile,
-    DispatchPolicy, Envelope, FormationPolicy, MockEngine, Request,
-    Server, ServerConfig, WorkerState,
+    DispatchPolicy, Envelope, FormationPolicy, LaneBudgets, LaneClass,
+    MockEngine, Request, RoutePolicy, Router, Server, ServerConfig,
+    WorkerState,
 };
 use cnnlab::device::DeviceKind;
 use cnnlab::fpga::{self, EngineConfig};
@@ -309,6 +310,7 @@ fn prop_per_class_formation_answers_every_request_exactly_once() {
                 queue_capacity: 256,
                 dispatch: DispatchPolicy::JoinIdle,
                 formation: FormationPolicy::PerClass,
+                ..Default::default()
             },
         );
         if server.lane_classes().len() != 2 {
@@ -352,6 +354,116 @@ fn prop_per_class_formation_answers_every_request_exactly_once() {
         if steered != n as u64 {
             return Err(format!(
                 "{steered} steering decisions for {n} admissions"
+            ));
+        }
+        Ok(())
+    }));
+}
+
+/// Predictive routing over two budgeted per-class coordinators: for
+/// any request count submitted at full speed, every *accepted* request
+/// is answered exactly once (no losses, no duplicates), sheds are the
+/// only submissions without a reply, and the per-lane shed counters
+/// account for every rejection.  Tight budgets + tiny queue capacity
+/// force the backpressure/failover path to actually fire.
+#[test]
+fn prop_predictive_router_answers_every_accepted_exactly_once() {
+    let gen = usize_in(1, 40);
+    expect_ok(check(37, 8, &gen, |&n| {
+        let spawn = || {
+            let lat = CurveEngine::latency_shaped(300);
+            let tput = CurveEngine::throughput_shaped(2_000);
+            let lat_profile = lat.profile(DeviceKind::Gpu);
+            let tput_profile = tput.profile(DeviceKind::Fpga);
+            Server::spawn_pool_profiled(
+                vec![(lat, lat_profile), (tput, tput_profile)],
+                ServerConfig {
+                    policy: BatchPolicy::new(
+                        4,
+                        Duration::from_micros(500),
+                    ),
+                    queue_capacity: 6,
+                    dispatch: DispatchPolicy::Affinity,
+                    formation: FormationPolicy::PerClass,
+                    lane_budgets: LaneBudgets::none()
+                        .with(LaneClass::Latency, 2)
+                        .with(LaneClass::Throughput, 3),
+                },
+            )
+        };
+        let (a, b) = (spawn(), spawn());
+        let router = Router::new(
+            vec![a.client(), b.client()],
+            RoutePolicy::Predictive,
+        );
+        let mut rng = Rng::new(137 + n as u64);
+        let mut accepted = Vec::new();
+        let mut shed = 0usize;
+        for _ in 0..n {
+            match router.submit(Tensor::randn(&[3, 8, 8], &mut rng, 0.1))
+            {
+                Ok(rx) => accepted.push(rx),
+                Err(e) => {
+                    if !e.to_string().contains("ServerBusy") {
+                        return Err(format!("unexpected error: {e}"));
+                    }
+                    shed += 1;
+                }
+            }
+        }
+        if accepted.len() + shed != n {
+            return Err("submissions neither accepted nor shed".into());
+        }
+        for rx in &accepted {
+            let resp = rx
+                .recv()
+                .map_err(|e| e.to_string())?
+                .map_err(|e| e.to_string())?;
+            let _ = resp.id;
+            if rx.try_recv().is_ok() {
+                return Err("duplicate reply".into());
+            }
+        }
+        // every reply was delivered and every rejection counted
+        let answered: u64 = [&a, &b]
+            .iter()
+            .map(|s| {
+                s.metrics().completed.load(
+                    std::sync::atomic::Ordering::Relaxed,
+                )
+            })
+            .sum();
+        if answered != accepted.len() as u64 {
+            return Err(format!(
+                "{answered} completions for {} accepted",
+                accepted.len()
+            ));
+        }
+        let lane_shed: u64 = [&a, &b]
+            .iter()
+            .flat_map(|s| {
+                let m = s.metrics();
+                (0..m.lanes())
+                    .map(|i| {
+                        m.lane(i).shed.load(
+                            std::sync::atomic::Ordering::Relaxed,
+                        )
+                    })
+                    .collect::<Vec<_>>()
+            })
+            .sum();
+        let rejected: u64 = [&a, &b]
+            .iter()
+            .map(|s| {
+                s.metrics()
+                    .rejected
+                    .load(std::sync::atomic::Ordering::Relaxed)
+            })
+            .sum();
+        if lane_shed != rejected {
+            return Err(format!(
+                "per-lane shed counters ({lane_shed}) disagree with \
+                 rejections ({rejected})"
             ));
         }
         Ok(())
