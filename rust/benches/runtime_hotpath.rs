@@ -63,6 +63,7 @@ fn main() -> anyhow::Result<()> {
                 b.push(Envelope::new(
                     Request { id: i, image: img.clone(), arrived: now },
                     reply.clone(),
+                    0,
                 ));
                 i += 1;
             }

@@ -46,6 +46,12 @@ pub struct ServingConfig {
     /// Cross-coordinator routing: `"round-robin"`,
     /// `"least-outstanding"`, or `"predictive"`.
     pub route: RoutePolicy,
+    /// Router-level hedged dispatch: when the chosen backend's
+    /// predicted admission-to-completion time (µs) exceeds this SLO,
+    /// a duplicate of the request is submitted to the second-cheapest
+    /// backend; first completion wins, the loser is cancelled and
+    /// pruned.  `None` disables hedging.
+    pub hedge_slo_us: Option<u64>,
     /// Path to a persisted profile state (worker EWMA latency tables +
     /// arrival-rate estimates): loaded on startup when the file exists,
     /// written back when a serve run completes.
@@ -69,6 +75,7 @@ impl Default for ServingConfig {
             lane_budgets: LaneBudgets::none(),
             coordinators: 1,
             route: RoutePolicy::LeastOutstanding,
+            hedge_slo_us: None,
             profile_state: None,
         }
     }
@@ -93,6 +100,7 @@ impl ServingConfig {
             dispatch: self.dispatch,
             formation: self.formation,
             lane_budgets: self.lane_budgets.clone(),
+            event_log: None,
         }
     }
 
@@ -159,6 +167,12 @@ impl ServingConfig {
             }
             if let Some(v) = t.get("route").and_then(TomlValue::as_str) {
                 cfg.route = v.parse()?;
+            }
+            if let Some(v) =
+                t.get("hedge_slo_us").and_then(TomlValue::as_int)
+            {
+                anyhow::ensure!(v > 0, "hedge_slo_us must be positive");
+                cfg.hedge_slo_us = Some(v as u64);
             }
             if let Some(v) =
                 t.get("profile_state").and_then(TomlValue::as_str)
@@ -472,6 +486,27 @@ mod tests {
              lane_budgets = \"latency=oops\"",
         )
         .unwrap();
+        assert!(ServingConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn serving_hedge_slo_knob() {
+        let doc = parse_toml(
+            r#"
+            [serving]
+            coordinators = 2
+            route = "predictive"
+            hedge_slo_us = 20000
+        "#,
+        )
+        .unwrap();
+        let cfg = ServingConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.hedge_slo_us, Some(20_000));
+        // default: hedging off
+        assert_eq!(ServingConfig::default().hedge_slo_us, None);
+        // zero is rejected (an always-on hedge wants a tiny positive
+        // SLO, not a sentinel)
+        let doc = parse_toml("[serving]\nhedge_slo_us = 0").unwrap();
         assert!(ServingConfig::from_toml(&doc).is_err());
     }
 

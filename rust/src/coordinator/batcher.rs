@@ -302,6 +302,31 @@ impl Batcher {
         Some(self.queue.drain(..n).collect())
     }
 
+    /// Remove queued envelopes whose cancellation token has resolved
+    /// (caller cancelled, or a hedge sibling already claimed the
+    /// reply) and hand them back so the caller can release their
+    /// admission slots and count the prunes.  Runs *before* a batch is
+    /// cut, so a cancelled request never pads a batch, never reaches a
+    /// device, and frees its lane-budget slot as soon as the leader's
+    /// next pass sees it.  The all-live fast path is a single scan
+    /// with no reallocation.
+    pub fn prune_cancelled(&mut self) -> Vec<Envelope> {
+        if self.queue.iter().all(|e| e.token.is_live()) {
+            return Vec::new();
+        }
+        let mut kept = VecDeque::with_capacity(self.queue.len());
+        let mut pruned = Vec::new();
+        for env in self.queue.drain(..) {
+            if env.token.is_live() {
+                kept.push_back(env);
+            } else {
+                pruned.push(env);
+            }
+        }
+        self.queue = kept;
+        pruned
+    }
+
     /// Flush everything (shutdown / lane-reset path), in max_batch
     /// chunks.  Also clears `last_arrival`: the stream is interrupted,
     /// so the next push must not observe an artificial gap spanning the
@@ -368,6 +393,7 @@ mod tests {
         Envelope::new(
             Request { id, image: Tensor::zeros(&[1]), arrived },
             tx,
+            0,
         )
     }
 
@@ -737,6 +763,49 @@ mod tests {
         let empty =
             Batcher::new(BatchPolicy::new(8, Duration::from_millis(12)));
         assert_eq!(empty.admission_wait_us(t0, None), (12_000, 1));
+    }
+
+    #[test]
+    fn prune_cancelled_removes_only_dead_envelopes() {
+        let mut b =
+            Batcher::new(BatchPolicy::new(8, Duration::from_secs(60)));
+        let t0 = Instant::now();
+        let envs: Vec<Envelope> =
+            (0..5).map(|i| env(i, t0)).collect();
+        let cancel_1 = envs[1].token.clone();
+        let cancel_3 = envs[3].token.clone();
+        for e in envs {
+            b.push(e);
+        }
+        // nothing cancelled yet: the fast path removes nothing
+        assert!(b.prune_cancelled().is_empty());
+        assert_eq!(b.pending(), 5);
+        assert!(cancel_1.cancel());
+        assert!(cancel_3.cancel());
+        let pruned = b.prune_cancelled();
+        assert_eq!(ids(&pruned), [1, 3]);
+        assert_eq!(b.pending(), 3);
+        // survivors keep FIFO order and close normally
+        let batch = b.drain_all().remove(0);
+        assert_eq!(ids(&batch), [0, 2, 4]);
+    }
+
+    #[test]
+    fn prune_cancelled_clears_stale_deadline() {
+        // the lone queued request is cancelled: pruning must leave no
+        // deadline behind (the leader would otherwise spin on a close
+        // instant for an empty queue)
+        let mut b =
+            Batcher::new(BatchPolicy::new(8, Duration::from_millis(5)));
+        let t0 = Instant::now();
+        let e = env(0, t0);
+        let token = e.token.clone();
+        b.push(e);
+        assert!(b.next_deadline().is_some());
+        token.cancel();
+        assert_eq!(b.prune_cancelled().len(), 1);
+        assert!(b.next_deadline().is_none());
+        assert!(b.pop_ready(t0 + Duration::from_secs(1)).is_none());
     }
 
     #[test]

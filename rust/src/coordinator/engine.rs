@@ -385,12 +385,27 @@ pub struct CurveEngine {
     pub base_us: u64,
     pub per_img_us: u64,
     batches: Vec<usize>,
+    /// Straggler injection: every `straggle_every`-th `infer_batch`
+    /// call sleeps `straggle_extra` on top of the nominal cost (0 =
+    /// never).  The *reported* exec stays nominal — the stall is a
+    /// host-side hiccup the cost model cannot see, which is exactly
+    /// the unpredictable tail hedged dispatch exists for.
+    straggle_every: usize,
+    straggle_extra: Duration,
+    calls: std::sync::atomic::AtomicUsize,
 }
 
 impl CurveEngine {
     /// Affine-cost engine with the default artifact grid {1, 2, 4, 8}.
     pub fn new(base_us: u64, per_img_us: u64) -> CurveEngine {
-        CurveEngine { base_us, per_img_us, batches: vec![1, 2, 4, 8] }
+        CurveEngine {
+            base_us,
+            per_img_us,
+            batches: vec![1, 2, 4, 8],
+            straggle_every: 0,
+            straggle_extra: Duration::ZERO,
+            calls: std::sync::atomic::AtomicUsize::new(0),
+        }
     }
 
     /// The latency-shaped half of the paper's trade-off in miniature:
@@ -416,13 +431,29 @@ impl CurveEngine {
         self
     }
 
+    /// Inject stragglers: every `every`-th batch stalls for `extra` on
+    /// top of the nominal curve cost, while the reported exec (and
+    /// thus the EWMA the dispatcher learns) stays nominal.  Reproduces
+    /// the silent tail — host jitter, contended PCIe, a reconfiguring
+    /// FPGA — that predictions cannot anticipate.
+    pub fn with_straggle(
+        mut self,
+        every: usize,
+        extra: Duration,
+    ) -> CurveEngine {
+        self.straggle_every = every;
+        self.straggle_extra = extra;
+        self
+    }
+
     /// Device time for a batch of `n` images.
     pub fn exec(&self, n: usize) -> Duration {
         Duration::from_micros(self.base_us + self.per_img_us * n as u64)
     }
 
-    /// An exact [`DeviceProfile`] for this engine's cost curve — what a
-    /// perfectly calibrated analytic model would seed.
+    /// An exact [`DeviceProfile`](super::dispatch::DeviceProfile) for
+    /// this engine's cost curve — what a perfectly calibrated analytic
+    /// model would seed.
     pub fn profile(
         &self,
         kind: crate::device::DeviceKind,
@@ -452,7 +483,19 @@ impl InferenceEngine for CurveEngine {
     ) -> anyhow::Result<BatchOutput> {
         let n = images.len();
         let d = self.exec(n);
-        std::thread::sleep(d);
+        let c = self
+            .calls
+            .fetch_add(1, std::sync::atomic::Ordering::SeqCst)
+            + 1;
+        let stalled = self.straggle_every > 0
+            && c % self.straggle_every == 0;
+        std::thread::sleep(if stalled {
+            d + self.straggle_extra
+        } else {
+            d
+        });
+        // exec reports the nominal curve cost even when stalled: the
+        // straggle is invisible to the learned latency tables
         Ok(BatchOutput {
             outputs: Arc::new(Tensor::zeros(&[n, 2])),
             per_image: 2,
@@ -496,6 +539,28 @@ mod tests {
         assert_eq!(out.outputs.shape(), &[2, 2]);
         // fingerprints: [sum, len] per image
         assert_eq!(out.outputs.data(), &[3.0, 2.0, 7.0, 2.0]);
+    }
+
+    #[test]
+    fn curve_engine_straggle_is_invisible_to_reported_exec() {
+        let e = CurveEngine::new(0, 100)
+            .with_straggle(2, Duration::from_millis(25));
+        let img = Tensor::zeros(&[3, 8, 8]);
+        let t0 = std::time::Instant::now();
+        let out1 = e.infer_batch(vec![img.clone()]).unwrap();
+        let nominal = t0.elapsed();
+        let t1 = std::time::Instant::now();
+        let out2 = e.infer_batch(vec![img]).unwrap();
+        let stalled = t1.elapsed();
+        assert_eq!(
+            out1.exec, out2.exec,
+            "stalls must not leak into the reported exec"
+        );
+        assert!(
+            stalled >= nominal + Duration::from_millis(20),
+            "every 2nd call must actually stall: {nominal:?} vs \
+             {stalled:?}"
+        );
     }
 
     #[test]

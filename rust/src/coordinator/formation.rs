@@ -168,6 +168,93 @@ impl LaneBudgets {
             .find(|&&(c, _)| c == class)
             .map(|&(_, b)| b)
     }
+
+    /// Derive default per-lane budgets from persisted signal — the
+    /// ROADMAP "budget autotuning" seed, applied when no explicit
+    /// `--lane-budget` is given but a profile state is loaded.
+    ///
+    /// Each lane's *utilization* is its persisted offered load (1 /
+    /// arrival-gap estimate) over its service capacity (sum across the
+    /// lane's workers of images/sec at the largest compiled artifact,
+    /// from the preloaded seed/EWMA tables); the global
+    /// `queue_capacity` is split across lanes proportionally to
+    /// utilization — largest-remainder apportionment, one slot floor
+    /// per lane, budgets summing to exactly `capacity` — so the lane
+    /// that needs the most in-flight slots under its recorded load
+    /// gets them without the split ever admitting more (or fewer)
+    /// outstanding requests than the global bound it replaces.
+    /// Budgets are re-derived on every profile load, tracking drift
+    /// across redeploys.  Returns [`LaneBudgets::none`] — the plain
+    /// global bound — unless the plan has at least two lanes,
+    /// `capacity` covers the one-slot floors, and *every* lane has
+    /// both an arrival estimate and a warm capacity estimate (a
+    /// partial split would starve the unobserved class).
+    pub fn derive(
+        plan: &FormationPlan,
+        states: &[Arc<WorkerState>],
+        arrivals: &[ArrivalState],
+        capacity: usize,
+    ) -> LaneBudgets {
+        if plan.lanes.len() < 2 || capacity < plan.lanes.len() {
+            return LaneBudgets::none();
+        }
+        let mut rho: Vec<(LaneClass, f64)> = Vec::new();
+        for lane in &plan.lanes {
+            let Some(a) = arrivals.iter().find(|a| {
+                a.lane == lane.class.name()
+                    && a.obs > 0
+                    && a.gap_s.is_finite()
+                    && a.gap_s > 0.0
+            }) else {
+                return LaneBudgets::none();
+            };
+            let offered_hz = 1.0 / a.gap_s;
+            let mut service_hz = 0.0;
+            for &w in &lane.workers {
+                let Some(&b) = states[w].artifacts().last() else {
+                    continue;
+                };
+                if let Some(us) = states[w].predict_us(b) {
+                    if us > 0 {
+                        service_hz += b as f64 / (us as f64 / 1e6);
+                    }
+                }
+            }
+            if service_hz <= 0.0 {
+                return LaneBudgets::none();
+            }
+            rho.push((lane.class, offered_hz / service_hz));
+        }
+        let total: f64 = rho.iter().map(|&(_, r)| r).sum();
+        if total <= 0.0 {
+            return LaneBudgets::none();
+        }
+        // largest-remainder apportionment over the slots left after
+        // the one-per-lane floor: floors first, then the remaining
+        // slots to the largest fractional parts, so the budgets sum
+        // to exactly `capacity`
+        let spare = (capacity - rho.len()) as f64;
+        let mut shares: Vec<(LaneClass, usize, f64)> = rho
+            .iter()
+            .map(|&(class, r)| {
+                let exact = spare * r / total;
+                let floor = exact.floor();
+                (class, floor as usize, exact - floor)
+            })
+            .collect();
+        let mut leftover = (capacity - rho.len())
+            - shares.iter().map(|&(_, f, _)| f).sum::<usize>();
+        shares.sort_by(|a, b| {
+            b.2.partial_cmp(&a.2).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let mut budgets = LaneBudgets::none();
+        for (class, floor, _) in shares {
+            let extra = usize::from(leftover > 0);
+            leftover -= extra;
+            budgets = budgets.with(class, 1 + floor + extra);
+        }
+        budgets
+    }
 }
 
 impl std::str::FromStr for LaneBudgets {
@@ -493,6 +580,17 @@ impl LaneSet {
         }
     }
 
+    /// Prune envelopes whose cancellation token resolved while they
+    /// waited in a lane batcher (see [`Batcher::prune_cancelled`]) —
+    /// returned so the leader can release their admission slots.
+    pub fn prune_cancelled(&mut self) -> Vec<Envelope> {
+        let mut pruned = Vec::new();
+        for lane in &mut self.lanes {
+            pruned.extend(lane.batcher.prune_cancelled());
+        }
+        pruned
+    }
+
     /// Close and dispatch every ready batch across the lanes.
     pub fn dispatch_ready(&mut self, now: Instant) {
         for li in 0..self.lanes.len() {
@@ -662,6 +760,7 @@ mod tests {
         Envelope::new(
             Request { id, image: Tensor::zeros(&[1]), arrived },
             tx,
+            0,
         )
     }
 
@@ -869,6 +968,117 @@ mod tests {
             .with(LaneClass::Latency, 4)
             .with(LaneClass::Latency, 6);
         assert_eq!(b.get(LaneClass::Latency), Some(6));
+    }
+
+    #[test]
+    fn prune_cancelled_frees_lanes_and_keeps_survivors() {
+        let base = BatchPolicy::new(8, Duration::from_secs(60));
+        let (mut ls, rxs) = lane_set(
+            vec![latency_state(), throughput_state()],
+            base,
+        );
+        let t0 = Instant::now();
+        let envs: Vec<Envelope> = (0..6).map(|i| env(i, t0)).collect();
+        let doomed: Vec<_> =
+            envs.iter().map(|e| e.token.clone()).collect();
+        for e in envs {
+            ls.push(e);
+        }
+        // burst steering put requests in both lanes
+        assert!(ls.lane_pending(0) > 0 && ls.lane_pending(1) > 0);
+        // cancel one request per lane-agnostic id; prune must find it
+        // wherever steering put it
+        assert!(doomed[0].cancel());
+        assert!(doomed[5].cancel());
+        let pruned = ls.prune_cancelled();
+        let mut pruned_ids: Vec<u64> =
+            pruned.iter().map(|e| e.req.id).collect();
+        pruned_ids.sort_unstable();
+        assert_eq!(pruned_ids, [0, 5]);
+        assert_eq!(ls.pending(), 4);
+        // survivors still drain exactly once
+        ls.drain_dispatch();
+        let mut ids: Vec<u64> = rxs
+            .iter()
+            .flat_map(|rx| rx.try_iter())
+            .flat_map(|b| b.envs.into_iter().map(|e| e.req.id))
+            .collect();
+        ids.sort_unstable();
+        assert_eq!(ids, [1, 2, 3, 4]);
+    }
+
+    /// THE BUDGET-AUTOTUNING SEED: with persisted arrival estimates
+    /// for every lane and warm capacity estimates, the global
+    /// `queue_capacity` splits across lanes proportionally to each
+    /// lane's utilization (offered load / service capacity).
+    #[test]
+    fn budgets_derive_from_persisted_load_and_capacity() {
+        let states = vec![latency_state(), throughput_state()];
+        let base = BatchPolicy::new(8, Duration::from_millis(12));
+        let plan = FormationPlan::derive(base, &states);
+        assert_eq!(plan.lanes.len(), 2);
+        // latency lane: capacity 8 imgs / 48ms = 166.7/s, offered
+        // 100/s -> rho 0.6; throughput lane: 8 / 16ms = 500/s,
+        // offered 500/s -> rho 1.0.  capacity 16 splits 6 / 10.
+        let arrivals = vec![
+            ArrivalState { lane: "latency".into(), gap_s: 0.010, obs: 9 },
+            ArrivalState {
+                lane: "throughput".into(),
+                gap_s: 0.002,
+                obs: 9,
+            },
+        ];
+        let b = LaneBudgets::derive(&plan, &states, &arrivals, 16);
+        assert_eq!(b.get(LaneClass::Latency), Some(6));
+        assert_eq!(b.get(LaneClass::Throughput), Some(10));
+        // an odd capacity still splits to exactly the global bound
+        // (largest-remainder apportionment, no rounding overshoot)
+        let b = LaneBudgets::derive(&plan, &states, &arrivals, 17);
+        assert_eq!(
+            b.get(LaneClass::Latency).unwrap()
+                + b.get(LaneClass::Throughput).unwrap(),
+            17,
+            "derived budgets must sum to the capacity they split"
+        );
+        // a lane with no persisted arrival estimate disables the
+        // split (a partial split would starve the unobserved class)
+        let partial = &arrivals[..1];
+        assert!(LaneBudgets::derive(&plan, &states, partial, 16)
+            .is_empty());
+        // junk estimates disable it too
+        let junk = vec![
+            ArrivalState { lane: "latency".into(), gap_s: 0.0, obs: 9 },
+            arrivals[1].clone(),
+        ];
+        assert!(
+            LaneBudgets::derive(&plan, &states, &junk, 16).is_empty()
+        );
+        // a single-lane plan has nothing to weight
+        let solo = FormationPlan::derive(base, &states[..1]);
+        assert!(LaneBudgets::derive(&solo, &states, &arrivals, 16)
+            .is_empty());
+        // cold workers (no capacity estimate) disable the split
+        let cold: Vec<Arc<WorkerState>> = vec![
+            Arc::new(WorkerState::new(
+                DeviceProfile::unmodeled(DeviceKind::CpuPjrt),
+                &ARTIFACTS,
+            )),
+            throughput_state(),
+        ];
+        let cold_plan = FormationPlan::derive(base, &cold);
+        assert!(LaneBudgets::derive(&cold_plan, &cold, &arrivals, 16)
+            .is_empty());
+        // every derived budget is at least 1 even for a tiny share
+        let skewed = vec![
+            ArrivalState {
+                lane: "latency".into(),
+                gap_s: 100.0,
+                obs: 9,
+            },
+            arrivals[1].clone(),
+        ];
+        let b = LaneBudgets::derive(&plan, &states, &skewed, 16);
+        assert_eq!(b.get(LaneClass::Latency), Some(1));
     }
 
     #[test]

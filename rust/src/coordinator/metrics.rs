@@ -29,6 +29,19 @@ pub struct ServerMetrics {
     /// Batches work-stolen across lanes: dispatched to a foreign-class
     /// worker because every worker of their own lane was saturated.
     pub stolen: AtomicU64,
+    /// Requests discarded before costing any device work because their
+    /// cancellation token had resolved (caller cancelled, or a hedge
+    /// sibling claimed the reply) — pruned from a batcher queue at
+    /// formation time or filtered by a worker before stacking.  Each
+    /// prune releases the request's admission/lane-budget slot.
+    pub cancelled_pruned: AtomicU64,
+    /// Batch members that executed on a device but lost the claim race
+    /// (a hedge sibling or an explicit cancellation resolved the token
+    /// mid-flight) — the wasted device work hedging is budgeted by.
+    pub duplicate_execs: AtomicU64,
+    /// Successful claims by the *duplicate* leg of a router-level
+    /// hedge: the hedge paid off on this coordinator.
+    pub hedge_wins: AtomicU64,
     shards: Vec<Mutex<MetricsShard>>,
     lanes: Vec<LaneCounters>,
 }
@@ -86,6 +99,9 @@ impl ServerMetrics {
             affinity_routed: AtomicU64::new(0),
             cold_fallbacks: AtomicU64::new(0),
             stolen: AtomicU64::new(0),
+            cancelled_pruned: AtomicU64::new(0),
+            duplicate_execs: AtomicU64::new(0),
+            hedge_wins: AtomicU64::new(0),
             shards: (0..workers)
                 .map(|_| Mutex::new(MetricsShard::default()))
                 .collect(),
@@ -211,5 +227,9 @@ mod tests {
         // plain `new` still carries one slot for the global batcher
         assert_eq!(ServerMetrics::new(1).lanes(), 1);
         assert_eq!(m.stolen.load(Ordering::Relaxed), 0);
+        // cancellation/hedging lifecycle counters start at zero
+        assert_eq!(m.cancelled_pruned.load(Ordering::Relaxed), 0);
+        assert_eq!(m.duplicate_execs.load(Ordering::Relaxed), 0);
+        assert_eq!(m.hedge_wins.load(Ordering::Relaxed), 0);
     }
 }

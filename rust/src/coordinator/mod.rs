@@ -31,7 +31,7 @@ pub use formation::{
 };
 pub use metrics::{LaneCounters, ServerMetrics};
 pub use persist::{ArrivalState, ProfileState, WorkerTable};
-pub use request::{Envelope, Request, Response};
+pub use request::{CancelToken, Envelope, Request, Response};
 pub use router::{
     BackendCounters, RoutePolicy, Router, RouterMetrics,
     DEAD_BACKEND_COOLDOWN,

@@ -3,10 +3,12 @@
 //!
 //! What survives a restart (ROADMAP "profile persistence"):
 //! * each worker's per-artifact EWMA latency table
-//!   ([`WorkerState::export_table`] / `preload_table`), keyed by worker
-//!   index with the device kind as a sanity tag;
+//!   ([`WorkerState::export_table`](super::WorkerState::export_table) /
+//!   `preload_table`), keyed by worker index with the device kind as a
+//!   sanity tag;
 //! * each batcher's arrival-rate estimate
-//!   ([`Batcher::gap_snapshot`] / `preload_gap`), keyed by lane label —
+//!   ([`Batcher::gap_snapshot`](super::Batcher::gap_snapshot) /
+//!   `preload_gap`), keyed by lane label —
 //!   `"global"` for the single global batcher, the lane class name
 //!   (`"latency"` / `"throughput"` / `"unclassified"`) under per-class
 //!   formation.

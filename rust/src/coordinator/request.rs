@@ -1,9 +1,114 @@
-//! Request/response types for the serving coordinator.
+//! Request/response types for the serving coordinator, plus the
+//! cancellation token every in-flight request carries.
 
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
 use std::sync::mpsc::Sender;
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::util::{Tensor, TensorView};
+
+/// Token states: a token is born live, then resolves exactly once —
+/// either claimed by the worker that answers the request or cancelled
+/// (caller abandoned it, or a hedge sibling won the race).
+const LIVE: u8 = 0;
+const CLAIMED: u8 = 1;
+const CANCELLED: u8 = 2;
+
+/// Monotonic token ids — correlate the legs of a hedged request across
+/// coordinators in traces (request ids are per-coordinator and differ
+/// between the legs).
+static NEXT_TOKEN_ID: AtomicU64 = AtomicU64::new(0);
+
+/// Shared, winner-takes-all cancellation state for one logical request.
+///
+/// Every [`Envelope`] carries a token; hedged duplicates share the
+/// *same* token, so whichever worker completes first claims the right
+/// to reply and every other copy of the request becomes dead weight
+/// that the batcher
+/// ([`Batcher::prune_cancelled`](super::Batcher::prune_cancelled)) or
+/// the worker's pre-stacking filter discards without device work.
+///
+/// The state machine is a single atomic: `live -> claimed` (exactly one
+/// [`CancelToken::try_claim`] wins) or `live -> cancelled` (exactly one
+/// [`CancelToken::cancel`] wins); resolved tokens never change again.
+#[derive(Clone, Debug)]
+pub struct CancelToken {
+    inner: Arc<TokenInner>,
+}
+
+#[derive(Debug)]
+struct TokenInner {
+    state: AtomicU8,
+    id: u64,
+}
+
+impl CancelToken {
+    pub fn new() -> CancelToken {
+        CancelToken {
+            inner: Arc::new(TokenInner {
+                state: AtomicU8::new(LIVE),
+                id: NEXT_TOKEN_ID.fetch_add(1, Ordering::Relaxed),
+            }),
+        }
+    }
+
+    /// Stable id shared by every clone (and thus by every leg of a
+    /// hedged request) — the correlation key lifecycle traces use.
+    pub fn id(&self) -> u64 {
+        self.inner.id
+    }
+
+    /// Claim the exclusive right to answer this request.  Exactly one
+    /// claim ever succeeds; a `false` means a sibling already replied
+    /// or the caller cancelled, and the caller of `try_claim` must not
+    /// send a response.
+    pub fn try_claim(&self) -> bool {
+        self.inner
+            .state
+            .compare_exchange(
+                LIVE,
+                CLAIMED,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            )
+            .is_ok()
+    }
+
+    /// Abandon the request.  Returns `true` when the cancellation won
+    /// (no reply will ever be delivered) and `false` when it lost the
+    /// race (a worker already claimed the request; its reply was or
+    /// will be delivered as usual).
+    pub fn cancel(&self) -> bool {
+        self.inner
+            .state
+            .compare_exchange(
+                LIVE,
+                CANCELLED,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            )
+            .is_ok()
+    }
+
+    /// Still worth executing?  `false` once claimed or cancelled —
+    /// what formation-time and pre-stacking pruning check.
+    pub fn is_live(&self) -> bool {
+        self.inner.state.load(Ordering::Acquire) == LIVE
+    }
+
+    /// The caller explicitly cancelled (distinct from a hedge sibling
+    /// having claimed the reply).
+    pub fn is_cancelled(&self) -> bool {
+        self.inner.state.load(Ordering::Acquire) == CANCELLED
+    }
+}
+
+impl Default for CancelToken {
+    fn default() -> CancelToken {
+        CancelToken::new()
+    }
+}
 
 /// A single inference request (one image).
 #[derive(Debug)]
@@ -24,18 +129,36 @@ pub struct Envelope {
     pub reply: Sender<anyhow::Result<Response>>,
     /// Metrics-lane slot this request's admission was accounted to
     /// (its predicted device class under per-lane budgets; 0 under the
-    /// single global lane).  The worker that answers the request
-    /// releases the same slot, so per-lane outstanding counts stay
-    /// balanced even when steering lands the request elsewhere.
+    /// single global lane).  The worker that answers the request — or
+    /// whichever pruning pass discards it — releases the same slot, so
+    /// per-lane outstanding counts stay balanced even when steering
+    /// lands the request elsewhere.
     pub lane: usize,
+    /// Winner-takes-all lifecycle state.  Hedged duplicates share one
+    /// token; a worker must [`CancelToken::try_claim`] before replying.
+    pub token: CancelToken,
+    /// True on the duplicate leg of a router-level hedge: a successful
+    /// claim of a hedged envelope counts as a hedge win.
+    pub hedged: bool,
 }
 
 impl Envelope {
+    /// Build an envelope accounted to `lane` with a fresh (un-hedged)
+    /// cancellation token.  The lane is explicit — callers state which
+    /// admission slot the request occupies instead of silently landing
+    /// on lane 0 and unbalancing per-lane outstanding counts.
     pub fn new(
         req: Request,
         reply: Sender<anyhow::Result<Response>>,
+        lane: usize,
     ) -> Envelope {
-        Envelope { req, reply, lane: 0 }
+        Envelope {
+            req,
+            reply,
+            lane,
+            token: CancelToken::new(),
+            hedged: false,
+        }
     }
 }
 
@@ -85,7 +208,10 @@ mod tests {
                 arrived: Instant::now(),
             },
             tx,
+            0,
         );
+        assert_eq!(env.lane, 0);
+        assert!(!env.hedged);
         let batch =
             Arc::new(Tensor::from_vec(&[1, 2], vec![0.5, 0.5]).unwrap());
         let resp = Response {
@@ -100,5 +226,52 @@ mod tests {
         let got = rx.recv().unwrap().unwrap();
         assert_eq!(got.id, 1);
         assert_eq!(got.probs.data(), &[0.5, 0.5]);
+    }
+
+    #[test]
+    fn token_claim_is_winner_takes_all() {
+        let t = CancelToken::new();
+        assert!(t.is_live());
+        let sibling = t.clone();
+        assert!(t.try_claim(), "first claim wins");
+        assert!(!sibling.try_claim(), "second claim must lose");
+        assert!(!t.is_live());
+        assert!(!t.is_cancelled(), "claimed is not cancelled");
+        assert!(!t.cancel(), "cancel after claim is too late");
+    }
+
+    #[test]
+    fn token_cancel_beats_later_claims() {
+        let t = CancelToken::new();
+        assert!(t.cancel(), "cancel of a live token wins");
+        assert!(t.is_cancelled());
+        assert!(!t.is_live());
+        assert!(!t.try_claim(), "no claim after cancellation");
+        assert!(!t.cancel(), "double cancel reports the lost race");
+    }
+
+    #[test]
+    fn token_ids_are_unique_and_shared_by_clones() {
+        let a = CancelToken::new();
+        let b = CancelToken::new();
+        assert_ne!(a.id(), b.id());
+        assert_eq!(a.id(), a.clone().id());
+    }
+
+    #[test]
+    fn concurrent_claims_admit_exactly_one_winner() {
+        let token = CancelToken::new();
+        let wins: usize = std::thread::scope(|s| {
+            (0..8)
+                .map(|_| {
+                    let t = token.clone();
+                    s.spawn(move || t.try_claim() as usize)
+                })
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .sum()
+        });
+        assert_eq!(wins, 1, "exactly one concurrent claim may win");
     }
 }

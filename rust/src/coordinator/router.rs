@@ -15,14 +15,26 @@
 //! in [`RouterMetrics::failovers`]) from *dead* ones (coordinator
 //! gone), which are cooled down for [`DEAD_BACKEND_COOLDOWN`] so the
 //! hot path stops probing them on every request.
+//!
+//! **Hedged dispatch** ([`Router::with_hedge_slo`], orthogonal to the
+//! route policy): when even the chosen backend predicts an
+//! admission-to-completion time beyond the SLO, a duplicate of the
+//! request goes to the second-cheapest live backend.  Both legs share
+//! one reply channel and one [`CancelToken`], so the first completion
+//! claims the reply and the loser is pruned at its own coordinator —
+//! from the batcher queue or the worker's pre-stacking filter —
+//! usually before it costs any device work.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::trace::{EventLog, Lifecycle};
 use crate::util::Tensor;
 
 use super::dispatch::rotating_argmin;
-use super::request::Response;
+use super::request::{CancelToken, Response};
 use super::server::{Client, ReplyReceiver, BUSY_PREFIX};
 
 /// How long a backend whose coordinator looks dead (submit channel
@@ -94,6 +106,11 @@ pub struct RouterMetrics {
     /// Requests rejected by every live backend and returned to the
     /// caller as `ServerBusy`.
     pub shed: AtomicU64,
+    /// Duplicates launched by hedged dispatch (the chosen backend's
+    /// prediction exceeded the hedge SLO and a second backend accepted
+    /// the copy).  Wins are counted where they are observed: the
+    /// winning coordinator's `ServerMetrics::hedge_wins`.
+    pub hedges: AtomicU64,
     backends: Vec<BackendCounters>,
 }
 
@@ -102,6 +119,7 @@ impl RouterMetrics {
         RouterMetrics {
             failovers: AtomicU64::new(0),
             shed: AtomicU64::new(0),
+            hedges: AtomicU64::new(0),
             backends: (0..backends)
                 .map(|_| BackendCounters::default())
                 .collect(),
@@ -128,6 +146,12 @@ pub struct Router {
     /// (0 = never marked).
     dead_until_us: Vec<AtomicU64>,
     dead_cooldown: Duration,
+    /// Hedge when the chosen backend's predicted
+    /// admission-to-completion exceeds this (None = hedging off).
+    hedge_slo: Option<Duration>,
+    /// Lifecycle recorder for hedge launches (share the same log with
+    /// the coordinators to see the full duplicate-vs-winner timeline).
+    events: Option<Arc<EventLog>>,
 }
 
 impl Router {
@@ -142,12 +166,32 @@ impl Router {
             epoch: Instant::now(),
             dead_until_us: (0..n).map(|_| AtomicU64::new(0)).collect(),
             dead_cooldown: DEAD_BACKEND_COOLDOWN,
+            hedge_slo: None,
+            events: None,
         }
     }
 
     /// Override the dead-backend cooldown (tests).
     pub fn with_dead_cooldown(mut self, cooldown: Duration) -> Router {
         self.dead_cooldown = cooldown;
+        self
+    }
+
+    /// Enable hedged dispatch: when the chosen backend's
+    /// [`Client::predicted_admission_us`] exceeds `slo`, submit a
+    /// duplicate to the second-cheapest live backend.  First
+    /// completion wins ([`CancelToken::try_claim`]); the loser is
+    /// cancelled and pruned at its coordinator.  Orthogonal to the
+    /// route policy.
+    pub fn with_hedge_slo(mut self, slo: Duration) -> Router {
+        self.hedge_slo = Some(slo);
+        self
+    }
+
+    /// Record hedge launches into `log` (pair it with the same log in
+    /// each backend's `ServerConfig::event_log` for full timelines).
+    pub fn with_event_log(mut self, log: Arc<EventLog>) -> Router {
+        self.events = Some(log);
         self
     }
 
@@ -268,16 +312,64 @@ impl Router {
     /// live backends cheapest-predicted-first; a backend whose
     /// coordinator is gone is cooled down instead of being retried on
     /// every subsequent request.  The image is *moved* from backend to
-    /// backend (rejected submissions hand it back), never cloned.
+    /// backend (rejected submissions hand it back), never cloned —
+    /// except to feed a hedge duplicate, which is the one deliberate
+    /// copy hedged dispatch pays for.
     pub fn submit(&self, image: Tensor) -> anyhow::Result<ReplyReceiver> {
+        self.submit_cancellable(image).map(|(rx, _)| rx)
+    }
+
+    /// Like [`Router::submit`], plus the request's [`CancelToken`]:
+    /// cancelling it abandons *every* leg of the request (hedged or
+    /// not) wherever it is queued.
+    pub fn submit_cancellable(
+        &self,
+        image: Tensor,
+    ) -> anyhow::Result<(ReplyReceiver, CancelToken)> {
         let first = self.pick();
+        let order = self.failover_order(first);
+        // hedging duplicates the image, and the tensor is moved away
+        // by the submission below — so clone optimistically off the
+        // picked backend's estimate, but only when a second live
+        // backend exists to receive a duplicate at all.  (A failover
+        // can land the request on a backend the clone decision did
+        // not see; `hedge` re-checks the SLO against the *accepted*
+        // backend before spending the duplicate, so a cheap-after-all
+        // primary drops the clone instead of hedging spuriously.
+        // The inverse miss — picked cheap, accepted expensive — goes
+        // un-hedged: the image is gone, and failovers are rare.)
+        let dup_image = match self.hedge_slo {
+            Some(slo) if !order.is_empty() => (self.clients[first]
+                .predicted_admission_us()
+                .is_some_and(|est| est > slo.as_micros() as u64))
+            .then(|| image.clone()),
+            _ => None,
+        };
+        let token = CancelToken::new();
+        let (reply, rx) = channel();
         let mut candidates = vec![first];
-        candidates.extend(self.failover_order(first));
+        candidates.extend(order);
         let mut image = image;
         let mut busy_err = None;
+        let mut accepted = None;
         for idx in candidates {
-            match self.clients[idx].submit_or_return(image) {
-                Ok(rx) => return Ok(rx),
+            // snapshot the estimate before admitting: once admitted,
+            // the request charges its own weight to the estimate, so
+            // a post-hoc SLO check would read the candidate as more
+            // loaded than the decision it is guarding
+            let pre_est = dup_image
+                .as_ref()
+                .and_then(|_| self.clients[idx].predicted_admission_us());
+            match self.clients[idx].submit_routed(
+                image,
+                reply.clone(),
+                token.clone(),
+                false,
+            ) {
+                Ok(()) => {
+                    accepted = Some((idx, pre_est));
+                    break;
+                }
                 Err((img, e)) => {
                     image = img;
                     if e.to_string().starts_with(BUSY_PREFIX) {
@@ -292,12 +384,69 @@ impl Router {
                 }
             }
         }
-        match busy_err {
-            Some(e) => {
-                self.metrics.shed.fetch_add(1, Ordering::Relaxed);
-                Err(e)
+        let Some((primary, primary_est)) = accepted else {
+            return match busy_err {
+                Some(e) => {
+                    self.metrics.shed.fetch_add(1, Ordering::Relaxed);
+                    Err(e)
+                }
+                None => Err(anyhow::anyhow!("no live backends")),
+            };
+        };
+        if let Some(img) = dup_image {
+            self.hedge(primary, primary_est, img, &reply, &token);
+        }
+        Ok((rx, token))
+    }
+
+    /// Submit the duplicate leg of a hedged request to the cheapest
+    /// live backend other than `primary`.  Both legs share the reply
+    /// channel and the token, so exactly one response reaches the
+    /// caller whichever coordinator finishes first.  A duplicate the
+    /// second backend rejects is silently dropped (the primary is
+    /// already in flight); only accepted duplicates count as hedges.
+    fn hedge(
+        &self,
+        primary: usize,
+        primary_est: Option<u64>,
+        image: Tensor,
+        reply: &Sender<anyhow::Result<Response>>,
+        token: &CancelToken,
+    ) {
+        // re-check against the backend that actually accepted the
+        // request (its estimate snapshotted *before* admission): when
+        // a failover moved the request off the picked backend, the
+        // clone decision is stale and a primary under the SLO must
+        // not spend a duplicate
+        let Some(slo) = self.hedge_slo else { return };
+        if !primary_est.is_some_and(|est| est > slo.as_micros() as u64)
+        {
+            return;
+        }
+        let Some(&duplicate) = self.failover_order(primary).first()
+        else {
+            return;
+        };
+        match self.clients[duplicate].submit_routed(
+            image,
+            reply.clone(),
+            token.clone(),
+            true,
+        ) {
+            Ok(()) => {
+                self.metrics.hedges.fetch_add(1, Ordering::Relaxed);
+                if let Some(log) = &self.events {
+                    log.record(
+                        token.id(),
+                        Lifecycle::HedgeLaunched { primary, duplicate },
+                    );
+                }
             }
-            None => Err(anyhow::anyhow!("no live backends")),
+            Err((_, e)) => {
+                if !e.to_string().starts_with(BUSY_PREFIX) {
+                    self.mark_dead(duplicate);
+                }
+            }
         }
     }
 
@@ -533,6 +682,139 @@ mod tests {
         assert!(err.to_string().contains("ServerBusy"), "{err}");
         assert_eq!(r.metrics().shed.load(Ordering::Relaxed), 1);
         assert_eq!(r.metrics().failovers.load(Ordering::Relaxed), 1);
+    }
+
+    /// Hedged dispatch: with an aggressive SLO every routed request
+    /// launches a duplicate on the second backend; both legs share one
+    /// reply channel and one token, so every request is answered
+    /// exactly once and every duplicate resolves as either a prune
+    /// (no device work) or a duplicate execution.
+    #[test]
+    fn hedged_submit_answers_exactly_once_and_conserves_losers() {
+        let fast =
+            spawn_curve(CurveEngine::latency_shaped(1_000), DeviceKind::Gpu);
+        let slow = spawn_curve(
+            CurveEngine::throughput_shaped(16_000),
+            DeviceKind::Fpga,
+        );
+        let r = Router::new(
+            vec![fast.client(), slow.client()],
+            RoutePolicy::Predictive,
+        )
+        .with_hedge_slo(Duration::ZERO);
+        let n = 8;
+        let mut pending = Vec::new();
+        for _ in 0..n {
+            pending.push(r.submit(tiny_image()).unwrap());
+        }
+        let mut answered = 0;
+        let rxs: Vec<_> = pending
+            .into_iter()
+            .map(|rx| {
+                rx.recv().unwrap().unwrap();
+                answered += 1;
+                rx
+            })
+            .collect();
+        assert_eq!(answered, n);
+        assert_eq!(
+            r.metrics().hedges.load(Ordering::Relaxed),
+            n as u64,
+            "a zero SLO must hedge every request"
+        );
+        // drain both coordinators so every leg has resolved
+        drop(r);
+        let (ma, mb) = (fast.metrics(), slow.metrics());
+        drop(fast);
+        drop(slow);
+        for rx in rxs {
+            assert!(
+                rx.try_recv().is_err(),
+                "a second reply reached a hedged request"
+            );
+        }
+        let completed = ma.completed.load(Ordering::Relaxed)
+            + mb.completed.load(Ordering::Relaxed);
+        assert_eq!(completed, n as u64, "exactly one reply per request");
+        // the losing leg of every hedged pair is accounted for: pruned
+        // before device work or executed-and-discarded
+        let losers = ma.cancelled_pruned.load(Ordering::Relaxed)
+            + mb.cancelled_pruned.load(Ordering::Relaxed)
+            + ma.duplicate_execs.load(Ordering::Relaxed)
+            + mb.duplicate_execs.load(Ordering::Relaxed);
+        assert_eq!(losers, n as u64, "every duplicate must resolve");
+    }
+
+    /// A generous SLO never hedges: behaviour and metrics match the
+    /// un-hedged router.
+    #[test]
+    fn hedging_is_idle_below_the_slo() {
+        let fast =
+            spawn_curve(CurveEngine::latency_shaped(1_000), DeviceKind::Gpu);
+        let slow = spawn_curve(
+            CurveEngine::throughput_shaped(16_000),
+            DeviceKind::Fpga,
+        );
+        let r = Router::new(
+            vec![fast.client(), slow.client()],
+            RoutePolicy::Predictive,
+        )
+        .with_hedge_slo(Duration::from_secs(3600));
+        for _ in 0..4 {
+            r.infer(tiny_image()).unwrap();
+        }
+        assert_eq!(r.metrics().hedges.load(Ordering::Relaxed), 0);
+        assert_eq!(
+            fast.metrics().duplicate_execs.load(Ordering::Relaxed)
+                + slow.metrics().duplicate_execs.load(Ordering::Relaxed),
+            0
+        );
+    }
+
+    /// Cancellation through the router: a cancel that wins guarantees
+    /// no reply, the queued envelope is pruned before reaching any
+    /// worker, and its admission slot is released.
+    #[test]
+    fn router_cancel_prunes_before_device_work() {
+        let mk = || {
+            Server::spawn(
+                MockEngine::new(vec![1, 4, 8]),
+                ServerConfig {
+                    // nothing closes before the cancel: only pruning
+                    // (or shutdown) can resolve the request
+                    policy: BatchPolicy::new(8, Duration::from_secs(60)),
+                    queue_capacity: 64,
+                    ..Default::default()
+                },
+            )
+        };
+        let (a, b) = (mk(), mk());
+        let r = Router::new(
+            vec![a.client(), b.client()],
+            RoutePolicy::RoundRobin,
+        );
+        let (rx, token) = r.submit_cancellable(tiny_image()).unwrap();
+        assert!(token.cancel(), "cancel of a queued request must win");
+        // the leader prunes within its poll interval
+        std::thread::sleep(Duration::from_millis(120));
+        let pruned = a.metrics().cancelled_pruned.load(Ordering::Relaxed)
+            + b.metrics().cancelled_pruned.load(Ordering::Relaxed);
+        assert_eq!(pruned, 1, "cancelled request must be pruned");
+        assert_eq!(
+            a.client().outstanding() + b.client().outstanding(),
+            0,
+            "the admission slot must be released by the prune"
+        );
+        let (ma, mb) = (a.metrics(), b.metrics());
+        drop(a);
+        drop(b);
+        assert!(rx.try_recv().is_err(), "no reply may ever arrive");
+        assert_eq!(
+            ma.completed.load(Ordering::Relaxed)
+                + mb.completed.load(Ordering::Relaxed),
+            0,
+            "a cancelled-before-formation request reached a worker"
+        );
     }
 
     /// THE DEAD-BACKEND REGRESSION (satellite): a backend whose

@@ -26,6 +26,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::device::DeviceKind;
+use crate::trace::{EventLog, Lifecycle};
 use crate::util::{Tensor, TensorView};
 
 use super::batcher::{BatchPolicy, Batcher};
@@ -39,7 +40,7 @@ use super::formation::{
 };
 use super::metrics::ServerMetrics;
 use super::persist::{ArrivalState, ProfileState, WorkerTable};
-use super::request::{Envelope, Request, Response};
+use super::request::{CancelToken, Envelope, Request, Response};
 
 /// How often the idle leader wakes to poll the shutdown flag; also the
 /// bound on shutdown latency.
@@ -311,6 +312,42 @@ impl Client {
         &self,
         image: Tensor,
     ) -> Result<ReplyReceiver, (Tensor, anyhow::Error)> {
+        let (reply, rx) = channel();
+        self.submit_routed(image, reply, CancelToken::new(), false)
+            .map(|()| rx)
+    }
+
+    /// Submit with a cancellation handle: the returned
+    /// [`CancelToken`]'s [`CancelToken::cancel`] abandons the request.
+    /// A cancel that returns `true` guarantees no reply will ever
+    /// arrive (the request is pruned before device work if it is still
+    /// queued); `false` means a worker already claimed it and the
+    /// reply was or will be delivered as usual.
+    pub fn submit_cancellable(
+        &self,
+        image: Tensor,
+    ) -> anyhow::Result<(ReplyReceiver, CancelToken)> {
+        let (reply, rx) = channel();
+        let token = CancelToken::new();
+        self.submit_routed(image, reply, token.clone(), false)
+            .map(|()| (rx, token))
+            .map_err(|(_, e)| e)
+    }
+
+    /// The full-control submit every public variant builds on: the
+    /// caller supplies the reply `Sender` and the cancellation token,
+    /// so a router can fan one logical request out to several
+    /// coordinators (hedged dispatch) that share one reply channel and
+    /// one winner-takes-all token.  `hedged` marks the duplicate leg
+    /// (its claim counts as a hedge win).  Admission, lane accounting,
+    /// and backpressure behave exactly like [`Client::submit`].
+    pub(crate) fn submit_routed(
+        &self,
+        image: Tensor,
+        reply: Sender<anyhow::Result<Response>>,
+        token: CancelToken,
+        hedged: bool,
+    ) -> Result<(), (Tensor, anyhow::Error)> {
         let now = Instant::now();
         let gap = self.view.gap(now);
         let lane = self.admission_lane(gap);
@@ -318,7 +355,8 @@ impl Client {
         // a worker may complete (and release) it before this thread
         // resumes, so reserving after the send could underflow the
         // counters.  Every reservation is released either here
-        // (rejection) or by the worker that answers the request.
+        // (rejection), by the worker that answers the request, or by
+        // the pruning pass that discards a cancelled envelope.
         if !self.admission.try_admit(lane) {
             self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
             self.metrics
@@ -330,7 +368,6 @@ impl Client {
                 anyhow::anyhow!("{BUSY_PREFIX}: request queue full"),
             ));
         }
-        let (reply, rx) = channel();
         let env = Envelope {
             req: Request {
                 id: self.next_id.fetch_add(1, Ordering::Relaxed),
@@ -339,6 +376,8 @@ impl Client {
             },
             reply,
             lane,
+            token,
+            hedged,
         };
         match self.tx.try_send(env) {
             Ok(()) => {
@@ -346,7 +385,7 @@ impl Client {
                 // advances the gap clock — a channel-full rollback
                 // must not make the next single look like a burst mate
                 self.view.record_submit(now);
-                Ok(rx)
+                Ok(())
             }
             Err(std::sync::mpsc::TrySendError::Full(env)) => {
                 self.admission.cancel(lane);
@@ -440,8 +479,15 @@ pub struct ServerConfig {
     /// Per-lane admission budgets (weighted shedding) under
     /// [`FormationPolicy::PerClass`]; classes without an entry — and
     /// everything under [`FormationPolicy::Global`], which has a
-    /// single lane — stay on the `queue_capacity` bound.
+    /// single lane — stay on the `queue_capacity` bound.  When empty
+    /// and a persisted [`ProfileState`] is supplied, defaults are
+    /// derived from the persisted per-lane arrival estimates and
+    /// worker tables ([`LaneBudgets::derive`]).
     pub lane_budgets: LaneBudgets,
+    /// Optional request-lifecycle recorder: the leader's formation
+    /// prunes and the workers' claim outcomes (hedge wins, duplicate
+    /// executions, pre-stacking prunes) are appended here.
+    pub event_log: Option<Arc<EventLog>>,
 }
 
 impl Default for ServerConfig {
@@ -452,6 +498,7 @@ impl Default for ServerConfig {
             dispatch: DispatchPolicy::JoinIdle,
             formation: FormationPolicy::Global,
             lane_budgets: LaneBudgets::none(),
+            event_log: None,
         }
     }
 }
@@ -533,6 +580,10 @@ pub struct Server {
     /// Formation lane classes in lane order (empty under the global
     /// batcher) — persistence labels and report headings.
     lane_classes: Vec<LaneClass>,
+    /// The per-lane admission budgets actually in force: the
+    /// configured ones, or — when none were configured and a profile
+    /// state was loaded — the auto-derived defaults.
+    lane_budgets: LaneBudgets,
 }
 
 impl Server {
@@ -630,13 +681,31 @@ impl Server {
         }
 
         // per-lane admission budgets only exist under per-class
-        // formation, keyed by each lane's device class; the bounded
-        // submit channel must hold whatever the budgets can admit
+        // formation, keyed by each lane's device class; when none are
+        // configured but a profile state is present, derive defaults
+        // from the persisted load/capacity signal (budget autotuning
+        // seed — re-derived on every profile load, so budgets track
+        // drift across redeploys)
+        let lane_budgets = if config.lane_budgets.is_empty() {
+            match (&plan, state) {
+                (Some(p), Some(ps)) => LaneBudgets::derive(
+                    p,
+                    &states,
+                    &ps.arrivals,
+                    config.queue_capacity,
+                ),
+                _ => LaneBudgets::none(),
+            }
+        } else {
+            config.lane_budgets.clone()
+        };
+        // the bounded submit channel must hold whatever the budgets
+        // can admit
         let budgets: Vec<Option<usize>> = match &plan {
             Some(p) => p
                 .lanes
                 .iter()
-                .map(|l| config.lane_budgets.get(l.class))
+                .map(|l| lane_budgets.get(l.class))
                 .collect(),
             None => vec![None],
         };
@@ -754,6 +823,7 @@ impl Server {
             }
         };
 
+        let events = config.event_log.clone();
         let workers = engines
             .into_iter()
             .zip(sources)
@@ -762,6 +832,7 @@ impl Server {
                 let state = Arc::clone(&states[i]);
                 let metrics = Arc::clone(&metrics);
                 let admission = Arc::clone(&admission);
+                let events = events.clone();
                 std::thread::Builder::new()
                     .name(format!("cnnlab-engine-{i}"))
                     .spawn(move || {
@@ -772,6 +843,7 @@ impl Server {
                             state,
                             metrics,
                             admission,
+                            events,
                         )
                     })
                     .expect("spawn engine worker")
@@ -783,7 +855,14 @@ impl Server {
         let leader = std::thread::Builder::new()
             .name("cnnlab-leader".into())
             .spawn(move || {
-                leader_loop(driver, rx, sd, leader_metrics, admission)
+                leader_loop(
+                    driver,
+                    rx,
+                    sd,
+                    leader_metrics,
+                    admission,
+                    events,
+                )
             })
             .expect("spawn leader");
         Server {
@@ -793,6 +872,7 @@ impl Server {
             workers,
             states,
             lane_classes,
+            lane_budgets,
         }
     }
 
@@ -827,6 +907,14 @@ impl Server {
     /// batcher.
     pub fn lane_classes(&self) -> &[LaneClass] {
         &self.lane_classes
+    }
+
+    /// The per-lane admission budgets in force — configured, or
+    /// auto-derived from a loaded profile state when none were
+    /// configured ([`LaneBudgets::derive`]).  Empty means every lane
+    /// is under the global `queue_capacity` bound.
+    pub fn lane_budgets(&self) -> &LaneBudgets {
+        &self.lane_budgets
     }
 
     /// One label per metrics lane slot: the lane class names under
@@ -941,6 +1029,18 @@ impl FormationDriver {
         }
     }
 
+    /// Drop queued envelopes whose token resolved (cancelled, or a
+    /// hedge sibling claimed) before a batch is cut — the caller
+    /// releases their admission slots.
+    fn prune_cancelled(&mut self) -> Vec<Envelope> {
+        match self {
+            FormationDriver::Global { batcher, .. } => {
+                batcher.prune_cancelled()
+            }
+            FormationDriver::PerClass(lanes) => lanes.prune_cancelled(),
+        }
+    }
+
     fn dispatch_ready(&mut self, now: Instant) {
         match self {
             FormationDriver::Global { batcher, router, .. } => {
@@ -992,8 +1092,27 @@ impl FormationDriver {
     }
 }
 
+/// Account one discarded envelope (its cancellation token resolved
+/// before execution): release the admission/lane-budget slot, count
+/// the prune, log the lifecycle event.  Shared by the leader's
+/// formation prune and the workers' pre-stacking filter so the two
+/// checkpoints can never drift apart.
+fn discard_pruned(
+    env: &Envelope,
+    admission: &Admission,
+    metrics: &ServerMetrics,
+    events: Option<&EventLog>,
+) {
+    admission.release(env.lane);
+    metrics.cancelled_pruned.fetch_add(1, Ordering::Relaxed);
+    if let Some(log) = events {
+        log.record(env.token.id(), Lifecycle::CancelPruned);
+    }
+}
+
 /// The leader only forms batches: drain the request channel, steer and
-/// cut per the formation driver, hand closed batches to the workers.
+/// cut per the formation driver, hand closed batches to the workers —
+/// after pruning cancelled envelopes so they never cost device work.
 /// It never touches an engine.
 fn leader_loop(
     mut driver: FormationDriver,
@@ -1001,6 +1120,7 @@ fn leader_loop(
     shutdown: Arc<AtomicBool>,
     metrics: Arc<ServerMetrics>,
     admission: Arc<Admission>,
+    events: Option<Arc<EventLog>>,
 ) {
     let mut open = true;
     // every envelope leaving the submit channel exits the
@@ -1008,6 +1128,15 @@ fn leader_loop(
     let absorb = |driver: &mut FormationDriver, env: Envelope| {
         admission.mark_routed(env.lane);
         driver.push(env);
+    };
+    // formation-time cancellation: requests whose token resolved while
+    // queued are discarded before stacking and release their
+    // admission/lane-budget slots right here (the whole point of cheap
+    // cancellation on the batcher path)
+    let prune = |driver: &mut FormationDriver| {
+        for env in driver.prune_cancelled() {
+            discard_pruned(&env, &admission, &metrics, events.as_deref());
+        }
     };
 
     while open || driver.pending() > 0 {
@@ -1053,10 +1182,13 @@ fn leader_loop(
             }
         }
 
-        // hand every ready batch to the pool; workers run concurrently
-        // while this loop returns to batching
+        // prune resolved tokens, then hand every ready batch to the
+        // pool; workers run concurrently while this loop returns to
+        // batching
+        prune(&mut driver);
         driver.dispatch_ready(Instant::now());
         if !open {
+            prune(&mut driver);
             driver.drain_dispatch();
         }
         driver.publish(&metrics, Instant::now());
@@ -1074,6 +1206,7 @@ fn worker_loop<E: InferenceEngine>(
     state: Arc<WorkerState>,
     metrics: Arc<ServerMetrics>,
     admission: Arc<Admission>,
+    events: Option<Arc<EventLog>>,
 ) {
     while let Some(DispatchedBatch { envs, cost_us }) = source.next() {
         // under join-idle the leader does no per-worker accounting;
@@ -1082,32 +1215,72 @@ fn worker_loop<E: InferenceEngine>(
         if matches!(source, BatchSource::Shared(_)) {
             state.begin(cost_us);
         }
-        let n = envs.len();
-        let exec = run_batch(&engine, envs, worker, &metrics, &admission);
+        let ran = run_batch(
+            &engine,
+            envs,
+            worker,
+            &metrics,
+            &admission,
+            events.as_deref(),
+        );
         // release the predicted backlog and (on success) refine the
-        // per-artifact EWMA with the measured execution time
+        // per-artifact EWMA with the measured execution time at the
+        // size that actually ran (pruning may have shrunk the batch)
+        let (n, exec) = match ran {
+            Some((n, exec)) => (n, Some(exec)),
+            None => (1, None),
+        };
         state.finish(cost_us, n, exec);
     }
 }
 
 /// Execute one batch and answer every request in it; returns the
-/// engine-reported execution time (None when the batch failed).
+/// executed size and engine-reported execution time (None when the
+/// batch failed or was pruned away entirely).
+///
+/// Two cancellation checkpoints guard the device:
+/// * **pre-stacking prune** — envelopes whose token already resolved
+///   are dropped before any image is stacked, so they cost no device
+///   work (an all-pruned batch skips the engine call outright);
+/// * **claim before reply** — [`CancelToken::try_claim`] decides, once
+///   and winner-takes-all, which copy of a request answers; losers
+///   count as `duplicate_execs` (their device work was wasted) and
+///   release their admission slot without replying.
 fn run_batch<E: InferenceEngine>(
     engine: &E,
     batch: Vec<Envelope>,
     worker: usize,
     metrics: &ServerMetrics,
     admission: &Admission,
-) -> Option<Duration> {
+    events: Option<&EventLog>,
+) -> Option<(usize, Duration)> {
     let formed = Instant::now();
-    let n = batch.len();
+    let mut live = Vec::with_capacity(batch.len());
+    for env in batch {
+        if env.token.is_live() {
+            live.push(env);
+        } else {
+            discard_pruned(&env, admission, metrics, events);
+        }
+    }
+    if live.is_empty() {
+        return None;
+    }
+    let n = live.len();
     // move (never clone) each image into the stacked batch; the reply
     // sender rides along so this batch can be answered right here
     let mut images = Vec::with_capacity(n);
     let mut routes = Vec::with_capacity(n);
-    for env in batch {
+    for env in live {
         images.push(env.req.image);
-        routes.push((env.req.id, env.req.arrived, env.reply, env.lane));
+        routes.push((
+            env.req.id,
+            env.req.arrived,
+            env.reply,
+            env.lane,
+            env.token,
+            env.hedged,
+        ));
     }
     // A short or mis-shaped BatchOutput must become an error reply, not
     // a slice_of panic that would kill this worker and leak the batch's
@@ -1125,9 +1298,28 @@ fn run_batch<E: InferenceEngine>(
     match result {
         Ok(out) => {
             let done = Instant::now();
-            for (i, (id, arrived, reply, lane)) in
+            for (i, (id, arrived, reply, lane, token, hedged)) in
                 routes.into_iter().enumerate()
             {
+                admission.release(lane);
+                if !token.try_claim() {
+                    metrics
+                        .duplicate_execs
+                        .fetch_add(1, Ordering::Relaxed);
+                    if let Some(log) = events {
+                        log.record(
+                            token.id(),
+                            Lifecycle::DuplicateExec,
+                        );
+                    }
+                    continue;
+                }
+                if hedged {
+                    metrics.hedge_wins.fetch_add(1, Ordering::Relaxed);
+                    if let Some(log) = events {
+                        log.record(token.id(), Lifecycle::HedgeWin);
+                    }
+                }
                 let resp = Response {
                     id,
                     probs: TensorView::slice_of(
@@ -1141,15 +1333,26 @@ fn run_batch<E: InferenceEngine>(
                     batch_size: n,
                 };
                 metrics.record(worker, &resp);
-                admission.release(lane);
                 let _ = reply.send(Ok(resp));
             }
-            Some(out.exec)
+            Some((n, out.exec))
         }
         Err(e) => {
-            for (_, _, reply, lane) in routes {
-                metrics.errors.fetch_add(1, Ordering::Relaxed);
+            for (_, _, reply, lane, token, _) in routes {
                 admission.release(lane);
+                if !token.try_claim() {
+                    metrics
+                        .duplicate_execs
+                        .fetch_add(1, Ordering::Relaxed);
+                    if let Some(log) = events {
+                        log.record(
+                            token.id(),
+                            Lifecycle::DuplicateExec,
+                        );
+                    }
+                    continue;
+                }
+                metrics.errors.fetch_add(1, Ordering::Relaxed);
                 let _ = reply.send(Err(anyhow::anyhow!(
                     "batch execution failed: {e}"
                 )));

@@ -7,6 +7,7 @@
 //! * `report`  — regenerate the paper's tables from the device models
 //! * `devices` — list modeled devices and their calibrated operating points
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use cnnlab::cli::Args;
@@ -24,6 +25,7 @@ use cnnlab::sched::{
     exhaustive_by_kind, simulate, Choice, Constraints, EstimateSource,
     Mapping, Objective,
 };
+use cnnlab::trace::{EventLog, Lifecycle};
 use cnnlab::util::{Rng, Tensor};
 
 fn network_by_name(name: &str) -> anyhow::Result<Network> {
@@ -93,7 +95,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
 /// `cnnlab serve --network tinynet --requests 64 --rate 200 --max-batch 8
 ///  --coordinators 2 --route predictive --workers 2 --dispatch affinity
 ///  --profiles gpu,fpga --predictive --formation per_class
-///  --lane-budget latency=8,throughput=10
+///  --lane-budget latency=8,throughput=10 --hedge-slo 20000
 ///  --profile-state state.json --report-every 32`
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let net = network_by_name(args.get_or("network", "tinynet"))?;
@@ -118,6 +120,23 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         lane_budgets.is_empty() || formation == FormationPolicy::PerClass,
         "--lane-budget requires --formation per_class"
     );
+    // hedged dispatch: duplicate to the second-cheapest backend when
+    // the chosen one predicts beyond this SLO (µs); needs a second
+    // coordinator to duplicate to
+    let hedge_slo_us = match args.get("hedge-slo") {
+        Some(v) => {
+            let us: u64 = v.parse().map_err(|_| {
+                anyhow::anyhow!("--hedge-slo needs microseconds")
+            })?;
+            anyhow::ensure!(us > 0, "--hedge-slo must be positive");
+            anyhow::ensure!(
+                coordinators > 1,
+                "--hedge-slo needs --coordinators > 1"
+            );
+            Some(us)
+        }
+        None => None,
+    };
     // learned-state persistence: load if the file exists, save on exit
     let profile_state_path = args.get("profile-state");
     // print worker/lane snapshots every N submissions (0 = only at end)
@@ -156,12 +175,16 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     if predictive {
         policy = policy.with_predictive_close();
     }
+    // one shared lifecycle log: the router's hedge launches and every
+    // coordinator's prune/claim outcomes land in the same timeline
+    let events = Arc::new(EventLog::new(1024));
     let config = ServerConfig {
         policy,
         queue_capacity: 256,
         dispatch,
         formation,
         lane_budgets,
+        event_log: Some(Arc::clone(&events)),
     };
     let loaded_state = match profile_state_path {
         Some(path) if std::path::Path::new(path).exists() => {
@@ -256,12 +279,27 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                 "coordinator {c} formation lanes: {}",
                 classes.join(", ")
             );
+            // budgets may have been auto-derived from the loaded
+            // profile state (none were configured): say so
+            let effective = server.lane_budgets();
+            if !effective.is_empty()
+                && args.get("lane-budget").is_none()
+            {
+                println!(
+                    "coordinator {c} lane budgets (derived from \
+                     profile state): {effective}"
+                );
+            }
         }
     }
-    let router = Router::new(
+    let mut router = Router::new(
         servers.iter().map(Server::client).collect(),
         route,
-    );
+    )
+    .with_event_log(Arc::clone(&events));
+    if let Some(us) = hedge_slo_us {
+        router = router.with_hedge_slo(Duration::from_micros(us));
+    }
     let mut rng = Rng::new(9);
     let t0 = Instant::now();
     let mut pending = Vec::new();
@@ -281,7 +319,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             Err(e) => return Err(e),
         }
         if report_every > 0 && (i + 1) % report_every == 0 {
-            print_snapshot_report(&servers, &router, i + 1);
+            print_snapshot_report(&servers, &router, &events, i + 1);
         }
     }
     for rx in pending {
@@ -329,7 +367,10 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             );
         }
     }
-    print_snapshot_report(&servers, &router, requests);
+    print_snapshot_report(&servers, &router, &events, requests);
+    if hedge_slo_us.is_some() {
+        print_event_timeline(&events, 32);
+    }
     if let Some(path) = profile_state_path {
         let state = if servers.len() == 1 {
             servers[0].profile_state()
@@ -360,15 +401,17 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 fn print_snapshot_report(
     servers: &[Server],
     router: &Router,
+    events: &EventLog,
     submitted: usize,
 ) {
     use std::sync::atomic::Ordering;
     println!("-- snapshot after {submitted} submissions --");
     let rm = router.metrics();
     println!(
-        "  router: failovers={} shed={}",
+        "  router: failovers={} shed={} hedges={}",
         rm.failovers.load(Ordering::Relaxed),
         rm.shed.load(Ordering::Relaxed),
+        rm.hedges.load(Ordering::Relaxed),
     );
     for (c, server) in servers.iter().enumerate() {
         let b = rm.backend(c);
@@ -376,14 +419,18 @@ fn print_snapshot_report(
             .predicted_admission_us()
             .map(|us| si_time(us as f64 / 1e6))
             .unwrap_or_else(|| "cold".into());
+        let m = server.metrics();
         println!(
             "  backend {c}: predictive_routed={} cold_routed={} \
-             outstanding={} predicted_admission={est}",
+             outstanding={} predicted_admission={est} hedge_wins={} \
+             cancelled_pruned={} duplicate_execs={}",
             b.predictive_routed.load(Ordering::Relaxed),
             b.cold_routed.load(Ordering::Relaxed),
             server.client().outstanding(),
+            m.hedge_wins.load(Ordering::Relaxed),
+            m.cancelled_pruned.load(Ordering::Relaxed),
+            m.duplicate_execs.load(Ordering::Relaxed),
         );
-        let m = server.metrics();
         for (i, label) in server.lane_labels().iter().enumerate() {
             let lane = m.lane(i);
             let gap_ns = lane.arrival_gap_ns.load(Ordering::Relaxed);
@@ -419,6 +466,48 @@ fn print_snapshot_report(
                 table.join(", "),
             );
         }
+    }
+    let tail = events.tail(8);
+    if !tail.is_empty() {
+        println!("  recent lifecycle events:");
+        for ev in tail {
+            println!("    {}", format_event(&ev));
+        }
+    }
+}
+
+/// One formatted lifecycle event line, keyed by token id so the two
+/// legs of a hedged request line up in the timeline.
+fn format_event(ev: &cnnlab::trace::TraceEvent) -> String {
+    let when = si_time(ev.at.as_secs_f64());
+    match ev.event {
+        Lifecycle::HedgeLaunched { primary, duplicate } => format!(
+            "[{when}] token {}: hedge-launched \
+             (primary backend {primary}, duplicate backend {duplicate})",
+            ev.token
+        ),
+        other => {
+            format!("[{when}] token {}: {}", ev.token, other.name())
+        }
+    }
+}
+
+/// Post-run duplicate-vs-winner timeline: the last `n` lifecycle
+/// events, grouped chronologically (tokens correlate the legs).
+fn print_event_timeline(events: &EventLog, n: usize) {
+    let tail = events.tail(n);
+    if tail.is_empty() {
+        println!("hedge/cancel timeline: no lifecycle events");
+        return;
+    }
+    println!(
+        "hedge/cancel timeline (last {} of {} events, {} dropped):",
+        tail.len(),
+        events.len(),
+        events.dropped()
+    );
+    for ev in tail {
+        println!("  {}", format_event(&ev));
     }
 }
 

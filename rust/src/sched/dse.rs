@@ -56,7 +56,7 @@ impl Objective {
 pub struct Constraints {
     /// Max instantaneous board power of any chosen device, watts
     /// (None = unconstrained).  A TDP-style cap: the paper's motivating
-    /// deployment constraint for FPGAs ("the data centers [are] quite
+    /// deployment constraint for FPGAs ("the data centers \[are\] quite
     /// power consuming").
     pub power_cap_w: Option<f64>,
 }

@@ -1,12 +1,124 @@
 //! Workload-trace substrate: synthetic request arrival processes for the
-//! serving experiments (the paper's "front-end cloud users", Fig 2).
+//! serving experiments (the paper's "front-end cloud users", Fig 2),
+//! plus the request-lifecycle [`EventLog`] hedging and cancellation
+//! report through.
 //!
 //! A [`Trace`] is a deterministic sequence of request arrival offsets that
 //! both the E2E example and the benches can replay; processes: Poisson
 //! (open-loop), uniform, and on/off bursts.  Determinism comes from the
 //! repo PRNG so every run of an experiment sees the same workload.
+//!
+//! An [`EventLog`] is the inverse direction: a bounded, shared recorder
+//! the router and coordinator workers append hedge/cancel lifecycle
+//! events to (`HedgeLaunched` → `HedgeWin`/`CancelPruned`/
+//! `DuplicateExec`), keyed by cancellation-token id so the two legs of
+//! a hedged request correlate across coordinators.  `serve
+//! --report-every` prints the tail of the log; post-run dumps show the
+//! full duplicate-vs-winner timeline.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
 
 use crate::util::Rng;
+
+/// One hedge/cancel lifecycle transition (see [`EventLog`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Lifecycle {
+    /// The router submitted a duplicate: `primary` looked slower than
+    /// the hedge SLO, the duplicate went to backend `duplicate`.
+    HedgeLaunched { primary: usize, duplicate: usize },
+    /// The duplicate leg claimed the reply — the hedge paid off.
+    HedgeWin,
+    /// An envelope was discarded before any device work (formation
+    /// prune or pre-stacking filter) because its token had resolved.
+    CancelPruned,
+    /// A batch member executed on a device but lost the claim race.
+    DuplicateExec,
+}
+
+impl Lifecycle {
+    pub fn name(self) -> &'static str {
+        match self {
+            Lifecycle::HedgeLaunched { .. } => "hedge-launched",
+            Lifecycle::HedgeWin => "hedge-win",
+            Lifecycle::CancelPruned => "cancel-pruned",
+            Lifecycle::DuplicateExec => "duplicate-exec",
+        }
+    }
+}
+
+/// One recorded lifecycle event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Time since the log's epoch (its construction instant).
+    pub at: Duration,
+    /// Cancellation-token id — shared by both legs of a hedged
+    /// request, so a timeline groups by it.
+    pub token: u64,
+    pub event: Lifecycle,
+}
+
+/// Bounded, thread-safe lifecycle recorder shared by the router and
+/// the coordinator leaders/workers.  Appends are O(1) under a mutex
+/// that only lifecycle events (rare relative to requests) touch; when
+/// the ring is full the oldest events drop and `dropped()` counts
+/// them, so a long run cannot grow without bound.
+#[derive(Debug)]
+pub struct EventLog {
+    epoch: Instant,
+    cap: usize,
+    events: Mutex<VecDeque<TraceEvent>>,
+    dropped: AtomicU64,
+}
+
+impl EventLog {
+    pub fn new(cap: usize) -> EventLog {
+        assert!(cap > 0, "event log needs capacity");
+        EventLog {
+            epoch: Instant::now(),
+            cap,
+            events: Mutex::new(VecDeque::with_capacity(cap.min(256))),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one lifecycle transition for token `token`.
+    pub fn record(&self, token: u64, event: Lifecycle) {
+        let ev = TraceEvent { at: self.epoch.elapsed(), token, event };
+        let mut q = self.events.lock().unwrap();
+        if q.len() == self.cap {
+            q.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        q.push_back(ev);
+    }
+
+    /// Every retained event, oldest first.
+    pub fn snapshot(&self) -> Vec<TraceEvent> {
+        self.events.lock().unwrap().iter().copied().collect()
+    }
+
+    /// The most recent `n` events, oldest first.
+    pub fn tail(&self, n: usize) -> Vec<TraceEvent> {
+        let q = self.events.lock().unwrap();
+        q.iter().skip(q.len().saturating_sub(n)).copied().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.lock().unwrap().is_empty()
+    }
+
+    /// Events evicted because the ring was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+}
 
 /// Arrival process shape.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -172,6 +284,43 @@ mod tests {
     fn peak_window_full_trace() {
         let t = Trace::generate(Process::Uniform { rate_hz: 10.0 }, 20, 0);
         assert_eq!(t.peak_in_window(1e9), 20);
+    }
+
+    #[test]
+    fn event_log_records_and_bounds() {
+        let log = EventLog::new(3);
+        assert!(log.is_empty());
+        log.record(
+            7,
+            Lifecycle::HedgeLaunched { primary: 0, duplicate: 1 },
+        );
+        log.record(7, Lifecycle::HedgeWin);
+        log.record(8, Lifecycle::CancelPruned);
+        assert_eq!(log.len(), 3);
+        assert_eq!(log.dropped(), 0);
+        let snap = log.snapshot();
+        assert_eq!(snap[0].token, 7);
+        assert_eq!(
+            snap[0].event,
+            Lifecycle::HedgeLaunched { primary: 0, duplicate: 1 }
+        );
+        assert!(snap[1].at >= snap[0].at, "events are time-ordered");
+        // the ring drops the oldest event once full
+        log.record(9, Lifecycle::DuplicateExec);
+        assert_eq!(log.len(), 3);
+        assert_eq!(log.dropped(), 1);
+        let snap = log.snapshot();
+        assert_eq!(snap[0].event, Lifecycle::HedgeWin);
+        assert_eq!(snap[2].event, Lifecycle::DuplicateExec);
+        // tail returns the newest n, oldest first
+        let tail = log.tail(2);
+        assert_eq!(tail.len(), 2);
+        assert_eq!(tail[1].token, 9);
+        assert_eq!(Lifecycle::HedgeWin.name(), "hedge-win");
+        assert_eq!(
+            Lifecycle::HedgeLaunched { primary: 0, duplicate: 1 }.name(),
+            "hedge-launched"
+        );
     }
 
     #[test]

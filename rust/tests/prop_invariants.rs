@@ -1,7 +1,7 @@
 //! Property-based invariants over the coordinator and scheduler, via the
 //! in-repo `cnnlab::prop` framework (no proptest offline).
 
-use std::sync::atomic::AtomicUsize;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -53,6 +53,7 @@ fn prop_batcher_conserves_requests() {
                         arrived: at,
                     },
                     reply.clone(),
+                    0,
                 ));
                 // poll at a moving "now"
                 while let Some(batch) =
@@ -139,6 +140,7 @@ fn prop_predictive_close_never_violates_max_wait() {
                     arrived: arrive,
                 },
                 reply.clone(),
+                0,
             ));
             pop_all(&mut b, arrive, &mut popped)?;
             // declined close: the next scheduled close must still fall
@@ -388,6 +390,7 @@ fn prop_predictive_router_answers_every_accepted_exactly_once() {
                     lane_budgets: LaneBudgets::none()
                         .with(LaneClass::Latency, 2)
                         .with(LaneClass::Throughput, 3),
+                    ..Default::default()
                 },
             )
         };
@@ -465,6 +468,228 @@ fn prop_predictive_router_answers_every_accepted_exactly_once() {
                 "per-lane shed counters ({lane_shed}) disagree with \
                  rejections ({rejected})"
             ));
+        }
+        Ok(())
+    }));
+}
+
+/// THE EXACTLY-ONCE INVARIANT UNDER HEDGING + CANCELLATION: over two
+/// coordinators behind an always-hedging router (zero SLO), for any
+/// request count with every third request cancelled right after
+/// submission:
+/// * a request whose `cancel()` won is never answered;
+/// * every other request is answered exactly once (no double reply,
+///   no lost reply) even though two copies of it were in flight;
+/// * every envelope is conserved: replies + prunes + duplicate
+///   executions account for both legs of every request.
+/// Runs across global and per-class formation.
+#[test]
+fn prop_hedged_cancellation_answers_every_live_exactly_once() {
+    let gen = usize_in(1, 24);
+    expect_ok(check(41, 6, &gen, |&n| {
+        for formation in
+            [FormationPolicy::Global, FormationPolicy::PerClass]
+        {
+            let spawn = || {
+                let lat = CurveEngine::latency_shaped(300);
+                let tput = CurveEngine::throughput_shaped(2_000);
+                let lat_profile = lat.profile(DeviceKind::Gpu);
+                let tput_profile = tput.profile(DeviceKind::Fpga);
+                Server::spawn_pool_profiled(
+                    vec![(lat, lat_profile), (tput, tput_profile)],
+                    ServerConfig {
+                        policy: BatchPolicy::new(
+                            4,
+                            Duration::from_micros(500),
+                        ),
+                        queue_capacity: 256,
+                        dispatch: DispatchPolicy::Affinity,
+                        formation,
+                        ..Default::default()
+                    },
+                )
+            };
+            let (a, b) = (spawn(), spawn());
+            let router = Router::new(
+                vec![a.client(), b.client()],
+                RoutePolicy::Predictive,
+            )
+            .with_hedge_slo(Duration::ZERO);
+            let mut rng = Rng::new(1000 + n as u64);
+            let mut live = Vec::new();
+            let mut dead = Vec::new();
+            for i in 0..n {
+                let (rx, token) = router
+                    .submit_cancellable(Tensor::randn(
+                        &[3, 8, 8],
+                        &mut rng,
+                        0.1,
+                    ))
+                    .map_err(|e| e.to_string())?;
+                if i % 3 == 0 && token.cancel() {
+                    // the cancel won: no reply may ever arrive
+                    dead.push(rx);
+                } else {
+                    // un-cancelled, or the cancel lost the race: the
+                    // reply is guaranteed
+                    live.push(rx);
+                }
+            }
+            let hedges =
+                router.metrics().hedges.load(Ordering::Relaxed);
+            if hedges != n as u64 {
+                return Err(format!(
+                    "zero SLO must hedge all {n}, hedged {hedges}"
+                ));
+            }
+            drop(router);
+            let (ma, mb) = (a.metrics(), b.metrics());
+            drop(a);
+            drop(b);
+            for rx in &live {
+                rx.recv()
+                    .map_err(|_| "lost reply".to_string())?
+                    .map_err(|e| e.to_string())?;
+                if rx.try_recv().is_ok() {
+                    return Err("double reply".into());
+                }
+            }
+            for rx in &dead {
+                if rx.try_recv().is_ok() {
+                    return Err("cancelled request answered".into());
+                }
+            }
+            let completed = ma.completed.load(Ordering::Relaxed)
+                + mb.completed.load(Ordering::Relaxed);
+            if completed != live.len() as u64 {
+                return Err(format!(
+                    "{completed} completions for {} live requests",
+                    live.len()
+                ));
+            }
+            let rejected = ma.rejected.load(Ordering::Relaxed)
+                + mb.rejected.load(Ordering::Relaxed);
+            if rejected != 0 {
+                return Err("unexpected shed".into());
+            }
+            // envelope conservation: n primaries + n duplicates all
+            // resolved as a reply, a prune, or a duplicate exec
+            let resolved = completed
+                + ma.cancelled_pruned.load(Ordering::Relaxed)
+                + mb.cancelled_pruned.load(Ordering::Relaxed)
+                + ma.duplicate_execs.load(Ordering::Relaxed)
+                + mb.duplicate_execs.load(Ordering::Relaxed);
+            if resolved != 2 * n as u64 {
+                return Err(format!(
+                    "{resolved} envelopes resolved for {} in flight",
+                    2 * n
+                ));
+            }
+        }
+        Ok(())
+    }));
+}
+
+/// A request cancelled while its batch cannot close (60s deadline,
+/// over-sized batch target) is pruned at formation: it never reaches
+/// a worker, its admission slot frees, and the survivors drain
+/// exactly once on shutdown.  Runs across global and per-class
+/// formation.
+#[test]
+fn prop_cancelled_before_formation_never_reaches_a_worker() {
+    let gen = usize_in(2, 20);
+    expect_ok(check(43, 5, &gen, |&n| {
+        for formation in
+            [FormationPolicy::Global, FormationPolicy::PerClass]
+        {
+            // artifacts of 64 keep the size trigger out of reach, the
+            // 60s deadline keeps the time trigger out of reach: only
+            // pruning (or the shutdown drain) can resolve a request
+            let server = Server::spawn_pool(
+                vec![
+                    MockEngine::new(vec![64]),
+                    MockEngine::new(vec![64]),
+                ],
+                ServerConfig {
+                    policy: BatchPolicy::new(
+                        64,
+                        Duration::from_secs(60),
+                    ),
+                    queue_capacity: 256,
+                    formation,
+                    ..Default::default()
+                },
+            );
+            let client = server.client();
+            let mut rng = Rng::new(7 + n as u64);
+            let mut kept = Vec::new();
+            let mut tokens = Vec::new();
+            for i in 0..n {
+                let (rx, token) = client
+                    .submit_cancellable(Tensor::randn(
+                        &[3, 8, 8],
+                        &mut rng,
+                        0.1,
+                    ))
+                    .map_err(|e| e.to_string())?;
+                if i % 2 == 0 {
+                    tokens.push((rx, token));
+                } else {
+                    kept.push(rx);
+                }
+            }
+            for (_, t) in &tokens {
+                if !t.cancel() {
+                    return Err(
+                        "cancel lost with a 60s deadline".into()
+                    );
+                }
+            }
+            // the leader prunes within its poll interval
+            std::thread::sleep(Duration::from_millis(150));
+            let m = server.metrics();
+            let pruned =
+                m.cancelled_pruned.load(Ordering::Relaxed) as usize;
+            if pruned != tokens.len() {
+                return Err(format!(
+                    "{pruned} pruned of {} cancelled",
+                    tokens.len()
+                ));
+            }
+            if client.outstanding() != kept.len() {
+                return Err(format!(
+                    "{} outstanding after pruning, want {}",
+                    client.outstanding(),
+                    kept.len()
+                ));
+            }
+            let metrics = server.metrics();
+            drop(server);
+            for rx in &kept {
+                rx.recv()
+                    .map_err(|_| "survivor lost".to_string())?
+                    .map_err(|e| e.to_string())?;
+                if rx.try_recv().is_ok() {
+                    return Err("double reply to survivor".into());
+                }
+            }
+            for (rx, _) in &tokens {
+                if rx.try_recv().is_ok() {
+                    return Err("cancelled request answered".into());
+                }
+            }
+            let done = metrics.completed.load(Ordering::Relaxed);
+            if done != kept.len() as u64 {
+                return Err(format!(
+                    "{done} completions for {} survivors",
+                    kept.len()
+                ));
+            }
+            if metrics.duplicate_execs.load(Ordering::Relaxed) != 0 {
+                return Err(
+                    "cancelled request executed on a device".into()
+                );
+            }
         }
         Ok(())
     }));

@@ -541,6 +541,149 @@ fn predictive_routing_beats_least_outstanding_across_coordinators() {
     );
 }
 
+/// THE HEDGED-DISPATCH WIN (acceptance bound): two per-class
+/// coordinators behind the predictive router — a fast latency-shaped
+/// backend (6ms/img, immediate lane) and a straggler-injected
+/// throughput backend (16ms flat nominal, but every 3rd executed
+/// batch silently stalls +120ms; the reported exec stays nominal, so
+/// predictions cannot see the stall coming).  Per 50ms round: 6
+/// singles direct to the fast backend (36ms of immediate-lane work,
+/// visible backlog), then a routed single at +3ms.  The router
+/// predicts fast ≈ 39ms vs straggler ≈ 28ms (12ms lane deadline +
+/// 16ms exec) and sends the single to the straggler — correctly, on
+/// average, but on stall rounds the single eats ~148ms.
+///
+/// `--hedge-slo 20ms` fires on every such single (28ms > SLO): a
+/// duplicate goes to the fast backend, both legs share one reply
+/// channel + token.  On normal rounds the straggler answers at ~28ms
+/// and the duplicate is pruned behind the fast backend's burst before
+/// it costs device work; on stall rounds the duplicate claims at
+/// ~42ms and the stalled execution is discarded (duplicate_exec).
+///
+/// Discrete-event simulation of this exact schedule (0–3ms sleep
+/// overshoot): baseline p99 = 148ms vs hedged p99 = 39–42ms (3.6–3.8x)
+/// at 4.5% duplicate device executions, 12/18 losers pruned without
+/// device work.  The bound asserts >=1.3x and <=15% duplicates,
+/// leaving wide margin for scheduler jitter on CI machines.
+#[test]
+fn hedged_dispatch_cuts_single_image_p99_on_stragglers() {
+    let rounds = 18u64;
+    struct Outcome {
+        p99: f64,
+        hedges: u64,
+        completed: u64,
+        dups: u64,
+        wins: u64,
+        pruned: u64,
+    }
+    let run = |slo: Option<Duration>| -> Outcome {
+        let spawn = |engine: CurveEngine, kind: DeviceKind| -> Server {
+            let profile = engine.profile(kind);
+            Server::spawn_pool_profiled(
+                vec![(engine, profile)],
+                ServerConfig {
+                    policy: BatchPolicy::new(
+                        8,
+                        Duration::from_millis(12),
+                    ),
+                    queue_capacity: 1024,
+                    dispatch: DispatchPolicy::Affinity,
+                    formation: FormationPolicy::PerClass,
+                    ..Default::default()
+                },
+            )
+        };
+        let fast =
+            spawn(CurveEngine::latency_shaped(6_000), DeviceKind::Gpu);
+        let straggler = spawn(
+            CurveEngine::throughput_shaped(16_000)
+                .with_straggle(3, Duration::from_millis(120)),
+            DeviceKind::Fpga,
+        );
+        let mut router = Router::new(
+            vec![fast.client(), straggler.client()],
+            RoutePolicy::Predictive,
+        );
+        if let Some(slo) = slo {
+            router = router.with_hedge_slo(slo);
+        }
+        let mut rng = Rng::new(83);
+        let t0 = Instant::now();
+        let mut bursts = Vec::new();
+        let mut singles = Vec::new();
+        for r in 0..rounds {
+            let base = t0 + Duration::from_millis(50 * r);
+            sleep_until(base);
+            // occupy the fast backend so the router's argmin lands the
+            // single on the (cheaper-predicted) straggler
+            for _ in 0..6 {
+                bursts
+                    .push(fast.client().submit(image(&mut rng)).unwrap());
+            }
+            sleep_until(base + Duration::from_millis(3));
+            singles.push(router.submit(image(&mut rng)).unwrap());
+        }
+        let mut lat = Samples::new();
+        for rx in singles {
+            lat.push(rx.recv().unwrap().unwrap().latency_s);
+        }
+        for rx in bursts {
+            rx.recv().unwrap().unwrap();
+        }
+        let hedges = router.metrics().hedges.load(Ordering::Relaxed);
+        drop(router);
+        let (mf, ms) = (fast.metrics(), straggler.metrics());
+        // drain both coordinators so every hedge leg has resolved
+        drop(fast);
+        drop(straggler);
+        Outcome {
+            p99: lat.percentile(99.0),
+            hedges,
+            completed: mf.completed.load(Ordering::Relaxed)
+                + ms.completed.load(Ordering::Relaxed),
+            dups: mf.duplicate_execs.load(Ordering::Relaxed)
+                + ms.duplicate_execs.load(Ordering::Relaxed),
+            wins: mf.hedge_wins.load(Ordering::Relaxed)
+                + ms.hedge_wins.load(Ordering::Relaxed),
+            pruned: mf.cancelled_pruned.load(Ordering::Relaxed)
+                + ms.cancelled_pruned.load(Ordering::Relaxed),
+        }
+    };
+    let base = run(None);
+    let hedged = run(Some(Duration::from_millis(20)));
+    assert_eq!(base.hedges, 0, "hedging must be off without an SLO");
+    assert_eq!(base.dups, 0, "no duplicates without hedging");
+    assert!(
+        hedged.hedges > 0,
+        "over-SLO predictions must launch hedges"
+    );
+    assert!(
+        hedged.wins >= 1,
+        "at least one straggler round must be won by the duplicate"
+    );
+    assert!(
+        hedged.pruned >= 1,
+        "losing legs still queued must be pruned without device work"
+    );
+    assert!(
+        hedged.p99 * 1.3 < base.p99,
+        "hedging should cut single-image p99 >=1.3x on stragglers: \
+         hedged {:.4}s vs predictive-alone {:.4}s",
+        hedged.p99,
+        base.p99
+    );
+    let dup_share = hedged.dups as f64
+        / (hedged.completed + hedged.dups) as f64;
+    assert!(
+        dup_share <= 0.15,
+        "duplicate device work must stay <=15%: {} of {} executions \
+         ({:.1}%)",
+        hedged.dups,
+        hedged.completed + hedged.dups,
+        dup_share * 100.0
+    );
+}
+
 /// THE LANE-BUDGET WIN (acceptance bound): one per-class coordinator
 /// under sustained overload — a latency-shaped worker (18ms/img,
 /// immediate lane) and a throughput-shaped worker (24ms flat, 12ms
@@ -577,6 +720,7 @@ fn lane_budgets_protect_latency_class_under_overload() {
                 dispatch: DispatchPolicy::Affinity,
                 formation: FormationPolicy::PerClass,
                 lane_budgets: budgets,
+                ..Default::default()
             },
         );
         assert_eq!(
