@@ -56,6 +56,16 @@ pub struct ServingConfig {
     /// arrival-rate estimates): loaded on startup when the file exists,
     /// written back when a serve run completes.
     pub profile_state: Option<String>,
+    /// Per-request execution retry budget.  0 (the default) keeps the
+    /// fail-fast contract: a failed batch error-replies every member.
+    /// Positive: a failed batch is retried whole once, then bisected
+    /// to isolated size-1 executions, and a request that fails
+    /// `retry_limit` isolated attempts is quarantined as poisoned.
+    pub retry_limit: u32,
+    /// Supervise engine workers: a worker whose engine panics
+    /// mid-batch is retired from dispatch and respawned with its
+    /// learned EWMA latency table intact.
+    pub respawn: bool,
 }
 
 impl Default for ServingConfig {
@@ -77,6 +87,8 @@ impl Default for ServingConfig {
             route: RoutePolicy::LeastOutstanding,
             hedge_slo_us: None,
             profile_state: None,
+            retry_limit: 0,
+            respawn: false,
         }
     }
 }
@@ -101,6 +113,8 @@ impl ServingConfig {
             formation: self.formation,
             lane_budgets: self.lane_budgets.clone(),
             event_log: None,
+            retry_limit: self.retry_limit,
+            respawn: self.respawn,
         }
     }
 
@@ -178,6 +192,19 @@ impl ServingConfig {
                 t.get("profile_state").and_then(TomlValue::as_str)
             {
                 cfg.profile_state = Some(v.to_string());
+            }
+            if let Some(v) =
+                t.get("retry_limit").and_then(TomlValue::as_int)
+            {
+                anyhow::ensure!(
+                    v >= 0,
+                    "retry_limit cannot be negative"
+                );
+                cfg.retry_limit = v as u32;
+            }
+            if let Some(v) = t.get("respawn").and_then(TomlValue::as_bool)
+            {
+                cfg.respawn = v;
             }
             anyhow::ensure!(
                 cfg.lane_budgets.is_empty()
@@ -507,6 +534,34 @@ mod tests {
         // zero is rejected (an always-on hedge wants a tiny positive
         // SLO, not a sentinel)
         let doc = parse_toml("[serving]\nhedge_slo_us = 0").unwrap();
+        assert!(ServingConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn serving_fault_tolerance_knobs() {
+        let doc = parse_toml(
+            r#"
+            [serving]
+            retry_limit = 3
+            respawn = true
+        "#,
+        )
+        .unwrap();
+        let cfg = ServingConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.retry_limit, 3);
+        assert!(cfg.respawn);
+        let sc = cfg.server_config();
+        assert_eq!(sc.retry_limit, 3);
+        assert!(sc.respawn);
+        // defaults: fail-fast, no supervision
+        let cfg = ServingConfig::default();
+        assert_eq!(cfg.retry_limit, 0);
+        assert!(!cfg.respawn);
+        let sc = cfg.server_config();
+        assert_eq!(sc.retry_limit, 0);
+        assert!(!sc.respawn);
+        // negative budgets rejected
+        let doc = parse_toml("[serving]\nretry_limit = -1").unwrap();
         assert!(ServingConfig::from_toml(&doc).is_err());
     }
 

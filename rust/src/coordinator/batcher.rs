@@ -152,14 +152,20 @@ impl Batcher {
     }
 
     pub fn push(&mut self, env: Envelope) {
-        let arrived = env.req.arrived;
-        if let Some(prev) = self.last_arrival {
-            // non-monotone timestamps (tests with synthetic clocks)
-            // observe as a zero gap rather than panicking
-            let gap = arrived.saturating_duration_since(prev);
-            self.gap.observe(gap.as_secs_f64());
+        // a requeued envelope (attempt > 0) is not a fresh arrival: its
+        // original admission already trained the gap estimator, and its
+        // `arrived` stamp is stale — feeding it again would corrupt the
+        // arrival-rate estimate the predictive close leans on
+        if env.attempt == 0 {
+            let arrived = env.req.arrived;
+            if let Some(prev) = self.last_arrival {
+                // non-monotone timestamps (tests with synthetic
+                // clocks) observe as a zero gap rather than panicking
+                let gap = arrived.saturating_duration_since(prev);
+                self.gap.observe(gap.as_secs_f64());
+            }
+            self.last_arrival = Some(arrived);
         }
-        self.last_arrival = Some(arrived);
         self.queue.push_back(env);
     }
 

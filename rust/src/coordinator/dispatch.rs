@@ -148,6 +148,10 @@ pub struct WorkerState {
     uncosted: AtomicUsize,
     /// Total batches ever routed here (starvation diagnostics).
     dispatched: AtomicU64,
+    /// False while the worker thread is dead (supervision retired it):
+    /// `pick_worker` and lane steering skip retired workers so traffic
+    /// stops landing on a queue nobody drains.  A respawn revives it.
+    live: std::sync::atomic::AtomicBool,
 }
 
 /// Read-only view of a worker's dispatcher state, including the online
@@ -177,12 +181,30 @@ impl WorkerState {
             queued: AtomicUsize::new(0),
             uncosted: AtomicUsize::new(0),
             dispatched: AtomicU64::new(0),
+            live: std::sync::atomic::AtomicBool::new(true),
         }
     }
 
     /// The device profile this worker was spawned with.
     pub fn profile(&self) -> &DeviceProfile {
         &self.profile
+    }
+
+    /// Mark the worker dead: dispatch and steering stop routing here.
+    /// The learned latency table survives retirement, so a respawned
+    /// worker resumes with its history intact.
+    pub fn retire(&self) {
+        self.live.store(false, Ordering::SeqCst);
+    }
+
+    /// Bring a retired worker back into the dispatch set (respawn).
+    pub fn revive(&self) {
+        self.live.store(true, Ordering::SeqCst);
+    }
+
+    /// True while the worker thread is believed alive.
+    pub fn is_live(&self) -> bool {
+        self.live.load(Ordering::SeqCst)
     }
 
     /// Dispatched-but-not-completed batches (the cold-fallback queue
@@ -400,10 +422,22 @@ pub fn pick_worker(
     rr: &AtomicUsize,
 ) -> Pick {
     debug_assert!(!states.is_empty());
+    // retired workers (dead threads awaiting respawn) never receive
+    // traffic; if supervision retired everything, fall back to the full
+    // set rather than panicking — the queues buffer until a respawn
+    let live: Vec<usize> = states
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| s.is_live())
+        .map(|(i, _)| i)
+        .collect();
+    let cand: Vec<usize> =
+        if live.is_empty() { (0..states.len()).collect() } else { live };
     let preds: Vec<Option<u64>> =
-        states.iter().map(|s| s.predict_us(n)).collect();
+        cand.iter().map(|&i| states[i].predict_us(n)).collect();
     let all_warm = preds.iter().all(Option::is_some);
-    let worker = rotating_argmin(states.len(), rr, |i| {
+    let j = rotating_argmin(cand.len(), rr, |j| {
+        let i = cand[j];
         if all_warm {
             // completion estimate = backlog + predicted exec, with
             // cold-dispatched batches charged at the prediction so the
@@ -415,8 +449,8 @@ pub fn pick_worker(
         }
     });
     Pick {
-        worker,
-        cost_us: if all_warm { preds[worker].unwrap_or(0) } else { 0 },
+        worker: cand[j],
+        cost_us: if all_warm { preds[j].unwrap_or(0) } else { 0 },
         cold: !all_warm,
     }
 }
@@ -602,6 +636,35 @@ mod tests {
         let t8 = p.seed_exec_s(8).unwrap();
         assert!(t1 > 0.0, "whole-net estimate must be positive");
         assert!(t8 >= t1, "more images cannot take less time");
+    }
+
+    #[test]
+    fn retired_workers_are_skipped_until_revived() {
+        let a = state(vec![(1, 0.001), (8, 0.001)]);
+        let b = state(vec![(1, 0.100), (8, 0.100)]);
+        let rr = AtomicUsize::new(0);
+        let workers = vec![Arc::clone(&a), Arc::clone(&b)];
+        // a is 100x cheaper: it wins while live
+        assert_eq!(pick_worker(&workers, 4, &rr).worker, 0);
+        a.retire();
+        assert!(!a.is_live());
+        for _ in 0..4 {
+            assert_eq!(
+                pick_worker(&workers, 4, &rr).worker,
+                1,
+                "retired worker must not receive traffic"
+            );
+        }
+        // everything retired: fall back to the full set (buffer, don't
+        // panic) until supervision respawns someone
+        b.retire();
+        let p = pick_worker(&workers, 4, &rr);
+        assert!(p.worker < 2);
+        b.revive();
+        a.revive();
+        assert_eq!(pick_worker(&workers, 4, &rr).worker, 0);
+        // the learned table survived retirement
+        assert_eq!(a.predict_us(4), Some(1_000));
     }
 
     #[test]

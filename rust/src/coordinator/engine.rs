@@ -375,6 +375,120 @@ impl InferenceEngine for MockEngine {
     }
 }
 
+/// A scripted fault schedule for [`FaultyEngine`]: which calls fail
+/// transiently, which images are deterministic poison, when the worker
+/// thread dies mid-batch, and which calls run slow.  All clocks are
+/// per-wrapper call counts, so a plan replays identically run to run.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    /// Fail every Nth `infer_batch` call with a transient error that a
+    /// retry would clear (0 = never).
+    pub fail_every: usize,
+    /// Panic on exactly the Nth call (0 = never) — models a worker
+    /// thread dying mid-batch (wedged reconfiguration, driver abort).
+    pub panic_on_call: usize,
+    /// Deterministic poison: any batch containing an image whose data
+    /// sum matches one of these fingerprints (within 1e-3) fails, every
+    /// time, no matter how often it is retried.
+    pub poison_fingerprints: Vec<f32>,
+    /// Every Nth call sleeps `slow_extra` before executing (0 = never)
+    /// — a slow network leg / contended link, distinct from failure.
+    pub slow_every: usize,
+    /// Extra stall applied on slow calls.
+    pub slow_extra: Duration,
+}
+
+impl FaultPlan {
+    /// True when `sum` matches a scripted poison fingerprint.
+    pub fn is_poison(&self, sum: f32) -> bool {
+        self.poison_fingerprints.iter().any(|f| (sum - f).abs() < 1e-3)
+    }
+}
+
+/// Wraps any [`InferenceEngine`] with a scripted [`FaultPlan`] —
+/// composable with [`CurveEngine`]/[`MockEngine`] so the supervision
+/// and retry tests inject transient faults, poison images, mid-batch
+/// death, and slow legs without touching the wrapped engine.
+pub struct FaultyEngine<E: InferenceEngine> {
+    inner: E,
+    plan: FaultPlan,
+    calls: std::sync::atomic::AtomicUsize,
+    transient_faults: std::sync::atomic::AtomicUsize,
+    poison_hits: std::sync::atomic::AtomicUsize,
+}
+
+impl<E: InferenceEngine> FaultyEngine<E> {
+    pub fn new(inner: E, plan: FaultPlan) -> FaultyEngine<E> {
+        FaultyEngine {
+            inner,
+            plan,
+            calls: std::sync::atomic::AtomicUsize::new(0),
+            transient_faults: std::sync::atomic::AtomicUsize::new(0),
+            poison_hits: std::sync::atomic::AtomicUsize::new(0),
+        }
+    }
+
+    /// Total `infer_batch` calls seen (test hook).
+    pub fn calls(&self) -> usize {
+        self.calls.load(std::sync::atomic::Ordering::SeqCst)
+    }
+
+    /// Scripted transient failures delivered so far (test hook).
+    pub fn transient_faults(&self) -> usize {
+        self.transient_faults.load(std::sync::atomic::Ordering::SeqCst)
+    }
+
+    /// Batches rejected because they contained a poison image.
+    pub fn poison_hits(&self) -> usize {
+        self.poison_hits.load(std::sync::atomic::Ordering::SeqCst)
+    }
+}
+
+impl<E: InferenceEngine> InferenceEngine for FaultyEngine<E> {
+    fn available_batches(&self) -> &[usize] {
+        self.inner.available_batches()
+    }
+
+    fn image_shape(&self) -> &[usize] {
+        self.inner.image_shape()
+    }
+
+    fn infer_batch(
+        &self,
+        images: Vec<Tensor>,
+    ) -> anyhow::Result<BatchOutput> {
+        let c = self
+            .calls
+            .fetch_add(1, std::sync::atomic::Ordering::SeqCst)
+            + 1;
+        if self.plan.slow_every > 0 && c % self.plan.slow_every == 0 {
+            std::thread::sleep(self.plan.slow_extra);
+        }
+        if self.plan.panic_on_call == c {
+            panic!("injected worker death on call {c}");
+        }
+        // poison is checked before the transient clock so a poisoned
+        // batch fails deterministically on every retry
+        for img in &images {
+            let sum: f32 = img.data().iter().sum();
+            if self.plan.is_poison(sum) {
+                self.poison_hits
+                    .fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                anyhow::bail!(
+                    "poisoned image (fingerprint {sum}) in batch of {}",
+                    images.len()
+                );
+            }
+        }
+        if self.plan.fail_every > 0 && c % self.plan.fail_every == 0 {
+            self.transient_faults
+                .fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+            anyhow::bail!("injected transient fault on call {c}");
+        }
+        self.inner.infer_batch(images)
+    }
+}
+
 /// Hermetic engine with an affine batch cost `base + per_image * n`,
 /// compiled artifacts {1, 2, 4, 8}.  A latency-shaped device (zero
 /// base, cost linear in batch) and a throughput-shaped one (high fixed
@@ -560,6 +674,72 @@ mod tests {
             stalled >= nominal + Duration::from_millis(20),
             "every 2nd call must actually stall: {nominal:?} vs \
              {stalled:?}"
+        );
+    }
+
+    #[test]
+    fn faulty_engine_scripts_transient_and_poison() {
+        let plan = FaultPlan {
+            fail_every: 3,
+            poison_fingerprints: vec![42.0],
+            ..FaultPlan::default()
+        };
+        let e = FaultyEngine::new(MockEngine::new(vec![1, 4]), plan);
+        let clean = Tensor::zeros(&[3, 8, 8]);
+        let mut poison = vec![0.0f32; 192];
+        poison[0] = 42.0;
+        let poison = Tensor::from_vec(&[3, 8, 8], poison).unwrap();
+        // calls 1, 2 pass; call 3 is the scripted transient fault
+        assert!(e.infer_batch(vec![clean.clone()]).is_ok());
+        assert!(e.infer_batch(vec![clean.clone()]).is_ok());
+        let err = e.infer_batch(vec![clean.clone()]).unwrap_err();
+        assert!(err.to_string().contains("transient"), "{err}");
+        assert_eq!(e.transient_faults(), 1);
+        // a poison image fails every time, regardless of the clock
+        for _ in 0..3 {
+            let err = e
+                .infer_batch(vec![clean.clone(), poison.clone()])
+                .unwrap_err();
+            assert!(err.to_string().contains("poisoned"), "{err}");
+        }
+        assert_eq!(e.poison_hits(), 3);
+        // clean batches still pass after the poison hits
+        assert!(e.infer_batch(vec![clean]).is_ok());
+    }
+
+    #[test]
+    fn faulty_engine_panics_on_scripted_call() {
+        let plan =
+            FaultPlan { panic_on_call: 2, ..FaultPlan::default() };
+        let e = FaultyEngine::new(MockEngine::new(vec![1]), plan);
+        let img = Tensor::zeros(&[3, 8, 8]);
+        assert!(e.infer_batch(vec![img.clone()]).is_ok());
+        let died = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| e.infer_batch(vec![img])),
+        );
+        assert!(died.is_err(), "call 2 must panic");
+    }
+
+    #[test]
+    fn faulty_engine_slow_leg_stalls_without_failing() {
+        let plan = FaultPlan {
+            slow_every: 2,
+            slow_extra: Duration::from_millis(20),
+            ..FaultPlan::default()
+        };
+        let mut inner = MockEngine::new(vec![1]);
+        inner.delay = Duration::ZERO;
+        let e = FaultyEngine::new(inner, plan);
+        let img = Tensor::zeros(&[3, 8, 8]);
+        let t0 = std::time::Instant::now();
+        assert!(e.infer_batch(vec![img.clone()]).is_ok());
+        let fast = t0.elapsed();
+        let t1 = std::time::Instant::now();
+        assert!(e.infer_batch(vec![img]).is_ok());
+        let slow = t1.elapsed();
+        assert!(
+            slow >= fast + Duration::from_millis(15),
+            "slow leg must stall: {fast:?} vs {slow:?}"
         );
     }
 

@@ -502,7 +502,11 @@ impl LaneSet {
         let gap = self
             .last_admission
             .map(|prev| arrived.saturating_duration_since(prev));
-        self.last_admission = Some(arrived);
+        // requeued envelopes (attempt > 0) are not fresh arrivals and
+        // must not advance the instantaneous-gap clock
+        if env.attempt == 0 {
+            self.last_admission = Some(arrived);
+        }
         let lane = self.steer(arrived, gap);
         self.metrics
             .lane(lane)
@@ -511,12 +515,31 @@ impl LaneSet {
         self.lanes[lane].batcher.push(env);
     }
 
+    /// At least one of the lane's workers is believed alive (not
+    /// retired by a mid-batch death awaiting respawn).
+    fn lane_is_live(&self, li: usize) -> bool {
+        self.lanes[li]
+            .workers
+            .iter()
+            .any(|&g| self.states[g].is_live())
+    }
+
+    /// The nearest (by lane-index distance, lower index on ties) lane
+    /// other than `li` that still has a live worker — where a dead
+    /// lane's cut batches fold.
+    fn nearest_live_lane(&self, li: usize) -> Option<usize> {
+        (0..self.lanes.len())
+            .filter(|&i| i != li && self.lane_is_live(i))
+            .min_by_key(|&i| (li.abs_diff(i), i))
+    }
+
     /// Predicted completion for a request admitted to `lane` now: the
     /// formation wait the lane would impose (how long until its batch
     /// closes, given the instantaneous arrival gap) plus the best
-    /// backlog + predicted-exec completion among the lane's workers for
-    /// the batch the request is predicted to ride in.  `None` while
-    /// every worker of the lane is cold.
+    /// backlog + predicted-exec completion among the lane's live
+    /// workers for the batch the request is predicted to ride in.
+    /// `None` while every live worker of the lane is cold (or every
+    /// worker is retired).
     fn lane_estimate_us(
         &self,
         lane: &Lane,
@@ -528,6 +551,7 @@ impl LaneSet {
         let exec = lane
             .workers
             .iter()
+            .filter(|&&g| self.states[g].is_live())
             .filter_map(|&g| {
                 self.states[g].predicted_completion_us(close_n)
             })
@@ -538,31 +562,47 @@ impl LaneSet {
     /// Pick the lane minimizing the admission-time completion estimate;
     /// while any lane is still cold, fall back to joining the
     /// shallowest lane per worker (the formation-level analogue of the
-    /// dispatcher's join-shortest-queue cold phase).
+    /// dispatcher's join-shortest-queue cold phase).  Lanes whose
+    /// workers all retired are skipped while any other lane is alive —
+    /// their cut batches would only fold over anyway, so steering there
+    /// adds a hop for nothing.
     fn steer(&self, arrived: Instant, inst_gap: Option<Duration>) -> usize {
         if self.lanes.len() == 1 {
             return 0;
         }
-        let ests: Vec<Option<u64>> = self
-            .lanes
+        let mut cand: Vec<usize> = (0..self.lanes.len())
+            .filter(|&i| self.lane_is_live(i))
+            .collect();
+        if cand.is_empty() {
+            // global outage: keep steering as if everyone were alive
+            // (buffer, don't panic) until supervision respawns someone
+            cand = (0..self.lanes.len()).collect();
+        }
+        if cand.len() == 1 {
+            return cand[0];
+        }
+        let ests: Vec<Option<u64>> = cand
             .iter()
-            .map(|lane| self.lane_estimate_us(lane, arrived, inst_gap))
+            .map(|&i| {
+                self.lane_estimate_us(&self.lanes[i], arrived, inst_gap)
+            })
             .collect();
         if ests.iter().all(Option::is_some) {
-            let mut best = 0;
+            let mut best = cand[0];
             let mut best_est = ests[0].unwrap();
-            for (i, est) in ests.iter().enumerate().skip(1) {
+            for (k, est) in ests.iter().enumerate().skip(1) {
                 let est = est.unwrap();
                 if est < best_est {
-                    best = i;
+                    best = cand[k];
                     best_est = est;
                 }
             }
             best
         } else {
-            let mut best = 0;
+            let mut best = cand[0];
             let mut best_key = u64::MAX;
-            for (i, lane) in self.lanes.iter().enumerate() {
+            for &i in &cand {
+                let lane = &self.lanes[i];
                 let depth: usize = lane.batcher.pending()
                     + lane
                         .workers
@@ -619,29 +659,48 @@ impl LaneSet {
     /// the warm path — a cold worker elsewhere in the pool merely drops
     /// out of the steal candidates — and while any *lane* worker is
     /// cold, the lane falls back to join-shortest-queue among its own.
+    ///
+    /// Fault handling: retired workers are excluded from both the
+    /// within-lane pick and the steal candidates; a lane whose workers
+    /// *all* retired folds each cut batch into the nearest surviving
+    /// lane's workers, so the dead class keeps forming batches (its
+    /// batcher state and arrival estimate survive the outage) while
+    /// execution borrows live silicon until the supervisor respawns.
     fn dispatch(&self, li: usize, envs: Vec<Envelope>) {
         let n = envs.len();
+        let li = if self.lane_is_live(li) {
+            li
+        } else {
+            // fold into the nearest surviving lane; a pool-wide outage
+            // keeps the home lane (buffer, don't panic)
+            self.nearest_live_lane(li).unwrap_or(li)
+        };
         let lane = &self.lanes[li];
-        let lane_warm = lane
+        let mut cand: Vec<usize> = lane
             .workers
+            .iter()
+            .copied()
+            .filter(|&g| self.states[g].is_live())
+            .collect();
+        if cand.is_empty() {
+            cand = lane.workers.clone();
+        }
+        let lane_warm = cand
             .iter()
             .all(|&g| self.states[g].predict_us(n).is_some());
         let target = if lane_warm {
-            let own_k = rotating_argmin(
-                lane.workers.len(),
-                &self.rr,
-                |k| {
-                    self.states[lane.workers[k]]
-                        .predicted_completion_us(n)
-                        .unwrap_or(u64::MAX)
-                },
-            );
-            let own = lane.workers[own_k];
+            let own_k = rotating_argmin(cand.len(), &self.rr, |k| {
+                self.states[cand[k]]
+                    .predicted_completion_us(n)
+                    .unwrap_or(u64::MAX)
+            });
+            let own = cand[own_k];
             let own_cost = self.states[own]
                 .predicted_completion_us(n)
                 .unwrap_or(u64::MAX);
             let foreign = (0..self.states.len())
                 .filter(|g| !lane.workers.contains(g))
+                .filter(|&g| self.states[g].is_live())
                 .filter_map(|g| {
                     self.states[g]
                         .predicted_completion_us(n)
@@ -659,10 +718,10 @@ impl LaneSet {
                 _ => own,
             }
         } else {
-            let k = rotating_argmin(lane.workers.len(), &self.rr, |k| {
-                self.states[lane.workers[k]].queue_depth() as u64
+            let k = rotating_argmin(cand.len(), &self.rr, |k| {
+                self.states[cand[k]].queue_depth() as u64
             });
-            lane.workers[k]
+            cand[k]
         };
         let cost_us = if lane_warm {
             self.states[target].predict_us(n).unwrap_or(0)
@@ -936,6 +995,82 @@ mod tests {
             .collect();
         ids.sort_unstable();
         assert_eq!(ids, (0..23).collect::<Vec<u64>>());
+    }
+
+    /// A retired worker receives no traffic from its own lane: the
+    /// within-lane argmin (and the cold queue-depth fallback) only
+    /// consider live workers.
+    #[test]
+    fn dispatch_skips_retired_workers_within_a_lane() {
+        let a = latency_state();
+        let b = latency_state();
+        let (mut ls, rxs) = lane_set(
+            vec![Arc::clone(&a), Arc::clone(&b)],
+            BatchPolicy::immediate(),
+        );
+        assert_eq!(ls.lanes(), 1, "same class, one lane");
+        a.retire();
+        let t0 = Instant::now();
+        for i in 0..3 {
+            ls.push(env(i, t0));
+        }
+        ls.dispatch_ready(t0);
+        assert!(
+            rxs[0].try_iter().next().is_none(),
+            "retired worker must not be dispatched to"
+        );
+        let got: usize = rxs[1].try_iter().map(|b| b.envs.len()).sum();
+        assert_eq!(got, 3, "the live worker absorbs the lane");
+    }
+
+    /// When every worker of a lane dies, its already-queued batches
+    /// fold into the nearest surviving lane instead of stranding, and
+    /// new admissions steer away from the dead lane.
+    #[test]
+    fn dead_lane_folds_into_nearest_survivor() {
+        let lat = latency_state();
+        let tput = throughput_state();
+        let base = BatchPolicy::new(8, Duration::from_millis(12));
+        let (mut ls, rxs) = lane_set(
+            vec![Arc::clone(&lat), Arc::clone(&tput)],
+            base,
+        );
+        let t0 = Instant::now();
+        for i in 0..8 {
+            ls.push(env(i, t0)); // burst: 2 -> latency, 6 -> throughput
+        }
+        assert_eq!(ls.lane_pending(1), 6);
+        // the throughput worker dies before its lane's deadline
+        tput.retire();
+        ls.dispatch_ready(t0 + Duration::from_millis(12));
+        assert!(
+            rxs[1].try_iter().next().is_none(),
+            "dead lane's worker must receive nothing"
+        );
+        let lat_total: usize =
+            rxs[0].try_iter().map(|b| b.envs.len()).sum();
+        assert_eq!(
+            lat_total, 8,
+            "throughput batch must fold to the surviving lane"
+        );
+        // new admissions avoid the dead lane entirely
+        let t1 = t0 + Duration::from_millis(20);
+        for i in 8..12 {
+            ls.push(env(i, t1));
+        }
+        assert_eq!(ls.lane_pending(1), 0, "no steering to a dead lane");
+        assert_eq!(ls.lane_pending(0), 4);
+        // respawn: the lane serves its own class again
+        tput.revive();
+        let t2 = t1 + Duration::from_millis(20);
+        ls.drain_dispatch();
+        for i in 12..20 {
+            ls.push(env(i, t2));
+        }
+        assert!(
+            ls.lane_pending(1) > 0,
+            "revived lane must take admissions again"
+        );
     }
 
     #[test]

@@ -42,6 +42,18 @@ pub struct ServerMetrics {
     /// Successful claims by the *duplicate* leg of a router-level
     /// hedge: the hedge paid off on this coordinator.
     pub hedge_wins: AtomicU64,
+    /// Whole-batch on-device retries after a transient execution
+    /// failure (first failure of a batch, retried at full size).
+    pub retries: AtomicU64,
+    /// Envelopes requeued for isolated (size-1) execution after their
+    /// batch failed twice — the poison-bisection path.
+    pub requeued: AtomicU64,
+    /// Requests that exhausted their retry budget at batch size 1 and
+    /// were error-replied as poisoned; never retried again.
+    pub quarantined: AtomicU64,
+    /// Worker threads respawned by the supervisor after a mid-batch
+    /// death.
+    pub respawns: AtomicU64,
     shards: Vec<Mutex<MetricsShard>>,
     lanes: Vec<LaneCounters>,
 }
@@ -102,6 +114,10 @@ impl ServerMetrics {
             cancelled_pruned: AtomicU64::new(0),
             duplicate_execs: AtomicU64::new(0),
             hedge_wins: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+            requeued: AtomicU64::new(0),
+            quarantined: AtomicU64::new(0),
+            respawns: AtomicU64::new(0),
             shards: (0..workers)
                 .map(|_| Mutex::new(MetricsShard::default()))
                 .collect(),
@@ -231,5 +247,10 @@ mod tests {
         assert_eq!(m.cancelled_pruned.load(Ordering::Relaxed), 0);
         assert_eq!(m.duplicate_execs.load(Ordering::Relaxed), 0);
         assert_eq!(m.hedge_wins.load(Ordering::Relaxed), 0);
+        // fault-tolerance counters start at zero too
+        assert_eq!(m.retries.load(Ordering::Relaxed), 0);
+        assert_eq!(m.requeued.load(Ordering::Relaxed), 0);
+        assert_eq!(m.quarantined.load(Ordering::Relaxed), 0);
+        assert_eq!(m.respawns.load(Ordering::Relaxed), 0);
     }
 }

@@ -23,8 +23,8 @@ pub use dispatch::{
     pick_worker, DeviceProfile, DispatchPolicy, WorkerSnapshot, WorkerState,
 };
 pub use engine::{
-    plan_chunks, BatchOutput, CurveEngine, InferenceEngine, MockEngine,
-    PjrtEngine,
+    plan_chunks, BatchOutput, CurveEngine, FaultPlan, FaultyEngine,
+    InferenceEngine, MockEngine, PjrtEngine,
 };
 pub use formation::{
     FormationPlan, FormationPolicy, LaneBudgets, LaneClass, LaneSet,
@@ -37,5 +37,6 @@ pub use router::{
     DEAD_BACKEND_COOLDOWN,
 };
 pub use server::{
-    Client, ReplyReceiver, Server, ServerConfig, BUSY_PREFIX,
+    Client, EngineFactory, ReplyReceiver, Server, ServerConfig,
+    SubmitError, BUSY_PREFIX, POISON_PREFIX,
 };

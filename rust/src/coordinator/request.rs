@@ -140,6 +140,12 @@ pub struct Envelope {
     /// True on the duplicate leg of a router-level hedge: a successful
     /// claim of a hedged envelope counts as a hedge win.
     pub hedged: bool,
+    /// Execution attempts already consumed by this envelope.  Zero on
+    /// first admission; the retry path bumps it on every requeue so the
+    /// per-request retry budget (`ServerConfig::retry_limit`) is
+    /// bounded.  Requeued envelopes (`attempt > 0`) keep their original
+    /// admission slot and are excluded from arrival-gap learning.
+    pub attempt: u32,
 }
 
 impl Envelope {
@@ -158,6 +164,7 @@ impl Envelope {
             lane,
             token: CancelToken::new(),
             hedged: false,
+            attempt: 0,
         }
     }
 }

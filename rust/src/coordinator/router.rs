@@ -35,7 +35,7 @@ use crate::util::Tensor;
 
 use super::dispatch::rotating_argmin;
 use super::request::{CancelToken, Response};
-use super::server::{Client, ReplyReceiver, BUSY_PREFIX};
+use super::server::{Client, ReplyReceiver, SubmitError};
 
 /// How long a backend whose coordinator looks dead (submit channel
 /// disconnected) is skipped by picks and failover before being probed
@@ -220,12 +220,55 @@ impl Router {
         self.dead_until_us[idx].store(until.max(1), Ordering::Relaxed);
     }
 
+    /// Clear a backend's dead mark after a successful submission (the
+    /// re-probe paid off, or an old mark went stale).
+    fn mark_alive(&self, idx: usize) {
+        if self.dead_until_us[idx].load(Ordering::Relaxed) != 0 {
+            self.dead_until_us[idx].store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// Single-flight re-probe of dead backends: the first pick to
+    /// notice an expired cooldown atomically re-arms it
+    /// (compare-and-swap on the deadline) and routes itself to that
+    /// backend as the probe; every concurrent pick keeps skipping it
+    /// until the probe's submission either clears the mark
+    /// ([`Router::mark_alive`]) or re-marks it dead.  Without this,
+    /// every in-flight request herds onto a still-dead backend the
+    /// instant its window expires and eats the connect failure.
+    fn take_probe(&self, now_us: u64) -> Option<usize> {
+        for i in 0..self.clients.len() {
+            let until = self.dead_until_us[i].load(Ordering::Relaxed);
+            if until == 0 || now_us < until {
+                continue;
+            }
+            let rearmed = now_us
+                .saturating_add(self.dead_cooldown.as_micros() as u64)
+                .max(1);
+            if self.dead_until_us[i]
+                .compare_exchange(
+                    until,
+                    rearmed,
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                )
+                .is_ok()
+            {
+                return Some(i);
+            }
+        }
+        None
+    }
+
     /// Pick a backend index per policy, skipping backends inside
     /// their dead cooldown (unless every backend is dead, in which
     /// case all are probed).
     pub fn pick(&self) -> usize {
         let n = self.clients.len();
         let now_us = self.now_us();
+        if let Some(probe) = self.take_probe(now_us) {
+            return probe;
+        }
         let dead: Vec<bool> =
             (0..n).map(|i| self.is_dead(i, now_us)).collect();
         let all_dead = dead.iter().all(|&d| d);
@@ -367,12 +410,13 @@ impl Router {
                 false,
             ) {
                 Ok(()) => {
+                    self.mark_alive(idx);
                     accepted = Some((idx, pre_est));
                     break;
                 }
                 Err((img, e)) => {
                     image = img;
-                    if e.to_string().starts_with(BUSY_PREFIX) {
+                    if SubmitError::classify(&e) == SubmitError::Shed {
                         // alive but full: deflect to the next candidate
                         self.metrics
                             .failovers
@@ -434,6 +478,7 @@ impl Router {
             true,
         ) {
             Ok(()) => {
+                self.mark_alive(duplicate);
                 self.metrics.hedges.fetch_add(1, Ordering::Relaxed);
                 if let Some(log) = &self.events {
                     log.record(
@@ -443,7 +488,7 @@ impl Router {
                 }
             }
             Err((_, e)) => {
-                if !e.to_string().starts_with(BUSY_PREFIX) {
+                if SubmitError::classify(&e) != SubmitError::Shed {
                     self.mark_dead(duplicate);
                 }
             }
@@ -862,5 +907,65 @@ mod tests {
         }
         let picks: Vec<usize> = (0..4).map(|_| r.pick()).collect();
         assert!(picks.iter().all(|&p| p == 0), "re-mark failed: {picks:?}");
+    }
+
+    /// THE SINGLE-FLIGHT RE-PROBE (satellite): when a dead backend's
+    /// cooldown expires, exactly one pick routes there as the probe —
+    /// the expiry is atomically re-armed, so concurrent picks keep
+    /// skipping instead of herding onto a possibly-still-dead backend —
+    /// and a successful submission clears the mark outright.
+    #[test]
+    fn expired_cooldown_probes_single_flight() {
+        let alive = spawn_backend(10);
+        let doomed = spawn_backend(10);
+        let doomed_client = doomed.client();
+        let r = Router::new(
+            vec![alive.client(), doomed_client],
+            RoutePolicy::LeastOutstanding,
+        )
+        .with_dead_cooldown(Duration::from_millis(100));
+        drop(doomed);
+        // round-robin tie rotation guarantees the dead backend is
+        // contacted and marked within a few requests
+        for _ in 0..4 {
+            r.infer(tiny_image()).unwrap();
+        }
+        assert!(r.is_dead(1, r.now_us()), "backend 1 must be marked");
+        std::thread::sleep(Duration::from_millis(150));
+        // first pick after expiry is the probe...
+        assert_eq!(r.pick(), 1, "the probe must route to the expiry");
+        // ...and it re-armed the window: no other pick follows it in
+        let rest: Vec<usize> = (0..6).map(|_| r.pick()).collect();
+        assert!(
+            rest.iter().all(|&p| p == 0),
+            "one probe per window, got {rest:?}"
+        );
+
+        // a successful submission through a marked backend clears the
+        // mark entirely (no cooldown left to expire)
+        let a2 = spawn_backend(10);
+        let b2 = spawn_backend(10);
+        let r2 = Router::new(
+            vec![a2.client(), b2.client()],
+            RoutePolicy::LeastOutstanding,
+        )
+        .with_dead_cooldown(Duration::from_millis(1));
+        r2.mark_dead(1);
+        assert!(r2.is_dead(1, r2.now_us()));
+        std::thread::sleep(Duration::from_millis(10));
+        // the probe lands on the (actually live) backend and succeeds
+        for _ in 0..2 {
+            r2.infer(tiny_image()).unwrap();
+        }
+        assert_eq!(
+            r2.dead_until_us[1].load(Ordering::Relaxed),
+            0,
+            "a successful submit must clear the dead mark"
+        );
+        let picks: Vec<usize> = (0..4).map(|_| r2.pick()).collect();
+        assert!(
+            picks.contains(&1),
+            "cleared backend must rejoin rotation: {picks:?}"
+        );
     }
 }

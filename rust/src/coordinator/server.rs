@@ -33,7 +33,7 @@ use super::batcher::{BatchPolicy, Batcher};
 use super::dispatch::{
     pick_worker, DeviceProfile, DispatchPolicy, WorkerSnapshot, WorkerState,
 };
-use super::engine::{largest_batch, InferenceEngine};
+use super::engine::{largest_batch, BatchOutput, InferenceEngine};
 use super::formation::{
     DispatchedBatch, FormationPlan, FormationPolicy, LaneBudgets,
     LaneClass, LaneSet,
@@ -52,6 +52,78 @@ const SHUTDOWN_POLL: Duration = Duration::from_millis(20);
 /// the vendored `anyhow` flattens errors to strings, so the prefix is
 /// the contract.
 pub const BUSY_PREFIX: &str = "ServerBusy";
+
+/// Message prefix of quarantine rejections: the request failed every
+/// isolated (batch-size-1) retry and was judged poisoned.  Like
+/// [`BUSY_PREFIX`], the prefix is the classification contract under
+/// the flattened error type.
+pub const POISON_PREFIX: &str = "RequestPoisoned";
+
+/// Base delay before a failed batch is re-executed; doubles per
+/// consumed attempt (capped) so a wedged device is not hammered.
+const RETRY_BACKOFF: Duration = Duration::from_micros(200);
+
+/// Typed classification of a submit/infer failure — what callers and
+/// tests key on instead of string matching.  The vendored `anyhow`
+/// flattens errors to strings, so the enum round-trips through message
+/// prefixes: its `Display` emits them and
+/// [`SubmitError::classify`] recovers the variant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Backpressure: the backend is alive but full; fail over or shed.
+    Shed,
+    /// The coordinator is gone (channel disconnected, reply dropped) —
+    /// cool the backend down.
+    Dead,
+    /// The batch executed but failed on-device (transient engine
+    /// error with retries off or exhausted at full batch size).
+    ExecFailed,
+    /// The request was quarantined as poisoned: it failed every
+    /// isolated retry while its batch-mates succeeded.
+    Poisoned,
+}
+
+impl SubmitError {
+    /// Recover the variant from a flattened error message.  Unknown
+    /// messages classify as [`SubmitError::Dead`] — the conservative
+    /// reading the router's failover path has always used for
+    /// anything that is not a shed.
+    pub fn classify(e: &anyhow::Error) -> SubmitError {
+        let msg = e.to_string();
+        if msg.starts_with(BUSY_PREFIX) {
+            SubmitError::Shed
+        } else if msg.starts_with(POISON_PREFIX) {
+            SubmitError::Poisoned
+        } else if msg.starts_with("batch execution failed") {
+            SubmitError::ExecFailed
+        } else {
+            SubmitError::Dead
+        }
+    }
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Shed => {
+                write!(f, "{BUSY_PREFIX}: request queue full")
+            }
+            SubmitError::Dead => write!(f, "server is down"),
+            SubmitError::ExecFailed => {
+                write!(f, "batch execution failed")
+            }
+            SubmitError::Poisoned => {
+                write!(f, "{POISON_PREFIX}: request quarantined")
+            }
+        }
+    }
+}
+
+// `std::error::Error` (not implemented by the vendored `anyhow::Error`
+// on purpose) gives `SubmitError` the blanket `From` conversion into
+// `anyhow::Error`, so `SubmitError::Shed.into()` keeps the exact
+// `ServerBusy` message contract.
+impl std::error::Error for SubmitError {}
 
 /// The receiver handed back by [`Client::submit`]: yields exactly one
 /// reply for the submitted request.
@@ -363,10 +435,7 @@ impl Client {
                 .lane(lane)
                 .shed
                 .fetch_add(1, Ordering::Relaxed);
-            return Err((
-                image,
-                anyhow::anyhow!("{BUSY_PREFIX}: request queue full"),
-            ));
+            return Err((image, SubmitError::Shed.into()));
         }
         let env = Envelope {
             req: Request {
@@ -378,6 +447,7 @@ impl Client {
             lane,
             token,
             hedged,
+            attempt: 0,
         };
         match self.tx.try_send(env) {
             Ok(()) => {
@@ -394,14 +464,11 @@ impl Client {
                     .lane(lane)
                     .shed
                     .fetch_add(1, Ordering::Relaxed);
-                Err((
-                    env.req.image,
-                    anyhow::anyhow!("{BUSY_PREFIX}: request queue full"),
-                ))
+                Err((env.req.image, SubmitError::Shed.into()))
             }
             Err(std::sync::mpsc::TrySendError::Disconnected(env)) => {
                 self.admission.cancel(lane);
-                Err((env.req.image, anyhow::anyhow!("server is down")))
+                Err((env.req.image, SubmitError::Dead.into()))
             }
         }
     }
@@ -488,6 +555,22 @@ pub struct ServerConfig {
     /// prunes and the workers' claim outcomes (hedge wins, duplicate
     /// executions, pre-stacking prunes) are appended here.
     pub event_log: Option<Arc<EventLog>>,
+    /// Per-request retry budget for failed batch executions.  `0`
+    /// (default) keeps the historical behaviour: a failed batch
+    /// error-replies every member immediately.  With a budget, a
+    /// failed batch is retried whole once, then bisected to isolated
+    /// size-1 executions; a request that fails every isolated attempt
+    /// is quarantined (`RequestPoisoned`) while its batch-mates
+    /// succeed.  The retry path clones each image once per engine call
+    /// so failed attempts keep the originals — the documented cost of
+    /// turning retries on.
+    pub retry_limit: u32,
+    /// Supervise worker threads: a worker that dies mid-batch (engine
+    /// panic) is retired from dispatch and respawned with a fresh
+    /// engine, its learned latency table intact.  Only effective when
+    /// the server is spawned through [`Server::spawn_supervised`] —
+    /// plain spawns have no way to build a replacement engine.
+    pub respawn: bool,
 }
 
 impl Default for ServerConfig {
@@ -499,6 +582,8 @@ impl Default for ServerConfig {
             formation: FormationPolicy::Global,
             lane_budgets: LaneBudgets::none(),
             event_log: None,
+            retry_limit: 0,
+            respawn: false,
         }
     }
 }
@@ -538,10 +623,15 @@ impl BatchRouter {
     }
 }
 
-/// Worker-side batch intake: the shared pool queue or this worker's own.
+/// Worker-side batch intake: the shared pool queue or this worker's
+/// own.  Both variants hold the receiver behind `Arc<Mutex<..>>` so a
+/// supervisor can hand the *same* queue to a respawned worker thread —
+/// batches dispatched while the worker was dead are drained by its
+/// replacement instead of being lost.
+#[derive(Clone)]
 enum BatchSource {
     Shared(Arc<Mutex<Receiver<DispatchedBatch>>>),
-    Own(Receiver<DispatchedBatch>),
+    Own(Arc<Mutex<Receiver<DispatchedBatch>>>),
 }
 
 /// One unbounded leader->worker queue per worker — the channel layout
@@ -554,7 +644,7 @@ fn per_worker_queues(
     for _ in 0..n {
         let (tx, rx) = channel::<DispatchedBatch>();
         txs.push(tx);
-        sources.push(BatchSource::Own(rx));
+        sources.push(BatchSource::Own(Arc::new(Mutex::new(rx))));
     }
     (txs, sources)
 }
@@ -564,11 +654,16 @@ impl BatchSource {
     /// drained.
     fn next(&self) -> Option<DispatchedBatch> {
         match self {
-            BatchSource::Shared(rx) => rx.lock().unwrap().recv().ok(),
-            BatchSource::Own(rx) => rx.recv().ok(),
+            BatchSource::Shared(rx) | BatchSource::Own(rx) => {
+                rx.lock().unwrap().recv().ok()
+            }
         }
     }
 }
+
+/// Builds a replacement engine for a supervised worker slot — what a
+/// respawn needs that a plain spawn cannot provide.
+pub type EngineFactory<E> = Arc<dyn Fn() -> E + Send + Sync>;
 
 /// The coordinator: owns the leader thread and the engine worker pool.
 pub struct Server {
@@ -576,6 +671,12 @@ pub struct Server {
     shutdown: Arc<AtomicBool>,
     leader: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
+    /// Supervisor thread (only under [`Server::spawn_supervised`]);
+    /// owns the worker handles while it runs and joins them on
+    /// shutdown.
+    supervisor: Option<JoinHandle<()>>,
+    /// Engine worker slots (the handles may live in the supervisor).
+    nworkers: usize,
     states: Vec<Arc<WorkerState>>,
     /// Formation lane classes in lane order (empty under the global
     /// batcher) — persistence labels and report headings.
@@ -639,6 +740,56 @@ impl Server {
         engines: Vec<(E, DeviceProfile)>,
         config: ServerConfig,
         state: Option<&ProfileState>,
+    ) -> Server {
+        Server::spawn_inner(engines, config, state, None)
+    }
+
+    /// Supervised server: each worker slot carries an engine *factory*
+    /// instead of a single engine, so a worker that dies mid-batch
+    /// (engine panic) can be respawned with a fresh engine.  The dead
+    /// worker is retired from dispatch immediately (steering and
+    /// `pick_worker` skip it); the supervisor thread detects the dead
+    /// thread, rebuilds the engine, reattaches the worker's own batch
+    /// queue (nothing dispatched while it was down is lost), and
+    /// revives the same [`WorkerState`] — the learned EWMA latency
+    /// table survives the death, so the respawned worker predicts
+    /// warm from its first batch.
+    pub fn spawn_supervised<E: InferenceEngine>(
+        factories: Vec<(EngineFactory<E>, DeviceProfile)>,
+        config: ServerConfig,
+    ) -> Server {
+        Server::spawn_supervised_with_state(factories, config, None)
+    }
+
+    /// [`Server::spawn_supervised`] plus a persisted [`ProfileState`]
+    /// preloaded into the worker EWMA tables — a table restored at
+    /// startup survives any number of worker deaths, because the
+    /// respawned worker inherits the same [`WorkerState`].
+    pub fn spawn_supervised_with_state<E: InferenceEngine>(
+        factories: Vec<(EngineFactory<E>, DeviceProfile)>,
+        config: ServerConfig,
+        state: Option<&ProfileState>,
+    ) -> Server {
+        let engines: Vec<(E, DeviceProfile)> = factories
+            .iter()
+            .map(|(f, p)| (f(), p.clone()))
+            .collect();
+        let supervise = config.respawn;
+        Server::spawn_inner(
+            engines,
+            config,
+            state,
+            supervise.then(|| {
+                factories.into_iter().map(|(f, _)| f).collect()
+            }),
+        )
+    }
+
+    fn spawn_inner<E: InferenceEngine>(
+        engines: Vec<(E, DeviceProfile)>,
+        config: ServerConfig,
+        state: Option<&ProfileState>,
+        factories: Option<Vec<EngineFactory<E>>>,
     ) -> Server {
         assert!(!engines.is_empty(), "server needs at least one engine");
 
@@ -824,31 +975,62 @@ impl Server {
         };
 
         let events = config.event_log.clone();
-        let workers = engines
+        let retry_limit = config.retry_limit;
+        let nworkers = engines.len();
+        let worker_handles: Vec<JoinHandle<()>> = engines
             .into_iter()
-            .zip(sources)
+            .zip(sources.iter())
             .enumerate()
             .map(|(i, ((engine, _), source))| {
-                let state = Arc::clone(&states[i]);
-                let metrics = Arc::clone(&metrics);
-                let admission = Arc::clone(&admission);
-                let events = events.clone();
-                std::thread::Builder::new()
-                    .name(format!("cnnlab-engine-{i}"))
-                    .spawn(move || {
-                        worker_loop(
-                            i,
-                            engine,
-                            source,
-                            state,
-                            metrics,
-                            admission,
-                            events,
-                        )
-                    })
-                    .expect("spawn engine worker")
+                spawn_worker_thread(
+                    i,
+                    engine,
+                    source.clone(),
+                    Arc::clone(&states[i]),
+                    Arc::clone(&metrics),
+                    Arc::clone(&admission),
+                    events.clone(),
+                    retry_limit,
+                )
             })
             .collect();
+
+        // supervision: the worker handles move into a supervisor
+        // thread that reaps dead workers and respawns them from the
+        // per-slot engine factories
+        let (workers, supervisor) = match factories {
+            Some(factories) => {
+                assert_eq!(
+                    factories.len(),
+                    nworkers,
+                    "one engine factory per worker slot"
+                );
+                let sup_states = states.clone();
+                let sup_sources = sources.clone();
+                let sup_metrics = Arc::clone(&metrics);
+                let sup_admission = Arc::clone(&admission);
+                let sup_events = events.clone();
+                let sd = Arc::clone(&shutdown);
+                let handle = std::thread::Builder::new()
+                    .name("cnnlab-supervisor".into())
+                    .spawn(move || {
+                        supervisor_loop(
+                            factories,
+                            sup_sources,
+                            sup_states,
+                            worker_handles,
+                            sd,
+                            sup_metrics,
+                            sup_admission,
+                            sup_events,
+                            retry_limit,
+                        )
+                    })
+                    .expect("spawn supervisor");
+                (Vec::new(), Some(handle))
+            }
+            None => (worker_handles, None),
+        };
 
         let sd = Arc::clone(&shutdown);
         let leader_metrics = Arc::clone(&metrics);
@@ -870,6 +1052,8 @@ impl Server {
             shutdown,
             leader: Some(leader),
             workers,
+            supervisor,
+            nworkers,
             states,
             lane_classes,
             lane_budgets,
@@ -893,7 +1077,7 @@ impl Server {
 
     /// Engine workers backing this server.
     pub fn workers(&self) -> usize {
-        self.workers.len()
+        self.nworkers
     }
 
     /// Per-worker dispatcher state (routing counts, queue depth,
@@ -983,6 +1167,11 @@ impl Drop for Server {
         }
         for w in self.workers.drain(..) {
             let _ = w.join();
+        }
+        // the supervisor joins whatever worker handles it owns, then
+        // exits once it observes the shutdown flag
+        if let Some(j) = self.supervisor.take() {
+            let _ = j.join();
         }
     }
 }
@@ -1197,8 +1386,96 @@ fn leader_loop(
     // their queues, then exit
 }
 
+/// Spawn one engine worker thread on `source` — used at server start
+/// and again by the supervisor when it respawns a dead worker.
+#[allow(clippy::too_many_arguments)]
+fn spawn_worker_thread<E: InferenceEngine>(
+    i: usize,
+    engine: E,
+    source: BatchSource,
+    state: Arc<WorkerState>,
+    metrics: Arc<ServerMetrics>,
+    admission: Arc<Admission>,
+    events: Option<Arc<EventLog>>,
+    retry_limit: u32,
+) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(format!("cnnlab-engine-{i}"))
+        .spawn(move || {
+            worker_loop(
+                i,
+                engine,
+                source,
+                state,
+                metrics,
+                admission,
+                events,
+                retry_limit,
+            )
+        })
+        .expect("spawn engine worker")
+}
+
+/// Worker supervision: poll the worker handles; a finished thread
+/// whose [`WorkerState`] is retired died mid-batch (the worker retires
+/// itself before exiting) — reap it, build a fresh engine from the
+/// slot's factory, and respawn on the *same* batch queue and worker
+/// state, so nothing dispatched while it was down is lost and the
+/// learned EWMA latency table carries over.  On shutdown the
+/// supervisor joins every handle it owns and exits.
+#[allow(clippy::too_many_arguments)]
+fn supervisor_loop<E: InferenceEngine>(
+    factories: Vec<EngineFactory<E>>,
+    sources: Vec<BatchSource>,
+    states: Vec<Arc<WorkerState>>,
+    mut handles: Vec<JoinHandle<()>>,
+    shutdown: Arc<AtomicBool>,
+    metrics: Arc<ServerMetrics>,
+    admission: Arc<Admission>,
+    events: Option<Arc<EventLog>>,
+    retry_limit: u32,
+) {
+    loop {
+        let quitting = shutdown.load(Ordering::SeqCst);
+        for i in 0..handles.len() {
+            if !quitting
+                && handles[i].is_finished()
+                && !states[i].is_live()
+            {
+                let fresh = spawn_worker_thread(
+                    i,
+                    (factories[i])(),
+                    sources[i].clone(),
+                    Arc::clone(&states[i]),
+                    Arc::clone(&metrics),
+                    Arc::clone(&admission),
+                    events.clone(),
+                    retry_limit,
+                );
+                let dead = std::mem::replace(&mut handles[i], fresh);
+                let _ = dead.join();
+                states[i].revive();
+                metrics.respawns.fetch_add(1, Ordering::Relaxed);
+                if let Some(log) = &events {
+                    log.record(i as u64, Lifecycle::Respawn);
+                }
+            }
+        }
+        if quitting {
+            for h in handles.drain(..) {
+                let _ = h.join();
+            }
+            return;
+        }
+        std::thread::sleep(SHUTDOWN_POLL);
+    }
+}
+
 /// One engine worker: pull closed batches, execute, reply, and feed the
-/// dispatcher's latency table with observed execution times.
+/// dispatcher's latency table with observed execution times.  A worker
+/// whose engine panicked retires its dispatch state and exits so the
+/// supervisor can respawn it.
+#[allow(clippy::too_many_arguments)]
 fn worker_loop<E: InferenceEngine>(
     worker: usize,
     engine: E,
@@ -1207,6 +1484,7 @@ fn worker_loop<E: InferenceEngine>(
     metrics: Arc<ServerMetrics>,
     admission: Arc<Admission>,
     events: Option<Arc<EventLog>>,
+    retry_limit: u32,
 ) {
     while let Some(DispatchedBatch { envs, cost_us }) = source.next() {
         // under join-idle the leader does no per-worker accounting;
@@ -1215,28 +1493,165 @@ fn worker_loop<E: InferenceEngine>(
         if matches!(source, BatchSource::Shared(_)) {
             state.begin(cost_us);
         }
-        let ran = run_batch(
+        let run = run_batch(
             &engine,
             envs,
             worker,
             &metrics,
             &admission,
             events.as_deref(),
+            retry_limit,
         );
-        // release the predicted backlog and (on success) refine the
-        // per-artifact EWMA with the measured execution time at the
-        // size that actually ran (pruning may have shrunk the batch)
-        let (n, exec) = match ran {
+        // release the predicted backlog and (on a clean first-attempt
+        // success) refine the per-artifact EWMA with the measured
+        // execution time at the size that actually ran
+        let (n, exec) = match run.observed {
             Some((n, exec)) => (n, Some(exec)),
             None => (1, None),
         };
         state.finish(cost_us, n, exec);
+        if run.died {
+            // the engine panicked mid-batch: every envelope was still
+            // answered, retried, or quarantined above, but the device
+            // is suspect — retire this worker from dispatch *before*
+            // exiting so routing stops immediately, then let the
+            // thread die for the supervisor to respawn.
+            state.retire();
+            return;
+        }
     }
 }
 
-/// Execute one batch and answer every request in it; returns the
-/// executed size and engine-reported execution time (None when the
-/// batch failed or was pruned away entirely).
+/// What one dispatched batch produced.
+struct BatchRun {
+    /// Executed size and engine-reported execution time to feed the
+    /// dispatcher's EWMA — present only for clean first-attempt
+    /// successes (retried batches release their backlog without an
+    /// observation, so pathological timing never pollutes the table).
+    observed: Option<(usize, Duration)>,
+    /// The engine panicked during this batch: the worker must retire
+    /// itself and exit so supervision can respawn it.
+    died: bool,
+}
+
+/// Call the engine under a panic guard so a mid-batch worker death
+/// surrenders the envelopes to the retry machinery instead of dropping
+/// their reply senders.  Also folds the output-shape sanity check in:
+/// a short or mis-shaped [`BatchOutput`] must become an error reply,
+/// not a `slice_of` panic.  Returns the result plus whether the engine
+/// panicked.
+fn call_engine<E: InferenceEngine>(
+    engine: &E,
+    images: Vec<Tensor>,
+    n: usize,
+) -> (anyhow::Result<BatchOutput>, bool) {
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        engine.infer_batch(images)
+    })) {
+        Ok(res) => {
+            let res = res.and_then(|out| {
+                anyhow::ensure!(
+                    out.outputs.len() >= n * out.per_image,
+                    "engine returned {} elems for {} images x {} elems",
+                    out.outputs.len(),
+                    n,
+                    out.per_image
+                );
+                Ok(out)
+            });
+            (res, false)
+        }
+        Err(payload) => {
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "worker panic".into());
+            (
+                Err(anyhow::anyhow!("engine died mid-batch: {msg}")),
+                true,
+            )
+        }
+    }
+}
+
+/// Drop envelopes whose token resolved (cancelled, or a hedge sibling
+/// claimed) and release their slots; keep the rest.
+fn keep_live(
+    envs: Vec<Envelope>,
+    admission: &Admission,
+    metrics: &ServerMetrics,
+    events: Option<&EventLog>,
+) -> Vec<Envelope> {
+    let mut live = Vec::with_capacity(envs.len());
+    for env in envs {
+        if env.token.is_live() {
+            live.push(env);
+        } else {
+            discard_pruned(&env, admission, metrics, events);
+        }
+    }
+    live
+}
+
+/// Backoff before retry number `attempt` (1-based): the base doubling
+/// per consumed attempt, capped so a deep budget cannot stall a worker
+/// for long.
+fn retry_backoff(attempt: u32) -> Duration {
+    RETRY_BACKOFF * 2u32.saturating_pow(attempt.min(5).saturating_sub(1))
+}
+
+/// Answer every envelope of a successfully executed batch: release the
+/// admission slot, claim the token (losers count as duplicate
+/// executions), and send the per-request view of the stacked output.
+fn answer_batch(
+    out: &BatchOutput,
+    envs: Vec<Envelope>,
+    formed: Instant,
+    worker: usize,
+    metrics: &ServerMetrics,
+    admission: &Admission,
+    events: Option<&EventLog>,
+) {
+    let done = Instant::now();
+    let n = envs.len();
+    for (i, env) in envs.into_iter().enumerate() {
+        admission.release(env.lane);
+        if !env.token.try_claim() {
+            metrics.duplicate_execs.fetch_add(1, Ordering::Relaxed);
+            if let Some(log) = events {
+                log.record(env.token.id(), Lifecycle::DuplicateExec);
+            }
+            continue;
+        }
+        if env.hedged {
+            metrics.hedge_wins.fetch_add(1, Ordering::Relaxed);
+            if let Some(log) = events {
+                log.record(env.token.id(), Lifecycle::HedgeWin);
+            }
+        }
+        let resp = Response {
+            id: env.req.id,
+            probs: TensorView::slice_of(
+                Arc::clone(&out.outputs),
+                i,
+                out.per_image,
+            ),
+            queue_s: formed
+                .duration_since(env.req.arrived)
+                .as_secs_f64(),
+            exec_s: out.exec.as_secs_f64(),
+            latency_s: done
+                .duration_since(env.req.arrived)
+                .as_secs_f64(),
+            batch_size: n,
+        };
+        metrics.record(worker, &resp);
+        let _ = env.reply.send(Ok(resp));
+    }
+}
+
+/// Execute one batch and answer every request in it.
 ///
 /// Two cancellation checkpoints guard the device:
 /// * **pre-stacking prune** — envelopes whose token already resolved
@@ -1246,6 +1661,11 @@ fn worker_loop<E: InferenceEngine>(
 ///   and winner-takes-all, which copy of a request answers; losers
 ///   count as `duplicate_execs` (their device work was wasted) and
 ///   release their admission slot without replying.
+///
+/// With `retry_limit == 0` a failed batch error-replies every member
+/// (the historical behaviour, and the zero-copy path: images move into
+/// the engine).  With a budget, failures flow through
+/// [`run_batch_retrying`] instead.
 fn run_batch<E: InferenceEngine>(
     engine: &E,
     batch: Vec<Envelope>,
@@ -1253,22 +1673,38 @@ fn run_batch<E: InferenceEngine>(
     metrics: &ServerMetrics,
     admission: &Admission,
     events: Option<&EventLog>,
-) -> Option<(usize, Duration)> {
+    retry_limit: u32,
+) -> BatchRun {
     let formed = Instant::now();
-    let mut live = Vec::with_capacity(batch.len());
-    for env in batch {
-        if env.token.is_live() {
-            live.push(env);
-        } else {
-            discard_pruned(&env, admission, metrics, events);
-        }
-    }
+    let live = keep_live(batch, admission, metrics, events);
     if live.is_empty() {
-        return None;
+        return BatchRun { observed: None, died: false };
     }
+    if retry_limit == 0 {
+        run_batch_once(
+            engine, live, formed, worker, metrics, admission, events,
+        )
+    } else {
+        run_batch_retrying(
+            engine, live, formed, worker, metrics, admission, events,
+            retry_limit,
+        )
+    }
+}
+
+/// The retry-disabled hot path: move (never clone) each image into the
+/// stacked batch; a failure error-replies every claimable member.
+fn run_batch_once<E: InferenceEngine>(
+    engine: &E,
+    live: Vec<Envelope>,
+    formed: Instant,
+    worker: usize,
+    metrics: &ServerMetrics,
+    admission: &Admission,
+    events: Option<&EventLog>,
+) -> BatchRun {
     let n = live.len();
-    // move (never clone) each image into the stacked batch; the reply
-    // sender rides along so this batch can be answered right here
+    // the reply sender rides along so this batch can be answered here
     let mut images = Vec::with_capacity(n);
     let mut routes = Vec::with_capacity(n);
     for env in live {
@@ -1282,19 +1718,7 @@ fn run_batch<E: InferenceEngine>(
             env.hedged,
         ));
     }
-    // A short or mis-shaped BatchOutput must become an error reply, not
-    // a slice_of panic that would kill this worker and leak the batch's
-    // outstanding slots.
-    let result = engine.infer_batch(images).and_then(|out| {
-        anyhow::ensure!(
-            out.outputs.len() >= n * out.per_image,
-            "engine returned {} elems for {} images x {} elems",
-            out.outputs.len(),
-            n,
-            out.per_image
-        );
-        Ok(out)
-    });
+    let (result, died) = call_engine(engine, images, n);
     match result {
         Ok(out) => {
             let done = Instant::now();
@@ -1335,7 +1759,7 @@ fn run_batch<E: InferenceEngine>(
                 metrics.record(worker, &resp);
                 let _ = reply.send(Ok(resp));
             }
-            Some((n, out.exec))
+            BatchRun { observed: Some((n, out.exec)), died }
         }
         Err(e) => {
             for (_, _, reply, lane, token, _) in routes {
@@ -1357,9 +1781,149 @@ fn run_batch<E: InferenceEngine>(
                     "batch execution failed: {e}"
                 )));
             }
-            None
+            BatchRun { observed: None, died }
         }
     }
+}
+
+/// The retry path (`retry_limit > 0`): a failed batch is retried whole
+/// once, then bisected to isolated size-1 executions so one poisoned
+/// request gets the error while its batch-mates succeed.  Images are
+/// cloned once per engine call so a failed attempt keeps the originals
+/// for requeue — the documented cost of enabling retries.  Admission
+/// slots stay held across retries (the request is still outstanding)
+/// and release exactly once: on reply, quarantine, or prune.
+#[allow(clippy::too_many_arguments)]
+fn run_batch_retrying<E: InferenceEngine>(
+    engine: &E,
+    mut envs: Vec<Envelope>,
+    formed: Instant,
+    worker: usize,
+    metrics: &ServerMetrics,
+    admission: &Admission,
+    events: Option<&EventLog>,
+    limit: u32,
+) -> BatchRun {
+    debug_assert!(limit > 0);
+    let mut died = false;
+
+    // stage 1: the whole batch — first try plus at most one whole
+    // retry; a second full-size failure falls through to bisection
+    let mut whole_tries = 0u32;
+    while envs.len() > 1 {
+        let n = envs.len();
+        let images: Vec<Tensor> =
+            envs.iter().map(|e| e.req.image.clone()).collect();
+        let (result, panicked) = call_engine(engine, images, n);
+        died |= panicked;
+        match result {
+            Ok(out) => {
+                answer_batch(
+                    &out, envs, formed, worker, metrics, admission,
+                    events,
+                );
+                // only a clean first attempt feeds the EWMA
+                let observed =
+                    (whole_tries == 0).then_some((n, out.exec));
+                return BatchRun { observed, died };
+            }
+            Err(_) if whole_tries == 0 => {
+                whole_tries = 1;
+                metrics.retries.fetch_add(1, Ordering::Relaxed);
+                for env in &mut envs {
+                    env.attempt += 1;
+                    if let Some(log) = events {
+                        log.record(env.token.id(), Lifecycle::Retry);
+                    }
+                }
+                std::thread::sleep(retry_backoff(1));
+                envs = keep_live(envs, admission, metrics, events);
+                if envs.is_empty() {
+                    return BatchRun { observed: None, died };
+                }
+            }
+            Err(_) => {
+                // second full-size failure: bisect, so one poisoned
+                // request cannot hold its batch-mates hostage
+                metrics
+                    .requeued
+                    .fetch_add(envs.len() as u64, Ordering::Relaxed);
+                if let Some(log) = events {
+                    for env in &envs {
+                        log.record(env.token.id(), Lifecycle::Requeue);
+                    }
+                }
+                break;
+            }
+        }
+    }
+
+    // stage 2: isolated size-1 executions; each envelope burns its
+    // remaining per-request budget with backoff, then is quarantined
+    for mut env in envs {
+        loop {
+            if !env.token.is_live() {
+                discard_pruned(&env, admission, metrics, events);
+                break;
+            }
+            let (result, panicked) =
+                call_engine(engine, vec![env.req.image.clone()], 1);
+            died |= panicked;
+            match result {
+                Ok(out) => {
+                    answer_batch(
+                        &out,
+                        vec![env],
+                        formed,
+                        worker,
+                        metrics,
+                        admission,
+                        events,
+                    );
+                    break;
+                }
+                Err(e) => {
+                    env.attempt += 1;
+                    if env.attempt > limit {
+                        // budget exhausted in isolation: quarantined,
+                        // never retried again
+                        admission.release(env.lane);
+                        metrics
+                            .quarantined
+                            .fetch_add(1, Ordering::Relaxed);
+                        if let Some(log) = events {
+                            log.record(
+                                env.token.id(),
+                                Lifecycle::Quarantine,
+                            );
+                        }
+                        if env.token.try_claim() {
+                            metrics
+                                .errors
+                                .fetch_add(1, Ordering::Relaxed);
+                            let _ = env.reply.send(Err(anyhow::anyhow!(
+                                "{POISON_PREFIX}: request {} failed \
+                                 {} attempts: {e}",
+                                env.req.id,
+                                env.attempt + 1
+                            )));
+                        } else {
+                            metrics
+                                .duplicate_execs
+                                .fetch_add(1, Ordering::Relaxed);
+                        }
+                        break;
+                    }
+                    metrics.retries.fetch_add(1, Ordering::Relaxed);
+                    if let Some(log) = events {
+                        log.record(env.token.id(), Lifecycle::Retry);
+                    }
+                    std::thread::sleep(retry_backoff(env.attempt));
+                }
+            }
+        }
+    }
+    BatchRun { observed: None, died }
 }
 
 #[cfg(test)]

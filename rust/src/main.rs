@@ -12,8 +12,9 @@ use std::time::{Duration, Instant};
 
 use cnnlab::cli::Args;
 use cnnlab::coordinator::{
-    DeviceProfile, FormationPolicy, InferenceEngine, LaneBudgets,
-    PjrtEngine, ProfileState, RoutePolicy, Router, Server, ServerConfig,
+    DeviceProfile, EngineFactory, FormationPolicy, InferenceEngine,
+    LaneBudgets, PjrtEngine, ProfileState, RoutePolicy, Router, Server,
+    ServerConfig, SubmitError,
 };
 use cnnlab::device::{Accelerator, FpgaDevice, GpuDevice};
 use cnnlab::fpga;
@@ -96,6 +97,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
 ///  --coordinators 2 --route predictive --workers 2 --dispatch affinity
 ///  --profiles gpu,fpga --predictive --formation per_class
 ///  --lane-budget latency=8,throughput=10 --hedge-slo 20000
+///  --retry-limit 3 --respawn
 ///  --profile-state state.json --report-every 32`
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let net = network_by_name(args.get_or("network", "tinynet"))?;
@@ -137,6 +139,13 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         }
         None => None,
     };
+    // per-request execution retry budget: 0 fails fast (the default);
+    // positive retries a failed batch whole once, then bisects to
+    // size-1 and quarantines requests that keep failing in isolation
+    let retry_limit = args.get_usize("retry-limit", 0)? as u32;
+    // supervise workers: respawn a worker whose engine panicked
+    // mid-batch (fresh executor thread + engine, same EWMA table)
+    let respawn = args.has_flag("respawn");
     // learned-state persistence: load if the file exists, save on exit
     let profile_state_path = args.get("profile-state");
     // print worker/lane snapshots every N submissions (0 = only at end)
@@ -185,6 +194,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         formation,
         lane_budgets,
         event_log: Some(Arc::clone(&events)),
+        retry_limit,
+        respawn,
     };
     let loaded_state = match profile_state_path {
         Some(path) if std::path::Path::new(path).exists() => {
@@ -252,6 +263,10 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     for (i, pair) in profiled.into_iter().enumerate() {
         groups[i / workers].push(pair);
     }
+    // device threads created by respawns park here so they stay alive
+    // for the rest of the run (their engines hold only channel handles)
+    let respawn_services: Arc<std::sync::Mutex<Vec<ExecutorService>>> =
+        Arc::new(std::sync::Mutex::new(Vec::new()));
     let servers: Vec<Server> = groups
         .into_iter()
         .enumerate()
@@ -261,11 +276,56 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             } else {
                 loaded_state.as_ref().and_then(|s| s.backends.get(c))
             };
-            Server::spawn_pool_profiled_with_state(
-                group,
-                config.clone(),
-                state,
-            )
+            if respawn {
+                // each worker slot gets a factory: first call hands
+                // back the pre-built engine, later calls (supervisor
+                // respawns) build a fresh executor thread + engine
+                let factories: Vec<(
+                    EngineFactory<PjrtEngine>,
+                    DeviceProfile,
+                )> = group
+                    .into_iter()
+                    .map(|(engine, profile)| {
+                        let slot =
+                            std::sync::Mutex::new(Some(engine));
+                        let dir = dir.to_string();
+                        let net = net.clone();
+                        let batches = batches.clone();
+                        let keep = Arc::clone(&respawn_services);
+                        let f: EngineFactory<PjrtEngine> =
+                            Arc::new(move || {
+                                if let Some(e) =
+                                    slot.lock().unwrap().take()
+                                {
+                                    return e;
+                                }
+                                let svc = ExecutorService::spawn(&dir)
+                                    .expect("respawn executor service");
+                                let engine = PjrtEngine::new(
+                                    svc.handle(),
+                                    &net,
+                                    batches.clone(),
+                                    42,
+                                )
+                                .expect("respawn engine");
+                                keep.lock().unwrap().push(svc);
+                                engine
+                            });
+                        (f, profile)
+                    })
+                    .collect();
+                Server::spawn_supervised_with_state(
+                    factories,
+                    config.clone(),
+                    state,
+                )
+            } else {
+                Server::spawn_pool_profiled_with_state(
+                    group,
+                    config.clone(),
+                    state,
+                )
+            }
         })
         .collect();
     if formation == FormationPolicy::PerClass {
@@ -311,8 +371,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         match router.submit(img) {
             Ok(rx) => pending.push(rx),
             Err(e)
-                if e.to_string()
-                    .starts_with(cnnlab::coordinator::BUSY_PREFIX) =>
+                if SubmitError::classify(&e) == SubmitError::Shed =>
             {
                 shed += 1;
             }
@@ -430,6 +489,14 @@ fn print_snapshot_report(
             m.hedge_wins.load(Ordering::Relaxed),
             m.cancelled_pruned.load(Ordering::Relaxed),
             m.duplicate_execs.load(Ordering::Relaxed),
+        );
+        println!(
+            "    faults: retries={} requeued={} quarantined={} \
+             respawns={}",
+            m.retries.load(Ordering::Relaxed),
+            m.requeued.load(Ordering::Relaxed),
+            m.quarantined.load(Ordering::Relaxed),
+            m.respawns.load(Ordering::Relaxed),
         );
         for (i, label) in server.lane_labels().iter().enumerate() {
             let lane = m.lane(i);

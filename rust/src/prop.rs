@@ -109,14 +109,27 @@ impl<T: std::fmt::Debug> PropResult<T> {
     }
 }
 
-/// Run `prop` over `cases` random inputs; shrink on first failure.
-/// The property returns Err(description) to signal failure.
+/// Case-count multiplier read from `CNNLAB_PROP_MULT` (default 1), so
+/// a CI stress job can deepen every property-based test without code
+/// changes: `CNNLAB_PROP_MULT=10 cargo test --release`.
+fn case_multiplier() -> usize {
+    std::env::var("CNNLAB_PROP_MULT")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&m| m > 0)
+        .unwrap_or(1)
+}
+
+/// Run `prop` over `cases` random inputs (times the
+/// `CNNLAB_PROP_MULT` environment multiplier); shrink on first
+/// failure.  The property returns Err(description) to signal failure.
 pub fn check<T: Clone + std::fmt::Debug>(
     seed: u64,
     cases: usize,
     gen: &Gen<T>,
     prop: impl Fn(&T) -> Result<(), String>,
 ) -> PropResult<T> {
+    let cases = cases.saturating_mul(case_multiplier());
     let mut rng = Rng::new(seed);
     for _ in 0..cases {
         let input = (gen.draw)(&mut rng);
@@ -164,7 +177,9 @@ mod tests {
                 Err("out of range".into())
             }
         }) {
-            PropResult::Ok { cases } => assert_eq!(cases, 200),
+            PropResult::Ok { cases } => {
+                assert_eq!(cases, 200 * case_multiplier())
+            }
             other => panic!("{other:?}"),
         }
     }

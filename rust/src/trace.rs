@@ -36,6 +36,18 @@ pub enum Lifecycle {
     CancelPruned,
     /// A batch member executed on a device but lost the claim race.
     DuplicateExec,
+    /// A failed batch's live envelopes were retried on-device (same
+    /// worker, whole batch) after a transient execution failure.
+    Retry,
+    /// A failed batch was bisected and its live envelopes requeued for
+    /// isolated (size-1) execution.
+    Requeue,
+    /// A request exhausted its retry budget at batch size 1 and was
+    /// quarantined — it receives an error, its batch-mates do not.
+    Quarantine,
+    /// A dead worker thread was respawned by the supervisor with its
+    /// learned latency table preloaded.
+    Respawn,
 }
 
 impl Lifecycle {
@@ -45,6 +57,10 @@ impl Lifecycle {
             Lifecycle::HedgeWin => "hedge-win",
             Lifecycle::CancelPruned => "cancel-pruned",
             Lifecycle::DuplicateExec => "duplicate-exec",
+            Lifecycle::Retry => "retry",
+            Lifecycle::Requeue => "requeue",
+            Lifecycle::Quarantine => "quarantine",
+            Lifecycle::Respawn => "respawn",
         }
     }
 }

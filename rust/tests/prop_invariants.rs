@@ -1,15 +1,15 @@
 //! Property-based invariants over the coordinator and scheduler, via the
 //! in-repo `cnnlab::prop` framework (no proptest offline).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use cnnlab::coordinator::{
     pick_worker, BatchPolicy, Batcher, CurveEngine, DeviceProfile,
-    DispatchPolicy, Envelope, FormationPolicy, LaneBudgets, LaneClass,
-    MockEngine, Request, RoutePolicy, Router, Server, ServerConfig,
-    WorkerState,
+    DispatchPolicy, EngineFactory, Envelope, FaultPlan, FaultyEngine,
+    FormationPolicy, LaneBudgets, LaneClass, MockEngine, Request,
+    RoutePolicy, Router, Server, ServerConfig, WorkerState,
 };
 use cnnlab::device::DeviceKind;
 use cnnlab::fpga::{self, EngineConfig};
@@ -690,6 +690,168 @@ fn prop_cancelled_before_formation_never_reaches_a_worker() {
                     "cancelled request executed on a device".into()
                 );
             }
+        }
+        Ok(())
+    }));
+}
+
+/// THE EXACTLY-ONCE INVARIANT UNDER RETRY x HEDGING x CANCELLATION x
+/// WORKER DEATH: two single-worker coordinators behind an
+/// always-hedging router; both engines fail transiently every 3rd
+/// call under a retry budget of 2, backend a's first engine also
+/// panics mid-batch on its 4th call (supervision respawns it), and
+/// every third request is cancelled right after submission.  For any
+/// request count:
+/// * a request whose `cancel()` won is never answered;
+/// * every other request gets exactly one terminal reply — a success,
+///   or (only) a quarantine error — and `errors <= quarantined`;
+/// * envelope conservation: completions + error replies + prunes +
+///   duplicate executions account for both legs of every request,
+///   with nothing stranded by the death.
+#[test]
+fn prop_retry_hedging_cancellation_death_exactly_once() {
+    let gen = usize_in(4, 20);
+    expect_ok(check(47, 5, &gen, |&n| {
+        // backend a is supervised: only its *first* engine carries the
+        // scripted panic, so the respawned replacement comes up with
+        // the transient schedule alone
+        let first = Arc::new(AtomicBool::new(true));
+        let factory: EngineFactory<FaultyEngine<CurveEngine>> = {
+            let first = Arc::clone(&first);
+            Arc::new(move || {
+                let panic_on =
+                    if first.swap(false, Ordering::SeqCst) { 4 } else { 0 };
+                FaultyEngine::new(
+                    CurveEngine::new(0, 300),
+                    FaultPlan {
+                        fail_every: 3,
+                        panic_on_call: panic_on,
+                        ..Default::default()
+                    },
+                )
+            })
+        };
+        let config = ServerConfig {
+            policy: BatchPolicy::new(4, Duration::from_micros(500)),
+            queue_capacity: 256,
+            retry_limit: 2,
+            respawn: true,
+            ..Default::default()
+        };
+        let a = Server::spawn_supervised(
+            vec![(factory, DeviceProfile::unmodeled(DeviceKind::Gpu))],
+            config.clone(),
+        );
+        let b = Server::spawn_pool(
+            vec![FaultyEngine::new(
+                CurveEngine::new(0, 300),
+                FaultPlan { fail_every: 3, ..Default::default() },
+            )],
+            config,
+        );
+        let router = Router::new(
+            vec![a.client(), b.client()],
+            RoutePolicy::LeastOutstanding,
+        )
+        .with_hedge_slo(Duration::ZERO);
+        let mut rng = Rng::new(4000 + n as u64);
+        let mut live = Vec::new();
+        let mut dead = Vec::new();
+        for i in 0..n {
+            let (rx, token) = router
+                .submit_cancellable(Tensor::randn(
+                    &[3, 8, 8],
+                    &mut rng,
+                    0.1,
+                ))
+                .map_err(|e| e.to_string())?;
+            if i % 3 == 0 && token.cancel() {
+                dead.push(rx);
+            } else {
+                live.push(rx);
+            }
+        }
+        drop(router);
+        let (ma, mb) = (a.metrics(), b.metrics());
+        let mut answered_ok = 0u64;
+        let mut answered_err = 0u64;
+        for rx in &live {
+            match rx.recv().map_err(|_| "lost reply".to_string())? {
+                Ok(_) => answered_ok += 1,
+                Err(e) => {
+                    // the only legal error reply under a retry budget
+                    // is a quarantine
+                    if !e.to_string().contains("RequestPoisoned") {
+                        return Err(format!("unexpected error: {e}"));
+                    }
+                    answered_err += 1;
+                }
+            }
+            if rx.try_recv().is_ok() {
+                return Err("double reply".into());
+            }
+        }
+        for rx in &dead {
+            if rx.try_recv().is_ok() {
+                return Err("cancelled request answered".into());
+            }
+        }
+        // every live reply has landed; the cancelled legs resolve as
+        // soon as their batches form (or the respawned worker drains
+        // them) — poll instead of racing the 20ms supervisor tick
+        let total = 2 * n as u64;
+        let resolve = || {
+            ma.completed.load(Ordering::Relaxed)
+                + mb.completed.load(Ordering::Relaxed)
+                + ma.errors.load(Ordering::Relaxed)
+                + mb.errors.load(Ordering::Relaxed)
+                + ma.cancelled_pruned.load(Ordering::Relaxed)
+                + mb.cancelled_pruned.load(Ordering::Relaxed)
+                + ma.duplicate_execs.load(Ordering::Relaxed)
+                + mb.duplicate_execs.load(Ordering::Relaxed)
+        };
+        let deadline = Instant::now() + Duration::from_secs(3);
+        loop {
+            let resolved = resolve();
+            if resolved == total {
+                break;
+            }
+            if resolved > total {
+                return Err(format!(
+                    "{resolved} envelopes resolved for {total} legs"
+                ));
+            }
+            if Instant::now() > deadline {
+                return Err(format!(
+                    "conservation stalled: {resolved}/{total} \
+                     envelopes resolved"
+                ));
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let completed = ma.completed.load(Ordering::Relaxed)
+            + mb.completed.load(Ordering::Relaxed);
+        if completed != answered_ok {
+            return Err(format!(
+                "{completed} completions for {answered_ok} success \
+                 replies"
+            ));
+        }
+        let errors = ma.errors.load(Ordering::Relaxed)
+            + mb.errors.load(Ordering::Relaxed);
+        if errors != answered_err {
+            return Err(format!(
+                "{errors} error-counter hits for {answered_err} error \
+                 replies"
+            ));
+        }
+        let quarantined = ma.quarantined.load(Ordering::Relaxed)
+            + mb.quarantined.load(Ordering::Relaxed);
+        if errors > quarantined {
+            return Err(format!(
+                "{errors} error replies exceed {quarantined} \
+                 quarantines — a transient fault leaked to a caller"
+            ));
         }
         Ok(())
     }));
