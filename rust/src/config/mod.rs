@@ -6,8 +6,8 @@ pub mod toml;
 use std::time::Duration;
 
 use crate::coordinator::{
-    BatchPolicy, DispatchPolicy, FormationPolicy, LaneBudgets,
-    RoutePolicy, ServerConfig,
+    BatchPolicy, BrownoutConfig, DispatchPolicy, FormationPolicy,
+    LaneBudgets, RoutePolicy, ServerConfig,
 };
 use crate::model::{
     Act, ConvSpec, FcSpec, Layer, LrnSpec, Network, PoolKind, PoolSpec,
@@ -66,6 +66,21 @@ pub struct ServingConfig {
     /// mid-batch is retired from dispatch and respawned with its
     /// learned EWMA latency table intact.
     pub respawn: bool,
+    /// Brownout trip deadline (µs): when any non-latency lane's
+    /// predicted pressure (admission wait + cheapest live worker's
+    /// completion estimate) stays above this bound for
+    /// `brownout_trip_loops` consecutive monitor samples, the server
+    /// degrades — throughput-class traffic is shed with a typed
+    /// `Brownout` error while latency-class traffic keeps flowing.
+    /// `None` (the default) disables the monitor.
+    pub brownout_deadline_us: Option<u64>,
+    /// Consecutive over-deadline samples before entering `Degraded`.
+    pub brownout_trip_loops: u32,
+    /// Hysteresis: pressure must fall below this (µs) before recovery
+    /// starts counting.  `None` keeps the default of half the deadline.
+    pub brownout_exit_below_us: Option<u64>,
+    /// Consecutive under-threshold samples before recovering.
+    pub brownout_exit_loops: u32,
 }
 
 impl Default for ServingConfig {
@@ -89,6 +104,10 @@ impl Default for ServingConfig {
             profile_state: None,
             retry_limit: 0,
             respawn: false,
+            brownout_deadline_us: None,
+            brownout_trip_loops: 3,
+            brownout_exit_below_us: None,
+            brownout_exit_loops: 12,
         }
     }
 }
@@ -115,7 +134,21 @@ impl ServingConfig {
             event_log: None,
             retry_limit: self.retry_limit,
             respawn: self.respawn,
+            brownout: self.brownout(),
         }
+    }
+
+    /// The brownout monitor configuration, if enabled.
+    pub fn brownout(&self) -> Option<BrownoutConfig> {
+        self.brownout_deadline_us.map(|us| {
+            let mut b = BrownoutConfig::new(Duration::from_micros(us))
+                .with_trip_loops(self.brownout_trip_loops)
+                .with_exit_loops(self.brownout_exit_loops);
+            if let Some(below) = self.brownout_exit_below_us {
+                b = b.with_exit_below(Duration::from_micros(below));
+            }
+            b
+        })
     }
 
     pub fn from_toml(doc: &TomlValue) -> anyhow::Result<ServingConfig> {
@@ -206,6 +239,57 @@ impl ServingConfig {
             {
                 cfg.respawn = v;
             }
+            if let Some(v) =
+                t.get("brownout_deadline_us").and_then(TomlValue::as_int)
+            {
+                anyhow::ensure!(
+                    v > 0,
+                    "brownout_deadline_us must be positive"
+                );
+                cfg.brownout_deadline_us = Some(v as u64);
+            }
+            if let Some(v) =
+                t.get("brownout_trip_loops").and_then(TomlValue::as_int)
+            {
+                anyhow::ensure!(
+                    v > 0,
+                    "brownout_trip_loops must be positive"
+                );
+                cfg.brownout_trip_loops = v as u32;
+            }
+            if let Some(v) = t
+                .get("brownout_exit_below_us")
+                .and_then(TomlValue::as_int)
+            {
+                anyhow::ensure!(
+                    v > 0,
+                    "brownout_exit_below_us must be positive"
+                );
+                cfg.brownout_exit_below_us = Some(v as u64);
+            }
+            if let Some(v) =
+                t.get("brownout_exit_loops").and_then(TomlValue::as_int)
+            {
+                anyhow::ensure!(
+                    v > 0,
+                    "brownout_exit_loops must be positive"
+                );
+                cfg.brownout_exit_loops = v as u32;
+            }
+            if let (Some(d), Some(e)) =
+                (cfg.brownout_deadline_us, cfg.brownout_exit_below_us)
+            {
+                anyhow::ensure!(
+                    e <= d,
+                    "brownout_exit_below_us above the deadline would \
+                     oscillate"
+                );
+            }
+            anyhow::ensure!(
+                cfg.brownout_deadline_us.is_some()
+                    || cfg.brownout_exit_below_us.is_none(),
+                "brownout_exit_below_us requires brownout_deadline_us"
+            );
             anyhow::ensure!(
                 cfg.lane_budgets.is_empty()
                     || cfg.formation == FormationPolicy::PerClass,
@@ -562,6 +646,60 @@ mod tests {
         assert!(!sc.respawn);
         // negative budgets rejected
         let doc = parse_toml("[serving]\nretry_limit = -1").unwrap();
+        assert!(ServingConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn serving_brownout_knobs() {
+        let doc = parse_toml(
+            r#"
+            [serving]
+            brownout_deadline_us = 100000
+            brownout_trip_loops = 2
+            brownout_exit_below_us = 70000
+            brownout_exit_loops = 30
+        "#,
+        )
+        .unwrap();
+        let cfg = ServingConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.brownout_deadline_us, Some(100_000));
+        let b = cfg.server_config().brownout.unwrap();
+        assert_eq!(b.deadline, Duration::from_millis(100));
+        assert_eq!(b.trip_loops, 2);
+        assert_eq!(b.exit_below, Duration::from_millis(70));
+        assert_eq!(b.exit_loops, 30);
+        // deadline alone inherits the hysteresis defaults
+        let doc = parse_toml(
+            "[serving]\nbrownout_deadline_us = 50000",
+        )
+        .unwrap();
+        let b = ServingConfig::from_toml(&doc)
+            .unwrap()
+            .server_config()
+            .brownout
+            .unwrap();
+        assert_eq!(b.trip_loops, 3);
+        assert_eq!(b.exit_below, Duration::from_millis(25));
+        assert_eq!(b.exit_loops, 12);
+        // default: monitor off
+        let cfg = ServingConfig::default();
+        assert_eq!(cfg.brownout_deadline_us, None);
+        assert!(cfg.server_config().brownout.is_none());
+        // junk rejected: zero deadline, inverted hysteresis, exit
+        // bound without a deadline to trip on
+        let doc =
+            parse_toml("[serving]\nbrownout_deadline_us = 0").unwrap();
+        assert!(ServingConfig::from_toml(&doc).is_err());
+        let doc = parse_toml(
+            "[serving]\nbrownout_deadline_us = 1000\n\
+             brownout_exit_below_us = 2000",
+        )
+        .unwrap();
+        assert!(ServingConfig::from_toml(&doc).is_err());
+        let doc = parse_toml(
+            "[serving]\nbrownout_exit_below_us = 1000",
+        )
+        .unwrap();
         assert!(ServingConfig::from_toml(&doc).is_err());
     }
 

@@ -151,6 +151,21 @@ impl Batcher {
         self.policy
     }
 
+    /// Swap the closing policy and artifact alignment in place — the
+    /// config hot-reload path.  Queued envelopes are untouched (FIFO
+    /// order and `arrived` stamps preserved: nothing is dropped or
+    /// reordered) and the learned gap EWMA survives, so the predictive
+    /// close stays warm across a reload.  Already-queued requests
+    /// close under the *new* policy, which only ever re-times their
+    /// close, never loses them.
+    pub fn set_policy(&mut self, policy: BatchPolicy, sizes: &[usize]) {
+        let mut align = sizes.to_vec();
+        align.sort_unstable();
+        align.dedup();
+        self.policy = policy;
+        self.align = align;
+    }
+
     pub fn push(&mut self, env: Envelope) {
         // a requeued envelope (attempt > 0) is not a fresh arrival: its
         // original admission already trained the gap estimator, and its
@@ -812,6 +827,33 @@ mod tests {
         assert_eq!(b.prune_cancelled().len(), 1);
         assert!(b.next_deadline().is_none());
         assert!(b.pop_ready(t0 + Duration::from_secs(1)).is_none());
+    }
+
+    #[test]
+    fn set_policy_preserves_queue_and_gap_state() {
+        // hot-reload mid-stream: queued envelopes and the warm gap
+        // estimator must survive a policy/alignment swap untouched
+        let mut b = Batcher::with_alignment(
+            BatchPolicy::new(8, Duration::from_secs(10)),
+            &[2, 4, 8],
+        );
+        let t0 = Instant::now();
+        let gap = Duration::from_millis(10);
+        for i in 0..5u64 {
+            b.push(env(i, t0 + gap * i as u32));
+        }
+        let warm_gap = b.mean_gap().unwrap();
+        assert!(b.pop_ready(t0 + gap * 4).is_none(), "not full yet");
+        b.set_policy(BatchPolicy::new(3, Duration::from_secs(10)), &[]);
+        assert_eq!(b.pending(), 5, "reload must not drop queued work");
+        assert_eq!(b.mean_gap(), Some(warm_gap), "gap EWMA must survive");
+        // the queue now closes under the new max_batch, FIFO intact
+        let now = t0 + gap * 4;
+        assert_eq!(ids(&b.pop_ready(now).unwrap()), [0, 1, 2]);
+        // a post-reload arrival still trains the same estimator
+        b.push(env(5, t0 + gap * 5));
+        assert_eq!(ids(&b.pop_ready(t0 + gap * 5).unwrap()), [3, 4, 5]);
+        assert_eq!(b.pending(), 0);
     }
 
     #[test]

@@ -496,6 +496,39 @@ impl LaneSet {
         }
     }
 
+    /// Apply a hot-reloaded formation plan in place — the zero-drop
+    /// half of `Server::reload`.  Each lane swaps its batch policy,
+    /// artifact alignment, and preferred workers for the matching lane
+    /// of the new plan while its batcher queue (FIFO order intact) and
+    /// learned arrival estimator survive untouched: queued envelopes
+    /// close under the new policy, nothing is dropped or reordered,
+    /// and admission slots stay accounted to the same lane indices.
+    /// Fails (changing nothing) if the new plan's lane geometry —
+    /// count or class sequence — differs from the live one: admission
+    /// accounting is indexed by lane, so a geometry change requires a
+    /// restart, not a reload.
+    pub fn reload(&mut self, plan: FormationPlan) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            plan.lanes.len() == self.lanes.len(),
+            "reload changes lane count {} -> {} (restart required)",
+            self.lanes.len(),
+            plan.lanes.len()
+        );
+        for (lane, spec) in self.lanes.iter().zip(&plan.lanes) {
+            anyhow::ensure!(
+                lane.class == spec.class,
+                "reload changes lane class {} -> {} (restart required)",
+                lane.class.name(),
+                spec.class.name()
+            );
+        }
+        for (lane, spec) in self.lanes.iter_mut().zip(plan.lanes) {
+            lane.batcher.set_policy(spec.policy, &spec.align);
+            lane.workers = spec.workers;
+        }
+        Ok(())
+    }
+
     /// Steer a request to a lane and queue it there.
     pub fn push(&mut self, env: Envelope) {
         let arrived = env.req.arrived;
@@ -1214,6 +1247,39 @@ mod tests {
         ];
         let b = LaneBudgets::derive(&plan, &states, &skewed, 16);
         assert_eq!(b.get(LaneClass::Latency), Some(1));
+    }
+
+    /// Hot-reload against a live lane set: queued envelopes survive a
+    /// policy swap, close under the new dial, and a geometry change is
+    /// rejected wholesale.
+    #[test]
+    fn reload_swaps_policies_without_dropping_queued_work() {
+        let states = vec![latency_state(), throughput_state()];
+        let base = BatchPolicy::new(8, Duration::from_millis(12));
+        let (mut ls, rxs) = lane_set(states.clone(), base);
+        let t0 = Instant::now();
+        for i in 0..8 {
+            ls.push(env(i, t0)); // burst: 2 -> latency, 6 -> throughput
+        }
+        assert_eq!(ls.lane_pending(1), 6);
+        // reload with a tighter dial: max_batch 4, deadline 3ms
+        let new_plan = FormationPlan::derive(
+            BatchPolicy::new(4, Duration::from_millis(3)),
+            &states,
+        );
+        ls.reload(new_plan).unwrap();
+        assert_eq!(ls.pending(), 8, "reload must not drop queued work");
+        // the queued throughput-lane burst now closes at the new 3ms
+        // deadline in max_batch-4 cuts instead of waiting out 12ms
+        ls.dispatch_ready(t0 + Duration::from_millis(3));
+        let tput_batches: Vec<usize> =
+            rxs[1].try_iter().map(|b| b.envs.len()).collect();
+        assert_eq!(tput_batches, vec![4, 2], "new policy cuts the queue");
+        // geometry changes are rejected: a single-lane plan cannot
+        // replace a two-lane set
+        let solo = FormationPlan::derive(base, &states[..1]);
+        assert!(ls.reload(solo).is_err());
+        assert_eq!(ls.lanes(), 2, "failed reload must change nothing");
     }
 
     #[test]

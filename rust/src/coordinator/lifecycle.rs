@@ -1,0 +1,447 @@
+//! Operator-facing lifecycle machinery: the server/router state
+//! machine (`Running → Draining → Suspended → Resuming → Running`,
+//! plus `Degraded` for brownout), the eventcount-style [`Notifier`]
+//! that replaces fixed-interval shutdown polling, and the
+//! [`BrownoutConfig`] knobs for deadline-aware load shedding.
+//!
+//! The state machine is deliberately small: every transition is driven
+//! either by an operator verb (`drain`, `resume`, `reload`) or by the
+//! leader's brownout monitor, and each one emits a typed
+//! [`crate::trace::Lifecycle`] event so the `--report-every` report and
+//! post-run dumps show exactly when and why the server changed state.
+//!
+//! ```text
+//!            drain                    flushed                resume
+//! Running ----------> Draining -----------------> Suspended --------+
+//!    ^  \                                                           |
+//!    |   \ pressure > deadline for K loops                          v
+//!    |    '-----------------> Degraded                          Resuming
+//!    |                           |                                  |
+//!    +------ hysteresis exit ----+                                  |
+//!    +--------------------------------------------------------------+
+//! ```
+
+use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Server/router lifecycle states.  `Degraded` (brownout) still serves
+/// traffic — it sheds throughput-class admissions to protect
+/// latency-class tails — while `Draining`/`Suspended`/`Resuming`
+/// admit nothing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum ServerState {
+    /// Serving normally.
+    Running = 0,
+    /// Brownout: admitting latency-class traffic only.
+    Degraded = 1,
+    /// Admission closed; in-flight envelopes flushing to completion.
+    Draining = 2,
+    /// Fully flushed; workers parked with profile state persisted.
+    Suspended = 3,
+    /// Warm state being restored; admission still closed.
+    Resuming = 4,
+}
+
+impl ServerState {
+    pub fn name(self) -> &'static str {
+        match self {
+            ServerState::Running => "running",
+            ServerState::Degraded => "degraded",
+            ServerState::Draining => "draining",
+            ServerState::Suspended => "suspended",
+            ServerState::Resuming => "resuming",
+        }
+    }
+
+    /// Whether new submissions are admitted at all in this state
+    /// (brownout still admits — class filtering happens separately).
+    pub fn admits(self) -> bool {
+        matches!(self, ServerState::Running | ServerState::Degraded)
+    }
+
+    fn from_u8(v: u8) -> ServerState {
+        match v {
+            1 => ServerState::Degraded,
+            2 => ServerState::Draining,
+            3 => ServerState::Suspended,
+            4 => ServerState::Resuming,
+            _ => ServerState::Running,
+        }
+    }
+}
+
+/// Shared, lock-free lifecycle cell.  Submitters read it on every
+/// admission (one `Acquire` load); transitions are rare and go through
+/// [`LifecycleState::transition`] so illegal jumps (e.g. `Suspended →
+/// Degraded`) can never be published.
+#[derive(Debug)]
+pub struct LifecycleState {
+    state: AtomicU8,
+}
+
+impl Default for LifecycleState {
+    fn default() -> Self {
+        LifecycleState::new()
+    }
+}
+
+impl LifecycleState {
+    pub fn new() -> LifecycleState {
+        LifecycleState { state: AtomicU8::new(ServerState::Running as u8) }
+    }
+
+    pub fn get(&self) -> ServerState {
+        ServerState::from_u8(self.state.load(Ordering::Acquire))
+    }
+
+    /// Compare-and-swap transition: succeeds only if the current state
+    /// is `from`, returning whether the swap happened.  All writers go
+    /// through this so concurrent operator verbs cannot race past each
+    /// other (two drains, a drain during resume, ...).
+    pub fn transition(&self, from: ServerState, to: ServerState) -> bool {
+        self.state
+            .compare_exchange(
+                from as u8,
+                to as u8,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            )
+            .is_ok()
+    }
+}
+
+/// Eventcount-style condvar wakeup: a notifier that never loses a
+/// wakeup and never takes the mutex on the notify fast path unless a
+/// waiter is actually parked.
+///
+/// Protocol: a waiter reads `seq()` *before* checking its predicate,
+/// then calls `wait_timeout(seen, ..)` — if any notify landed after
+/// the `seq()` read, the wait returns immediately instead of sleeping
+/// through it.  This replaces the fixed `SHUTDOWN_POLL` sleeps in the
+/// leader and supervisor loops: shutdown/drain latency becomes
+/// event-driven while idle threads still park properly.
+#[derive(Debug, Default)]
+pub struct Notifier {
+    gen: AtomicU64,
+    sleepers: AtomicUsize,
+    lock: Mutex<()>,
+    cv: Condvar,
+}
+
+impl Notifier {
+    pub fn new() -> Notifier {
+        Notifier::default()
+    }
+
+    /// Current generation — capture *before* checking the condition
+    /// you are about to wait on.
+    pub fn seq(&self) -> u64 {
+        self.gen.load(Ordering::Acquire)
+    }
+
+    /// Wake every current waiter.  Lock-free when nobody is parked
+    /// (the common case: submitters notify on every successful send,
+    /// the leader almost never sleeps past its batch deadline).
+    pub fn notify(&self) {
+        self.gen.fetch_add(1, Ordering::Release);
+        if self.sleepers.load(Ordering::Acquire) > 0 {
+            // the mutex round-trip orders this notify against a waiter
+            // that registered but has not yet parked on the condvar
+            let _g = self.lock.lock().unwrap();
+            self.cv.notify_all();
+        }
+    }
+
+    /// Park until a notify lands after generation `seen`, or `timeout`
+    /// elapses — whichever is first.  Returns the generation observed
+    /// on wakeup (feed it back in as the next `seen` only after
+    /// re-checking the predicate).
+    pub fn wait_timeout(&self, seen: u64, timeout: Duration) -> u64 {
+        let deadline = Instant::now() + timeout;
+        self.sleepers.fetch_add(1, Ordering::AcqRel);
+        let mut guard = self.lock.lock().unwrap();
+        loop {
+            let now_gen = self.gen.load(Ordering::Acquire);
+            if now_gen != seen {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (g, _res) =
+                self.cv.wait_timeout(guard, deadline - now).unwrap();
+            guard = g;
+        }
+        drop(guard);
+        self.sleepers.fetch_sub(1, Ordering::AcqRel);
+        self.gen.load(Ordering::Acquire)
+    }
+}
+
+/// Brownout (deadline-aware shedding) knobs.
+///
+/// The leader's monitor computes, each loop, the worst predicted
+/// completion pressure over the *sheddable* (non-latency-class) lanes:
+/// published formation wait plus the best live worker's predicted
+/// completion for a single request.  When that pressure exceeds
+/// `deadline` for `trip_loops` consecutive loops the server enters
+/// `Degraded` and sheds throughput-class admissions
+/// ([`crate::coordinator::SubmitError::Brownout`]); it exits once
+/// pressure stays below `exit_below` for `exit_loops` consecutive
+/// loops — the hysteresis gap prevents flapping at the threshold.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BrownoutConfig {
+    /// Pressure bound (predicted wait + exec) that trips the brownout.
+    pub deadline: Duration,
+    /// Consecutive over-deadline leader loops before tripping.
+    pub trip_loops: u32,
+    /// Pressure must fall below this (not merely below `deadline`)
+    /// before recovery starts counting — the hysteresis band.
+    pub exit_below: Duration,
+    /// Consecutive under-`exit_below` loops before recovering.
+    pub exit_loops: u32,
+}
+
+impl BrownoutConfig {
+    /// Defaults: trip after 3 consecutive over-deadline loops, exit
+    /// once pressure holds below half the deadline for 12 loops.
+    pub fn new(deadline: Duration) -> BrownoutConfig {
+        assert!(deadline > Duration::ZERO, "brownout deadline must be > 0");
+        BrownoutConfig {
+            deadline,
+            trip_loops: 3,
+            exit_below: deadline / 2,
+            exit_loops: 12,
+        }
+    }
+
+    pub fn with_trip_loops(mut self, loops: u32) -> BrownoutConfig {
+        assert!(loops > 0, "trip_loops must be > 0");
+        self.trip_loops = loops;
+        self
+    }
+
+    pub fn with_exit_below(mut self, below: Duration) -> BrownoutConfig {
+        assert!(
+            below <= self.deadline,
+            "hysteresis exit bound above the trip deadline would oscillate"
+        );
+        self.exit_below = below;
+        self
+    }
+
+    pub fn with_exit_loops(mut self, loops: u32) -> BrownoutConfig {
+        assert!(loops > 0, "exit_loops must be > 0");
+        self.exit_loops = loops;
+        self
+    }
+}
+
+/// The leader-side brownout monitor: counts consecutive over/under
+/// loops against a [`BrownoutConfig`] and reports when to trip or
+/// recover.  Pure state machine — the leader feeds it one pressure
+/// sample per loop and applies the returned transition.
+#[derive(Debug)]
+pub struct BrownoutMonitor {
+    config: BrownoutConfig,
+    over: u32,
+    under: u32,
+}
+
+/// What the monitor asks the leader to do after a sample.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BrownoutStep {
+    /// No transition this loop.
+    Hold,
+    /// Pressure exceeded the deadline for `trip_loops` loops: enter
+    /// `Degraded`.
+    Trip,
+    /// Pressure held below the hysteresis bound for `exit_loops`
+    /// loops: return to `Running`.
+    Recover,
+}
+
+impl BrownoutMonitor {
+    pub fn new(config: BrownoutConfig) -> BrownoutMonitor {
+        BrownoutMonitor { config, over: 0, under: 0 }
+    }
+
+    pub fn config(&self) -> BrownoutConfig {
+        self.config
+    }
+
+    /// Feed one pressure sample (µs) observed while in the given
+    /// state.  `None` pressure (no sheddable lane has a live, warm
+    /// worker) counts as under-threshold: shedding could not relieve
+    /// anything, so the monitor leans toward recovery.
+    pub fn observe(
+        &mut self,
+        state: ServerState,
+        pressure_us: Option<u64>,
+    ) -> BrownoutStep {
+        let deadline_us = self.config.deadline.as_micros() as u64;
+        let exit_us = self.config.exit_below.as_micros() as u64;
+        match state {
+            ServerState::Running => {
+                self.under = 0;
+                if pressure_us.is_some_and(|p| p > deadline_us) {
+                    self.over += 1;
+                    if self.over >= self.config.trip_loops {
+                        self.over = 0;
+                        return BrownoutStep::Trip;
+                    }
+                } else {
+                    self.over = 0;
+                }
+                BrownoutStep::Hold
+            }
+            ServerState::Degraded => {
+                self.over = 0;
+                if pressure_us.is_none_or(|p| p < exit_us) {
+                    self.under += 1;
+                    if self.under >= self.config.exit_loops {
+                        self.under = 0;
+                        return BrownoutStep::Recover;
+                    }
+                } else {
+                    self.under = 0;
+                }
+                BrownoutStep::Hold
+            }
+            // draining/suspended/resuming: brownout is moot, reset
+            _ => {
+                self.over = 0;
+                self.under = 0;
+                BrownoutStep::Hold
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn state_names_and_admission_gate() {
+        assert_eq!(ServerState::Running.name(), "running");
+        assert_eq!(ServerState::Degraded.name(), "degraded");
+        assert_eq!(ServerState::Draining.name(), "draining");
+        assert_eq!(ServerState::Suspended.name(), "suspended");
+        assert_eq!(ServerState::Resuming.name(), "resuming");
+        assert!(ServerState::Running.admits());
+        assert!(ServerState::Degraded.admits());
+        assert!(!ServerState::Draining.admits());
+        assert!(!ServerState::Suspended.admits());
+        assert!(!ServerState::Resuming.admits());
+    }
+
+    #[test]
+    fn transitions_are_compare_and_swap() {
+        let ls = LifecycleState::new();
+        assert_eq!(ls.get(), ServerState::Running);
+        assert!(ls.transition(ServerState::Running, ServerState::Draining));
+        assert_eq!(ls.get(), ServerState::Draining);
+        // a second drain (or any transition from a stale `from`) fails
+        assert!(!ls.transition(ServerState::Running, ServerState::Draining));
+        assert!(!ls.transition(ServerState::Running, ServerState::Degraded));
+        assert!(ls.transition(ServerState::Draining, ServerState::Suspended));
+        assert!(ls.transition(ServerState::Suspended, ServerState::Resuming));
+        assert!(ls.transition(ServerState::Resuming, ServerState::Running));
+        assert_eq!(ls.get(), ServerState::Running);
+    }
+
+    #[test]
+    fn notifier_wakes_a_parked_waiter() {
+        let n = Arc::new(Notifier::new());
+        let seen = n.seq();
+        let n2 = Arc::clone(&n);
+        let t = std::thread::spawn(move || {
+            n2.wait_timeout(seen, Duration::from_secs(10))
+        });
+        // give the waiter a moment to park, then wake it — the join
+        // below would take 10s if the notify were lost
+        std::thread::sleep(Duration::from_millis(20));
+        n.notify();
+        let woke = Instant::now();
+        let g = t.join().unwrap();
+        assert!(g > seen);
+        assert!(woke.elapsed() < Duration::from_secs(5));
+    }
+
+    #[test]
+    fn notifier_never_misses_a_pre_wait_notify() {
+        // notify lands between the seq() read and the wait: the wait
+        // must return immediately, not sleep out the timeout
+        let n = Notifier::new();
+        let seen = n.seq();
+        n.notify();
+        let t0 = Instant::now();
+        let g = n.wait_timeout(seen, Duration::from_secs(5));
+        assert!(t0.elapsed() < Duration::from_secs(1), "lost wakeup");
+        assert!(g > seen);
+    }
+
+    #[test]
+    fn notifier_times_out_without_notify() {
+        let n = Notifier::new();
+        let seen = n.seq();
+        let t0 = Instant::now();
+        let g = n.wait_timeout(seen, Duration::from_millis(30));
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+        assert_eq!(g, seen);
+    }
+
+    #[test]
+    fn brownout_trips_after_consecutive_overloads_only() {
+        let cfg = BrownoutConfig::new(Duration::from_millis(10))
+            .with_trip_loops(3)
+            .with_exit_loops(2);
+        let mut m = BrownoutMonitor::new(cfg);
+        let over = Some(11_000);
+        let under = Some(1_000);
+        let r = ServerState::Running;
+        assert_eq!(m.observe(r, over), BrownoutStep::Hold);
+        assert_eq!(m.observe(r, over), BrownoutStep::Hold);
+        // a dip resets the streak
+        assert_eq!(m.observe(r, under), BrownoutStep::Hold);
+        assert_eq!(m.observe(r, over), BrownoutStep::Hold);
+        assert_eq!(m.observe(r, over), BrownoutStep::Hold);
+        assert_eq!(m.observe(r, over), BrownoutStep::Trip);
+    }
+
+    #[test]
+    fn brownout_exits_by_hysteresis() {
+        // deadline 10ms, exit_below 4ms: 5ms is below the deadline but
+        // inside the hysteresis band, so it must NOT count as recovery
+        let cfg = BrownoutConfig::new(Duration::from_millis(10))
+            .with_trip_loops(1)
+            .with_exit_below(Duration::from_millis(4))
+            .with_exit_loops(2);
+        let mut m = BrownoutMonitor::new(cfg);
+        let d = ServerState::Degraded;
+        assert_eq!(m.observe(d, Some(5_000)), BrownoutStep::Hold);
+        assert_eq!(m.observe(d, Some(3_000)), BrownoutStep::Hold);
+        // the band sample above reset nothing; but a fresh over-band
+        // sample resets the under streak
+        assert_eq!(m.observe(d, Some(5_000)), BrownoutStep::Hold);
+        assert_eq!(m.observe(d, Some(3_000)), BrownoutStep::Hold);
+        assert_eq!(m.observe(d, Some(2_000)), BrownoutStep::Recover);
+        // cold/no-pressure counts toward recovery
+        let mut m = BrownoutMonitor::new(cfg);
+        assert_eq!(m.observe(d, None), BrownoutStep::Hold);
+        assert_eq!(m.observe(d, None), BrownoutStep::Recover);
+    }
+
+    #[test]
+    fn brownout_defaults_derive_hysteresis() {
+        let cfg = BrownoutConfig::new(Duration::from_millis(100));
+        assert_eq!(cfg.trip_loops, 3);
+        assert_eq!(cfg.exit_below, Duration::from_millis(50));
+        assert_eq!(cfg.exit_loops, 12);
+    }
+}

@@ -54,6 +54,25 @@ pub struct ServerMetrics {
     /// Worker threads respawned by the supervisor after a mid-batch
     /// death.
     pub respawns: AtomicU64,
+    /// Drain transitions (`Running`/`Degraded` → `Draining`).
+    pub drains: AtomicU64,
+    /// Drains that completed: every in-flight envelope answered and
+    /// the workers parked (`Draining` → `Suspended`).
+    pub suspends: AtomicU64,
+    /// Suspended servers restored to `Running` with warm state.
+    pub resumes: AtomicU64,
+    /// Live config hot-reloads applied (formation plan / lane budgets
+    /// re-derived with in-flight requests preserved).
+    pub reloads: AtomicU64,
+    /// Brownout entries: sustained over-deadline pressure tripped the
+    /// `Degraded` state.
+    pub brownout_entries: AtomicU64,
+    /// Brownout exits by hysteresis back to `Running`.
+    pub brownout_exits: AtomicU64,
+    /// Throughput-class submissions shed while `Degraded` (typed
+    /// `SubmitError::Brownout`); latency-class traffic is never
+    /// counted here.
+    pub brownout_shed: AtomicU64,
     shards: Vec<Mutex<MetricsShard>>,
     lanes: Vec<LaneCounters>,
 }
@@ -118,6 +137,13 @@ impl ServerMetrics {
             requeued: AtomicU64::new(0),
             quarantined: AtomicU64::new(0),
             respawns: AtomicU64::new(0),
+            drains: AtomicU64::new(0),
+            suspends: AtomicU64::new(0),
+            resumes: AtomicU64::new(0),
+            reloads: AtomicU64::new(0),
+            brownout_entries: AtomicU64::new(0),
+            brownout_exits: AtomicU64::new(0),
+            brownout_shed: AtomicU64::new(0),
             shards: (0..workers)
                 .map(|_| Mutex::new(MetricsShard::default()))
                 .collect(),
@@ -252,5 +278,13 @@ mod tests {
         assert_eq!(m.requeued.load(Ordering::Relaxed), 0);
         assert_eq!(m.quarantined.load(Ordering::Relaxed), 0);
         assert_eq!(m.respawns.load(Ordering::Relaxed), 0);
+        // lifecycle counters start at zero
+        assert_eq!(m.drains.load(Ordering::Relaxed), 0);
+        assert_eq!(m.suspends.load(Ordering::Relaxed), 0);
+        assert_eq!(m.resumes.load(Ordering::Relaxed), 0);
+        assert_eq!(m.reloads.load(Ordering::Relaxed), 0);
+        assert_eq!(m.brownout_entries.load(Ordering::Relaxed), 0);
+        assert_eq!(m.brownout_exits.load(Ordering::Relaxed), 0);
+        assert_eq!(m.brownout_shed.load(Ordering::Relaxed), 0);
     }
 }

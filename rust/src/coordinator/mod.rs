@@ -12,6 +12,7 @@ pub mod batcher;
 pub mod dispatch;
 pub mod engine;
 pub mod formation;
+pub mod lifecycle;
 pub mod metrics;
 pub mod persist;
 pub mod request;
@@ -29,6 +30,10 @@ pub use engine::{
 pub use formation::{
     FormationPlan, FormationPolicy, LaneBudgets, LaneClass, LaneSet,
 };
+pub use lifecycle::{
+    BrownoutConfig, BrownoutMonitor, BrownoutStep, LifecycleState, Notifier,
+    ServerState,
+};
 pub use metrics::{LaneCounters, ServerMetrics};
 pub use persist::{ArrivalState, ProfileState, WorkerTable};
 pub use request::{CancelToken, Envelope, Request, Response};
@@ -38,5 +43,5 @@ pub use router::{
 };
 pub use server::{
     Client, EngineFactory, ReplyReceiver, Server, ServerConfig,
-    SubmitError, BUSY_PREFIX, POISON_PREFIX,
+    SubmitError, BROWNOUT_PREFIX, BUSY_PREFIX, DRAIN_PREFIX, POISON_PREFIX,
 };

@@ -106,6 +106,11 @@ pub struct RouterMetrics {
     /// Requests rejected by every live backend and returned to the
     /// caller as `ServerBusy`.
     pub shed: AtomicU64,
+    /// Rejections by a draining/suspended backend: deflected like a
+    /// shed, but the backend is additionally cooled down (it will not
+    /// admit until resumed) — without ever being marked dead, so a
+    /// planned drain never trips the single-flight dead-backend probe.
+    pub drain_deflections: AtomicU64,
     /// Duplicates launched by hedged dispatch (the chosen backend's
     /// prediction exceeded the hedge SLO and a second backend accepted
     /// the copy).  Wins are counted where they are observed: the
@@ -119,6 +124,7 @@ impl RouterMetrics {
         RouterMetrics {
             failovers: AtomicU64::new(0),
             shed: AtomicU64::new(0),
+            drain_deflections: AtomicU64::new(0),
             hedges: AtomicU64::new(0),
             backends: (0..backends)
                 .map(|_| BackendCounters::default())
@@ -145,6 +151,12 @@ pub struct Router {
     /// Micros-since-epoch until which each backend is considered dead
     /// (0 = never marked).
     dead_until_us: Vec<AtomicU64>,
+    /// Micros-since-epoch until which each backend is considered
+    /// draining (0 = never marked).  Deliberately separate from the
+    /// dead clock: a draining backend is healthy and must NOT enter
+    /// the single-flight dead-probe machinery — the mark simply
+    /// expires (or is cleared by a successful submit after resume).
+    drained_until_us: Vec<AtomicU64>,
     dead_cooldown: Duration,
     /// Hedge when the chosen backend's predicted
     /// admission-to-completion exceeds this (None = hedging off).
@@ -165,6 +177,7 @@ impl Router {
             metrics: RouterMetrics::new(n),
             epoch: Instant::now(),
             dead_until_us: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            drained_until_us: (0..n).map(|_| AtomicU64::new(0)).collect(),
             dead_cooldown: DEAD_BACKEND_COOLDOWN,
             hedge_slo: None,
             events: None,
@@ -220,12 +233,33 @@ impl Router {
         self.dead_until_us[idx].store(until.max(1), Ordering::Relaxed);
     }
 
-    /// Clear a backend's dead mark after a successful submission (the
-    /// re-probe paid off, or an old mark went stale).
+    /// Clear a backend's dead and drain marks after a successful
+    /// submission (the re-probe paid off, an old mark went stale, or
+    /// the backend resumed from a drain).
     fn mark_alive(&self, idx: usize) {
         if self.dead_until_us[idx].load(Ordering::Relaxed) != 0 {
             self.dead_until_us[idx].store(0, Ordering::Relaxed);
         }
+        if self.drained_until_us[idx].load(Ordering::Relaxed) != 0 {
+            self.drained_until_us[idx].store(0, Ordering::Relaxed);
+        }
+    }
+
+    fn is_draining(&self, idx: usize, now_us: u64) -> bool {
+        let until = self.drained_until_us[idx].load(Ordering::Relaxed);
+        until != 0 && now_us < until
+    }
+
+    /// Cool a backend that rejected with `ServerDraining`: picks and
+    /// failover route around it for one cooldown window, then traffic
+    /// probes it again (it may have resumed).  Unlike
+    /// [`Router::mark_dead`], the mark never feeds the single-flight
+    /// dead-probe CAS — a planned drain is not a death.
+    fn mark_draining(&self, idx: usize) {
+        let until =
+            self.now_us() + self.dead_cooldown.as_micros() as u64;
+        self.drained_until_us[idx]
+            .store(until.max(1), Ordering::Relaxed);
     }
 
     /// Single-flight re-probe of dead backends: the first pick to
@@ -269,8 +303,11 @@ impl Router {
         if let Some(probe) = self.take_probe(now_us) {
             return probe;
         }
-        let dead: Vec<bool> =
-            (0..n).map(|i| self.is_dead(i, now_us)).collect();
+        let dead: Vec<bool> = (0..n)
+            .map(|i| {
+                self.is_dead(i, now_us) || self.is_draining(i, now_us)
+            })
+            .collect();
         let all_dead = dead.iter().all(|&d| d);
         let alive = |i: usize| all_dead || !dead[i];
         match self.policy {
@@ -329,13 +366,16 @@ impl Router {
     /// failover instead of a linear index scan.
     fn failover_order(&self, first: usize) -> Vec<usize> {
         let now_us = self.now_us();
+        let unavailable = |i: usize| {
+            self.is_dead(i, now_us) || self.is_draining(i, now_us)
+        };
         let mut rest: Vec<usize> = (0..self.clients.len())
             .filter(|&i| i != first)
             .collect();
-        let any_live = !self.is_dead(first, now_us)
-            || rest.iter().any(|&i| !self.is_dead(i, now_us));
+        let any_live =
+            !unavailable(first) || rest.iter().any(|&i| !unavailable(i));
         if any_live {
-            rest.retain(|&i| !self.is_dead(i, now_us));
+            rest.retain(|&i| !unavailable(i));
         }
         rest.sort_by_key(|&i| {
             self.clients[i].predicted_admission_us().unwrap_or_else(
@@ -416,14 +456,26 @@ impl Router {
                 }
                 Err((img, e)) => {
                     image = img;
-                    if SubmitError::classify(&e) == SubmitError::Shed {
-                        // alive but full: deflect to the next candidate
-                        self.metrics
-                            .failovers
-                            .fetch_add(1, Ordering::Relaxed);
-                        busy_err = Some(e);
-                    } else {
-                        self.mark_dead(idx);
+                    match SubmitError::classify(&e) {
+                        // alive but full (or degraded): deflect to the
+                        // next candidate
+                        SubmitError::Shed | SubmitError::Brownout => {
+                            self.metrics
+                                .failovers
+                                .fetch_add(1, Ordering::Relaxed);
+                            busy_err = Some(e);
+                        }
+                        // healthy but not admitting: deflect AND cool
+                        // it down so picks route around it, without
+                        // ever feeding the dead-probe machinery
+                        SubmitError::Draining => {
+                            self.metrics
+                                .drain_deflections
+                                .fetch_add(1, Ordering::Relaxed);
+                            self.mark_draining(idx);
+                            busy_err = Some(e);
+                        }
+                        _ => self.mark_dead(idx),
                     }
                 }
             }
@@ -487,11 +539,13 @@ impl Router {
                     );
                 }
             }
-            Err((_, e)) => {
-                if SubmitError::classify(&e) != SubmitError::Shed {
-                    self.mark_dead(duplicate);
-                }
-            }
+            Err((_, e)) => match SubmitError::classify(&e) {
+                // the primary is already in flight: a rejected
+                // duplicate is silently dropped, never escalated
+                SubmitError::Shed | SubmitError::Brownout => {}
+                SubmitError::Draining => self.mark_draining(duplicate),
+                _ => self.mark_dead(duplicate),
+            },
         }
     }
 
@@ -966,6 +1020,64 @@ mod tests {
         assert!(
             picks.contains(&1),
             "cleared backend must rejoin rotation: {picks:?}"
+        );
+    }
+
+    /// DRAINING IS NOT DEAD (satellite): a backend refusing admission
+    /// because its coordinator is draining is deflected like a shed —
+    /// cooled down so picks route around it — but its dead-probe clock
+    /// never moves, so the single-flight re-probe machinery stays
+    /// untouched, and a resumed backend rejoins rotation as soon as
+    /// the cooldown lapses.
+    #[test]
+    fn draining_backend_is_shed_with_cooldown_not_dead() {
+        let a = spawn_backend(10);
+        let mut b = spawn_backend(10);
+        let r = Router::new(
+            vec![a.client(), b.client()],
+            RoutePolicy::RoundRobin,
+        )
+        .with_dead_cooldown(Duration::from_millis(150));
+        b.drain().unwrap();
+        // every request answers via the live backend; the first contact
+        // with the draining one deflects and cools it down
+        for _ in 0..6 {
+            r.infer(tiny_image()).unwrap();
+        }
+        assert!(
+            r.metrics().drain_deflections.load(Ordering::Relaxed) >= 1,
+            "contacting a draining backend must count a deflection"
+        );
+        // draining is NOT dead: the dead-probe clock never moved
+        assert_eq!(
+            r.dead_until_us[1].load(Ordering::Relaxed),
+            0,
+            "a draining backend must never be marked dead"
+        );
+        // inside the cooldown window every pick routes around it, and
+        // nothing was rejected back to the caller
+        let picks: Vec<usize> = (0..6).map(|_| r.pick()).collect();
+        assert!(
+            picks.iter().all(|&p| p == 0),
+            "draining backend picked during cooldown: {picks:?}"
+        );
+        assert_eq!(r.metrics().shed.load(Ordering::Relaxed), 0);
+
+        // resume + let the cooldown lapse: traffic reaches the backend
+        // again and a successful submit clears the drain mark
+        b.resume().unwrap();
+        std::thread::sleep(Duration::from_millis(200));
+        for _ in 0..4 {
+            r.infer(tiny_image()).unwrap();
+        }
+        assert!(
+            b.metrics().completed.load(Ordering::Relaxed) >= 1,
+            "resumed backend must serve again after the cooldown"
+        );
+        assert_eq!(
+            r.drained_until_us[1].load(Ordering::Relaxed),
+            0,
+            "a successful submit must clear the drain mark"
         );
     }
 }

@@ -17,11 +17,13 @@
 //! table — the batcher refills while every worker runs, which is what
 //! pipelines batch formation with device execution.
 
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::{
-    channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender,
+use std::sync::atomic::{
+    AtomicBool, AtomicU64, AtomicUsize, Ordering,
 };
-use std::sync::{Arc, Mutex};
+use std::sync::mpsc::{
+    channel, sync_channel, Receiver, Sender, SyncSender, TryRecvError,
+};
+use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -38,13 +40,37 @@ use super::formation::{
     DispatchedBatch, FormationPlan, FormationPolicy, LaneBudgets,
     LaneClass, LaneSet,
 };
+use super::lifecycle::{
+    BrownoutConfig, BrownoutMonitor, BrownoutStep, LifecycleState,
+    Notifier, ServerState,
+};
 use super::metrics::ServerMetrics;
 use super::persist::{ArrivalState, ProfileState, WorkerTable};
 use super::request::{CancelToken, Envelope, Request, Response};
 
-/// How often the idle leader wakes to poll the shutdown flag; also the
-/// bound on shutdown latency.
-const SHUTDOWN_POLL: Duration = Duration::from_millis(20);
+/// Failsafe cap on how long the idle leader parks between notifier
+/// wakeups.  Every event the leader cares about — submissions, drain,
+/// reload, shutdown — notifies it explicitly, so this bound only
+/// matters if a wakeup were ever lost; it is NOT the shutdown-latency
+/// bound the old fixed `SHUTDOWN_POLL` sleep imposed.
+const IDLE_WAIT: Duration = Duration::from_secs(1);
+
+/// Leader park cap while a brownout monitor is configured: pressure
+/// sampling needs a steady cadence even when no batch deadline or
+/// submission would otherwise wake the loop.  Also the monitor's
+/// sample spacing — "K consecutive leader loops" counts samples at
+/// least this far apart, so an event-storm of wakeups cannot trip (or
+/// recover) the brownout faster than the configured hysteresis.
+const MONITOR_TICK: Duration = Duration::from_millis(20);
+
+/// Failsafe cap on how long the supervisor parks between notifier
+/// wakeups (dying workers and shutdown both notify it explicitly).
+const SUPERVISOR_WAIT: Duration = Duration::from_millis(250);
+
+/// Safety re-check interval while a drain waits for the admission
+/// counters to reach zero (releases notify the waiter; the timeout
+/// only guards against a lost wakeup).
+const DRAIN_RECHECK: Duration = Duration::from_millis(50);
 
 /// Message prefix of backpressure rejections.  The router keys on it
 /// to tell *shed* (the backend is alive but full: fail over, count a
@@ -58,6 +84,18 @@ pub const BUSY_PREFIX: &str = "ServerBusy";
 /// [`BUSY_PREFIX`], the prefix is the classification contract under
 /// the flattened error type.
 pub const POISON_PREFIX: &str = "RequestPoisoned";
+
+/// Message prefix of lifecycle rejections: the server is draining,
+/// suspended, or resuming and admits nothing.  Routers treat it as
+/// *shed with cooldown* — the backend is healthy, just parked — so a
+/// drain must never trip the dead-backend probe.
+pub const DRAIN_PREFIX: &str = "ServerDraining";
+
+/// Message prefix of brownout rejections: the server is `Degraded`
+/// and shed this throughput-class submission to protect latency-class
+/// traffic.  Routers treat it exactly like a shed (fail over, no
+/// cooldown).
+pub const BROWNOUT_PREFIX: &str = "ServerBrownout";
 
 /// Base delay before a failed batch is re-executed; doubles per
 /// consumed attempt (capped) so a wedged device is not hammered.
@@ -81,6 +119,13 @@ pub enum SubmitError {
     /// The request was quarantined as poisoned: it failed every
     /// isolated retry while its batch-mates succeeded.
     Poisoned,
+    /// The server is draining/suspended/resuming and admits nothing;
+    /// the backend is healthy — shed with a short cooldown, do not
+    /// mark it dead.
+    Draining,
+    /// The server is `Degraded` (brownout) and shed this
+    /// throughput-class submission to protect latency-class traffic.
+    Brownout,
 }
 
 impl SubmitError {
@@ -94,6 +139,10 @@ impl SubmitError {
             SubmitError::Shed
         } else if msg.starts_with(POISON_PREFIX) {
             SubmitError::Poisoned
+        } else if msg.starts_with(DRAIN_PREFIX) {
+            SubmitError::Draining
+        } else if msg.starts_with(BROWNOUT_PREFIX) {
+            SubmitError::Brownout
         } else if msg.starts_with("batch execution failed") {
             SubmitError::ExecFailed
         } else {
@@ -114,6 +163,15 @@ impl std::fmt::Display for SubmitError {
             }
             SubmitError::Poisoned => {
                 write!(f, "{POISON_PREFIX}: request quarantined")
+            }
+            SubmitError::Draining => {
+                write!(f, "{DRAIN_PREFIX}: server is not admitting")
+            }
+            SubmitError::Brownout => {
+                write!(
+                    f,
+                    "{BROWNOUT_PREFIX}: throughput-class request shed"
+                )
             }
         }
     }
@@ -136,9 +194,12 @@ pub type ReplyReceiver = Receiver<anyhow::Result<Response>>;
 /// saturated throughput lane sheds at *its* bound instead of consuming
 /// the slots latency traffic needs (weighted shedding).
 pub(crate) struct Admission {
-    capacity: usize,
-    /// Per-metrics-lane budget; `None` = the global capacity bound.
-    budgets: Vec<Option<usize>>,
+    /// Global outstanding bound.  Atomic so a live reload can swap it
+    /// without pausing submitters.
+    capacity: AtomicUsize,
+    /// Per-metrics-lane budget; `usize::MAX` = the global capacity
+    /// bound (the `None` of the atomic encoding).
+    budgets: Vec<AtomicUsize>,
     total: AtomicUsize,
     /// Outstanding requests accounted per lane (admitted → replied).
     lane_out: Vec<AtomicUsize>,
@@ -147,6 +208,16 @@ pub(crate) struct Admission {
     /// tight burst cannot herd onto one backend between leader gauge
     /// refreshes.
     unrouted: Vec<AtomicUsize>,
+    /// A drain is waiting for the counters to reach zero: releases
+    /// notify `idle` only while this is set, so the steady-state
+    /// release path stays two relaxed decrements.
+    watched: AtomicBool,
+    idle: Notifier,
+}
+
+/// The atomic encoding of an optional per-lane budget.
+fn budget_word(b: Option<usize>) -> usize {
+    b.unwrap_or(usize::MAX)
 }
 
 impl Admission {
@@ -154,11 +225,34 @@ impl Admission {
         assert!(!budgets.is_empty(), "admission needs at least one lane");
         let lanes = budgets.len();
         Admission {
-            capacity,
-            budgets,
+            capacity: AtomicUsize::new(capacity),
+            budgets: budgets
+                .into_iter()
+                .map(|b| AtomicUsize::new(budget_word(b)))
+                .collect(),
             total: AtomicUsize::new(0),
             lane_out: (0..lanes).map(|_| AtomicUsize::new(0)).collect(),
             unrouted: (0..lanes).map(|_| AtomicUsize::new(0)).collect(),
+            watched: AtomicBool::new(false),
+            idle: Notifier::new(),
+        }
+    }
+
+    /// Swap the admission bounds in place (hot reload).  Lane *count*
+    /// is fixed for the server's lifetime — a reload that changes the
+    /// lane geometry is rejected upstream.  In-flight requests keep
+    /// their slots; only the thresholds move, so a shrink simply sheds
+    /// new submissions until the outstanding count falls below the new
+    /// bound.  No slot is ever dropped or double-released.
+    fn set_limits(&self, capacity: usize, budgets: Vec<Option<usize>>) {
+        assert_eq!(
+            budgets.len(),
+            self.budgets.len(),
+            "reload cannot change the admission lane count"
+        );
+        self.capacity.store(capacity, Ordering::Relaxed);
+        for (slot, b) in self.budgets.iter().zip(budgets) {
+            slot.store(budget_word(b), Ordering::Relaxed);
         }
     }
 
@@ -170,9 +264,11 @@ impl Admission {
     fn try_admit(&self, lane: usize) -> bool {
         let lane_prev = self.lane_out[lane].fetch_add(1, Ordering::Relaxed);
         let total_prev = self.total.fetch_add(1, Ordering::Relaxed);
-        let ok = match self.budgets[lane] {
-            Some(budget) => lane_prev < budget,
-            None => total_prev < self.capacity,
+        let ok = match self.budgets[lane].load(Ordering::Relaxed) {
+            usize::MAX => {
+                total_prev < self.capacity.load(Ordering::Relaxed)
+            }
+            budget => lane_prev < budget,
         };
         if !ok {
             self.lane_out[lane].fetch_sub(1, Ordering::Relaxed);
@@ -189,6 +285,9 @@ impl Admission {
         self.unrouted[lane].fetch_sub(1, Ordering::Relaxed);
         self.lane_out[lane].fetch_sub(1, Ordering::Relaxed);
         self.total.fetch_sub(1, Ordering::Relaxed);
+        if self.watched.load(Ordering::Acquire) {
+            self.idle.notify();
+        }
     }
 
     /// Leader-side: the request left the submit channel and entered a
@@ -215,6 +314,24 @@ impl Admission {
             Ordering::Relaxed,
             |v| Some(v.saturating_sub(1)),
         );
+        if self.watched.load(Ordering::Acquire) {
+            self.idle.notify();
+        }
+    }
+
+    /// Block until every outstanding slot has been released (the drain
+    /// barrier).  Releases notify the waiter while `watched` is set;
+    /// the short timeout only re-checks against a lost wakeup.
+    fn wait_idle(&self) {
+        self.watched.store(true, Ordering::SeqCst);
+        loop {
+            let seen = self.idle.seq();
+            if self.total() == 0 {
+                break;
+            }
+            self.idle.wait_timeout(seen, DRAIN_RECHECK);
+        }
+        self.watched.store(false, Ordering::SeqCst);
     }
 
     fn total(&self) -> usize {
@@ -233,17 +350,27 @@ impl Admission {
     /// fallback key for the admission-lane pick (join the emptiest
     /// lane *relative to its budget*).
     fn relative_depth(&self, lane: usize) -> u64 {
-        let bound = self.budgets[lane].unwrap_or(self.capacity).max(1);
+        let bound = match self.budgets[lane].load(Ordering::Relaxed) {
+            usize::MAX => self.capacity.load(Ordering::Relaxed),
+            budget => budget,
+        }
+        .max(1);
         (self.lane_out(lane) as u64) * 1024 / bound as u64
     }
 }
 
 /// One admission lane as the client sees it: the lane's derived batch
-/// policy (what the formation plan gave its batcher) plus the worker
-/// indices it serves.
+/// policy (what the formation plan gave its batcher), the worker
+/// indices it serves, and its device class.  The class drives the
+/// brownout valve: under `Degraded` only [`LaneClass::Latency`] lanes
+/// keep admitting — the single global lane is `Unclassified` and
+/// therefore sheddable, which is exactly the "protect latency traffic
+/// first" semantics (a global batcher has no latency class to
+/// protect).
 struct LaneView {
     policy: BatchPolicy,
     workers: Vec<usize>,
+    class: LaneClass,
 }
 
 /// Static routing geometry for client-side admission estimates: the
@@ -256,7 +383,10 @@ pub(crate) struct AdmissionView {
     /// (`u64::MAX` until the first).
     last_submit_us: AtomicU64,
     states: Vec<Arc<WorkerState>>,
-    lanes: Vec<LaneView>,
+    /// Behind a `RwLock` so a hot reload can swap the lane policies
+    /// and worker assignments while submitters keep estimating; read
+    /// on every submit, written once per reload.
+    lanes: RwLock<Vec<LaneView>>,
 }
 
 impl AdmissionView {
@@ -269,8 +399,30 @@ impl AdmissionView {
             epoch: Instant::now(),
             last_submit_us: AtomicU64::new(u64::MAX),
             states,
-            lanes,
+            lanes: RwLock::new(lanes),
         }
+    }
+
+    fn lane_count(&self) -> usize {
+        self.lanes.read().unwrap().len()
+    }
+
+    fn lane_class(&self, lane: usize) -> LaneClass {
+        let lanes = self.lanes.read().unwrap();
+        lanes[lane.min(lanes.len() - 1)].class
+    }
+
+    /// Swap the lane views in place (hot reload).  Lane count is fixed
+    /// — geometry changes are rejected upstream — so every lane index
+    /// already admitted stays valid.
+    fn set_lanes(&self, lanes: Vec<LaneView>) {
+        let mut cur = self.lanes.write().unwrap();
+        assert_eq!(
+            lanes.len(),
+            cur.len(),
+            "reload cannot change the admission lane count"
+        );
+        *cur = lanes;
     }
 
     fn since_epoch_us(&self, now: Instant) -> u64 {
@@ -309,7 +461,7 @@ impl AdmissionView {
     /// (the same all-warm gate `pick_worker` and lane steering use).
     fn class_lane(&self, gap: Option<Duration>) -> Option<usize> {
         let mut best: Option<(u64, usize)> = None;
-        for (li, lane) in self.lanes.iter().enumerate() {
+        for (li, lane) in self.lanes.read().unwrap().iter().enumerate() {
             let (wait_us, close_n) =
                 lane.policy.admission_estimate_us(0, gap);
             let exec = lane
@@ -337,6 +489,12 @@ pub struct Client {
     metrics: Arc<ServerMetrics>,
     admission: Arc<Admission>,
     view: Arc<AdmissionView>,
+    /// The server's lifecycle state machine — submits gate on it
+    /// (drain stops admission; brownout sheds throughput-class).
+    lifecycle: Arc<LifecycleState>,
+    /// Wakes the leader after a successful send (the leader parks on
+    /// this eventcount instead of polling the submit channel).
+    leader_notify: Arc<Notifier>,
 }
 
 impl Client {
@@ -359,7 +517,7 @@ impl Client {
     /// emptiest lane relative to its bound (the admission analogue of
     /// the dispatcher's join-shortest-queue cold phase).
     fn admission_lane(&self, gap: Option<Duration>) -> usize {
-        if self.view.lanes.len() == 1 {
+        if self.view.lane_count() == 1 {
             return 0;
         }
         if let Some(lane) = self.view.class_lane(gap) {
@@ -367,7 +525,7 @@ impl Client {
         }
         let mut best = 0;
         let mut best_key = u64::MAX;
-        for lane in 0..self.view.lanes.len() {
+        for lane in 0..self.view.lane_count() {
             let key = self.admission.relative_depth(lane);
             if key < best_key {
                 best = lane;
@@ -421,8 +579,29 @@ impl Client {
         hedged: bool,
     ) -> Result<(), (Tensor, anyhow::Error)> {
         let now = Instant::now();
+        // Lifecycle gate first: a draining/suspended/resuming server
+        // admits nothing (typed `ServerDraining`, healthy backend); a
+        // `Degraded` one sheds every submission not classed into a
+        // latency lane (typed `ServerBrownout`).  Both checks precede
+        // the slot reservation so a rejected request never touches the
+        // admission counters.
+        let state = self.lifecycle.get();
+        if !state.admits() {
+            return Err((image, SubmitError::Draining.into()));
+        }
         let gap = self.view.gap(now);
         let lane = self.admission_lane(gap);
+        if state == ServerState::Degraded
+            && self.view.lane_class(lane) != LaneClass::Latency
+        {
+            self.metrics.brownout_shed.fetch_add(1, Ordering::Relaxed);
+            self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            self.metrics
+                .lane(lane)
+                .shed
+                .fetch_add(1, Ordering::Relaxed);
+            return Err((image, SubmitError::Brownout.into()));
+        }
         // Reserve the slot *before* handing the request to the leader:
         // a worker may complete (and release) it before this thread
         // resumes, so reserving after the send could underflow the
@@ -455,6 +634,9 @@ impl Client {
                 // advances the gap clock — a channel-full rollback
                 // must not make the next single look like a burst mate
                 self.view.record_submit(now);
+                // wake the (possibly parked) leader; cheap when it is
+                // already running (one atomic bump, no lock)
+                self.leader_notify.notify();
                 Ok(())
             }
             Err(std::sync::mpsc::TrySendError::Full(env)) => {
@@ -497,7 +679,8 @@ impl Client {
     /// least-outstanding.
     pub fn predicted_admission_us(&self) -> Option<u64> {
         let mut best: Option<u64> = None;
-        for (li, lane) in self.view.lanes.iter().enumerate() {
+        let lanes = self.view.lanes.read().unwrap();
+        for (li, lane) in lanes.iter().enumerate() {
             let wait = self
                 .metrics
                 .lane(li)
@@ -571,6 +754,15 @@ pub struct ServerConfig {
     /// the server is spawned through [`Server::spawn_supervised`] —
     /// plain spawns have no way to build a replacement engine.
     pub respawn: bool,
+    /// Deadline-aware brownout: when set, the leader samples per-lane
+    /// admission pressure (published formation wait plus the lane's
+    /// best predicted single-request completion) once per
+    /// `MONITOR_TICK` and trips the server into `Degraded` after the
+    /// configured number of consecutive over-deadline samples —
+    /// shedding throughput-class admissions while latency-class
+    /// traffic keeps flowing — then recovers by hysteresis.  `None`
+    /// (default) disables the monitor entirely.
+    pub brownout: Option<BrownoutConfig>,
 }
 
 impl Default for ServerConfig {
@@ -584,6 +776,7 @@ impl Default for ServerConfig {
             event_log: None,
             retry_limit: 0,
             respawn: false,
+            brownout: None,
         }
     }
 }
@@ -665,6 +858,17 @@ impl BatchSource {
 /// respawn needs that a plain spawn cannot provide.
 pub type EngineFactory<E> = Arc<dyn Fn() -> E + Send + Sync>;
 
+/// Control verbs the leader applies between formation passes — the
+/// leader owns the batchers, so live reconfiguration travels to it as
+/// a message instead of a lock.
+enum ControlMsg {
+    /// Swap the per-class lane policies/budgeted worker views in place
+    /// (geometry already validated; queued envelopes are preserved).
+    ReloadPerClass(FormationPlan),
+    /// Swap the global batcher's policy and alignment grid in place.
+    ReloadGlobal { policy: BatchPolicy, align: Vec<usize> },
+}
+
 /// The coordinator: owns the leader thread and the engine worker pool.
 pub struct Server {
     client: Client,
@@ -685,6 +889,22 @@ pub struct Server {
     /// configured ones, or — when none were configured and a profile
     /// state was loaded — the auto-derived defaults.
     lane_budgets: LaneBudgets,
+    /// Lifecycle state machine shared with every client clone and the
+    /// leader (see `coordinator::lifecycle`).
+    lifecycle: Arc<LifecycleState>,
+    /// Wakes the leader (submits, drain/reload verbs, shutdown).
+    leader_notify: Arc<Notifier>,
+    /// Wakes the supervisor (worker deaths, shutdown).
+    control_notify: Arc<Notifier>,
+    /// Reconfiguration verbs for the leader (applied between passes).
+    control_tx: Sender<ControlMsg>,
+    /// Event recorder mirrored from the config so lifecycle verbs can
+    /// log transitions.
+    events: Option<Arc<EventLog>>,
+    /// Profile state captured when a drain completed — what `resume`
+    /// restores through the same warm path
+    /// [`Server::spawn_supervised_with_state`] uses at startup.
+    parked: Option<ProfileState>,
 }
 
 impl Server {
@@ -877,11 +1097,13 @@ impl Server {
                     .map(|l| LaneView {
                         policy: l.policy,
                         workers: l.workers.clone(),
+                        class: l.class,
                     })
                     .collect(),
                 None => vec![LaneView {
                     policy: global_policy,
                     workers: (0..states.len()).collect(),
+                    class: LaneClass::Unclassified,
                 }],
             },
         ));
@@ -892,12 +1114,18 @@ impl Server {
             lane_slots,
         ));
         let shutdown = Arc::new(AtomicBool::new(false));
+        let lifecycle = Arc::new(LifecycleState::new());
+        let leader_notify = Arc::new(Notifier::new());
+        let control_notify = Arc::new(Notifier::new());
+        let (control_tx, control_rx) = channel::<ControlMsg>();
         let client = Client {
             tx,
             next_id: Arc::new(AtomicU64::new(0)),
             metrics: Arc::clone(&metrics),
             admission: Arc::clone(&admission),
-            view,
+            view: Arc::clone(&view),
+            lifecycle: Arc::clone(&lifecycle),
+            leader_notify: Arc::clone(&leader_notify),
         };
 
         // leader -> workers: unbounded (depth already bounded by the
@@ -991,6 +1219,7 @@ impl Server {
                     Arc::clone(&admission),
                     events.clone(),
                     retry_limit,
+                    Arc::clone(&control_notify),
                 )
             })
             .collect();
@@ -1010,6 +1239,7 @@ impl Server {
                 let sup_metrics = Arc::clone(&metrics);
                 let sup_admission = Arc::clone(&admission);
                 let sup_events = events.clone();
+                let sup_notify = Arc::clone(&control_notify);
                 let sd = Arc::clone(&shutdown);
                 let handle = std::thread::Builder::new()
                     .name("cnnlab-supervisor".into())
@@ -1024,6 +1254,7 @@ impl Server {
                             sup_admission,
                             sup_events,
                             retry_limit,
+                            sup_notify,
                         )
                     })
                     .expect("spawn supervisor");
@@ -1034,16 +1265,26 @@ impl Server {
 
         let sd = Arc::clone(&shutdown);
         let leader_metrics = Arc::clone(&metrics);
+        let leader_events = events.clone();
+        let leader_lifecycle = Arc::clone(&lifecycle);
+        let leader_wake = Arc::clone(&leader_notify);
+        let leader_view = Arc::clone(&view);
+        let brownout = config.brownout;
         let leader = std::thread::Builder::new()
             .name("cnnlab-leader".into())
             .spawn(move || {
                 leader_loop(
                     driver,
                     rx,
+                    control_rx,
                     sd,
                     leader_metrics,
                     admission,
-                    events,
+                    leader_events,
+                    leader_lifecycle,
+                    leader_wake,
+                    brownout,
+                    leader_view,
                 )
             })
             .expect("spawn leader");
@@ -1057,6 +1298,12 @@ impl Server {
             states,
             lane_classes,
             lane_budgets,
+            lifecycle,
+            leader_notify,
+            control_notify,
+            control_tx,
+            events,
+            parked: None,
         }
     }
 
@@ -1153,6 +1400,195 @@ impl Server {
             .collect();
         ProfileState { workers, arrivals, backends: Vec::new() }
     }
+
+    /// Current lifecycle state.
+    pub fn state(&self) -> ServerState {
+        self.lifecycle.get()
+    }
+
+    /// Profile state parked by the last completed drain (cleared by
+    /// [`Server::resume`]).
+    pub fn parked_state(&self) -> Option<&ProfileState> {
+        self.parked.as_ref()
+    }
+
+    fn record_lifecycle(&self, event: Lifecycle) {
+        if let Some(log) = &self.events {
+            log.record(0, event);
+        }
+    }
+
+    /// Drain the server: stop admitting (submits reject with
+    /// `ServerDraining`), let the lanes flush, and block until every
+    /// in-flight envelope has been answered — including the retry,
+    /// bisection, and cancellation legs, since the barrier is the
+    /// admission counter reaching zero and every one of those paths
+    /// releases its slot exactly once.  The workers are then parked
+    /// with their learned state persisted ([`Server::parked_state`])
+    /// and the server rests in `Suspended` until [`Server::resume`].
+    /// A no-op when already `Suspended`; an error from any transient
+    /// state.
+    pub fn drain(&mut self) -> anyhow::Result<()> {
+        let ls = &self.lifecycle;
+        if ls.get() == ServerState::Suspended {
+            return Ok(());
+        }
+        let from_running =
+            ls.transition(ServerState::Running, ServerState::Draining);
+        if !from_running
+            && !ls
+                .transition(ServerState::Degraded, ServerState::Draining)
+        {
+            anyhow::bail!(
+                "drain requires a running server (state {})",
+                ls.get().name()
+            );
+        }
+        self.client.metrics.drains.fetch_add(1, Ordering::Relaxed);
+        self.record_lifecycle(Lifecycle::Drain);
+        // wake the leader so it flushes partial batches immediately
+        self.leader_notify.notify();
+        // barrier: every admitted slot released (answered, pruned, or
+        // quarantined — all the exactly-once release paths)
+        self.client.admission.wait_idle();
+        // park the learned state, then rest
+        self.parked = Some(self.profile_state());
+        let ok =
+            ls.transition(ServerState::Draining, ServerState::Suspended);
+        debug_assert!(ok, "only drain() moves a server out of Draining");
+        self.client.metrics.suspends.fetch_add(1, Ordering::Relaxed);
+        self.record_lifecycle(Lifecycle::Suspend);
+        Ok(())
+    }
+
+    /// Resume a suspended server: restore the parked worker tables
+    /// through the same warm path
+    /// [`Server::spawn_supervised_with_state`] uses at startup
+    /// (`WorkerState::preload_table`, matched by index and device
+    /// kind), then admit again.  The arrival-rate estimates never left
+    /// the batchers, so the first post-resume batch forms with warm
+    /// predictions on both axes.
+    pub fn resume(&mut self) -> anyhow::Result<()> {
+        let ls = &self.lifecycle;
+        if !ls.transition(ServerState::Suspended, ServerState::Resuming)
+        {
+            anyhow::bail!(
+                "resume requires a suspended server (state {})",
+                ls.get().name()
+            );
+        }
+        if let Some(ps) = self.parked.take() {
+            for (i, table) in ps.workers.iter().enumerate() {
+                if let Some(s) = self.states.get(i) {
+                    if table.kind == s.profile().kind.name() {
+                        s.preload_table(&table.rows);
+                    }
+                }
+            }
+        }
+        let ok =
+            ls.transition(ServerState::Resuming, ServerState::Running);
+        debug_assert!(ok, "only resume() moves a server out of Resuming");
+        self.client.metrics.resumes.fetch_add(1, Ordering::Relaxed);
+        self.record_lifecycle(Lifecycle::Resume);
+        self.leader_notify.notify();
+        Ok(())
+    }
+
+    /// Hot-reload the serving configuration against the live worker
+    /// states: re-derive the formation plan (per-class) or the clamped
+    /// global policy, swap the admission bounds and lane views in
+    /// place, and hand the leader the new batch policies to apply
+    /// between formation passes.  Zero requests are dropped or
+    /// reordered: queued envelopes stay in their batcher queues (only
+    /// the cut policy changes), in-flight slots are released exactly
+    /// once under the new bounds because lane indices are stable —
+    /// reloads that would change the lane geometry (count or class
+    /// order) are rejected with a restart-required error.  Only valid
+    /// while admitting (`Running`/`Degraded`); the brownout monitor,
+    /// retry limit, and supervision mode are spawn-time choices this
+    /// path deliberately leaves untouched.
+    pub fn reload(&mut self, config: &ServerConfig) -> anyhow::Result<()> {
+        let state = self.lifecycle.get();
+        if !state.admits() {
+            anyhow::bail!(
+                "reload requires a running server (state {})",
+                state.name()
+            );
+        }
+        if self.lane_classes.is_empty() {
+            anyhow::ensure!(
+                config.formation == FormationPolicy::Global,
+                "reload cannot change the formation mode \
+                 (restart required)"
+            );
+            // same clamp + alignment derivation as spawn, read off the
+            // live worker states (sorted/deduped at construction)
+            let mut policy = config.policy;
+            if let Some(cap) = self
+                .states
+                .iter()
+                .filter_map(|s| s.artifacts().last().copied())
+                .min()
+            {
+                policy.max_batch = policy.max_batch.min(cap);
+            }
+            let mut align: Vec<usize> =
+                self.states[0].artifacts().to_vec();
+            align.retain(|a| {
+                self.states.iter().all(|s| s.artifacts().contains(a))
+            });
+            self.client
+                .admission
+                .set_limits(config.queue_capacity, vec![None]);
+            self.client.view.set_lanes(vec![LaneView {
+                policy,
+                workers: (0..self.states.len()).collect(),
+                class: LaneClass::Unclassified,
+            }]);
+            let _ = self
+                .control_tx
+                .send(ControlMsg::ReloadGlobal { policy, align });
+            self.lane_budgets = LaneBudgets::none();
+        } else {
+            anyhow::ensure!(
+                config.formation == FormationPolicy::PerClass,
+                "reload cannot change the formation mode \
+                 (restart required)"
+            );
+            let plan = FormationPlan::derive(config.policy, &self.states);
+            anyhow::ensure!(
+                plan.classes() == self.lane_classes,
+                "reload changes the lane geometry (restart required)"
+            );
+            let budgets: Vec<Option<usize>> = plan
+                .lanes
+                .iter()
+                .map(|l| config.lane_budgets.get(l.class))
+                .collect();
+            self.client
+                .admission
+                .set_limits(config.queue_capacity, budgets);
+            self.client.view.set_lanes(
+                plan.lanes
+                    .iter()
+                    .map(|l| LaneView {
+                        policy: l.policy,
+                        workers: l.workers.clone(),
+                        class: l.class,
+                    })
+                    .collect(),
+            );
+            let _ =
+                self.control_tx.send(ControlMsg::ReloadPerClass(plan));
+            self.lane_budgets = config.lane_budgets.clone();
+        }
+        self.client.metrics.reloads.fetch_add(1, Ordering::Relaxed);
+        self.record_lifecycle(Lifecycle::Reload);
+        // the leader applies the batcher-side swap at its next pass
+        self.leader_notify.notify();
+        Ok(())
+    }
 }
 
 impl Drop for Server {
@@ -1162,6 +1598,11 @@ impl Drop for Server {
         // queue into final batches, drops the batch channel, and the
         // workers finish whatever is in flight before exiting
         self.shutdown.store(true, Ordering::SeqCst);
+        // wake whoever is parked: the leader (on its eventcount) and
+        // the supervisor (on the control notifier) both observe the
+        // flag on their next pass — no polling interval to wait out
+        self.leader_notify.notify();
+        self.control_notify.notify();
         if let Some(j) = self.leader.take() {
             let _ = j.join();
         }
@@ -1192,6 +1633,29 @@ enum FormationDriver {
 }
 
 impl FormationDriver {
+    /// Apply a leader-side reload verb: swap the batch policies in
+    /// place, preserving queued envelopes and arrival estimators (the
+    /// zero-drop half of a hot reload the leader owns).
+    fn apply_reload(&mut self, msg: ControlMsg) {
+        match (self, msg) {
+            (
+                FormationDriver::Global { batcher, .. },
+                ControlMsg::ReloadGlobal { policy, align },
+            ) => batcher.set_policy(policy, &align),
+            (
+                FormationDriver::PerClass(lanes),
+                ControlMsg::ReloadPerClass(plan),
+            ) => {
+                // geometry was validated before the verb was sent
+                let _ = lanes.reload(plan);
+            }
+            // a mismatched verb cannot be constructed —
+            // `Server::reload` rejects formation-mode changes — so
+            // just ignore it defensively
+            _ => {}
+        }
+    }
+
     fn push(&mut self, env: Envelope) {
         match self {
             FormationDriver::Global { batcher, admitted, .. } => {
@@ -1299,19 +1763,69 @@ fn discard_pruned(
     }
 }
 
+/// Worst per-lane admission pressure for the brownout monitor: the
+/// published formation-wait gauge plus the lane's best predicted
+/// single-request completion (backlog included), over the *sheddable*
+/// (non-latency) lanes only — shedding cannot relieve a latency lane,
+/// so its pressure must never trip a brownout that sheds other
+/// traffic to no effect.  `None` while every sheddable lane is cold
+/// or fully retired (the monitor holds).
+fn brownout_pressure(
+    metrics: &ServerMetrics,
+    view: &AdmissionView,
+) -> Option<u64> {
+    let mut worst: Option<u64> = None;
+    let lanes = view.lanes.read().unwrap();
+    for (li, lane) in lanes.iter().enumerate() {
+        if lane.class == LaneClass::Latency {
+            continue;
+        }
+        let wait =
+            metrics.lane(li).admission_wait_us.load(Ordering::Relaxed);
+        let exec = lane
+            .workers
+            .iter()
+            .filter(|&&w| view.states[w].is_live())
+            .filter_map(|&w| view.states[w].predicted_completion_us(1))
+            .min();
+        if let Some(exec) = exec {
+            let p = wait.saturating_add(exec);
+            worst = Some(worst.map_or(p, |b| b.max(p)));
+        }
+    }
+    worst
+}
+
 /// The leader only forms batches: drain the request channel, steer and
 /// cut per the formation driver, hand closed batches to the workers —
 /// after pruning cancelled envelopes so they never cost device work.
 /// It never touches an engine.
+///
+/// The loop is an eventcount waiter, not a poller: it snapshots the
+/// notifier sequence, does a full pass (absorb submissions, apply
+/// control verbs, prune, dispatch, publish, sample the brownout
+/// monitor), and parks until the next batch deadline or the next
+/// notify — submitters, lifecycle verbs, and shutdown all notify, so
+/// nothing waits out a polling interval.  While the server drains,
+/// every pass flushes partial batches immediately so in-flight work
+/// finishes as fast as the devices allow.
+#[allow(clippy::too_many_arguments)]
 fn leader_loop(
     mut driver: FormationDriver,
     rx: Receiver<Envelope>,
+    control: Receiver<ControlMsg>,
     shutdown: Arc<AtomicBool>,
     metrics: Arc<ServerMetrics>,
     admission: Arc<Admission>,
     events: Option<Arc<EventLog>>,
+    lifecycle: Arc<LifecycleState>,
+    notify: Arc<Notifier>,
+    brownout: Option<BrownoutConfig>,
+    view: Arc<AdmissionView>,
 ) {
     let mut open = true;
+    let mut monitor = brownout.map(BrownoutMonitor::new);
+    let mut last_sample = Instant::now();
     // every envelope leaving the submit channel exits the
     // submit-to-steer window the admission estimate charges
     let absorb = |driver: &mut FormationDriver, env: Envelope| {
@@ -1329,46 +1843,25 @@ fn leader_loop(
     };
 
     while open || driver.pending() > 0 {
-        if open && shutdown.load(Ordering::SeqCst) {
+        // eventcount discipline: snapshot the sequence BEFORE looking
+        // for work, so a notify landing anywhere in this pass makes
+        // the park below return immediately instead of being lost
+        let seen = notify.seq();
+        if shutdown.load(Ordering::SeqCst) {
             open = false;
-            // absorb anything already queued so it drains below
-            while let Ok(env) = rx.try_recv() {
-                absorb(&mut driver, env);
+        }
+        loop {
+            match rx.try_recv() {
+                Ok(env) => absorb(&mut driver, env),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    open = false;
+                    break;
+                }
             }
         }
-        if open {
-            // Sleep until the earliest close time across the formation
-            // (a lane deadline, or earlier when a predictive rule will
-            // fire first), bounded by SHUTDOWN_POLL so shutdown latency
-            // stays flat.  A close time already in the past means a
-            // batch is ready: skip the blocking receive entirely
-            // instead of busy-spinning a zero-timeout recv.
-            let wait = driver
-                .next_deadline()
-                .map(|d| {
-                    d.saturating_duration_since(Instant::now())
-                        .min(SHUTDOWN_POLL)
-                })
-                .unwrap_or(SHUTDOWN_POLL);
-            if wait.is_zero() {
-                while let Ok(env) = rx.try_recv() {
-                    absorb(&mut driver, env);
-                }
-            } else {
-                match rx.recv_timeout(wait) {
-                    Ok(env) => {
-                        absorb(&mut driver, env);
-                        // opportunistically drain whatever else arrived
-                        while let Ok(env) = rx.try_recv() {
-                            absorb(&mut driver, env);
-                        }
-                    }
-                    Err(RecvTimeoutError::Timeout) => {}
-                    Err(RecvTimeoutError::Disconnected) => {
-                        open = false;
-                    }
-                }
-            }
+        while let Ok(msg) = control.try_recv() {
+            driver.apply_reload(msg);
         }
 
         // prune resolved tokens, then hand every ready batch to the
@@ -1376,11 +1869,68 @@ fn leader_loop(
         // batching
         prune(&mut driver);
         driver.dispatch_ready(Instant::now());
-        if !open {
+        let state = lifecycle.get();
+        if !open || state == ServerState::Draining {
             prune(&mut driver);
             driver.drain_dispatch();
         }
         driver.publish(&metrics, Instant::now());
+
+        // deadline-aware brownout: sample pressure at MONITOR_TICK
+        // cadence (wall-clock paced, so an event storm cannot rush the
+        // trip/recover hysteresis) and drive Running <-> Degraded
+        if let Some(m) = monitor.as_mut() {
+            let now = Instant::now();
+            if now.duration_since(last_sample) >= MONITOR_TICK {
+                last_sample = now;
+                let pressure = brownout_pressure(&metrics, &view);
+                match m.observe(state, pressure) {
+                    BrownoutStep::Trip => {
+                        if lifecycle.transition(
+                            ServerState::Running,
+                            ServerState::Degraded,
+                        ) {
+                            metrics
+                                .brownout_entries
+                                .fetch_add(1, Ordering::Relaxed);
+                            if let Some(log) = &events {
+                                log.record(0, Lifecycle::BrownoutEnter);
+                            }
+                        }
+                    }
+                    BrownoutStep::Recover => {
+                        if lifecycle.transition(
+                            ServerState::Degraded,
+                            ServerState::Running,
+                        ) {
+                            metrics
+                                .brownout_exits
+                                .fetch_add(1, Ordering::Relaxed);
+                            if let Some(log) = &events {
+                                log.record(0, Lifecycle::BrownoutExit);
+                            }
+                        }
+                    }
+                    BrownoutStep::Hold => {}
+                }
+            }
+        }
+
+        if !open && driver.pending() == 0 {
+            break;
+        }
+        // park until the earliest close time, the monitor cadence, or
+        // the next notify — whichever comes first
+        let cap = if monitor.is_some() { MONITOR_TICK } else { IDLE_WAIT };
+        let wait = driver
+            .next_deadline()
+            .map(|d| {
+                d.saturating_duration_since(Instant::now()).min(cap)
+            })
+            .unwrap_or(cap);
+        if !wait.is_zero() {
+            notify.wait_timeout(seen, wait);
+        }
     }
     // the driver drops here (with every batch sender): workers drain
     // their queues, then exit
@@ -1398,6 +1948,7 @@ fn spawn_worker_thread<E: InferenceEngine>(
     admission: Arc<Admission>,
     events: Option<Arc<EventLog>>,
     retry_limit: u32,
+    notify: Arc<Notifier>,
 ) -> JoinHandle<()> {
     std::thread::Builder::new()
         .name(format!("cnnlab-engine-{i}"))
@@ -1411,6 +1962,7 @@ fn spawn_worker_thread<E: InferenceEngine>(
                 admission,
                 events,
                 retry_limit,
+                notify,
             )
         })
         .expect("spawn engine worker")
@@ -1434,8 +1986,12 @@ fn supervisor_loop<E: InferenceEngine>(
     admission: Arc<Admission>,
     events: Option<Arc<EventLog>>,
     retry_limit: u32,
+    notify: Arc<Notifier>,
 ) {
     loop {
+        // snapshot before scanning: a worker dying (and notifying)
+        // mid-scan makes the park below return immediately
+        let seen = notify.seq();
         let quitting = shutdown.load(Ordering::SeqCst);
         for i in 0..handles.len() {
             if !quitting
@@ -1451,6 +2007,7 @@ fn supervisor_loop<E: InferenceEngine>(
                     Arc::clone(&admission),
                     events.clone(),
                     retry_limit,
+                    Arc::clone(&notify),
                 );
                 let dead = std::mem::replace(&mut handles[i], fresh);
                 let _ = dead.join();
@@ -1467,7 +2024,9 @@ fn supervisor_loop<E: InferenceEngine>(
             }
             return;
         }
-        std::thread::sleep(SHUTDOWN_POLL);
+        // park until a worker dies or shutdown notifies; the timeout
+        // is only a failsafe against a lost wakeup, not a poll period
+        notify.wait_timeout(seen, SUPERVISOR_WAIT);
     }
 }
 
@@ -1485,6 +2044,7 @@ fn worker_loop<E: InferenceEngine>(
     admission: Arc<Admission>,
     events: Option<Arc<EventLog>>,
     retry_limit: u32,
+    notify: Arc<Notifier>,
 ) {
     while let Some(DispatchedBatch { envs, cost_us }) = source.next() {
         // under join-idle the leader does no per-worker accounting;
@@ -1514,9 +2074,10 @@ fn worker_loop<E: InferenceEngine>(
             // the engine panicked mid-batch: every envelope was still
             // answered, retried, or quarantined above, but the device
             // is suspect — retire this worker from dispatch *before*
-            // exiting so routing stops immediately, then let the
-            // thread die for the supervisor to respawn.
+            // exiting so routing stops immediately, then wake the
+            // supervisor and let the thread die for it to respawn.
             state.retire();
+            notify.notify();
             return;
         }
     }
@@ -1976,6 +2537,48 @@ mod tests {
         // over-release saturates instead of wrapping
         a.release(0);
         assert_eq!((a.total(), a.lane_out(0)), (0, 0));
+    }
+
+    #[test]
+    fn admission_limits_swap_in_place() {
+        let a = Admission::new(4, vec![Some(2), None]);
+        assert!(a.try_admit(0));
+        assert!(a.try_admit(0));
+        assert!(!a.try_admit(0), "old budget still enforced");
+        // hot reload: widen lane 0, shrink the global capacity
+        a.set_limits(2, vec![Some(3), None]);
+        assert!(a.try_admit(0), "widened budget admits a third");
+        assert!(
+            !a.try_admit(1),
+            "shrunk capacity sheds while outstanding exceeds it"
+        );
+        // in-flight slots release exactly once under the new limits
+        a.release(0);
+        a.release(0);
+        a.release(0);
+        assert_eq!((a.total(), a.lane_out(0)), (0, 0));
+    }
+
+    #[test]
+    fn wait_idle_blocks_until_every_slot_released() {
+        let a = Arc::new(Admission::new(4, vec![None]));
+        assert!(a.try_admit(0));
+        assert!(a.try_admit(0));
+        let a2 = Arc::clone(&a);
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(15));
+            a2.release(0);
+            std::thread::sleep(Duration::from_millis(15));
+            a2.release(0);
+        });
+        let t0 = Instant::now();
+        a.wait_idle();
+        assert_eq!(a.total(), 0, "idle means zero outstanding");
+        assert!(
+            t0.elapsed() >= Duration::from_millis(25),
+            "wait_idle returned before the releases"
+        );
+        h.join().unwrap();
     }
 
     /// The weighted-shedding contract: whatever the throughput lane's

@@ -12,9 +12,9 @@ use std::time::{Duration, Instant};
 
 use cnnlab::cli::Args;
 use cnnlab::coordinator::{
-    DeviceProfile, EngineFactory, FormationPolicy, InferenceEngine,
-    LaneBudgets, PjrtEngine, ProfileState, RoutePolicy, Router, Server,
-    ServerConfig, SubmitError,
+    BrownoutConfig, DeviceProfile, EngineFactory, FormationPolicy,
+    InferenceEngine, LaneBudgets, PjrtEngine, ProfileState, RoutePolicy,
+    Router, Server, ServerConfig, SubmitError,
 };
 use cnnlab::device::{Accelerator, FpgaDevice, GpuDevice};
 use cnnlab::fpga;
@@ -34,6 +34,47 @@ fn network_by_name(name: &str) -> anyhow::Result<Network> {
         "alexnet" => Ok(alexnet()),
         "tinynet" => Ok(tinynet()),
         other => anyhow::bail!("unknown network {other:?} (alexnet|tinynet)"),
+    }
+}
+
+/// SIGHUP-driven config hot-reload for `serve`: the handler only flips
+/// an atomic (async-signal-safe); the serve loop polls it between
+/// submissions and applies `Server::reload` outside signal context.
+#[cfg(unix)]
+mod sighup {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static PENDING: AtomicBool = AtomicBool::new(false);
+    const SIGHUP: i32 = 1;
+
+    extern "C" fn on_sighup(_signum: i32) {
+        PENDING.store(true, Ordering::SeqCst);
+    }
+
+    extern "C" {
+        fn signal(
+            signum: i32,
+            handler: extern "C" fn(i32),
+        ) -> usize;
+    }
+
+    pub fn install() {
+        unsafe {
+            signal(SIGHUP, on_sighup);
+        }
+    }
+
+    pub fn take() -> bool {
+        PENDING.swap(false, Ordering::SeqCst)
+    }
+}
+
+#[cfg(not(unix))]
+mod sighup {
+    pub fn install() {}
+
+    pub fn take() -> bool {
+        false
     }
 }
 
@@ -98,7 +139,12 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
 ///  --profiles gpu,fpga --predictive --formation per_class
 ///  --lane-budget latency=8,throughput=10 --hedge-slo 20000
 ///  --retry-limit 3 --respawn
+///  --brownout-deadline 100000 --brownout-trip-loops 3
+///  --brownout-exit-below 50000 --brownout-exit-loops 12
+///  --reload-at 32
 ///  --profile-state state.json --report-every 32`
+///
+/// A running serve also hot-reloads on SIGHUP (`kill -HUP <pid>`).
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let net = network_by_name(args.get_or("network", "tinynet"))?;
     let dir = args.get_or("artifacts", cnnlab::DEFAULT_ARTIFACTS_DIR);
@@ -146,6 +192,50 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     // supervise workers: respawn a worker whose engine panicked
     // mid-batch (fresh executor thread + engine, same EWMA table)
     let respawn = args.has_flag("respawn");
+    // deadline-aware brownout: degrade (shed throughput-class, keep
+    // latency-class) when predicted lane pressure holds above the
+    // deadline, recover by hysteresis
+    let brownout = match args.get("brownout-deadline") {
+        Some(v) => {
+            let us: u64 = v.parse().map_err(|_| {
+                anyhow::anyhow!("--brownout-deadline needs microseconds")
+            })?;
+            anyhow::ensure!(
+                us > 0,
+                "--brownout-deadline must be positive"
+            );
+            let trip =
+                args.get_usize("brownout-trip-loops", 3)? as u32;
+            let exit_loops =
+                args.get_usize("brownout-exit-loops", 12)? as u32;
+            anyhow::ensure!(
+                trip > 0 && exit_loops > 0,
+                "brownout loop counts must be positive"
+            );
+            let mut b = BrownoutConfig::new(Duration::from_micros(us))
+                .with_trip_loops(trip)
+                .with_exit_loops(exit_loops);
+            if let Some(below) = args.get("brownout-exit-below") {
+                let below_us: u64 = below.parse().map_err(|_| {
+                    anyhow::anyhow!(
+                        "--brownout-exit-below needs microseconds"
+                    )
+                })?;
+                anyhow::ensure!(
+                    below_us <= us,
+                    "--brownout-exit-below above the deadline would \
+                     oscillate"
+                );
+                b = b.with_exit_below(Duration::from_micros(below_us));
+            }
+            Some(b)
+        }
+        None => None,
+    };
+    // deterministic lifecycle verb: hot-reload the serving config
+    // after the Nth submission (0 = never); SIGHUP does the same at
+    // any point
+    let reload_at = args.get_usize("reload-at", 0)?;
     // learned-state persistence: load if the file exists, save on exit
     let profile_state_path = args.get("profile-state");
     // print worker/lane snapshots every N submissions (0 = only at end)
@@ -196,6 +286,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         event_log: Some(Arc::clone(&events)),
         retry_limit,
         respawn,
+        brownout,
     };
     let loaded_state = match profile_state_path {
         Some(path) if std::path::Path::new(path).exists() => {
@@ -267,7 +358,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     // for the rest of the run (their engines hold only channel handles)
     let respawn_services: Arc<std::sync::Mutex<Vec<ExecutorService>>> =
         Arc::new(std::sync::Mutex::new(Vec::new()));
-    let servers: Vec<Server> = groups
+    let mut servers: Vec<Server> = groups
         .into_iter()
         .enumerate()
         .map(|(c, group)| {
@@ -360,10 +451,12 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     if let Some(us) = hedge_slo_us {
         router = router.with_hedge_slo(Duration::from_micros(us));
     }
+    sighup::install();
     let mut rng = Rng::new(9);
     let t0 = Instant::now();
     let mut pending = Vec::new();
     let mut shed = 0usize;
+    let mut browned_out = 0usize;
     for i in 0..requests {
         let gap = rng.next_exp(rate);
         std::thread::sleep(Duration::from_secs_f64(gap.min(0.05)));
@@ -375,7 +468,28 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             {
                 shed += 1;
             }
+            Err(e)
+                if SubmitError::classify(&e)
+                    == SubmitError::Brownout =>
+            {
+                shed += 1;
+                browned_out += 1;
+            }
             Err(e) => return Err(e),
+        }
+        // config hot-reload verbs: SIGHUP any time, or the
+        // deterministic `--reload-at N` marker — either re-derives
+        // the formation plan / lane budgets / routing tables against
+        // the live (warm) worker states with zero in-flight impact
+        if sighup::take() || (reload_at > 0 && i + 1 == reload_at) {
+            for (c, server) in servers.iter_mut().enumerate() {
+                server.reload(&config)?;
+                println!(
+                    "coordinator {c}: config reloaded after {} \
+                     submissions",
+                    i + 1
+                );
+            }
         }
         if report_every > 0 && (i + 1) % report_every == 0 {
             print_snapshot_report(&servers, &router, &events, i + 1);
@@ -386,9 +500,9 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     }
     let wall = t0.elapsed().as_secs_f64();
     println!(
-        "served {} requests ({shed} shed) on {coordinators} \
-         coordinator(s) x {workers} worker(s) [route={}] in {} \
-         ({:.1} req/s)",
+        "served {} requests ({shed} shed, {browned_out} of those by \
+         brownout) on {coordinators} coordinator(s) x {workers} \
+         worker(s) [route={}] in {} ({:.1} req/s)",
         requests - shed,
         route.name(),
         si_time(wall),
@@ -467,10 +581,11 @@ fn print_snapshot_report(
     println!("-- snapshot after {submitted} submissions --");
     let rm = router.metrics();
     println!(
-        "  router: failovers={} shed={} hedges={}",
+        "  router: failovers={} shed={} hedges={} drain_deflections={}",
         rm.failovers.load(Ordering::Relaxed),
         rm.shed.load(Ordering::Relaxed),
         rm.hedges.load(Ordering::Relaxed),
+        rm.drain_deflections.load(Ordering::Relaxed),
     );
     for (c, server) in servers.iter().enumerate() {
         let b = rm.backend(c);
@@ -497,6 +612,18 @@ fn print_snapshot_report(
             m.requeued.load(Ordering::Relaxed),
             m.quarantined.load(Ordering::Relaxed),
             m.respawns.load(Ordering::Relaxed),
+        );
+        println!(
+            "    lifecycle [{}]: drains={} suspends={} resumes={} \
+             reloads={} brownouts in={} out={} shed={}",
+            server.state().name(),
+            m.drains.load(Ordering::Relaxed),
+            m.suspends.load(Ordering::Relaxed),
+            m.resumes.load(Ordering::Relaxed),
+            m.reloads.load(Ordering::Relaxed),
+            m.brownout_entries.load(Ordering::Relaxed),
+            m.brownout_exits.load(Ordering::Relaxed),
+            m.brownout_shed.load(Ordering::Relaxed),
         );
         for (i, label) in server.lane_labels().iter().enumerate() {
             let lane = m.lane(i);

@@ -48,6 +48,24 @@ pub enum Lifecycle {
     /// A dead worker thread was respawned by the supervisor with its
     /// learned latency table preloaded.
     Respawn,
+    /// The server stopped admitting and began flushing in-flight work
+    /// (`Running`/`Degraded` → `Draining`).
+    Drain,
+    /// The drain flushed every in-flight envelope; workers are parked
+    /// with profile state persisted (`Draining` → `Suspended`).
+    Suspend,
+    /// A suspended server was asked to restore warm state and admit
+    /// again (`Suspended` → `Resuming` → `Running`).
+    Resume,
+    /// A live config hot-reload re-derived the formation plan and lane
+    /// budgets without dropping in-flight requests.
+    Reload,
+    /// Sustained over-deadline admission pressure tripped the brownout
+    /// (`Running` → `Degraded`): throughput-class admissions shed.
+    BrownoutEnter,
+    /// Pressure held below the hysteresis bound long enough to recover
+    /// (`Degraded` → `Running`).
+    BrownoutExit,
 }
 
 impl Lifecycle {
@@ -61,6 +79,12 @@ impl Lifecycle {
             Lifecycle::Requeue => "requeue",
             Lifecycle::Quarantine => "quarantine",
             Lifecycle::Respawn => "respawn",
+            Lifecycle::Drain => "drain",
+            Lifecycle::Suspend => "suspend",
+            Lifecycle::Resume => "resume",
+            Lifecycle::Reload => "reload",
+            Lifecycle::BrownoutEnter => "brownout-enter",
+            Lifecycle::BrownoutExit => "brownout-exit",
         }
     }
 }

@@ -696,18 +696,21 @@ fn prop_cancelled_before_formation_never_reaches_a_worker() {
 }
 
 /// THE EXACTLY-ONCE INVARIANT UNDER RETRY x HEDGING x CANCELLATION x
-/// WORKER DEATH: two single-worker coordinators behind an
-/// always-hedging router; both engines fail transiently every 3rd
+/// WORKER DEATH x DRAIN/RESUME: two single-worker coordinators behind
+/// an always-hedging router; both engines fail transiently every 3rd
 /// call under a retry budget of 2, backend a's first engine also
-/// panics mid-batch on its 4th call (supervision respawns it), and
-/// every third request is cancelled right after submission.  For any
-/// request count:
+/// panics mid-batch on its 4th call (supervision respawns it), every
+/// third request is cancelled right after submission, and mid-run
+/// backend a is drained (flushing every in-flight leg and parking) and
+/// later resumed while the router keeps submitting.  For any request
+/// count:
 /// * a request whose `cancel()` won is never answered;
 /// * every other request gets exactly one terminal reply — a success,
 ///   or (only) a quarantine error — and `errors <= quarantined`;
 /// * envelope conservation: completions + error replies + prunes +
-///   duplicate executions account for both legs of every request,
-///   with nothing stranded by the death.
+///   duplicate executions account for every primary leg plus every
+///   *accepted* hedge duplicate, with nothing stranded by the death
+///   or the drain — and the lifecycle cycle leaks zero slots.
 #[test]
 fn prop_retry_hedging_cancellation_death_exactly_once() {
     let gen = usize_in(4, 20);
@@ -738,7 +741,7 @@ fn prop_retry_hedging_cancellation_death_exactly_once() {
             respawn: true,
             ..Default::default()
         };
-        let a = Server::spawn_supervised(
+        let mut a = Server::spawn_supervised(
             vec![(factory, DeviceProfile::unmodeled(DeviceKind::Gpu))],
             config.clone(),
         );
@@ -753,11 +756,22 @@ fn prop_retry_hedging_cancellation_death_exactly_once() {
             vec![a.client(), b.client()],
             RoutePolicy::LeastOutstanding,
         )
-        .with_hedge_slo(Duration::ZERO);
+        .with_hedge_slo(Duration::ZERO)
+        .with_dead_cooldown(Duration::from_millis(50));
         let mut rng = Rng::new(4000 + n as u64);
         let mut live = Vec::new();
         let mut dead = Vec::new();
         for i in 0..n {
+            if i == n / 2 {
+                // operational drain mid-run: backend a flushes every
+                // in-flight leg (retry, cancel, and hedge legs
+                // included) and parks; the router must deflect
+                // around it without dead-marking it
+                a.drain().map_err(|e| e.to_string())?;
+            }
+            if i == (3 * n) / 4 {
+                a.resume().map_err(|e| e.to_string())?;
+            }
             let (rx, token) = router
                 .submit_cancellable(Tensor::randn(
                     &[3, 8, 8],
@@ -771,6 +785,9 @@ fn prop_retry_hedging_cancellation_death_exactly_once() {
                 live.push(rx);
             }
         }
+        // accepted duplicates only: legs a draining/suspended backend
+        // rejected never entered any queue
+        let hedges = router.metrics().hedges.load(Ordering::Relaxed);
         drop(router);
         let (ma, mb) = (a.metrics(), b.metrics());
         let mut answered_ok = 0u64;
@@ -798,8 +815,11 @@ fn prop_retry_hedging_cancellation_death_exactly_once() {
         }
         // every live reply has landed; the cancelled legs resolve as
         // soon as their batches form (or the respawned worker drains
-        // them) — poll instead of racing the 20ms supervisor tick
-        let total = 2 * n as u64;
+        // them) — poll instead of racing the supervisor tick.  The
+        // ledger: one primary leg per request plus one leg per
+        // *accepted* hedge duplicate (submissions a drained backend
+        // rejected were handed back, not enqueued)
+        let total = n as u64 + hedges;
         let resolve = || {
             ma.completed.load(Ordering::Relaxed)
                 + mb.completed.load(Ordering::Relaxed)
@@ -852,6 +872,24 @@ fn prop_retry_hedging_cancellation_death_exactly_once() {
                 "{errors} error replies exceed {quarantined} \
                  quarantines — a transient fault leaked to a caller"
             ));
+        }
+        // the mid-run lifecycle cycle happened exactly once and
+        // leaked nothing
+        if ma.drains.load(Ordering::Relaxed) != 1
+            || ma.suspends.load(Ordering::Relaxed) != 1
+            || ma.resumes.load(Ordering::Relaxed) != 1
+        {
+            return Err(
+                "drain/suspend/resume must each count exactly once"
+                    .into(),
+            );
+        }
+        if a.client().outstanding() != 0
+            || b.client().outstanding() != 0
+        {
+            return Err(
+                "lifecycle cycle leaked admission slots".into()
+            );
         }
         Ok(())
     }));

@@ -10,10 +10,10 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use cnnlab::coordinator::{
-    BatchPolicy, CurveEngine, DeviceProfile, DispatchPolicy,
-    EngineFactory, FaultPlan, FaultyEngine, FormationPolicy, LaneBudgets,
-    LaneClass, MockEngine, ProfileState, RoutePolicy, Router, Server,
-    ServerConfig,
+    BatchPolicy, BrownoutConfig, CurveEngine, DeviceProfile,
+    DispatchPolicy, EngineFactory, FaultPlan, FaultyEngine,
+    FormationPolicy, LaneBudgets, LaneClass, MockEngine, ProfileState,
+    RoutePolicy, Router, Server, ServerConfig, ServerState, SubmitError,
 };
 use cnnlab::device::DeviceKind;
 use cnnlab::util::{ImagePool, Rng, Samples, Tensor};
@@ -1145,6 +1145,342 @@ fn image_buffers_recycle_through_submit_pool() {
         pool.idle() > 0,
         "consumed image buffers must return to the submit-side pool"
     );
+}
+
+/// THE DRAIN CONTRACT (acceptance bound): draining a coordinator under
+/// load — with transient faults burning retry legs mid-flight — answers
+/// 100% of the in-flight envelopes (each with its own output), admits
+/// zero new requests, leaks zero admission slots, and parks the
+/// workers' learned state; `resume` restores the same server to
+/// `Running` and it serves again warm.
+#[test]
+fn drain_answers_every_in_flight_and_parks_warm() {
+    let plan = FaultPlan { fail_every: 3, ..Default::default() };
+    let mut server = Server::spawn_pool(
+        vec![
+            FaultyEngine::new(mock(2), plan),
+            FaultyEngine::new(mock(2), FaultPlan::default()),
+        ],
+        ServerConfig {
+            policy: BatchPolicy::new(4, Duration::from_millis(5)),
+            queue_capacity: 256,
+            retry_limit: 2,
+            ..Default::default()
+        },
+    );
+    let client = server.client();
+    let mut rng = Rng::new(97);
+    let pending: Vec<_> = (0..40)
+        .map(|_| {
+            let img = image(&mut rng);
+            (fingerprint(&img), client.submit(img).unwrap())
+        })
+        .collect();
+    server.drain().unwrap();
+    // the drain returns only once every in-flight slot is released
+    assert_eq!(server.state(), ServerState::Suspended);
+    assert_eq!(
+        client.outstanding(),
+        0,
+        "drain must release every admission slot exactly once"
+    );
+    assert!(
+        server.parked_state().is_some(),
+        "drain must park the learned worker state for resume"
+    );
+    // new admissions are refused with the typed drain error
+    match client.submit_or_return(image(&mut rng)) {
+        Ok(_) => panic!("a suspended server must not admit"),
+        Err((_, e)) => {
+            assert_eq!(
+                SubmitError::classify(&e),
+                SubmitError::Draining
+            );
+            assert!(e.to_string().contains("ServerDraining"), "{e}");
+        }
+    }
+    // every pre-drain request was answered with its own output —
+    // including the ones whose batches needed fault retries
+    for (want, rx) in pending {
+        let resp = rx.recv().unwrap().unwrap();
+        assert!(
+            (resp.probs.data()[0] - want).abs() < 1e-4,
+            "drained request answered with the wrong output"
+        );
+    }
+    // resume restores the warm state and admits again
+    server.resume().unwrap();
+    assert_eq!(server.state(), ServerState::Running);
+    for _ in 0..8 {
+        client.infer(image(&mut rng)).unwrap();
+    }
+    let m = server.metrics();
+    assert_eq!(m.drains.load(Ordering::Relaxed), 1);
+    assert_eq!(m.suspends.load(Ordering::Relaxed), 1);
+    assert_eq!(m.resumes.load(Ordering::Relaxed), 1);
+    assert!(
+        m.retries.load(Ordering::Relaxed) >= 1,
+        "the scripted transient faults must be hit mid-drain"
+    );
+    assert_eq!(m.errors.load(Ordering::Relaxed), 0);
+    assert_eq!(m.completed.load(Ordering::Relaxed), 48);
+}
+
+/// THE HOT-RELOAD CONTRACT (acceptance bound): swapping the batch
+/// policy on a live server re-derives the formation plan against the
+/// queued work — zero envelopes dropped, every reply still matched to
+/// its own request, slots released exactly once — and the new policy
+/// visibly governs batches formed after the swap.  A per-class server
+/// additionally swaps its lane budgets live.
+#[test]
+fn hot_reload_swaps_policy_without_dropping_in_flight() {
+    let mut server = Server::spawn(
+        mock(2),
+        cfg(BatchPolicy::new(8, Duration::from_millis(2)), 256),
+    );
+    let client = server.client();
+    let mut rng = Rng::new(98);
+    let first: Vec<_> = (0..24)
+        .map(|_| {
+            let img = image(&mut rng);
+            (fingerprint(&img), client.submit(img).unwrap())
+        })
+        .collect();
+    // let the leader form the size-8 batches, then swap the config
+    // while they are still executing
+    std::thread::sleep(Duration::from_millis(1));
+    let next = ServerConfig {
+        policy: BatchPolicy::new(2, Duration::from_millis(1)),
+        queue_capacity: 128,
+        ..Default::default()
+    };
+    server.reload(&next).unwrap();
+    let second: Vec<_> = (0..24)
+        .map(|_| {
+            let img = image(&mut rng);
+            (fingerprint(&img), client.submit(img).unwrap())
+        })
+        .collect();
+    let mut saw_full = false;
+    for (want, rx) in first {
+        let resp = rx.recv().unwrap().unwrap();
+        assert!((resp.probs.data()[0] - want).abs() < 1e-4);
+        saw_full |= resp.batch_size == 8;
+    }
+    for (want, rx) in second {
+        let resp = rx.recv().unwrap().unwrap();
+        assert!((resp.probs.data()[0] - want).abs() < 1e-4);
+        assert!(
+            resp.batch_size <= 2,
+            "post-reload batches must honor the new policy: size {}",
+            resp.batch_size
+        );
+    }
+    assert!(
+        saw_full,
+        "pre-reload burst must have formed at least one size-8 batch"
+    );
+    let m = server.metrics();
+    assert_eq!(m.reloads.load(Ordering::Relaxed), 1);
+    assert_eq!(m.completed.load(Ordering::Relaxed), 48);
+    assert_eq!(m.errors.load(Ordering::Relaxed), 0);
+    assert_eq!(
+        client.outstanding(),
+        0,
+        "reload must not leak or double-release admission slots"
+    );
+    assert_eq!(server.state(), ServerState::Running);
+
+    // per-class: a reload swaps the lane budgets live, against the
+    // same lane geometry
+    let lat_dev = CurveEngine::latency_shaped(6_000);
+    let tput_dev = CurveEngine::throughput_shaped(16_000);
+    let lat_profile = lat_dev.profile(DeviceKind::Gpu);
+    let tput_profile = tput_dev.profile(DeviceKind::Fpga);
+    let per_class = |budgets: LaneBudgets| ServerConfig {
+        policy: BatchPolicy::new(8, Duration::from_millis(12)),
+        queue_capacity: 64,
+        dispatch: DispatchPolicy::Affinity,
+        formation: FormationPolicy::PerClass,
+        lane_budgets: budgets,
+        ..Default::default()
+    };
+    let mut server = Server::spawn_pool_profiled(
+        vec![(lat_dev, lat_profile), (tput_dev, tput_profile)],
+        per_class(
+            LaneBudgets::none()
+                .with(LaneClass::Latency, 8)
+                .with(LaneClass::Throughput, 10),
+        ),
+    );
+    let client = server.client();
+    let pending: Vec<_> = (0..8)
+        .map(|_| client.submit(image(&mut rng)).unwrap())
+        .collect();
+    server
+        .reload(&per_class(
+            LaneBudgets::none()
+                .with(LaneClass::Latency, 4)
+                .with(LaneClass::Throughput, 6),
+        ))
+        .unwrap();
+    assert_eq!(
+        server.lane_budgets().get(LaneClass::Latency),
+        Some(4),
+        "reload must swap the latency-lane budget live"
+    );
+    assert_eq!(
+        server.lane_budgets().get(LaneClass::Throughput),
+        Some(6)
+    );
+    for rx in pending {
+        rx.recv().unwrap().unwrap();
+    }
+    assert_eq!(
+        server.metrics().reloads.load(Ordering::Relaxed),
+        1
+    );
+    assert_eq!(client.outstanding(), 0);
+}
+
+/// THE BROWNOUT CONTRACT (acceptance bound): a 2x flash crowd on the
+/// throughput class trips the deadline-aware monitor into `Degraded` —
+/// only throughput-class traffic is shed (typed `Brownout` errors),
+/// latency-class singles keep flowing with p99 within 1.5x of
+/// steady-state, zero admitted requests are dropped, and once pressure
+/// falls back below the hysteresis bound the server recovers to
+/// `Running` without oscillating.
+///
+/// Discrete-event arithmetic for this schedule: steady rounds load the
+/// throughput worker (40ms flat) at 75% — pressure peaks ~90ms, under
+/// the 100ms deadline; flash rounds (burst of 16 = 2x) hit 100%
+/// utilization with the burst structure stacking ~40-80ms of backlog
+/// on top, so predicted pressure crosses 100ms within 2-3 rounds and
+/// holds there for the 2-sample trip.  Degraded sheds the bursts, the
+/// backlog drains, and the pressure floor (~45ms) sits under the 70ms
+/// exit bound, so the 30-sample hysteresis (~600ms) recovers inside
+/// the trailing steady phase.
+#[test]
+fn brownout_sheds_throughput_class_and_recovers_by_hysteresis() {
+    let a = CurveEngine::latency_shaped(45_000);
+    let b = CurveEngine::latency_shaped(45_000);
+    let c = CurveEngine::throughput_shaped(40_000);
+    let pa = a.profile(DeviceKind::Gpu);
+    let pb = b.profile(DeviceKind::Gpu);
+    let pc = c.profile(DeviceKind::Fpga);
+    let server = Server::spawn_pool_profiled(
+        vec![(a, pa), (b, pb), (c, pc)],
+        ServerConfig {
+            policy: BatchPolicy::new(8, Duration::from_millis(10)),
+            queue_capacity: 64,
+            dispatch: DispatchPolicy::Affinity,
+            formation: FormationPolicy::PerClass,
+            brownout: Some(
+                BrownoutConfig::new(Duration::from_millis(100))
+                    .with_trip_loops(2)
+                    .with_exit_below(Duration::from_millis(70))
+                    .with_exit_loops(30),
+            ),
+            ..Default::default()
+        },
+    );
+    assert_eq!(
+        server.lane_classes(),
+        &[LaneClass::Latency, LaneClass::Throughput],
+        "cost models must split the pool into two lanes"
+    );
+    let client = server.client();
+    let mut rng = Rng::new(99);
+    let rounds = 26u64;
+    let t0 = Instant::now();
+    let mut bursts = Vec::new();
+    let mut steady_singles = Vec::new();
+    let mut flash_singles = Vec::new();
+    let mut shed_bursts = 0u64;
+    for r in 0..rounds {
+        let base = t0 + Duration::from_millis(80 * r);
+        sleep_until(base);
+        let flash = (8..14).contains(&r);
+        let burst = if flash { 16 } else { 6 };
+        for _ in 0..burst {
+            match client.submit_or_return(image(&mut rng)) {
+                Ok(rx) => bursts.push(rx),
+                Err((_, e)) => {
+                    // only the brownout valve may shed, and only
+                    // throughput-class traffic
+                    assert_eq!(
+                        SubmitError::classify(&e),
+                        SubmitError::Brownout,
+                        "unexpected shed reason: {e}"
+                    );
+                    shed_bursts += 1;
+                }
+            }
+        }
+        sleep_until(base + Duration::from_millis(60));
+        let rx = client
+            .submit(image(&mut rng))
+            .expect("latency-class singles must never be shed");
+        if flash {
+            flash_singles.push(rx);
+        } else {
+            steady_singles.push(rx);
+        }
+    }
+    // zero dropped in-flight: every admitted request answers
+    let mut steady = Samples::new();
+    for rx in steady_singles {
+        steady.push(rx.recv().unwrap().unwrap().latency_s);
+    }
+    let mut flash = Samples::new();
+    for rx in flash_singles {
+        flash.push(rx.recv().unwrap().unwrap().latency_s);
+    }
+    for rx in bursts {
+        rx.recv().unwrap().unwrap();
+    }
+    let m = server.metrics();
+    assert!(
+        shed_bursts > 0,
+        "the 2x flash crowd must trip the brownout and shed"
+    );
+    assert_eq!(
+        m.brownout_shed.load(Ordering::Relaxed),
+        shed_bursts,
+        "every shed must be accounted to the brownout counter"
+    );
+    assert_eq!(
+        m.brownout_entries.load(Ordering::Relaxed),
+        1,
+        "exactly one brownout entry (no flapping at the threshold)"
+    );
+    // recovery by hysteresis: pressure is gone once the queue drains,
+    // so the monitor must walk the server back to Running
+    let deadline = Instant::now() + Duration::from_secs(3);
+    while server.state() != ServerState::Running {
+        assert!(
+            Instant::now() < deadline,
+            "brownout must recover by hysteresis, stuck in {:?}",
+            server.state()
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert_eq!(
+        m.brownout_exits.load(Ordering::Relaxed),
+        1,
+        "exactly one recovery (hysteresis prevents oscillation)"
+    );
+    // the latency class rode through the flash crowd
+    let steady_p99 = steady.percentile(99.0);
+    let flash_p99 = flash.percentile(99.0);
+    assert!(
+        flash_p99 <= steady_p99 * 1.5,
+        "latency-class p99 must stay within 1.5x of steady state \
+         through the flash crowd: flash {flash_p99:.4}s vs steady \
+         {steady_p99:.4}s"
+    );
+    assert_eq!(m.errors.load(Ordering::Relaxed), 0);
+    assert_eq!(client.outstanding(), 0);
 }
 
 /// Backpressure hands the image back instead of dropping it, so routers
