@@ -7,7 +7,7 @@ use std::time::Duration;
 
 use crate::coordinator::{
     BatchPolicy, BrownoutConfig, DispatchPolicy, FormationPolicy,
-    LaneBudgets, RoutePolicy, ServerConfig,
+    LaneBudgets, MigrationConfig, RoutePolicy, ServerConfig,
 };
 use crate::model::{
     Act, ConvSpec, FcSpec, Layer, LrnSpec, Network, PoolKind, PoolSpec,
@@ -81,6 +81,23 @@ pub struct ServingConfig {
     pub brownout_exit_below_us: Option<u64>,
     /// Consecutive under-threshold samples before recovering.
     pub brownout_exit_loops: u32,
+    /// Online control-plane retuning: each coordinator's leader
+    /// re-derives its formation plan and lane budgets from the live
+    /// per-lane arrival gauges on the monitor tick and applies them
+    /// through the zero-drop reload swap.  Requires
+    /// `formation = "per_class"`.
+    pub autotune: bool,
+    /// Live request migration: the router runs a broker thread that
+    /// steals queued-but-unformed requests from a saturated
+    /// coordinator and resubmits them on the cheapest one (same reply
+    /// channel and cancel token).  Requires `coordinators > 1`.
+    pub migrate: bool,
+    /// Steal criterion: move work only when the victim's predicted
+    /// admission time exceeds the thief's by this factor (>= 1.0).
+    pub steal_hysteresis: f64,
+    /// Backlog knee: a coordinator only becomes a steal victim beyond
+    /// this many queued-but-unformed requests (half the excess moves).
+    pub steal_knee: usize,
 }
 
 impl Default for ServingConfig {
@@ -108,6 +125,10 @@ impl Default for ServingConfig {
             brownout_trip_loops: 3,
             brownout_exit_below_us: None,
             brownout_exit_loops: 12,
+            autotune: false,
+            migrate: false,
+            steal_hysteresis: MigrationConfig::default().hysteresis,
+            steal_knee: MigrationConfig::default().knee,
         }
     }
 }
@@ -135,7 +156,17 @@ impl ServingConfig {
             retry_limit: self.retry_limit,
             respawn: self.respawn,
             brownout: self.brownout(),
+            autotune: self.autotune,
         }
+    }
+
+    /// The live-migration broker configuration, if enabled.
+    pub fn migration(&self) -> Option<MigrationConfig> {
+        self.migrate.then(|| MigrationConfig {
+            hysteresis: self.steal_hysteresis,
+            knee: self.steal_knee,
+            ..MigrationConfig::default()
+        })
     }
 
     /// The brownout monitor configuration, if enabled.
@@ -294,6 +325,38 @@ impl ServingConfig {
                 cfg.lane_budgets.is_empty()
                     || cfg.formation == FormationPolicy::PerClass,
                 "lane_budgets requires formation = \"per_class\""
+            );
+            if let Some(v) = t.get("autotune").and_then(TomlValue::as_bool)
+            {
+                cfg.autotune = v;
+            }
+            if let Some(v) = t.get("migrate").and_then(TomlValue::as_bool)
+            {
+                cfg.migrate = v;
+            }
+            if let Some(v) =
+                t.get("steal_hysteresis").and_then(TomlValue::as_float)
+            {
+                anyhow::ensure!(
+                    v >= 1.0,
+                    "steal_hysteresis below 1.0 would ping-pong"
+                );
+                cfg.steal_hysteresis = v;
+            }
+            if let Some(v) =
+                t.get("steal_knee").and_then(TomlValue::as_int)
+            {
+                anyhow::ensure!(v >= 0, "steal_knee cannot be negative");
+                cfg.steal_knee = v as usize;
+            }
+            anyhow::ensure!(
+                !cfg.autotune
+                    || cfg.formation == FormationPolicy::PerClass,
+                "autotune requires formation = \"per_class\""
+            );
+            anyhow::ensure!(
+                !cfg.migrate || cfg.coordinators > 1,
+                "migrate requires coordinators > 1"
             );
         }
         Ok(cfg)

@@ -167,11 +167,12 @@ impl Batcher {
     }
 
     pub fn push(&mut self, env: Envelope) {
-        // a requeued envelope (attempt > 0) is not a fresh arrival: its
-        // original admission already trained the gap estimator, and its
-        // `arrived` stamp is stale — feeding it again would corrupt the
+        // a requeued (attempt > 0) or migrated (migrations > 0)
+        // envelope is not a fresh arrival: its original admission
+        // already trained a gap estimator somewhere, and its `arrived`
+        // stamp is stale — feeding it again would corrupt the
         // arrival-rate estimate the predictive close leans on
-        if env.attempt == 0 {
+        if env.fresh_arrival() {
             let arrived = env.req.arrived;
             if let Some(prev) = self.last_arrival {
                 // non-monotone timestamps (tests with synthetic
@@ -346,6 +347,33 @@ impl Batcher {
         }
         self.queue = kept;
         pruned
+    }
+
+    /// Extract up to `n` live-token envelopes from the *back* of the
+    /// queue — the migration-steal donor path.  The newest arrivals
+    /// migrate (they have the most remaining wait to save) while the
+    /// oldest, closest to their formation deadline, stay and close
+    /// here.  Resolved-token envelopes are skipped (left for
+    /// [`Batcher::prune_cancelled`] to account), queue order of
+    /// survivors is preserved, and neither the gap EWMA nor
+    /// `last_arrival` is touched: a steal is not an arrival-stream
+    /// event.  Returned envelopes still hold their admission slot —
+    /// the broker releases it only once a thief accepts.
+    pub fn extract_back(&mut self, n: usize) -> Vec<Envelope> {
+        let mut out = Vec::new();
+        let mut skipped = Vec::new();
+        while out.len() < n {
+            match self.queue.pop_back() {
+                Some(env) if env.token.is_live() => out.push(env),
+                Some(env) => skipped.push(env),
+                None => break,
+            }
+        }
+        // restore skipped (resolved) envelopes in their original order
+        while let Some(env) = skipped.pop() {
+            self.queue.push_back(env);
+        }
+        out
     }
 
     /// Flush everything (shutdown / lane-reset path), in max_batch
@@ -854,6 +882,71 @@ mod tests {
         b.push(env(5, t0 + gap * 5));
         assert_eq!(ids(&b.pop_ready(t0 + gap * 5).unwrap()), [3, 4, 5]);
         assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn extract_back_takes_newest_live_and_preserves_gap_state() {
+        let mut b = Batcher::with_alignment(
+            BatchPolicy::new(8, Duration::from_secs(10))
+                .with_predictive_close(),
+            &[1, 2, 4, 8],
+        );
+        let t0 = Instant::now();
+        let gap = Duration::from_millis(10);
+        let envs: Vec<Envelope> =
+            (0..5).map(|i| env(i, t0 + gap * i as u32)).collect();
+        let cancel_4 = envs[4].token.clone();
+        for e in envs {
+            b.push(e);
+        }
+        let warm_gap = b.mean_gap().unwrap();
+        cancel_4.cancel();
+        // newest live envelopes leave (4 is resolved and skipped),
+        // newest first; the oldest stay queued in FIFO order
+        let stolen = b.extract_back(2);
+        assert_eq!(ids(&stolen), [3, 2]);
+        assert_eq!(b.pending(), 3, "resolved envelope stays for pruning");
+        assert_eq!(ids(&b.prune_cancelled()), [4]);
+        assert_eq!(ids(&b.drain_all().remove(0)), [0, 1]);
+        // a steal is not an arrival event: the estimator is untouched
+        assert_eq!(b.mean_gap(), Some(warm_gap));
+        // deadline still tracks the (unchanged) oldest while queued
+        let mut b2 = Batcher::new(BatchPolicy::new(8, Duration::from_secs(1)));
+        b2.push(env(0, t0));
+        b2.push(env(1, t0));
+        assert_eq!(b2.extract_back(5).len(), 2, "capped by queue depth");
+        assert!(b2.next_deadline().is_none(), "emptied queue, no deadline");
+    }
+
+    #[test]
+    fn migrated_envelopes_do_not_train_the_gap_estimator() {
+        // establish a warm 10ms-gap estimate, then land a steal burst
+        // of migrated envelopes with ancient `arrived` stamps — the
+        // estimator and last-arrival tracking must not move
+        let mut b = Batcher::new(
+            BatchPolicy::new(16, Duration::from_secs(10)),
+        );
+        let t0 = Instant::now();
+        let gap = Duration::from_millis(10);
+        for i in 0..4u64 {
+            b.push(env(i, t0 + gap * i as u32));
+        }
+        let warm_gap = b.mean_gap().unwrap();
+        for i in 10..20u64 {
+            let mut e = env(i, t0 + Duration::from_secs(30));
+            e.migrations = 1;
+            b.push(e);
+        }
+        assert_eq!(b.mean_gap(), Some(warm_gap), "steal burst moved EWMA");
+        // the next fresh arrival observes a gap against the last fresh
+        // arrival (t0 + 3*gap), not against the migrated stamps
+        b.push(env(20, t0 + gap * 4));
+        assert_eq!(b.pending(), 15);
+        let after = b.mean_gap().unwrap();
+        assert!(
+            (after.as_secs_f64() - warm_gap.as_secs_f64()).abs() < 1e-9,
+            "fresh 10ms gap must keep the estimate at 10ms"
+        );
     }
 
     #[test]

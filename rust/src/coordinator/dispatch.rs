@@ -11,6 +11,15 @@
 //! (queue backlog + predicted execution); when any worker's estimate is
 //! still cold it falls back to join-shortest-queue, which is the
 //! anonymous-pool behaviour the dispatcher replaces.
+//!
+//! The same per-worker estimates feed two consumers above the
+//! coordinator: the predictive router prices each backend's
+//! admission-to-completion time from them
+//! (`Client::predicted_admission_us`), and the live-migration broker
+//! reuses that price as the steal criterion — work moves from a
+//! saturated coordinator to a cheaper one only when the victim's
+//! estimate exceeds the thief's by the configured hysteresis (see
+//! `MigrationConfig` in the router module).
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};

@@ -535,9 +535,10 @@ impl LaneSet {
         let gap = self
             .last_admission
             .map(|prev| arrived.saturating_duration_since(prev));
-        // requeued envelopes (attempt > 0) are not fresh arrivals and
-        // must not advance the instantaneous-gap clock
-        if env.attempt == 0 {
+        // requeued (attempt > 0) and migrated (migrations > 0)
+        // envelopes are not fresh arrivals and must not advance the
+        // instantaneous-gap clock
+        if env.fresh_arrival() {
             self.last_admission = Some(arrived);
         }
         let lane = self.steer(arrived, gap);
@@ -651,6 +652,56 @@ impl LaneSet {
             }
             best
         }
+    }
+
+    /// Extract up to `n` live queued envelopes for live migration to
+    /// another coordinator, deepest lanes first (the steal relieves
+    /// the worst backlog).  With `latency_only` (the thief is in
+    /// brownout and would shed anything else) only `Latency`-class
+    /// lanes donate.  Extraction is invisible to arrival-rate
+    /// learning (see [`Batcher::extract_back`]); the extracted
+    /// envelopes still hold their original lane's admission slot.
+    pub(crate) fn extract_stealable(
+        &mut self,
+        n: usize,
+        latency_only: bool,
+    ) -> Vec<Envelope> {
+        let mut order: Vec<usize> = (0..self.lanes.len()).collect();
+        order.sort_by_key(|&i| {
+            std::cmp::Reverse(self.lanes[i].batcher.pending())
+        });
+        let mut out = Vec::new();
+        for li in order {
+            if out.len() >= n {
+                break;
+            }
+            if latency_only && self.lanes[li].class != LaneClass::Latency
+            {
+                continue;
+            }
+            out.extend(
+                self.lanes[li].batcher.extract_back(n - out.len()),
+            );
+        }
+        out
+    }
+
+    /// The live per-lane arrival-rate estimates in [`ArrivalState`]
+    /// form (lane label = class name) — what the online retuner feeds
+    /// [`LaneBudgets::derive`] in place of persisted profile state.
+    pub fn arrival_states(&self) -> Vec<ArrivalState> {
+        self.lanes
+            .iter()
+            .filter_map(|lane| {
+                lane.batcher.gap_snapshot().map(|(gap_s, obs)| {
+                    ArrivalState {
+                        lane: lane.class.name().to_string(),
+                        gap_s,
+                        obs,
+                    }
+                })
+            })
+            .collect()
     }
 
     /// Prune envelopes whose cancellation token resolved while they
@@ -1280,6 +1331,90 @@ mod tests {
         let solo = FormationPlan::derive(base, &states[..1]);
         assert!(ls.reload(solo).is_err());
         assert_eq!(ls.lanes(), 2, "failed reload must change nothing");
+    }
+
+    /// Satellite: a steal burst — migrated envelopes landing on the
+    /// thief — must leave the thief's arrival-gap learning invariant:
+    /// neither the per-lane gap EWMAs nor the instantaneous-gap clock
+    /// steering uses may move.
+    #[test]
+    fn steal_burst_leaves_gap_learning_invariant() {
+        let base = BatchPolicy::new(8, Duration::from_millis(12));
+        let (mut ls, _rxs) = lane_set(
+            vec![latency_state(), throughput_state()],
+            base,
+        );
+        let t0 = Instant::now();
+        let gap = Duration::from_millis(10);
+        // warm both lanes with a fresh stream (isolated 10ms arrivals
+        // steer latency; a burst coalesces on the throughput lane)
+        for i in 0..4u64 {
+            ls.push(env(i, t0 + gap * i as u32));
+        }
+        for i in 4..10u64 {
+            ls.push(env(i, t0 + gap * 3));
+        }
+        let before = ls.arrival_states();
+        assert!(!before.is_empty(), "lanes must have warm estimates");
+        // a steal burst lands: 12 migrated envelopes with stale stamps
+        for i in 100..112u64 {
+            let mut e = env(i, t0 + Duration::from_secs(9));
+            e.migrations = 1;
+            ls.push(e);
+        }
+        let after = ls.arrival_states();
+        for (b, a) in before.iter().zip(&after) {
+            assert_eq!(b.lane, a.lane);
+            assert_eq!(
+                (b.gap_s, b.obs),
+                (a.gap_s, a.obs),
+                "steal burst trained lane {} estimator",
+                b.lane
+            );
+        }
+        // the instantaneous-gap clock did not move either: the next
+        // fresh arrival observes its gap against the last *fresh*
+        // admission, steering like the burst never happened
+        ls.push(env(200, t0 + gap * 4));
+        let fresh = ls.arrival_states();
+        let lat_before = before.iter().find(|a| a.lane == "latency");
+        let lat_fresh = fresh.iter().find(|a| a.lane == "latency");
+        if let (Some(b), Some(f)) = (lat_before, lat_fresh) {
+            assert!(
+                f.obs > b.obs,
+                "a fresh arrival must still train its lane"
+            );
+        }
+    }
+
+    /// Extraction for migration: deepest lane donates first, newest
+    /// envelopes leave, and a brownout thief (`latency_only`) only
+    /// receives latency-class work.
+    #[test]
+    fn extract_stealable_prefers_deep_lanes_and_honors_class_filter() {
+        let base = BatchPolicy::new(8, Duration::from_millis(12));
+        let (mut ls, _rxs) = lane_set(
+            vec![latency_state(), throughput_state()],
+            base,
+        );
+        let t0 = Instant::now();
+        for i in 0..8u64 {
+            ls.push(env(i, t0)); // burst: 2 -> latency, 6 -> throughput
+        }
+        assert_eq!(ls.lane_pending(0), 2);
+        assert_eq!(ls.lane_pending(1), 6);
+        // latency-only extraction skips the deep throughput lane
+        let lat_only = ls.extract_stealable(4, true);
+        assert_eq!(lat_only.len(), 2, "only latency-class work donated");
+        assert_eq!(ls.lane_pending(0), 0);
+        assert_eq!(ls.lane_pending(1), 6);
+        // unfiltered extraction drains the deepest lane first
+        let stolen = ls.extract_stealable(4, false);
+        assert_eq!(stolen.len(), 4);
+        assert_eq!(ls.lane_pending(1), 2);
+        // capped by what is queued
+        assert_eq!(ls.extract_stealable(10, false).len(), 2);
+        assert_eq!(ls.pending(), 0);
     }
 
     #[test]

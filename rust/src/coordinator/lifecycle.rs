@@ -181,6 +181,51 @@ impl Notifier {
     }
 }
 
+/// Wall-clock pacer for the leader's periodic monitor work (brownout
+/// pressure sampling and online retuning).  The leader loop runs at
+/// event speed — every submit or batch deadline wakes it — so periodic
+/// monitors must self-pace instead of firing on every pass.  One
+/// `MonitorTick` per concern: [`MonitorTick::due`] returns `true` at
+/// most once per `period`, which is exactly the retune-storm guard the
+/// online autotuner relies on (re-derivations are bounded by the tick
+/// rate no matter how hot the leader loop spins).
+#[derive(Debug)]
+pub struct MonitorTick {
+    period: Duration,
+    last: Option<Instant>,
+}
+
+impl MonitorTick {
+    pub fn new(period: Duration) -> MonitorTick {
+        MonitorTick { period, last: None }
+    }
+
+    pub fn period(&self) -> Duration {
+        self.period
+    }
+
+    /// `true` when a full period has elapsed since the last due tick.
+    /// The first call arms the pacer (returns `false`), so a monitor
+    /// never fires on the very first leader pass with no sample
+    /// history behind it.
+    pub fn due(&mut self, now: Instant) -> bool {
+        match self.last {
+            None => {
+                self.last = Some(now);
+                false
+            }
+            Some(last) => {
+                if now.saturating_duration_since(last) >= self.period {
+                    self.last = Some(now);
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+}
+
 /// Brownout (deadline-aware shedding) knobs.
 ///
 /// The leader's monitor computes, each loop, the worst predicted
@@ -394,6 +439,21 @@ mod tests {
         let g = n.wait_timeout(seen, Duration::from_millis(30));
         assert!(t0.elapsed() >= Duration::from_millis(25));
         assert_eq!(g, seen);
+    }
+
+    #[test]
+    fn monitor_tick_paces_to_its_period() {
+        let mut tick = MonitorTick::new(Duration::from_millis(20));
+        let t0 = Instant::now();
+        assert!(!tick.due(t0), "first call arms, never fires");
+        assert!(!tick.due(t0 + Duration::from_millis(5)));
+        assert!(tick.due(t0 + Duration::from_millis(20)));
+        // immediately after firing the pacer re-arms from the fire
+        // instant — a hot leader loop cannot fire it twice per period
+        assert!(!tick.due(t0 + Duration::from_millis(21)));
+        assert!(!tick.due(t0 + Duration::from_millis(39)));
+        assert!(tick.due(t0 + Duration::from_millis(40)));
+        assert_eq!(tick.period(), Duration::from_millis(20));
     }
 
     #[test]

@@ -64,6 +64,12 @@ pub struct ServerMetrics {
     /// Live config hot-reloads applied (formation plan / lane budgets
     /// re-derived with in-flight requests preserved).
     pub reloads: AtomicU64,
+    /// Online retunes applied by the leader's monitor tick: formation
+    /// plan and lane budgets re-derived from *live* arrival gauges and
+    /// swapped in without dropping in-flight requests.  Bounded by the
+    /// monitor tick rate and only counted when the derived plan or
+    /// budgets actually changed.
+    pub retunes: AtomicU64,
     /// Brownout entries: sustained over-deadline pressure tripped the
     /// `Degraded` state.
     pub brownout_entries: AtomicU64,
@@ -141,6 +147,7 @@ impl ServerMetrics {
             suspends: AtomicU64::new(0),
             resumes: AtomicU64::new(0),
             reloads: AtomicU64::new(0),
+            retunes: AtomicU64::new(0),
             brownout_entries: AtomicU64::new(0),
             brownout_exits: AtomicU64::new(0),
             brownout_shed: AtomicU64::new(0),
@@ -217,6 +224,7 @@ mod tests {
             exec_s: 0.0,
             latency_s,
             batch_size,
+            migrated: 0,
         }
     }
 
@@ -283,6 +291,7 @@ mod tests {
         assert_eq!(m.suspends.load(Ordering::Relaxed), 0);
         assert_eq!(m.resumes.load(Ordering::Relaxed), 0);
         assert_eq!(m.reloads.load(Ordering::Relaxed), 0);
+        assert_eq!(m.retunes.load(Ordering::Relaxed), 0);
         assert_eq!(m.brownout_entries.load(Ordering::Relaxed), 0);
         assert_eq!(m.brownout_exits.load(Ordering::Relaxed), 0);
         assert_eq!(m.brownout_shed.load(Ordering::Relaxed), 0);

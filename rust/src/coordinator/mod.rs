@@ -31,15 +31,15 @@ pub use formation::{
     FormationPlan, FormationPolicy, LaneBudgets, LaneClass, LaneSet,
 };
 pub use lifecycle::{
-    BrownoutConfig, BrownoutMonitor, BrownoutStep, LifecycleState, Notifier,
-    ServerState,
+    BrownoutConfig, BrownoutMonitor, BrownoutStep, LifecycleState,
+    MonitorTick, Notifier, ServerState,
 };
 pub use metrics::{LaneCounters, ServerMetrics};
 pub use persist::{ArrivalState, ProfileState, WorkerTable};
 pub use request::{CancelToken, Envelope, Request, Response};
 pub use router::{
-    BackendCounters, RoutePolicy, Router, RouterMetrics,
-    DEAD_BACKEND_COOLDOWN,
+    BackendCounters, MigrationConfig, RoutePolicy, Router, RouterMetrics,
+    DEAD_BACKEND_COOLDOWN, STOLEN_BACKEND_HOLDOFF,
 };
 pub use server::{
     Client, EngineFactory, ReplyReceiver, Server, ServerConfig,

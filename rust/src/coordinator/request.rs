@@ -146,6 +146,14 @@ pub struct Envelope {
     /// bounded.  Requeued envelopes (`attempt > 0`) keep their original
     /// admission slot and are excluded from arrival-gap learning.
     pub attempt: u32,
+    /// Times this envelope was live-migrated (stolen) to another
+    /// coordinator.  Zero on first admission; the migration broker
+    /// bumps it on every accepted resubmission.  Migrated envelopes
+    /// (`migrations > 0`) are excluded from the thief's arrival-gap
+    /// learning — a steal burst is not a fresh arrival stream — and
+    /// the count rides into [`Response::migrated`] so tests can bound
+    /// repeat migrations.
+    pub migrations: u32,
 }
 
 impl Envelope {
@@ -165,7 +173,17 @@ impl Envelope {
             token: CancelToken::new(),
             hedged: false,
             attempt: 0,
+            migrations: 0,
         }
+    }
+
+    /// Whether this envelope is a *fresh* arrival for the purposes of
+    /// inter-arrival gap learning: not a retry requeue and not a
+    /// migrated resubmission.  Both carry a stale `arrived` stamp from
+    /// their original admission, so observing them again would corrupt
+    /// the rate estimate the predictive close leans on.
+    pub fn fresh_arrival(&self) -> bool {
+        self.attempt == 0 && self.migrations == 0
     }
 }
 
@@ -186,6 +204,9 @@ pub struct Response {
     pub latency_s: f64,
     /// how many requests shared the executed batch
     pub batch_size: usize,
+    /// how many times the request was live-migrated between
+    /// coordinators before being answered (0 = served where admitted)
+    pub migrated: u32,
 }
 
 #[cfg(test)]
@@ -219,6 +240,8 @@ mod tests {
         );
         assert_eq!(env.lane, 0);
         assert!(!env.hedged);
+        assert_eq!(env.migrations, 0);
+        assert!(env.fresh_arrival());
         let batch =
             Arc::new(Tensor::from_vec(&[1, 2], vec![0.5, 0.5]).unwrap());
         let resp = Response {
@@ -228,11 +251,32 @@ mod tests {
             exec_s: 0.0,
             latency_s: 0.0,
             batch_size: 1,
+            migrated: 0,
         };
         env.reply.send(Ok(resp)).unwrap();
         let got = rx.recv().unwrap().unwrap();
         assert_eq!(got.id, 1);
         assert_eq!(got.probs.data(), &[0.5, 0.5]);
+    }
+
+    #[test]
+    fn fresh_arrival_excludes_retries_and_migrations() {
+        let (tx, _rx) = channel();
+        let mut env = Envelope::new(
+            Request {
+                id: 1,
+                image: Tensor::zeros(&[2]),
+                arrived: Instant::now(),
+            },
+            tx,
+            0,
+        );
+        assert!(env.fresh_arrival());
+        env.migrations = 1;
+        assert!(!env.fresh_arrival(), "migrated is not a fresh arrival");
+        env.migrations = 0;
+        env.attempt = 1;
+        assert!(!env.fresh_arrival(), "requeued is not a fresh arrival");
     }
 
     #[test]

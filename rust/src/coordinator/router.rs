@@ -25,7 +25,7 @@
 //! from the batcher queue or the worker's pre-stacking filter —
 //! usually before it costs any device work.
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -34,13 +34,53 @@ use crate::trace::{EventLog, Lifecycle};
 use crate::util::Tensor;
 
 use super::dispatch::rotating_argmin;
-use super::request::{CancelToken, Response};
+use super::lifecycle::{Notifier, ServerState};
+use super::request::{CancelToken, Envelope, Response};
 use super::server::{Client, ReplyReceiver, SubmitError};
 
 /// How long a backend whose coordinator looks dead (submit channel
 /// disconnected) is skipped by picks and failover before being probed
 /// again.
 pub const DEAD_BACKEND_COOLDOWN: Duration = Duration::from_millis(500);
+
+/// How long predictive picks mistrust a backend whose queue the
+/// migration broker just stole down to zero.  Its leader has not
+/// republished the admission gauges since the steal, so for one
+/// gauge-refresh interval (the coordinators' monitor tick) the
+/// estimate reads stale-idle — preferring it would re-pile the very
+/// backlog the steal moved away.
+pub const STOLEN_BACKEND_HOLDOFF: Duration = Duration::from_millis(20);
+
+/// Tuning for the cross-coordinator live-migration broker
+/// ([`Router::with_migration`]).
+#[derive(Clone, Copy, Debug)]
+pub struct MigrationConfig {
+    /// Steal only when the victim's predicted backlog wait exceeds
+    /// the thief's predicted admission time by this factor — the
+    /// hysteresis band that keeps two near-idle coordinators from
+    /// ping-ponging work.  (A draining victim bypasses the band: it
+    /// will never serve its backlog itself.)
+    pub hysteresis: f64,
+    /// Queued-envelope backlog a victim must exceed before it counts
+    /// as saturated; a steal batch moves half the backlog beyond the
+    /// knee.
+    pub knee: usize,
+    /// Per-victim rate limit: at most one steal batch per interval.
+    pub min_interval: Duration,
+    /// Broker cadence (mirrors the coordinators' monitor tick).
+    pub tick: Duration,
+}
+
+impl Default for MigrationConfig {
+    fn default() -> MigrationConfig {
+        MigrationConfig {
+            hysteresis: 2.0,
+            knee: 8,
+            min_interval: Duration::from_millis(40),
+            tick: Duration::from_millis(20),
+        }
+    }
+}
 
 /// Sort-key offset for backends with no admission estimate, so warm
 /// predictions always order ahead of cold outstanding counts in the
@@ -94,6 +134,11 @@ pub struct BackendCounters {
     /// Requests routed here by the cold least-outstanding fallback
     /// (some backend had no admission estimate yet).
     pub cold_routed: AtomicU64,
+    /// Envelopes the migration broker stole *from* this backend's
+    /// queue (it was the victim).
+    pub steals_out: AtomicU64,
+    /// Stolen envelopes this backend accepted as the thief.
+    pub steals_in: AtomicU64,
 }
 
 /// Router observability: failovers, sheds, and per-backend routing
@@ -116,6 +161,19 @@ pub struct RouterMetrics {
     /// the copy).  Wins are counted where they are observed: the
     /// winning coordinator's `ServerMetrics::hedge_wins`.
     pub hedges: AtomicU64,
+    /// Envelopes live-migrated off a saturated backend and accepted
+    /// by another — each counts once, however many candidates
+    /// rejected it on the way ([`Router::with_migration`]).
+    pub steals: AtomicU64,
+    /// Exported envelopes whose request resolved (cancelled, or a
+    /// hedge sibling won) before any thief accepted them — discarded
+    /// by the broker with the same terminal accounting as a
+    /// leader-side prune.
+    pub steal_aborted: AtomicU64,
+    /// Broker ticks on which the live backend preference order
+    /// (indices by predicted admission) changed — the router-table
+    /// half of online retuning, bounded by the broker tick rate.
+    pub retunes: AtomicU64,
     backends: Vec<BackendCounters>,
 }
 
@@ -126,6 +184,9 @@ impl RouterMetrics {
             shed: AtomicU64::new(0),
             drain_deflections: AtomicU64::new(0),
             hedges: AtomicU64::new(0),
+            steals: AtomicU64::new(0),
+            steal_aborted: AtomicU64::new(0),
+            retunes: AtomicU64::new(0),
             backends: (0..backends)
                 .map(|_| BackendCounters::default())
                 .collect(),
@@ -142,10 +203,10 @@ impl RouterMetrics {
 }
 
 pub struct Router {
-    clients: Vec<Client>,
+    clients: Arc<Vec<Client>>,
     policy: RoutePolicy,
     rr: AtomicUsize,
-    metrics: RouterMetrics,
+    metrics: Arc<RouterMetrics>,
     /// Reference instant for the dead-backend clock.
     epoch: Instant,
     /// Micros-since-epoch until which each backend is considered dead
@@ -157,6 +218,11 @@ pub struct Router {
     /// the single-flight dead-probe machinery — the mark simply
     /// expires (or is cleared by a successful submit after resume).
     drained_until_us: Vec<AtomicU64>,
+    /// Micros-since-epoch until which each backend's admission gauges
+    /// are mistrusted because a steal just emptied its queue (0 =
+    /// never marked) — see [`STOLEN_BACKEND_HOLDOFF`].  Shared with
+    /// the migration broker, which stamps it.
+    stolen_until_us: Arc<Vec<AtomicU64>>,
     dead_cooldown: Duration,
     /// Hedge when the chosen backend's predicted
     /// admission-to-completion exceeds this (None = hedging off).
@@ -164,6 +230,11 @@ pub struct Router {
     /// Lifecycle recorder for hedge launches (share the same log with
     /// the coordinators to see the full duplicate-vs-winner timeline).
     events: Option<Arc<EventLog>>,
+    /// The live-migration broker thread, when enabled
+    /// ([`Router::with_migration`]) — joined on drop.
+    broker: Option<std::thread::JoinHandle<()>>,
+    broker_shutdown: Arc<AtomicBool>,
+    broker_notify: Arc<Notifier>,
 }
 
 impl Router {
@@ -171,16 +242,22 @@ impl Router {
         assert!(!clients.is_empty(), "router needs at least one backend");
         let n = clients.len();
         Router {
-            clients,
+            clients: Arc::new(clients),
             policy,
             rr: AtomicUsize::new(0),
-            metrics: RouterMetrics::new(n),
+            metrics: Arc::new(RouterMetrics::new(n)),
             epoch: Instant::now(),
             dead_until_us: (0..n).map(|_| AtomicU64::new(0)).collect(),
             drained_until_us: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            stolen_until_us: Arc::new(
+                (0..n).map(|_| AtomicU64::new(0)).collect(),
+            ),
             dead_cooldown: DEAD_BACKEND_COOLDOWN,
             hedge_slo: None,
             events: None,
+            broker: None,
+            broker_shutdown: Arc::new(AtomicBool::new(false)),
+            broker_notify: Arc::new(Notifier::new()),
         }
     }
 
@@ -205,6 +282,54 @@ impl Router {
     /// each backend's `ServerConfig::event_log` for full timelines).
     pub fn with_event_log(mut self, log: Arc<EventLog>) -> Router {
         self.events = Some(log);
+        self
+    }
+
+    /// Enable the live-migration broker: a background thread that
+    /// every `cfg.tick` compares backend saturation and moves
+    /// queued-but-unformed envelopes from the most saturated
+    /// coordinator (the *victim*) to the cheapest admitting one (the
+    /// *thief*) by cancel-and-resubmit — the envelope is extracted
+    /// from the victim's queue before any device work, resubmitted on
+    /// the thief with its original reply channel and [`CancelToken`],
+    /// and the victim's admission slot is released only once a thief
+    /// accepted, so exactly-once and hedging semantics are untouched.
+    ///
+    /// Steal decisions are cost-model-driven (`cfg.hysteresis` over
+    /// the victim/thief [`Client::predicted_admission_us`] gap),
+    /// batched (`cfg.knee`), and rate-limited (`cfg.min_interval`).
+    /// A draining victim is always stealable; a thief in Degraded
+    /// only receives latency-class work.  Call after
+    /// [`Router::with_event_log`] so steal batches are recorded.
+    pub fn with_migration(mut self, cfg: MigrationConfig) -> Router {
+        assert!(
+            self.clients.len() > 1,
+            "migration needs at least two backends"
+        );
+        assert!(
+            cfg.hysteresis >= 1.0,
+            "a hysteresis below 1 would ping-pong work between \
+             near-idle coordinators"
+        );
+        let n = self.clients.len();
+        let broker = Broker {
+            clients: Arc::clone(&self.clients),
+            cfg,
+            metrics: Arc::clone(&self.metrics),
+            events: self.events.clone(),
+            epoch: self.epoch,
+            stolen_until_us: Arc::clone(&self.stolen_until_us),
+            shutdown: Arc::clone(&self.broker_shutdown),
+            notify: Arc::clone(&self.broker_notify),
+            next_steal_ok_us: vec![0; n],
+            last_order: Vec::new(),
+        };
+        self.broker = Some(
+            std::thread::Builder::new()
+                .name("cnnlab-migration".into())
+                .spawn(move || broker.run())
+                .expect("spawn migration broker"),
+        );
         self
     }
 
@@ -248,6 +373,25 @@ impl Router {
     fn is_draining(&self, idx: usize, now_us: u64) -> bool {
         let until = self.drained_until_us[idx].load(Ordering::Relaxed);
         until != 0 && now_us < until
+    }
+
+    fn is_steal_drained(&self, idx: usize, now_us: u64) -> bool {
+        let until = self.stolen_until_us[idx].load(Ordering::Relaxed);
+        until != 0 && now_us < until
+    }
+
+    /// The broker just stole `idx`'s queue down to zero: its
+    /// admission gauges are stale (the leader has not republished
+    /// since the queue emptied) and read idle, so predictive picks
+    /// deprioritize it for [`STOLEN_BACKEND_HOLDOFF`] — one
+    /// gauge-refresh interval — instead of re-piling the backlog the
+    /// steal just moved.
+    pub(crate) fn note_steal_drained(&self, idx: usize) {
+        stamp_window(
+            &self.stolen_until_us[idx],
+            self.epoch,
+            STOLEN_BACKEND_HOLDOFF,
+        );
     }
 
     /// Cool a backend that rejected with `ServerDraining`: picks and
@@ -340,9 +484,19 @@ impl Router {
                 let warm = (0..n)
                     .filter(|&i| alive(i))
                     .all(|i| ests[i].is_some());
+                // a just-stolen-empty backend's gauges read
+                // stale-idle: deprioritize it while any other live
+                // candidate exists (never exclude it outright)
+                let cooled: Vec<bool> = (0..n)
+                    .map(|i| self.is_steal_drained(i, now_us))
+                    .collect();
+                let any_hot =
+                    (0..n).any(|i| alive(i) && !cooled[i]);
                 let pick = rotating_argmin(n, &self.rr, |i| {
                     if !alive(i) {
                         u64::MAX
+                    } else if cooled[i] && any_hot {
+                        u64::MAX - 1
                     } else if warm {
                         ests[i].unwrap_or(u64::MAX)
                     } else {
@@ -558,6 +712,265 @@ impl Router {
 
     pub fn client(&self, idx: usize) -> &Client {
         &self.clients[idx]
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        if let Some(broker) = self.broker.take() {
+            self.broker_shutdown.store(true, Ordering::Release);
+            self.broker_notify.notify();
+            let _ = broker.join();
+        }
+    }
+}
+
+/// Stamp a micros-since-`epoch` expiry `window` from now into an
+/// atomic deadline clock (the dead/drained/stolen pattern; `max(1)`
+/// keeps 0 meaning "never marked").
+fn stamp_window(clock: &AtomicU64, epoch: Instant, window: Duration) {
+    let until = epoch.elapsed().as_micros() as u64
+        + window.as_micros() as u64;
+    clock.store(until.max(1), Ordering::Relaxed);
+}
+
+/// The live-migration broker ([`Router::with_migration`]): one thread
+/// per router, ticking every `cfg.tick`, that brokers steals between
+/// the coordinators' leaders via their migration mailboxes.
+struct Broker {
+    clients: Arc<Vec<Client>>,
+    cfg: MigrationConfig,
+    metrics: Arc<RouterMetrics>,
+    events: Option<Arc<EventLog>>,
+    epoch: Instant,
+    stolen_until_us: Arc<Vec<AtomicU64>>,
+    shutdown: Arc<AtomicBool>,
+    notify: Arc<Notifier>,
+    /// Per-victim micros-since-epoch before which no new steal batch
+    /// may target it — the `min_interval` rate limit.
+    next_steal_ok_us: Vec<u64>,
+    /// Backend preference order (indices by predicted admission) from
+    /// the previous tick: a change counts as a router-table retune.
+    last_order: Vec<usize>,
+}
+
+impl Broker {
+    fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    fn run(mut self) {
+        loop {
+            let seen = self.notify.seq();
+            if self.shutdown.load(Ordering::Acquire) {
+                break;
+            }
+            self.tick();
+            self.notify.wait_timeout(seen, self.cfg.tick);
+        }
+        // final sweep: envelopes a victim exported for a steal that
+        // never completed go home (slot still held) before the broker
+        // dies, so nothing strands in a mailbox
+        for client in self.clients.iter() {
+            for env in client.take_stolen() {
+                client.return_stolen(env);
+            }
+        }
+    }
+
+    fn tick(&mut self) {
+        let n = self.clients.len();
+        let states: Vec<ServerState> =
+            self.clients.iter().map(Client::lifecycle_state).collect();
+        let ests: Vec<Option<u64>> = self
+            .clients
+            .iter()
+            .map(Client::predicted_admission_us)
+            .collect();
+        // the victim side of the steal criterion: what the queued
+        // backlog will actually wait if it stays put.  The admission
+        // estimate alone cannot see a deep unformed queue (its
+        // formation wait is bounded by the batch deadline), so the
+        // backlog is priced separately through each lane's cheapest
+        // worker.
+        let drains: Vec<Option<u64>> = self
+            .clients
+            .iter()
+            .map(Client::predicted_backlog_wait_us)
+            .collect();
+        let backlogs: Vec<usize> =
+            self.clients.iter().map(Client::queued_backlog).collect();
+
+        // sweep leftovers from a previous, partially-polled steal
+        for v in 0..n {
+            let leftovers = self.clients[v].take_stolen();
+            if !leftovers.is_empty() {
+                self.place_batch(v, leftovers, &states, &ests);
+            }
+        }
+
+        // the broker's preference order IS the router's live routing
+        // table: re-derive it from the live gauges every tick and
+        // count actual changes as retunes (the storm guard is the
+        // tick itself — at most one re-derivation per tick)
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by_key(|&i| ests[i].unwrap_or(u64::MAX));
+        if !self.last_order.is_empty() && order != self.last_order {
+            self.metrics.retunes.fetch_add(1, Ordering::Relaxed);
+        }
+        self.last_order = order;
+
+        // victim: a draining backend with backlog is always stealable
+        // (it will never serve the work itself); otherwise the most
+        // expensive backend with backlog beyond the knee
+        let victim = (0..n)
+            .filter(|&i| {
+                states[i] == ServerState::Draining && backlogs[i] > 0
+            })
+            .max_by_key(|&i| backlogs[i])
+            .or_else(|| {
+                (0..n)
+                    .filter(|&i| backlogs[i] > self.cfg.knee)
+                    .max_by_key(|&i| drains[i].unwrap_or(0))
+            });
+        let Some(victim) = victim else { return };
+        let now = self.now_us();
+        if now < self.next_steal_ok_us[victim] {
+            return;
+        }
+        // thief: cheapest admitting backend other than the victim
+        let thief = (0..n)
+            .filter(|&i| i != victim && states[i].admits())
+            .min_by_key(|&i| ests[i].unwrap_or(u64::MAX));
+        let Some(thief) = thief else { return };
+        let draining = states[victim] == ServerState::Draining;
+        if !draining {
+            // hysteresis: the victim's predicted backlog wait must
+            // beat the thief's predicted admission by a clear margin
+            // under the cost model, or two near-idle peers ping-pong
+            // work
+            let (Some(v_est), Some(t_est)) =
+                (drains[victim], ests[thief])
+            else {
+                return;
+            };
+            if (v_est as f64) <= self.cfg.hysteresis * (t_est as f64) {
+                return;
+            }
+        }
+        // batched: a drain empties outright; saturation moves half
+        // the backlog beyond the knee
+        let want = if draining {
+            backlogs[victim]
+        } else {
+            ((backlogs[victim] - self.cfg.knee + 1) / 2).max(1)
+        };
+        let latency_only = states[thief] == ServerState::Degraded;
+        self.next_steal_ok_us[victim] =
+            now + self.cfg.min_interval.as_micros() as u64;
+        self.clients[victim].begin_steal(want, latency_only);
+        // bounded poll: give the victim's leader a few sub-tick
+        // chances to export; anything late surfaces next tick via the
+        // leftover sweep
+        let mut batch = Vec::new();
+        for _ in 0..8 {
+            batch.extend(self.clients[victim].take_stolen());
+            if batch.len() >= want {
+                break;
+            }
+            std::thread::sleep(self.cfg.tick / 16);
+        }
+        if batch.is_empty() {
+            return;
+        }
+        let taken = batch.len();
+        let moved = self.place_batch(victim, batch, &states, &ests);
+        if moved > 0 && taken >= backlogs[victim] {
+            // the whole observed backlog left: the victim's gauges
+            // are stale-idle until its leader republishes
+            stamp_window(
+                &self.stolen_until_us[victim],
+                self.epoch,
+                STOLEN_BACKEND_HOLDOFF,
+            );
+        }
+    }
+
+    /// Re-home one exported batch: resubmit each live envelope to the
+    /// cheapest admitting backend (≠ victim), releasing the victim's
+    /// admission slot only once a thief accepted; rejects go home
+    /// with their slot still held, resolved envelopes are discarded
+    /// with prune accounting.  Returns the accepted count.
+    fn place_batch(
+        &self,
+        victim: usize,
+        batch: Vec<Envelope>,
+        states: &[ServerState],
+        ests: &[Option<u64>],
+    ) -> usize {
+        let n = self.clients.len();
+        let mut thieves: Vec<usize> = (0..n)
+            .filter(|&i| i != victim && states[i].admits())
+            .collect();
+        thieves.sort_by_key(|&i| ests[i].unwrap_or(u64::MAX));
+        let mut moved_to = None;
+        let mut moved = 0usize;
+        for mut env in batch {
+            if !env.token.is_live() {
+                // the request resolved (cancel, or a hedge sibling
+                // won) while in transit: same terminal accounting as
+                // a leader-side prune
+                self.metrics
+                    .steal_aborted
+                    .fetch_add(1, Ordering::Relaxed);
+                self.clients[victim].discard_stolen(env);
+                continue;
+            }
+            let home_lane = env.lane;
+            env.migrations += 1;
+            let mut placed = None;
+            for &t in &thieves {
+                match self.clients[t].submit_stolen(env) {
+                    Ok(()) => {
+                        placed = Some(t);
+                        break;
+                    }
+                    Err(back) => env = back,
+                }
+            }
+            match placed {
+                Some(t) => {
+                    self.clients[victim]
+                        .release_stolen_slot(home_lane);
+                    self.metrics
+                        .steals
+                        .fetch_add(1, Ordering::Relaxed);
+                    self.metrics
+                        .backend(victim)
+                        .steals_out
+                        .fetch_add(1, Ordering::Relaxed);
+                    self.metrics
+                        .backend(t)
+                        .steals_in
+                        .fetch_add(1, Ordering::Relaxed);
+                    moved += 1;
+                    moved_to = Some(t);
+                }
+                // every thief rejected: home with the slot still held
+                // (migrations stays bumped — the stale arrival stamp
+                // must not retrain the victim's gap estimator)
+                None => self.clients[victim].return_stolen(env),
+            }
+        }
+        if moved > 0 {
+            if let (Some(log), Some(to)) = (&self.events, moved_to) {
+                log.record(
+                    0,
+                    Lifecycle::Steal { from: victim, to, n: moved },
+                );
+            }
+        }
+        moved
     }
 }
 
@@ -1078,6 +1491,70 @@ mod tests {
             r.drained_until_us[1].load(Ordering::Relaxed),
             0,
             "a successful submit must clear the drain mark"
+        );
+    }
+
+    /// THE STALE-GAUGE REGRESSION (satellite): a backend a steal just
+    /// emptied looks infinitely attractive to the predictive cost
+    /// model — its parked leader's gauges still read idle — so
+    /// `note_steal_drained` deprioritizes it for one gauge-refresh
+    /// interval instead of letting the router herd the next burst
+    /// right back onto it (recreating the backlog the steal moved).
+    #[test]
+    fn stolen_backend_is_not_preferred_while_its_gauge_is_stale() {
+        let a =
+            spawn_curve(CurveEngine::latency_shaped(1_000), DeviceKind::Gpu);
+        let b =
+            spawn_curve(CurveEngine::latency_shaped(1_000), DeviceKind::Gpu);
+        let r = Router::new(
+            vec![a.client(), b.client()],
+            RoutePolicy::Predictive,
+        );
+        // let the leaders finish their start-up publish passes and
+        // park; the gauges stored below then stay in force, because an
+        // idle leader refreshes them no sooner than its failsafe wakeup
+        std::thread::sleep(Duration::from_millis(30));
+        let set_gauges = || {
+            a.metrics()
+                .lane(0)
+                .admission_wait_us
+                .store(0, Ordering::Relaxed);
+            b.metrics()
+                .lane(0)
+                .admission_wait_us
+                .store(50_000, Ordering::Relaxed);
+        };
+        set_gauges();
+        for _ in 0..4 {
+            assert_eq!(r.pick(), 0, "idle-reading backend must win");
+        }
+        // a steal just drained backend 0 to zero: its idle-looking
+        // gauges are stale, so picks must route elsewhere for the
+        // holdoff window even though its estimate reads cheapest
+        r.note_steal_drained(0);
+        let picks: Vec<usize> = (0..6).map(|_| r.pick()).collect();
+        assert!(
+            picks.iter().all(|&p| p == 1),
+            "stolen-to-zero backend preferred on stale gauges: {picks:?}"
+        );
+        // deprioritized, never excluded: with every candidate cooled
+        // there is no hot alternative, and the cheapest estimate wins
+        // again
+        r.note_steal_drained(1);
+        let both: Vec<usize> = (0..4).map(|_| r.pick()).collect();
+        assert!(
+            both.iter().all(|&p| p == 0),
+            "cooled backends must stay pickable: {both:?}"
+        );
+        // after the holdoff the (now refreshed) gauges are trusted
+        std::thread::sleep(
+            STOLEN_BACKEND_HOLDOFF + Duration::from_millis(10),
+        );
+        set_gauges();
+        let after: Vec<usize> = (0..4).map(|_| r.pick()).collect();
+        assert!(
+            after.iter().all(|&p| p == 0),
+            "expired holdoff must restore predictive picks: {after:?}"
         );
     }
 }

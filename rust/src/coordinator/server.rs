@@ -42,7 +42,7 @@ use super::formation::{
 };
 use super::lifecycle::{
     BrownoutConfig, BrownoutMonitor, BrownoutStep, LifecycleState,
-    Notifier, ServerState,
+    MonitorTick, Notifier, ServerState,
 };
 use super::metrics::ServerMetrics;
 use super::persist::{ArrivalState, ProfileState, WorkerTable};
@@ -481,6 +481,30 @@ impl AdmissionView {
     }
 }
 
+/// Mailbox pair between a router's migration broker and this
+/// coordinator's leader — the transport of cross-coordinator live
+/// migration.  The broker *requests* an export; the leader (the only
+/// thread that owns the batchers) extracts queued-but-unformed
+/// envelopes into the outbox; rejected steals come home through
+/// `returns`.  Every envelope in either box still holds its original
+/// admission slot on this coordinator — the broker releases it only
+/// once a thief accepted, so the exactly-once slot ledger never has a
+/// window where an envelope exists without a slot.
+#[derive(Default)]
+pub(crate) struct MigrationBox {
+    /// Broker -> leader: how many envelopes to export (0 = no steal
+    /// pending); the leader consumes it with `swap(0)` once per pass.
+    requested: AtomicUsize,
+    /// Restrict the export to latency-class lanes (the thief is
+    /// `Degraded` and would shed everything else anyway).
+    latency_only: AtomicBool,
+    /// Leader -> broker: the extracted envelopes.
+    outbox: Mutex<Vec<Envelope>>,
+    /// Broker -> leader: envelopes every thief rejected, going home
+    /// with their slot still held (re-queued, never re-admitted).
+    returns: Mutex<Vec<Envelope>>,
+}
+
 /// Submission handle (clone freely across threads).
 #[derive(Clone)]
 pub struct Client {
@@ -495,6 +519,9 @@ pub struct Client {
     /// Wakes the leader after a successful send (the leader parks on
     /// this eventcount instead of polling the submit channel).
     leader_notify: Arc<Notifier>,
+    /// Live-migration mailbox shared with the leader (see
+    /// [`MigrationBox`]); only a router's migration broker uses it.
+    migration: Arc<MigrationBox>,
 }
 
 impl Client {
@@ -627,6 +654,7 @@ impl Client {
             token,
             hedged,
             attempt: 0,
+            migrations: 0,
         };
         match self.tx.try_send(env) {
             Ok(()) => {
@@ -705,6 +733,146 @@ impl Client {
     pub fn metrics(&self) -> &ServerMetrics {
         &self.metrics
     }
+
+    // ---- live-migration surface (router's broker only) ----
+
+    /// Current lifecycle state — steal decisions key on it (a
+    /// Draining victim is always stealable; a Degraded thief only
+    /// receives latency-class work).
+    pub(crate) fn lifecycle_state(&self) -> ServerState {
+        self.lifecycle.get()
+    }
+
+    /// Queued-but-unformed envelopes per the leader's published
+    /// occupancy gauges — the backlog a steal decision weighs.
+    pub(crate) fn queued_backlog(&self) -> usize {
+        (0..self.view.lane_count())
+            .map(|li| {
+                self.metrics.lane(li).occupancy.load(Ordering::Relaxed)
+                    as usize
+            })
+            .sum()
+    }
+
+    /// The victim side of the broker's steal criterion: how long this
+    /// coordinator's queued-but-unformed backlog will wait if it
+    /// stays put.  [`Client::predicted_admission_us`] cannot see a
+    /// deep unformed queue — its formation-wait gauge is bounded by
+    /// the batch deadline — so this prices each lane's occupancy
+    /// through the lane's cheapest live worker: drain the existing
+    /// device backlog ([`WorkerState::predicted_completion_us`] for
+    /// one image), then the occupancy at the worker's best per-image
+    /// rate (largest profiled artifact).  Max over lanes (the slowest
+    /// lane is the one worth relieving); `None` while every
+    /// backlogged lane's workers are cold.
+    pub(crate) fn predicted_backlog_wait_us(&self) -> Option<u64> {
+        let mut worst: Option<u64> = None;
+        let lanes = self.view.lanes.read().unwrap();
+        for (li, lane) in lanes.iter().enumerate() {
+            let occ = self
+                .metrics
+                .lane(li)
+                .occupancy
+                .load(Ordering::Relaxed);
+            if occ == 0 {
+                continue;
+            }
+            let est = lane
+                .workers
+                .iter()
+                .filter_map(|&w| {
+                    let st = &self.view.states[w];
+                    let base = st.predicted_completion_us(1)?;
+                    let &big = st.artifacts().last()?;
+                    let rate = (st.predict_us(big)? / big as u64).max(1);
+                    Some(base.saturating_add(rate.saturating_mul(occ)))
+                })
+                .min();
+            if let Some(est) = est {
+                worst = Some(worst.map_or(est, |w| w.max(est)));
+            }
+        }
+        worst
+    }
+
+    /// Ask the leader to export up to `n` queued-but-unformed
+    /// envelopes into the migration outbox at its next pass.
+    pub(crate) fn begin_steal(&self, n: usize, latency_only: bool) {
+        self.migration
+            .latency_only
+            .store(latency_only, Ordering::Relaxed);
+        self.migration.requested.store(n, Ordering::Release);
+        self.leader_notify.notify();
+    }
+
+    /// Collect whatever the leader has exported so far (each envelope
+    /// still holds its admission slot here).
+    pub(crate) fn take_stolen(&self) -> Vec<Envelope> {
+        std::mem::take(&mut *self.migration.outbox.lock().unwrap())
+    }
+
+    /// Thief-side resubmission of a stolen envelope: same lifecycle,
+    /// class-steering, and admission gates as [`Client::submit_routed`]
+    /// — but it keeps the request's identity (id, reply channel,
+    /// token, hedge flag), never advances the arrival-gap clock (a
+    /// migrated envelope is not a fresh arrival), and counts no
+    /// shed/rejected metrics (a refusal just sends the broker to the
+    /// next candidate).  On acceptance the envelope is re-accounted to
+    /// a lane *here*; the caller still owns the victim-side slot.
+    pub(crate) fn submit_stolen(
+        &self,
+        mut env: Envelope,
+    ) -> Result<(), Envelope> {
+        let state = self.lifecycle.get();
+        if !state.admits() {
+            return Err(env);
+        }
+        let gap = self.view.gap(Instant::now());
+        let lane = self.admission_lane(gap);
+        if state == ServerState::Degraded
+            && self.view.lane_class(lane) != LaneClass::Latency
+        {
+            return Err(env);
+        }
+        if !self.admission.try_admit(lane) {
+            return Err(env);
+        }
+        env.lane = lane;
+        match self.tx.try_send(env) {
+            Ok(()) => {
+                self.leader_notify.notify();
+                Ok(())
+            }
+            Err(std::sync::mpsc::TrySendError::Full(env))
+            | Err(std::sync::mpsc::TrySendError::Disconnected(env)) => {
+                self.admission.cancel(lane);
+                Err(env)
+            }
+        }
+    }
+
+    /// Send a stolen envelope home after every thief rejected it: the
+    /// leader re-queues it into formation (slot still held, already
+    /// marked routed — no admission counter moves).
+    pub(crate) fn return_stolen(&self, env: Envelope) {
+        self.migration.returns.lock().unwrap().push(env);
+        self.leader_notify.notify();
+    }
+
+    /// Discard a stolen envelope whose token resolved in transit
+    /// (cancelled, or a hedge sibling won): release its slot and
+    /// count the prune — the same terminal accounting as the leader's
+    /// formation prune, so the envelope ledger stays conserved.
+    pub(crate) fn discard_stolen(&self, env: Envelope) {
+        self.admission.release(env.lane);
+        self.metrics.cancelled_pruned.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Release the victim-side admission slot of an envelope a thief
+    /// accepted (the hand-off point of the migration slot protocol).
+    pub(crate) fn release_stolen_slot(&self, lane: usize) {
+        self.admission.release(lane);
+    }
 }
 
 /// Coordinator configuration.
@@ -763,6 +931,16 @@ pub struct ServerConfig {
     /// traffic keeps flowing — then recovers by hysteresis.  `None`
     /// (default) disables the monitor entirely.
     pub brownout: Option<BrownoutConfig>,
+    /// Online control-plane retuning: re-derive the formation plan
+    /// and per-lane admission budgets from the *live* per-lane
+    /// arrival gauges on the leader's monitor tick and apply them
+    /// through the same zero-drop swap as [`Server::reload`] — so
+    /// budgets track the traffic mix while serving instead of only at
+    /// startup/profile-load/SIGHUP.  Re-derivation is bounded by the
+    /// tick rate and applied only when the derived budgets actually
+    /// changed (the retune-storm guard).  Per-class formation only; a
+    /// global-formation server ignores it.
+    pub autotune: bool,
 }
 
 impl Default for ServerConfig {
@@ -777,6 +955,7 @@ impl Default for ServerConfig {
             retry_limit: 0,
             respawn: false,
             brownout: None,
+            autotune: false,
         }
     }
 }
@@ -887,8 +1066,9 @@ pub struct Server {
     lane_classes: Vec<LaneClass>,
     /// The per-lane admission budgets actually in force: the
     /// configured ones, or — when none were configured and a profile
-    /// state was loaded — the auto-derived defaults.
-    lane_budgets: LaneBudgets,
+    /// state was loaded — the auto-derived defaults.  Shared with the
+    /// leader, which rewrites it on every applied online retune.
+    lane_budgets: Arc<Mutex<LaneBudgets>>,
     /// Lifecycle state machine shared with every client clone and the
     /// leader (see `coordinator::lifecycle`).
     lifecycle: Arc<LifecycleState>,
@@ -1086,6 +1266,10 @@ impl Server {
                 .map(|b| b.unwrap_or(config.queue_capacity))
                 .sum(),
         );
+        // shared with the leader so an online retune keeps
+        // `Server::lane_budgets` reporting the budgets actually in
+        // force
+        let lane_budgets = Arc::new(Mutex::new(lane_budgets));
         let admission =
             Arc::new(Admission::new(config.queue_capacity, budgets));
         let view = Arc::new(AdmissionView::new(
@@ -1118,6 +1302,7 @@ impl Server {
         let leader_notify = Arc::new(Notifier::new());
         let control_notify = Arc::new(Notifier::new());
         let (control_tx, control_rx) = channel::<ControlMsg>();
+        let migration = Arc::new(MigrationBox::default());
         let client = Client {
             tx,
             next_id: Arc::new(AtomicU64::new(0)),
@@ -1126,6 +1311,7 @@ impl Server {
             view: Arc::clone(&view),
             lifecycle: Arc::clone(&lifecycle),
             leader_notify: Arc::clone(&leader_notify),
+            migration: Arc::clone(&migration),
         };
 
         // leader -> workers: unbounded (depth already bounded by the
@@ -1270,6 +1456,10 @@ impl Server {
         let leader_wake = Arc::clone(&leader_notify);
         let leader_view = Arc::clone(&view);
         let brownout = config.brownout;
+        let autotune = config.autotune;
+        let base_policy = config.policy;
+        let queue_capacity = config.queue_capacity;
+        let leader_budgets = Arc::clone(&lane_budgets);
         let leader = std::thread::Builder::new()
             .name("cnnlab-leader".into())
             .spawn(move || {
@@ -1285,6 +1475,13 @@ impl Server {
                     leader_wake,
                     brownout,
                     leader_view,
+                    migration,
+                    LeaderTuning {
+                        autotune,
+                        base_policy,
+                        queue_capacity,
+                        applied: leader_budgets,
+                    },
                 )
             })
             .expect("spawn leader");
@@ -1340,12 +1537,13 @@ impl Server {
         &self.lane_classes
     }
 
-    /// The per-lane admission budgets in force — configured, or
+    /// The per-lane admission budgets in force — configured,
     /// auto-derived from a loaded profile state when none were
-    /// configured ([`LaneBudgets::derive`]).  Empty means every lane
-    /// is under the global `queue_capacity` bound.
-    pub fn lane_budgets(&self) -> &LaneBudgets {
-        &self.lane_budgets
+    /// configured ([`LaneBudgets::derive`]), or the latest applied
+    /// online retune (`ServerConfig::autotune`).  Empty means every
+    /// lane is under the global `queue_capacity` bound.
+    pub fn lane_budgets(&self) -> LaneBudgets {
+        self.lane_budgets.lock().unwrap().clone()
     }
 
     /// One label per metrics lane slot: the lane class names under
@@ -1549,7 +1747,7 @@ impl Server {
             let _ = self
                 .control_tx
                 .send(ControlMsg::ReloadGlobal { policy, align });
-            self.lane_budgets = LaneBudgets::none();
+            *self.lane_budgets.lock().unwrap() = LaneBudgets::none();
         } else {
             anyhow::ensure!(
                 config.formation == FormationPolicy::PerClass,
@@ -1581,7 +1779,8 @@ impl Server {
             );
             let _ =
                 self.control_tx.send(ControlMsg::ReloadPerClass(plan));
-            self.lane_budgets = config.lane_budgets.clone();
+            *self.lane_budgets.lock().unwrap() =
+                config.lane_budgets.clone();
         }
         self.client.metrics.reloads.fetch_add(1, Ordering::Relaxed);
         self.record_lifecycle(Lifecycle::Reload);
@@ -1705,6 +1904,29 @@ impl FormationDriver {
         }
     }
 
+    /// Export up to `n` queued-but-unformed envelopes for the
+    /// migration broker — newest-first from the deepest lanes, each
+    /// still holding its admission slot.  A global batcher has no
+    /// latency class, so a latency-only request exports nothing.
+    fn extract_stealable(
+        &mut self,
+        n: usize,
+        latency_only: bool,
+    ) -> Vec<Envelope> {
+        match self {
+            FormationDriver::Global { batcher, .. } => {
+                if latency_only {
+                    Vec::new()
+                } else {
+                    batcher.extract_back(n)
+                }
+            }
+            FormationDriver::PerClass(lanes) => {
+                lanes.extract_stealable(n, latency_only)
+            }
+        }
+    }
+
     fn drain_dispatch(&mut self) {
         match self {
             FormationDriver::Global { batcher, router, .. } => {
@@ -1809,6 +2031,18 @@ fn brownout_pressure(
 /// nothing waits out a polling interval.  While the server drains,
 /// every pass flushes partial batches immediately so in-flight work
 /// finishes as fast as the devices allow.
+/// Spawn-time knobs the leader's monitor tick consumes: whether to
+/// retune online, and the base policy / capacity the re-derivations
+/// start from (the same inputs `Server::reload` uses).
+struct LeaderTuning {
+    autotune: bool,
+    base_policy: BatchPolicy,
+    queue_capacity: usize,
+    /// Budgets in force, shared with [`Server::lane_budgets`]; the
+    /// leader writes it on every applied retune.
+    applied: Arc<Mutex<LaneBudgets>>,
+}
+
 #[allow(clippy::too_many_arguments)]
 fn leader_loop(
     mut driver: FormationDriver,
@@ -1822,10 +2056,15 @@ fn leader_loop(
     notify: Arc<Notifier>,
     brownout: Option<BrownoutConfig>,
     view: Arc<AdmissionView>,
+    migration: Arc<MigrationBox>,
+    tuning: LeaderTuning,
 ) {
     let mut open = true;
     let mut monitor = brownout.map(BrownoutMonitor::new);
-    let mut last_sample = Instant::now();
+    let mut ticker = MonitorTick::new(MONITOR_TICK);
+    // the budgets last applied by an online retune: re-deriving the
+    // same numbers is a no-op, not a retune
+    let mut last_budgets = LaneBudgets::none();
     // every envelope leaving the submit channel exits the
     // submit-to-steer window the admission estimate charges
     let absorb = |driver: &mut FormationDriver, env: Envelope| {
@@ -1864,6 +2103,34 @@ fn leader_loop(
             driver.apply_reload(msg);
         }
 
+        // live migration (router broker): re-home rejected steals
+        // first, then serve a pending export request — in EVERY
+        // state including Draining, because a draining victim is
+        // always stealable (its backlog is exactly what must move)
+        {
+            let mut back = Vec::new();
+            std::mem::swap(
+                &mut back,
+                &mut *migration.returns.lock().unwrap(),
+            );
+            for env in back {
+                // slot still held and marked routed at original
+                // absorption: straight back into formation (the
+                // bumped migration count keeps its stale arrival
+                // stamp out of the gap estimator)
+                driver.push(env);
+            }
+        }
+        let take = migration.requested.swap(0, Ordering::Acquire);
+        if take > 0 {
+            let latency_only =
+                migration.latency_only.load(Ordering::Relaxed);
+            let stolen = driver.extract_stealable(take, latency_only);
+            if !stolen.is_empty() {
+                migration.outbox.lock().unwrap().extend(stolen);
+            }
+        }
+
         // prune resolved tokens, then hand every ready batch to the
         // pool; workers run concurrently while this loop returns to
         // batching
@@ -1876,13 +2143,17 @@ fn leader_loop(
         }
         driver.publish(&metrics, Instant::now());
 
-        // deadline-aware brownout: sample pressure at MONITOR_TICK
-        // cadence (wall-clock paced, so an event storm cannot rush the
-        // trip/recover hysteresis) and drive Running <-> Degraded
-        if let Some(m) = monitor.as_mut() {
-            let now = Instant::now();
-            if now.duration_since(last_sample) >= MONITOR_TICK {
-                last_sample = now;
+        // the leader's monitor tick: wall-clock paced by
+        // [`MonitorTick`] and shared by the brownout sampler and the
+        // online retuner, so an event storm of wakeups can neither
+        // rush the brownout hysteresis nor re-derive budgets faster
+        // than the tick rate (the retune-storm guard)
+        let tick_due = (monitor.is_some() || tuning.autotune)
+            && ticker.due(Instant::now());
+        if tick_due {
+            // deadline-aware brownout: sample per-lane admission
+            // pressure and drive Running <-> Degraded by hysteresis
+            if let Some(m) = monitor.as_mut() {
                 let pressure = brownout_pressure(&metrics, &view);
                 match m.observe(state, pressure) {
                     BrownoutStep::Trip => {
@@ -1914,6 +2185,62 @@ fn leader_loop(
                     BrownoutStep::Hold => {}
                 }
             }
+            // online retuning: re-derive the formation plan and lane
+            // budgets from the LIVE arrival gauges and apply them
+            // through the same zero-drop swap as `Server::reload` —
+            // queued envelopes stay in their lanes, in-flight slots
+            // release under the new bounds because the lane geometry
+            // is checked before anything moves
+            if tuning.autotune && state.admits() {
+                if let FormationDriver::PerClass(lanes) = &mut driver {
+                    let plan = FormationPlan::derive(
+                        tuning.base_policy,
+                        &view.states,
+                    );
+                    let arrivals = lanes.arrival_states();
+                    let budgets = LaneBudgets::derive(
+                        &plan,
+                        &view.states,
+                        &arrivals,
+                        tuning.queue_capacity,
+                    );
+                    if !budgets.is_empty() && budgets != last_budgets {
+                        let views: Vec<LaneView> = plan
+                            .lanes
+                            .iter()
+                            .map(|l| LaneView {
+                                policy: l.policy,
+                                workers: l.workers.clone(),
+                                class: l.class,
+                            })
+                            .collect();
+                        let per_lane: Vec<Option<usize>> = plan
+                            .lanes
+                            .iter()
+                            .map(|l| budgets.get(l.class))
+                            .collect();
+                        // geometry gate first: a plan that changed
+                        // the lane layout cannot be applied live
+                        // (same rule as `Server::reload`)
+                        if lanes.reload(plan).is_ok() {
+                            admission.set_limits(
+                                tuning.queue_capacity,
+                                per_lane,
+                            );
+                            view.set_lanes(views);
+                            *tuning.applied.lock().unwrap() =
+                                budgets.clone();
+                            last_budgets = budgets;
+                            metrics
+                                .retunes
+                                .fetch_add(1, Ordering::Relaxed);
+                            if let Some(log) = &events {
+                                log.record(0, Lifecycle::Retune);
+                            }
+                        }
+                    }
+                }
+            }
         }
 
         if !open && driver.pending() == 0 {
@@ -1921,7 +2248,11 @@ fn leader_loop(
         }
         // park until the earliest close time, the monitor cadence, or
         // the next notify — whichever comes first
-        let cap = if monitor.is_some() { MONITOR_TICK } else { IDLE_WAIT };
+        let cap = if monitor.is_some() || tuning.autotune {
+            MONITOR_TICK
+        } else {
+            IDLE_WAIT
+        };
         let wait = driver
             .next_deadline()
             .map(|d| {
@@ -1931,6 +2262,19 @@ fn leader_loop(
         if !wait.is_zero() {
             notify.wait_timeout(seen, wait);
         }
+    }
+    // shutdown: reclaim anything still parked in the migration
+    // mailbox (an unpolled export or an unprocessed return) so the
+    // final drain answers or prunes it instead of stranding a slot
+    let mut leftover: Vec<Envelope> =
+        migration.outbox.lock().unwrap().drain(..).collect();
+    leftover.extend(migration.returns.lock().unwrap().drain(..));
+    if !leftover.is_empty() {
+        for env in leftover {
+            driver.push(env);
+        }
+        prune(&mut driver);
+        driver.drain_dispatch();
     }
     // the driver drops here (with every batch sender): workers drain
     // their queues, then exit
@@ -2206,6 +2550,7 @@ fn answer_batch(
                 .duration_since(env.req.arrived)
                 .as_secs_f64(),
             batch_size: n,
+            migrated: env.migrations,
         };
         metrics.record(worker, &resp);
         let _ = env.reply.send(Ok(resp));
@@ -2277,13 +2622,14 @@ fn run_batch_once<E: InferenceEngine>(
             env.lane,
             env.token,
             env.hedged,
+            env.migrations,
         ));
     }
     let (result, died) = call_engine(engine, images, n);
     match result {
         Ok(out) => {
             let done = Instant::now();
-            for (i, (id, arrived, reply, lane, token, hedged)) in
+            for (i, (id, arrived, reply, lane, token, hedged, migrated)) in
                 routes.into_iter().enumerate()
             {
                 admission.release(lane);
@@ -2316,6 +2662,7 @@ fn run_batch_once<E: InferenceEngine>(
                     exec_s: out.exec.as_secs_f64(),
                     latency_s: done.duration_since(arrived).as_secs_f64(),
                     batch_size: n,
+                    migrated,
                 };
                 metrics.record(worker, &resp);
                 let _ = reply.send(Ok(resp));
@@ -2323,7 +2670,7 @@ fn run_batch_once<E: InferenceEngine>(
             BatchRun { observed: Some((n, out.exec)), died }
         }
         Err(e) => {
-            for (_, _, reply, lane, token, _) in routes {
+            for (_, _, reply, lane, token, _, _) in routes {
                 admission.release(lane);
                 if !token.try_claim() {
                     metrics

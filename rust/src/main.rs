@@ -13,8 +13,8 @@ use std::time::{Duration, Instant};
 use cnnlab::cli::Args;
 use cnnlab::coordinator::{
     BrownoutConfig, DeviceProfile, EngineFactory, FormationPolicy,
-    InferenceEngine, LaneBudgets, PjrtEngine, ProfileState, RoutePolicy,
-    Router, Server, ServerConfig, SubmitError,
+    InferenceEngine, LaneBudgets, MigrationConfig, PjrtEngine,
+    ProfileState, RoutePolicy, Router, Server, ServerConfig, SubmitError,
 };
 use cnnlab::device::{Accelerator, FpgaDevice, GpuDevice};
 use cnnlab::fpga;
@@ -141,7 +141,8 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
 ///  --retry-limit 3 --respawn
 ///  --brownout-deadline 100000 --brownout-trip-loops 3
 ///  --brownout-exit-below 50000 --brownout-exit-loops 12
-///  --reload-at 32
+///  --reload-at 32 --migrate --steal-hysteresis 2.0 --steal-knee 8
+///  --autotune
 ///  --profile-state state.json --report-every 32`
 ///
 /// A running serve also hot-reloads on SIGHUP (`kill -HUP <pid>`).
@@ -236,6 +237,39 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     // after the Nth submission (0 = never); SIGHUP does the same at
     // any point
     let reload_at = args.get_usize("reload-at", 0)?;
+    // online control-plane retuning: each coordinator's leader
+    // re-derives its formation plan + lane budgets from the live
+    // arrival gauges on the monitor tick (a continuous, automatic
+    // `--reload-at`)
+    let autotune = args.has_flag("autotune");
+    anyhow::ensure!(
+        !autotune || formation == FormationPolicy::PerClass,
+        "--autotune requires --formation per_class"
+    );
+    // live request migration: the router's broker thread steals
+    // queued-but-unformed requests off a saturated coordinator and
+    // resubmits them on the cheapest one (same reply channel + token)
+    let migrate = args.has_flag("migrate");
+    anyhow::ensure!(
+        !migrate || coordinators > 1,
+        "--migrate needs --coordinators > 1"
+    );
+    let migration_cfg = if migrate {
+        let defaults = MigrationConfig::default();
+        let hysteresis =
+            args.get_f64("steal-hysteresis", defaults.hysteresis)?;
+        anyhow::ensure!(
+            hysteresis >= 1.0,
+            "--steal-hysteresis below 1.0 would ping-pong"
+        );
+        Some(MigrationConfig {
+            hysteresis,
+            knee: args.get_usize("steal-knee", defaults.knee)?,
+            ..defaults
+        })
+    } else {
+        None
+    };
     // learned-state persistence: load if the file exists, save on exit
     let profile_state_path = args.get("profile-state");
     // print worker/lane snapshots every N submissions (0 = only at end)
@@ -287,6 +321,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         retry_limit,
         respawn,
         brownout,
+        autotune,
     };
     let loaded_state = match profile_state_path {
         Some(path) if std::path::Path::new(path).exists() => {
@@ -451,6 +486,9 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     if let Some(us) = hedge_slo_us {
         router = router.with_hedge_slo(Duration::from_micros(us));
     }
+    if let Some(cfg) = migration_cfg {
+        router = router.with_migration(cfg);
+    }
     sighup::install();
     let mut rng = Rng::new(9);
     let t0 = Instant::now();
@@ -581,11 +619,15 @@ fn print_snapshot_report(
     println!("-- snapshot after {submitted} submissions --");
     let rm = router.metrics();
     println!(
-        "  router: failovers={} shed={} hedges={} drain_deflections={}",
+        "  router: failovers={} shed={} hedges={} drain_deflections={} \
+         steals={} steal_aborted={} retunes={}",
         rm.failovers.load(Ordering::Relaxed),
         rm.shed.load(Ordering::Relaxed),
         rm.hedges.load(Ordering::Relaxed),
         rm.drain_deflections.load(Ordering::Relaxed),
+        rm.steals.load(Ordering::Relaxed),
+        rm.steal_aborted.load(Ordering::Relaxed),
+        rm.retunes.load(Ordering::Relaxed),
     );
     for (c, server) in servers.iter().enumerate() {
         let b = rm.backend(c);
@@ -624,6 +666,12 @@ fn print_snapshot_report(
             m.brownout_entries.load(Ordering::Relaxed),
             m.brownout_exits.load(Ordering::Relaxed),
             m.brownout_shed.load(Ordering::Relaxed),
+        );
+        println!(
+            "    migration: steals_out={} steals_in={} retunes={}",
+            b.steals_out.load(Ordering::Relaxed),
+            b.steals_in.load(Ordering::Relaxed),
+            m.retunes.load(Ordering::Relaxed),
         );
         for (i, label) in server.lane_labels().iter().enumerate() {
             let lane = m.lane(i);
@@ -679,6 +727,10 @@ fn format_event(ev: &cnnlab::trace::TraceEvent) -> String {
             "[{when}] token {}: hedge-launched \
              (primary backend {primary}, duplicate backend {duplicate})",
             ev.token
+        ),
+        Lifecycle::Steal { from, to, n } => format!(
+            "[{when}] migration: stole {n} request(s) \
+             from backend {from} to backend {to}"
         ),
         other => {
             format!("[{when}] token {}: {}", ev.token, other.name())

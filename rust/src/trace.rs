@@ -66,6 +66,15 @@ pub enum Lifecycle {
     /// Pressure held below the hysteresis bound long enough to recover
     /// (`Degraded` → `Running`).
     BrownoutExit,
+    /// The migration broker moved `n` queued-but-unformed envelopes
+    /// from saturated coordinator `from` to underloaded coordinator
+    /// `to` (cancel-and-resubmit with the original reply channel and
+    /// token).  Recorded once per steal batch with token 0.
+    Steal { from: usize, to: usize, n: usize },
+    /// The leader's monitor tick re-derived the formation plan and
+    /// lane budgets from live arrival gauges and swapped them in
+    /// without dropping in-flight requests (online retune).
+    Retune,
 }
 
 impl Lifecycle {
@@ -85,6 +94,8 @@ impl Lifecycle {
             Lifecycle::Reload => "reload",
             Lifecycle::BrownoutEnter => "brownout-enter",
             Lifecycle::BrownoutExit => "brownout-exit",
+            Lifecycle::Steal { .. } => "steal",
+            Lifecycle::Retune => "retune",
         }
     }
 }
@@ -361,6 +372,11 @@ mod tests {
             Lifecycle::HedgeLaunched { primary: 0, duplicate: 1 }.name(),
             "hedge-launched"
         );
+        assert_eq!(
+            Lifecycle::Steal { from: 0, to: 1, n: 4 }.name(),
+            "steal"
+        );
+        assert_eq!(Lifecycle::Retune.name(), "retune");
     }
 
     #[test]

@@ -8,8 +8,8 @@ use std::time::{Duration, Instant};
 use cnnlab::coordinator::{
     pick_worker, BatchPolicy, Batcher, CurveEngine, DeviceProfile,
     DispatchPolicy, EngineFactory, Envelope, FaultPlan, FaultyEngine,
-    FormationPolicy, LaneBudgets, LaneClass, MockEngine, Request,
-    RoutePolicy, Router, Server, ServerConfig, WorkerState,
+    FormationPolicy, LaneBudgets, LaneClass, MigrationConfig, MockEngine,
+    Request, RoutePolicy, Router, Server, ServerConfig, WorkerState,
 };
 use cnnlab::device::DeviceKind;
 use cnnlab::fpga::{self, EngineConfig};
@@ -696,14 +696,19 @@ fn prop_cancelled_before_formation_never_reaches_a_worker() {
 }
 
 /// THE EXACTLY-ONCE INVARIANT UNDER RETRY x HEDGING x CANCELLATION x
-/// WORKER DEATH x DRAIN/RESUME: two single-worker coordinators behind
-/// an always-hedging router; both engines fail transiently every 3rd
-/// call under a retry budget of 2, backend a's first engine also
-/// panics mid-batch on its 4th call (supervision respawns it), every
-/// third request is cancelled right after submission, and mid-run
-/// backend a is drained (flushing every in-flight leg and parking) and
-/// later resumed while the router keeps submitting.  For any request
-/// count:
+/// WORKER DEATH x DRAIN/RESUME x LIVE MIGRATION: two single-worker
+/// coordinators behind an always-hedging router; both engines fail
+/// transiently every 3rd call under a retry budget of 2, backend a's
+/// first engine also panics mid-batch on its 4th call (supervision
+/// respawns it), every third request is cancelled right after
+/// submission, mid-run backend a is drained (flushing every in-flight
+/// leg and parking) and later resumed while the router keeps
+/// submitting — and a maximally aggressive migration broker (zero
+/// knee, unit hysteresis, no rate limit, 1ms tick) steals
+/// queued-but-unformed envelopes back and forth the whole time,
+/// including the drained backend's backlog.  Whether any steal
+/// actually lands is schedule-dependent and NOT asserted; what must
+/// hold for any request count:
 /// * a request whose `cancel()` won is never answered;
 /// * every other request gets exactly one terminal reply — a success,
 ///   or (only) a quarantine error — and `errors <= quarantined`;
@@ -757,7 +762,13 @@ fn prop_retry_hedging_cancellation_death_exactly_once() {
             RoutePolicy::LeastOutstanding,
         )
         .with_hedge_slo(Duration::ZERO)
-        .with_dead_cooldown(Duration::from_millis(50));
+        .with_dead_cooldown(Duration::from_millis(50))
+        .with_migration(MigrationConfig {
+            hysteresis: 1.0,
+            knee: 0,
+            min_interval: Duration::ZERO,
+            tick: Duration::from_millis(1),
+        });
         let mut rng = Rng::new(4000 + n as u64);
         let mut live = Vec::new();
         let mut dead = Vec::new();
