@@ -16,9 +16,9 @@
 use std::time::{Duration, Instant};
 
 use cnnlab::coordinator::{
-    BatchPolicy, CurveEngine, DispatchPolicy, FormationPolicy,
-    MigrationConfig, MockEngine, PjrtEngine, RoutePolicy, Router, Server,
-    ServerConfig,
+    BatchPolicy, CurveEngine, DispatchPolicy, EnergyPolicy,
+    FormationPolicy, MigrationConfig, MockEngine, PjrtEngine,
+    RoutePolicy, Router, Server, ServerConfig,
 };
 use cnnlab::device::DeviceKind;
 use cnnlab::model::{alexnet, tinynet};
@@ -623,6 +623,147 @@ fn live_migration_section(smoke: bool) {
     );
 }
 
+/// Energy-objective routing: latency-only predictive vs the joules
+/// argmin under a 50 W cluster cap, over a GPU-shaped coordinator
+/// (6ms/img at 97 W — the paper's K40 conv point) and an FPGA-shaped
+/// one (16ms flat at 2.5 W — the DE5 conv engine).  Bursts of 8 every
+/// 25ms: the latency argmin splits each burst across both devices
+/// (singles burn 0.58 J on the GPU path); the energy argmin forms full
+/// batches on the FPGA at 5 mJ/image.
+fn energy_routing_section(smoke: bool) {
+    let rounds = if smoke { 3 } else { 12 };
+    let sleep_until = |deadline: Instant| {
+        let now = Instant::now();
+        if deadline > now {
+            std::thread::sleep(deadline - now);
+        }
+    };
+    let run = |energy: Option<EnergyPolicy>| -> (f64, f64, f64, u64, u64)
+    {
+        let spawn = |engine: CurveEngine,
+                     kind: DeviceKind,
+                     rows: Vec<(usize, f64)>|
+         -> Server {
+            let profile = engine.profile(kind).with_energy_seed(rows);
+            Server::spawn_pool_profiled(
+                vec![(engine, profile)],
+                ServerConfig {
+                    policy: BatchPolicy::new(
+                        8,
+                        Duration::from_millis(12),
+                    ),
+                    queue_capacity: 1024,
+                    dispatch: DispatchPolicy::Affinity,
+                    formation: FormationPolicy::PerClass,
+                    energy: energy.unwrap_or_default(),
+                    ..Default::default()
+                },
+            )
+        };
+        let gpu_rows: Vec<(usize, f64)> = [1usize, 2, 4, 8]
+            .iter()
+            .map(|&b| (b, 97.0 * 0.006 * b as f64))
+            .collect();
+        let fpga_rows: Vec<(usize, f64)> =
+            [1usize, 2, 4, 8].iter().map(|&b| (b, 2.5 * 0.016)).collect();
+        let gpu = spawn(
+            CurveEngine::latency_shaped(6_000),
+            DeviceKind::Gpu,
+            gpu_rows,
+        );
+        let fpga = spawn(
+            CurveEngine::throughput_shaped(16_000),
+            DeviceKind::Fpga,
+            fpga_rows,
+        );
+        let mut router = Router::new(
+            vec![gpu.client(), fpga.client()],
+            RoutePolicy::Predictive,
+        );
+        if let Some(e) = energy {
+            router = router.with_energy(e);
+        }
+        let mut rng = Rng::new(29);
+        let t0 = Instant::now();
+        let mut pending = Vec::new();
+        for r in 0..rounds {
+            sleep_until(t0 + Duration::from_millis(25 * r as u64));
+            for _ in 0..8 {
+                pending.push(
+                    router
+                        .submit(Tensor::randn(&[3, 8, 8], &mut rng, 0.1))
+                        .unwrap(),
+                );
+            }
+        }
+        let mut lat = Samples::new();
+        for rx in pending {
+            lat.push(rx.recv().unwrap().unwrap().latency_s);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        use std::sync::atomic::Ordering;
+        let mut joules = 0.0f64;
+        let mut images = 0usize;
+        let mut cap_sheds = 0u64;
+        for s in [&gpu, &fpga] {
+            let m = s.metrics();
+            let e = m.energy_summary();
+            joules += e.mean * e.n as f64;
+            images += e.n;
+            cap_sheds += m.cap_shed.load(Ordering::Relaxed);
+        }
+        let deflections = router
+            .metrics()
+            .cap_deflections
+            .load(Ordering::Relaxed);
+        (
+            joules / images.max(1) as f64,
+            lat.p99(),
+            (rounds * 8) as f64 / wall,
+            deflections,
+            cap_sheds,
+        )
+    };
+    let mut t = Table::new(
+        &format!(
+            "Energy-objective routing — burst-8 x{rounds}, GPU coord \
+             (6ms/img, 97 W) + FPGA coord (16ms flat, 2.5 W)"
+        ),
+        &[
+            "objective",
+            "J/image",
+            "p99",
+            "req/s",
+            "cap deflections",
+            "cap sheds",
+        ],
+    );
+    for (label, energy) in [
+        ("latency-only", None),
+        (
+            "energy, 50 W cap",
+            Some(EnergyPolicy { objective: 1.0, cap_w: Some(50.0) }),
+        ),
+    ] {
+        let (j, p99, rps, deflections, sheds) = run(energy);
+        t.row(&[
+            label.to_string(),
+            format!("{j:.4}"),
+            si_time(p99),
+            f2(rps),
+            deflections.to_string(),
+            sheds.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "expected shape: the joules argmin routes every burst to the \
+         FPGA coordinator, cutting J/image ~60x while full batch-8 \
+         formation keeps p99 at or below the latency-only split; the \
+         cap deprioritizes waking the 97 W device.\n"
+    );
+}
+
 fn main() -> anyhow::Result<()> {
     let smoke = std::env::args().any(|a| a == "--smoke");
     mock_pipeline_section(smoke);
@@ -631,6 +772,7 @@ fn main() -> anyhow::Result<()> {
     per_class_formation_section(smoke);
     multi_coordinator_routing_section(smoke);
     live_migration_section(smoke);
+    energy_routing_section(smoke);
     if smoke {
         println!("SMOKE MODE: hermetic sections only, reduced counts");
         return Ok(());

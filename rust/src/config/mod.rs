@@ -6,8 +6,9 @@ pub mod toml;
 use std::time::Duration;
 
 use crate::coordinator::{
-    BatchPolicy, BrownoutConfig, DispatchPolicy, FormationPolicy,
-    LaneBudgets, MigrationConfig, RoutePolicy, ServerConfig,
+    BatchPolicy, BrownoutConfig, DispatchPolicy, EnergyPolicy,
+    FormationPolicy, LaneBudgets, MigrationConfig, RoutePolicy,
+    ServerConfig,
 };
 use crate::model::{
     Act, ConvSpec, FcSpec, Layer, LrnSpec, Network, PoolKind, PoolSpec,
@@ -98,6 +99,17 @@ pub struct ServingConfig {
     /// Backlog knee: a coordinator only becomes a steal victim beyond
     /// this many queued-but-unformed requests (half the excess moves).
     pub steal_knee: usize,
+    /// Scheduling objective blend: 0.0 minimizes predicted latency
+    /// only (the historical behaviour), 1.0 minimizes predicted
+    /// joules per image only, values between trade the two.  Applies
+    /// to worker dispatch, lane steering, and predictive routing.
+    pub energy_objective: f64,
+    /// Cluster power cap (watts) over each coordinator's predicted
+    /// draw.  Over the cap, admission sheds throughput-class traffic
+    /// with a typed `PowerCap` error and routing avoids waking
+    /// high-draw silicon whose activation would bust the bound.
+    /// `None` (the default) disables the cap.
+    pub power_cap_w: Option<f64>,
 }
 
 impl Default for ServingConfig {
@@ -129,6 +141,8 @@ impl Default for ServingConfig {
             migrate: false,
             steal_hysteresis: MigrationConfig::default().hysteresis,
             steal_knee: MigrationConfig::default().knee,
+            energy_objective: 0.0,
+            power_cap_w: None,
         }
     }
 }
@@ -157,6 +171,15 @@ impl ServingConfig {
             respawn: self.respawn,
             brownout: self.brownout(),
             autotune: self.autotune,
+            energy: self.energy(),
+        }
+    }
+
+    /// The energy scheduling policy this serving config describes.
+    pub fn energy(&self) -> EnergyPolicy {
+        EnergyPolicy {
+            objective: self.energy_objective,
+            cap_w: self.power_cap_w,
         }
     }
 
@@ -358,6 +381,21 @@ impl ServingConfig {
                 !cfg.migrate || cfg.coordinators > 1,
                 "migrate requires coordinators > 1"
             );
+            if let Some(v) =
+                t.get("energy_objective").and_then(TomlValue::as_float)
+            {
+                anyhow::ensure!(
+                    (0.0..=1.0).contains(&v),
+                    "energy_objective must be within 0.0..=1.0"
+                );
+                cfg.energy_objective = v;
+            }
+            if let Some(v) =
+                t.get("power_cap_w").and_then(TomlValue::as_float)
+            {
+                anyhow::ensure!(v > 0.0, "power_cap_w must be positive");
+                cfg.power_cap_w = Some(v);
+            }
         }
         Ok(cfg)
     }
@@ -763,6 +801,40 @@ mod tests {
             "[serving]\nbrownout_exit_below_us = 1000",
         )
         .unwrap();
+        assert!(ServingConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn serving_energy_knobs() {
+        let doc = parse_toml(
+            r#"
+            [serving]
+            energy_objective = 0.6
+            power_cap_w = 120.0
+        "#,
+        )
+        .unwrap();
+        let cfg = ServingConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.energy_objective, 0.6);
+        assert_eq!(cfg.power_cap_w, Some(120.0));
+        let e = cfg.server_config().energy;
+        assert_eq!(e.objective, 0.6);
+        assert_eq!(e.cap_w, Some(120.0));
+        assert!(e.is_active());
+        // defaults: latency-only scheduling, no cap
+        let cfg = ServingConfig::default();
+        assert_eq!(cfg.energy_objective, 0.0);
+        assert_eq!(cfg.power_cap_w, None);
+        assert!(!cfg.server_config().energy.is_active());
+        // junk rejected: objective outside the unit interval, a
+        // non-positive cap
+        let doc =
+            parse_toml("[serving]\nenergy_objective = 1.5").unwrap();
+        assert!(ServingConfig::from_toml(&doc).is_err());
+        let doc =
+            parse_toml("[serving]\nenergy_objective = -0.1").unwrap();
+        assert!(ServingConfig::from_toml(&doc).is_err());
+        let doc = parse_toml("[serving]\npower_cap_w = 0.0").unwrap();
         assert!(ServingConfig::from_toml(&doc).is_err());
     }
 

@@ -20,7 +20,9 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use super::batcher::{BatchPolicy, Batcher};
-use super::dispatch::{rotating_argmin, WorkerState};
+use super::dispatch::{
+    blend_keys, rotating_argmin, EnergyPolicy, EnergyState, WorkerState,
+};
 use super::metrics::ServerMetrics;
 use super::persist::ArrivalState;
 use super::request::Envelope;
@@ -429,6 +431,9 @@ pub struct LaneSet {
     /// fill, formation wait ~ 0) from isolated requests (gap >> 0: a
     /// throughput lane would hold them for the full deadline).
     last_admission: Option<Instant>,
+    /// Shared energy policy cell (objective + cap), read on every steer
+    /// and dispatch; `None` = latency-only (the pre-energy behaviour).
+    energy: Option<Arc<EnergyState>>,
 }
 
 impl LaneSet {
@@ -457,7 +462,25 @@ impl LaneSet {
             rr: AtomicUsize::new(0),
             metrics,
             last_admission: None,
+            energy: None,
         }
+    }
+
+    /// Attach the shared energy policy cell (leader wiring).
+    pub(crate) fn with_energy(
+        mut self,
+        energy: Arc<EnergyState>,
+    ) -> LaneSet {
+        self.energy = Some(energy);
+        self
+    }
+
+    /// The current energy policy (default: latency-only).
+    fn energy_policy(&self) -> EnergyPolicy {
+        self.energy
+            .as_deref()
+            .map(EnergyState::policy)
+            .unwrap_or_default()
     }
 
     pub fn lanes(&self) -> usize {
@@ -567,30 +590,36 @@ impl LaneSet {
             .min_by_key(|&i| (li.abs_diff(i), i))
     }
 
-    /// Predicted completion for a request admitted to `lane` now: the
+    /// Predicted completion for a request admitted to `lane` now — the
     /// formation wait the lane would impose (how long until its batch
     /// closes, given the instantaneous arrival gap) plus the best
     /// backlog + predicted-exec completion among the lane's live
-    /// workers for the batch the request is predicted to ride in.
-    /// `None` while every live worker of the lane is cold (or every
-    /// worker is retired).
-    fn lane_estimate_us(
+    /// workers for the batch the request is predicted to ride in —
+    /// paired with the best predicted joules/image among those workers
+    /// for the same batch (`None` when no live worker has an energy
+    /// model).  The whole estimate is `None` while every live worker
+    /// of the lane is cold (or every worker is retired).
+    fn lane_estimate(
         &self,
         lane: &Lane,
         arrived: Instant,
         inst_gap: Option<Duration>,
-    ) -> Option<u64> {
+    ) -> Option<(u64, Option<f64>)> {
         let (wait_us, close_n) =
             lane.batcher.admission_wait_us(arrived, inst_gap);
-        let exec = lane
-            .workers
-            .iter()
-            .filter(|&&g| self.states[g].is_live())
+        let live =
+            || lane.workers.iter().filter(|&&g| self.states[g].is_live());
+        let exec = live()
             .filter_map(|&g| {
                 self.states[g].predicted_completion_us(close_n)
             })
             .min()?;
-        Some(wait_us.saturating_add(exec))
+        let energy = live()
+            .filter_map(|&g| self.states[g].predict_energy_j(close_n))
+            .fold(None, |best: Option<f64>, e| {
+                Some(best.map_or(e, |b| b.min(e)))
+            });
+        Some((wait_us.saturating_add(exec), energy))
     }
 
     /// Pick the lane minimizing the admission-time completion estimate;
@@ -600,6 +629,13 @@ impl LaneSet {
     /// workers all retired are skipped while any other lane is alive —
     /// their cut batches would only fold over anyway, so steering there
     /// adds a hop for nothing.
+    ///
+    /// With an energy objective the warm key blends normalized
+    /// completion time with the lane's best predicted joules/image
+    /// (see `blend_keys`); under a power cap, lanes with no live
+    /// worker that is drawing or whose activation fits under the cap
+    /// are skipped while any lane fits — the formation-level mirror of
+    /// `pick_worker_energy`'s candidate filter.
     fn steer(&self, arrived: Instant, inst_gap: Option<Duration>) -> usize {
         if self.lanes.len() == 1 {
             return 0;
@@ -612,20 +648,48 @@ impl LaneSet {
             // (buffer, don't panic) until supervision respawns someone
             cand = (0..self.lanes.len()).collect();
         }
+        let policy = self.energy_policy();
+        if let Some(cap) = policy.cap_w {
+            let draw: f64 =
+                self.states.iter().map(|s| s.current_draw_w()).sum();
+            let fits: Vec<usize> = cand
+                .iter()
+                .copied()
+                .filter(|&i| {
+                    self.lanes[i].workers.iter().any(|&g| {
+                        let s = &self.states[g];
+                        s.is_live()
+                            && (s.current_draw_w() > 0.0
+                                || draw
+                                    + s.activation_power_w()
+                                        .unwrap_or(0.0)
+                                    <= cap)
+                    })
+                })
+                .collect();
+            if !fits.is_empty() {
+                cand = fits;
+            }
+        }
         if cand.len() == 1 {
             return cand[0];
         }
-        let ests: Vec<Option<u64>> = cand
+        let ests: Vec<Option<(u64, Option<f64>)>> = cand
             .iter()
             .map(|&i| {
-                self.lane_estimate_us(&self.lanes[i], arrived, inst_gap)
+                self.lane_estimate(&self.lanes[i], arrived, inst_gap)
             })
             .collect();
         if ests.iter().all(Option::is_some) {
+            let lat: Vec<u64> =
+                ests.iter().map(|e| e.unwrap().0).collect();
+            let energy: Vec<Option<f64>> =
+                ests.iter().map(|e| e.unwrap().1).collect();
+            let keys = blend_keys(&lat, &energy, policy.objective)
+                .unwrap_or(lat);
             let mut best = cand[0];
-            let mut best_est = ests[0].unwrap();
-            for (k, est) in ests.iter().enumerate().skip(1) {
-                let est = est.unwrap();
+            let mut best_est = keys[0];
+            for (k, &est) in keys.iter().enumerate().skip(1) {
                 if est < best_est {
                     best = cand[k];
                     best_est = est;
@@ -769,15 +833,51 @@ impl LaneSet {
         if cand.is_empty() {
             cand = lane.workers.clone();
         }
+        let policy = self.energy_policy();
+        if let Some(cap) = policy.cap_w {
+            // prefer workers whose activation keeps the predicted draw
+            // under the cap (busy workers stay eligible: more queue,
+            // not more watts); an empty filter falls through — the cap
+            // prefers at dispatch and sheds at admission
+            let draw: f64 =
+                self.states.iter().map(|s| s.current_draw_w()).sum();
+            let fits: Vec<usize> = cand
+                .iter()
+                .copied()
+                .filter(|&g| {
+                    let s = &self.states[g];
+                    s.current_draw_w() > 0.0
+                        || draw + s.activation_power_w().unwrap_or(0.0)
+                            <= cap
+                })
+                .collect();
+            if !fits.is_empty() {
+                cand = fits;
+            }
+        }
         let lane_warm = cand
             .iter()
             .all(|&g| self.states[g].predict_us(n).is_some());
         let target = if lane_warm {
-            let own_k = rotating_argmin(cand.len(), &self.rr, |k| {
-                self.states[cand[k]]
-                    .predicted_completion_us(n)
-                    .unwrap_or(u64::MAX)
-            });
+            // within-lane argmin over the energy-blended key; the
+            // foreign-steal comparison below stays latency-based (the
+            // steal is a saturation relief valve, not an energy lever)
+            let lat: Vec<u64> = cand
+                .iter()
+                .map(|&g| {
+                    self.states[g]
+                        .predicted_completion_us(n)
+                        .unwrap_or(u64::MAX)
+                })
+                .collect();
+            let energy: Vec<Option<f64>> = cand
+                .iter()
+                .map(|&g| self.states[g].predict_energy_j(n))
+                .collect();
+            let keys = blend_keys(&lat, &energy, policy.objective)
+                .unwrap_or(lat);
+            let own_k =
+                rotating_argmin(cand.len(), &self.rr, |k| keys[k]);
             let own = cand[own_k];
             let own_cost = self.states[own]
                 .predicted_completion_us(n)
@@ -1437,6 +1537,112 @@ mod tests {
             ls.metrics.lane(1).admission_wait_us.load(Ordering::Relaxed),
             12_000
         );
+    }
+
+    /// `latency_state` plus the paper's K40 conv power (97 W).
+    fn latency_energy_state() -> Arc<WorkerState> {
+        Arc::new(WorkerState::new(
+            DeviceProfile::from_seed(
+                DeviceKind::Gpu,
+                ARTIFACTS
+                    .iter()
+                    .map(|&b| (b, 0.006 * b as f64))
+                    .collect(),
+            )
+            .with_energy_seed(
+                ARTIFACTS
+                    .iter()
+                    .map(|&b| (b, 97.0 * 0.006 * b as f64))
+                    .collect(),
+            ),
+            &ARTIFACTS,
+        ))
+    }
+
+    /// `throughput_state` plus the DE5 conv-engine power (2.5 W).
+    fn throughput_energy_state() -> Arc<WorkerState> {
+        Arc::new(WorkerState::new(
+            DeviceProfile::from_seed(
+                DeviceKind::Fpga,
+                ARTIFACTS.iter().map(|&b| (b, 0.016)).collect(),
+            )
+            .with_energy_seed(
+                ARTIFACTS.iter().map(|&b| (b, 2.5 * 0.016)).collect(),
+            ),
+            &ARTIFACTS,
+        ))
+    }
+
+    #[test]
+    fn energy_objective_steers_singles_to_the_efficient_lane() {
+        let base = BatchPolicy::new(8, Duration::from_millis(12));
+        let states =
+            vec![latency_energy_state(), throughput_energy_state()];
+        let t0 = Instant::now();
+        // latency-only baseline: an isolated single steers to the
+        // 6 ms latency lane (28 ms on the throughput lane)
+        let (mut plain, _rxs) = lane_set(states.clone(), base);
+        plain.push(env(0, t0));
+        assert_eq!(plain.lane_pending(0), 1);
+        // energy-only objective: 0.582 J on the GPU lane vs 0.040 J on
+        // the FPGA lane — joules dominate the blended key
+        let cell = Arc::new(EnergyState::new(EnergyPolicy {
+            objective: 1.0,
+            cap_w: None,
+        }));
+        let (ls, _rxs2) = lane_set(states, base);
+        let mut ls = ls.with_energy(cell);
+        ls.push(env(0, t0));
+        assert_eq!(ls.lane_pending(0), 0);
+        assert_eq!(ls.lane_pending(1), 1);
+    }
+
+    #[test]
+    fn power_cap_prefers_low_power_silicon_at_dispatch() {
+        // two latency-shaped workers, identical speed, 97 W vs 3 W
+        let hot = Arc::new(WorkerState::new(
+            DeviceProfile::from_seed(
+                DeviceKind::Gpu,
+                vec![(1, 0.006), (8, 0.048)],
+            )
+            .with_energy_seed(vec![
+                (1, 97.0 * 0.006),
+                (8, 97.0 * 0.048),
+            ]),
+            &ARTIFACTS,
+        ));
+        let cool = Arc::new(WorkerState::new(
+            DeviceProfile::from_seed(
+                DeviceKind::Gpu,
+                vec![(1, 0.006), (8, 0.048)],
+            )
+            .with_energy_seed(vec![
+                (1, 3.0 * 0.006),
+                (8, 3.0 * 0.048),
+            ]),
+            &ARTIFACTS,
+        ));
+        let cell = Arc::new(EnergyState::new(EnergyPolicy {
+            objective: 0.0,
+            cap_w: Some(50.0),
+        }));
+        let (ls, rxs) = lane_set(
+            vec![Arc::clone(&hot), Arc::clone(&cool)],
+            BatchPolicy::immediate(),
+        );
+        let mut ls = ls.with_energy(cell);
+        assert_eq!(ls.lanes(), 1, "same shape, one lane");
+        let t0 = Instant::now();
+        for i in 0..4 {
+            ls.push(env(i, t0));
+        }
+        ls.dispatch_ready(t0);
+        assert!(
+            rxs[0].try_iter().next().is_none(),
+            "97 W activation busts the 50 W cap while 3 W silicon fits"
+        );
+        let got: usize = rxs[1].try_iter().map(|b| b.envs.len()).sum();
+        assert_eq!(got, 4);
     }
 
     #[test]

@@ -79,6 +79,21 @@ pub struct ServerMetrics {
     /// `SubmitError::Brownout`); latency-class traffic is never
     /// counted here.
     pub brownout_shed: AtomicU64,
+    /// Throughput-class submissions shed because the predicted
+    /// instantaneous draw reached the cluster power cap (typed
+    /// `SubmitError::PowerCap`); latency-class traffic is never
+    /// counted here — the cap sheds throughput-first like brownout.
+    pub cap_shed: AtomicU64,
+    /// Energy-objective re-derivations applied by the leader's monitor
+    /// tick under `--autotune` (counted only when the split actually
+    /// moved).
+    pub energy_retunes: AtomicU64,
+    /// Gauge: predicted instantaneous draw of this coordinator's live
+    /// workers, milliwatts (published by the leader each monitor tick).
+    pub predicted_draw_mw: AtomicU64,
+    /// Gauge: the effective latency↔energy objective in thousandths
+    /// (0..=1000), after any autotune ramp.
+    pub energy_objective_milli: AtomicU64,
     shards: Vec<Mutex<MetricsShard>>,
     lanes: Vec<LaneCounters>,
 }
@@ -111,6 +126,9 @@ struct MetricsShard {
     latency: Samples,
     queue_delay: Samples,
     batch_sizes: Samples,
+    /// Observed joules per image (one sample per request, calibrated
+    /// board power × exec time / batch — see `WorkerState::finish`).
+    energy_j: Samples,
 }
 
 impl Default for ServerMetrics {
@@ -151,6 +169,10 @@ impl ServerMetrics {
             brownout_entries: AtomicU64::new(0),
             brownout_exits: AtomicU64::new(0),
             brownout_shed: AtomicU64::new(0),
+            cap_shed: AtomicU64::new(0),
+            energy_retunes: AtomicU64::new(0),
+            predicted_draw_mw: AtomicU64::new(0),
+            energy_objective_milli: AtomicU64::new(0),
             shards: (0..workers)
                 .map(|_| Mutex::new(MetricsShard::default()))
                 .collect(),
@@ -185,6 +207,19 @@ impl ServerMetrics {
         m.batch_sizes.push(resp.batch_size as f64);
     }
 
+    /// Record a completed batch's observed joules/image into `worker`'s
+    /// shard: one sample per image so the percentiles weigh requests,
+    /// not batches (a batch of 8 cheap FPGA images counts 8 times).
+    pub fn record_energy(&self, worker: usize, j_per_image: f64, n: usize) {
+        if !j_per_image.is_finite() || j_per_image <= 0.0 || n == 0 {
+            return;
+        }
+        let mut m = self.shards[worker % self.shards.len()].lock().unwrap();
+        for _ in 0..n {
+            m.energy_j.push(j_per_image);
+        }
+    }
+
     fn merged(&self) -> MetricsShard {
         let mut out = MetricsShard::default();
         for shard in &self.shards {
@@ -192,6 +227,7 @@ impl ServerMetrics {
             out.latency.merge_from(&m.latency);
             out.queue_delay.merge_from(&m.queue_delay);
             out.batch_sizes.merge_from(&m.batch_sizes);
+            out.energy_j.merge_from(&m.energy_j);
         }
         out
     }
@@ -202,6 +238,18 @@ impl ServerMetrics {
 
     pub fn queue_delay_summary(&self) -> Summary {
         self.merged().queue_delay.summary()
+    }
+
+    /// Joules/image distribution over completed requests.
+    pub fn energy_summary(&self) -> Summary {
+        self.merged().energy_j.summary()
+    }
+
+    /// `(p50, p95, p99)` joules/image — the `energy:` report line's
+    /// percentiles (p95 is not part of [`Summary`]).
+    pub fn energy_percentiles(&self) -> (f64, f64, f64) {
+        let e = self.merged().energy_j;
+        (e.percentile(50.0), e.percentile(95.0), e.percentile(99.0))
     }
 
     pub fn mean_batch_size(&self) -> f64 {
@@ -295,5 +343,29 @@ mod tests {
         assert_eq!(m.brownout_entries.load(Ordering::Relaxed), 0);
         assert_eq!(m.brownout_exits.load(Ordering::Relaxed), 0);
         assert_eq!(m.brownout_shed.load(Ordering::Relaxed), 0);
+        // energy counters and gauges start at zero
+        assert_eq!(m.cap_shed.load(Ordering::Relaxed), 0);
+        assert_eq!(m.energy_retunes.load(Ordering::Relaxed), 0);
+        assert_eq!(m.predicted_draw_mw.load(Ordering::Relaxed), 0);
+        assert_eq!(m.energy_objective_milli.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn energy_samples_weigh_images_not_batches() {
+        let m = ServerMetrics::new(2);
+        // a batch of 3 cheap images and a batch of 1 expensive image
+        m.record_energy(0, 0.005, 3);
+        m.record_energy(1, 0.582, 1);
+        let s = m.energy_summary();
+        assert_eq!(s.n, 4);
+        assert!((s.p50 - 0.005).abs() < 1e-12, "median is the cheap image");
+        let (p50, p95, p99) = m.energy_percentiles();
+        assert!(p50 <= p95 && p95 <= p99);
+        assert!(p99 <= 0.582 + 1e-12);
+        // junk samples are dropped, not recorded
+        m.record_energy(0, f64::NAN, 2);
+        m.record_energy(0, -1.0, 2);
+        m.record_energy(0, 1.0, 0);
+        assert_eq!(m.energy_summary().n, 4);
     }
 }

@@ -21,7 +21,8 @@ pub mod server;
 
 pub use batcher::{BatchPolicy, Batcher};
 pub use dispatch::{
-    pick_worker, DeviceProfile, DispatchPolicy, WorkerSnapshot, WorkerState,
+    pick_worker, pick_worker_energy, DeviceProfile, DispatchPolicy,
+    EnergyPolicy, EnergyState, WorkerSnapshot, WorkerState,
 };
 pub use engine::{
     plan_chunks, BatchOutput, CurveEngine, FaultPlan, FaultyEngine,
@@ -43,5 +44,6 @@ pub use router::{
 };
 pub use server::{
     Client, EngineFactory, ReplyReceiver, Server, ServerConfig,
-    SubmitError, BROWNOUT_PREFIX, BUSY_PREFIX, DRAIN_PREFIX, POISON_PREFIX,
+    SubmitError, BROWNOUT_PREFIX, BUSY_PREFIX, CAP_PREFIX, DRAIN_PREFIX,
+    POISON_PREFIX,
 };

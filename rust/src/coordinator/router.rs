@@ -33,7 +33,7 @@ use std::time::{Duration, Instant};
 use crate::trace::{EventLog, Lifecycle};
 use crate::util::Tensor;
 
-use super::dispatch::rotating_argmin;
+use super::dispatch::{blend_keys, rotating_argmin, EnergyPolicy};
 use super::lifecycle::{Notifier, ServerState};
 use super::request::{CancelToken, Envelope, Response};
 use super::server::{Client, ReplyReceiver, SubmitError};
@@ -174,6 +174,10 @@ pub struct RouterMetrics {
     /// (indices by predicted admission) changed — the router-table
     /// half of online retuning, bounded by the broker tick rate.
     pub retunes: AtomicU64,
+    /// Routing decisions the cluster power cap steered: picks that
+    /// routed around a backend whose activation would bust the cap,
+    /// plus failovers off a backend that rejected with `ServerPowerCap`.
+    pub cap_deflections: AtomicU64,
     backends: Vec<BackendCounters>,
 }
 
@@ -187,6 +191,7 @@ impl RouterMetrics {
             steals: AtomicU64::new(0),
             steal_aborted: AtomicU64::new(0),
             retunes: AtomicU64::new(0),
+            cap_deflections: AtomicU64::new(0),
             backends: (0..backends)
                 .map(|_| BackendCounters::default())
                 .collect(),
@@ -227,6 +232,11 @@ pub struct Router {
     /// Hedge when the chosen backend's predicted
     /// admission-to-completion exceeds this (None = hedging off).
     hedge_slo: Option<Duration>,
+    /// Cluster-level energy policy: the objective blends each
+    /// backend's joules-per-image gauge into the predictive argmin;
+    /// the cap deprioritizes backends whose activation would bust the
+    /// cluster budget while any alternative fits.
+    energy: EnergyPolicy,
     /// Lifecycle recorder for hedge launches (share the same log with
     /// the coordinators to see the full duplicate-vs-winner timeline).
     events: Option<Arc<EventLog>>,
@@ -254,6 +264,7 @@ impl Router {
             ),
             dead_cooldown: DEAD_BACKEND_COOLDOWN,
             hedge_slo: None,
+            energy: EnergyPolicy::default(),
             events: None,
             broker: None,
             broker_shutdown: Arc::new(AtomicBool::new(false)),
@@ -282,6 +293,20 @@ impl Router {
     /// each backend's `ServerConfig::event_log` for full timelines).
     pub fn with_event_log(mut self, log: Arc<EventLog>) -> Router {
         self.events = Some(log);
+        self
+    }
+
+    /// Energy-aware routing: blend each backend's joules-per-image
+    /// gauge ([`Client::predicted_energy_per_image`]) into the
+    /// predictive argmin per `policy.objective`, and — when
+    /// `policy.cap_w` is set — route around backends whose activation
+    /// power would push the predicted cluster draw over the cap while
+    /// any alternative fits.  Pair it with the same [`EnergyPolicy`]
+    /// in each backend's `ServerConfig::energy` so admission enforces
+    /// the cap the routing respects.  Call before
+    /// [`Router::with_migration`] so the broker sees the policy.
+    pub fn with_energy(mut self, policy: EnergyPolicy) -> Router {
+        self.energy = policy;
         self
     }
 
@@ -315,6 +340,7 @@ impl Router {
         let broker = Broker {
             clients: Arc::clone(&self.clients),
             cfg,
+            energy: self.energy,
             metrics: Arc::clone(&self.metrics),
             events: self.events.clone(),
             epoch: self.epoch,
@@ -492,17 +518,74 @@ impl Router {
                     .collect();
                 let any_hot =
                     (0..n).any(|i| alive(i) && !cooled[i]);
+                // cluster power cap: an idle backend whose cheapest
+                // activation would push the predicted cluster draw
+                // over the cap is deprioritized while any alternative
+                // fits (same never-exclude rule as the steal holdoff
+                // — an all-over-cap cluster still routes)
+                let over_cap: Vec<bool> = match self.energy.cap_w {
+                    Some(cap) => {
+                        let draw: f64 = self
+                            .clients
+                            .iter()
+                            .map(Client::predicted_draw_w)
+                            .sum();
+                        (0..n)
+                            .map(|i| {
+                                self.clients[i].predicted_draw_w()
+                                    <= 0.0
+                                    && self.clients[i]
+                                        .activation_draw_w()
+                                        .is_some_and(|w| {
+                                            draw + w > cap
+                                        })
+                            })
+                            .collect()
+                    }
+                    None => vec![false; n],
+                };
+                let any_fits =
+                    (0..n).any(|i| alive(i) && !over_cap[i]);
+                // energy objective: blend each backend's predicted
+                // joules-per-image into the warm argmin; a backend
+                // with no energy gauge degrades the blend back to
+                // latency-only (never the routing)
+                let keys: Option<Vec<u64>> = if warm
+                    && self.energy.objective > 0.0
+                {
+                    let lat: Vec<u64> = (0..n)
+                        .map(|i| ests[i].unwrap_or(u64::MAX))
+                        .collect();
+                    let energy: Vec<Option<f64>> = self
+                        .clients
+                        .iter()
+                        .map(Client::predicted_energy_per_image)
+                        .collect();
+                    blend_keys(&lat, &energy, self.energy.objective)
+                } else {
+                    None
+                };
                 let pick = rotating_argmin(n, &self.rr, |i| {
                     if !alive(i) {
                         u64::MAX
-                    } else if cooled[i] && any_hot {
+                    } else if (cooled[i] && any_hot)
+                        || (over_cap[i] && any_fits)
+                    {
                         u64::MAX - 1
                     } else if warm {
-                        ests[i].unwrap_or(u64::MAX)
+                        match &keys {
+                            Some(k) => k[i],
+                            None => ests[i].unwrap_or(u64::MAX),
+                        }
                     } else {
                         self.clients[i].outstanding() as u64
                     }
                 });
+                if over_cap.iter().any(|&o| o) && !over_cap[pick] {
+                    self.metrics
+                        .cap_deflections
+                        .fetch_add(1, Ordering::Relaxed);
+                }
                 let counter = if warm {
                     &self.metrics.backend(pick).predictive_routed
                 } else {
@@ -549,9 +632,9 @@ impl Router {
     /// live backends cheapest-predicted-first; a backend whose
     /// coordinator is gone is cooled down instead of being retried on
     /// every subsequent request.  The image is *moved* from backend to
-    /// backend (rejected submissions hand it back), never cloned —
-    /// except to feed a hedge duplicate, which is the one deliberate
-    /// copy hedged dispatch pays for.
+    /// backend (rejected submissions hand it back); a hedge duplicate
+    /// shares the pixel buffer through the tensor's `Arc` backing, so
+    /// even hedged dispatch allocates nothing on the submit side.
     pub fn submit(&self, image: Tensor) -> anyhow::Result<ReplyReceiver> {
         self.submit_cancellable(image).map(|(rx, _)| rx)
     }
@@ -565,9 +648,10 @@ impl Router {
     ) -> anyhow::Result<(ReplyReceiver, CancelToken)> {
         let first = self.pick();
         let order = self.failover_order(first);
-        // hedging duplicates the image, and the tensor is moved away
-        // by the submission below — so clone optimistically off the
-        // picked backend's estimate, but only when a second live
+        // hedging duplicates the image handle (an `Arc` bump over the
+        // shared pixel buffer, not a copy), and the tensor is moved
+        // away by the submission below — so clone optimistically off
+        // the picked backend's estimate, but only when a second live
         // backend exists to receive a duplicate at all.  (A failover
         // can land the request on a backend the clone decision did
         // not see; `hedge` re-checks the SLO against the *accepted*
@@ -616,6 +700,17 @@ impl Router {
                         SubmitError::Shed | SubmitError::Brownout => {
                             self.metrics
                                 .failovers
+                                .fetch_add(1, Ordering::Relaxed);
+                            busy_err = Some(e);
+                        }
+                        // alive but power-bound: deflect like a shed
+                        // and count the cap's hand in the routing
+                        SubmitError::PowerCap => {
+                            self.metrics
+                                .failovers
+                                .fetch_add(1, Ordering::Relaxed);
+                            self.metrics
+                                .cap_deflections
                                 .fetch_add(1, Ordering::Relaxed);
                             busy_err = Some(e);
                         }
@@ -696,7 +791,9 @@ impl Router {
             Err((_, e)) => match SubmitError::classify(&e) {
                 // the primary is already in flight: a rejected
                 // duplicate is silently dropped, never escalated
-                SubmitError::Shed | SubmitError::Brownout => {}
+                SubmitError::Shed
+                | SubmitError::Brownout
+                | SubmitError::PowerCap => {}
                 SubmitError::Draining => self.mark_draining(duplicate),
                 _ => self.mark_dead(duplicate),
             },
@@ -740,6 +837,10 @@ fn stamp_window(clock: &AtomicU64, epoch: Instant, window: Duration) {
 struct Broker {
     clients: Arc<Vec<Client>>,
     cfg: MigrationConfig,
+    /// The router's energy policy: thieves whose activation would
+    /// bust the cluster cap order last (they would refuse
+    /// throughput-class steals anyway).
+    energy: EnergyPolicy,
     metrics: Arc<RouterMetrics>,
     events: Option<Arc<EventLog>>,
     epoch: Instant,
@@ -757,6 +858,28 @@ struct Broker {
 impl Broker {
     fn now_us(&self) -> u64 {
         self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Per-backend: would switching this (currently idle) backend on
+    /// push the predicted cluster draw over the configured cap?  All
+    /// false with no cap set.
+    fn cap_busts(&self) -> Vec<bool> {
+        let Some(cap) = self.energy.cap_w else {
+            return vec![false; self.clients.len()];
+        };
+        let draw: f64 = self
+            .clients
+            .iter()
+            .map(Client::predicted_draw_w)
+            .sum();
+        self.clients
+            .iter()
+            .map(|c| {
+                c.predicted_draw_w() <= 0.0
+                    && c.activation_draw_w()
+                        .is_some_and(|w| draw + w > cap)
+            })
+            .collect()
     }
 
     fn run(mut self) {
@@ -838,10 +961,16 @@ impl Broker {
         if now < self.next_steal_ok_us[victim] {
             return;
         }
-        // thief: cheapest admitting backend other than the victim
+        // thief: cheapest admitting backend other than the victim;
+        // under a power cap, backends whose activation would bust the
+        // cluster budget order last (never excluded — an all-over-cap
+        // cluster still relieves a drain)
+        let busts_cap = self.cap_busts();
         let thief = (0..n)
             .filter(|&i| i != victim && states[i].admits())
-            .min_by_key(|&i| ests[i].unwrap_or(u64::MAX));
+            .min_by_key(|&i| {
+                (busts_cap[i], ests[i].unwrap_or(u64::MAX))
+            });
         let Some(thief) = thief else { return };
         let draining = states[victim] == ServerState::Draining;
         if !draining {
@@ -912,7 +1041,10 @@ impl Broker {
         let mut thieves: Vec<usize> = (0..n)
             .filter(|&i| i != victim && states[i].admits())
             .collect();
-        thieves.sort_by_key(|&i| ests[i].unwrap_or(u64::MAX));
+        let busts_cap = self.cap_busts();
+        thieves.sort_by_key(|&i| {
+            (busts_cap[i], ests[i].unwrap_or(u64::MAX))
+        });
         let mut moved_to = None;
         let mut moved = 0usize;
         for mut env in batch {
@@ -1006,6 +1138,27 @@ mod tests {
     /// curve engine's exact cost model (warm from the first request).
     fn spawn_curve(engine: CurveEngine, kind: DeviceKind) -> Server {
         let profile = engine.profile(kind);
+        Server::spawn_pool_profiled(
+            vec![(engine, profile)],
+            ServerConfig {
+                policy: BatchPolicy::new(8, Duration::from_millis(12)),
+                queue_capacity: 256,
+                dispatch: DispatchPolicy::Affinity,
+                formation: FormationPolicy::PerClass,
+                ..Default::default()
+            },
+        )
+    }
+
+    /// Like `spawn_curve`, but the profile also carries an analytic
+    /// joules-per-batch seed, so energy predictions are warm from the
+    /// first request just like the latency table.
+    fn spawn_energy_curve(
+        engine: CurveEngine,
+        kind: DeviceKind,
+        energy_rows: Vec<(usize, f64)>,
+    ) -> Server {
+        let profile = engine.profile(kind).with_energy_seed(energy_rows);
         Server::spawn_pool_profiled(
             vec![(engine, profile)],
             ServerConfig {
@@ -1123,6 +1276,88 @@ mod tests {
             0
         );
         assert_eq!(m.backend(0).cold_routed.load(Ordering::Relaxed), 0);
+    }
+
+    /// A pure energy objective flips the predictive pick: the GPU
+    /// shape (1 ms/img at 97 W) wins on latency, but the FPGA shape
+    /// (16 ms flat at 2.5 W) is ~19x cheaper in joules per image, so
+    /// `objective = 1.0` routes everything to the efficient backend.
+    #[test]
+    fn energy_objective_flips_predictive_pick() {
+        let gpu_rows: Vec<(usize, f64)> = [1usize, 2, 4, 8]
+            .iter()
+            .map(|&b| (b, 97.0 * 0.001 * b as f64))
+            .collect();
+        let fpga_rows: Vec<(usize, f64)> =
+            [1usize, 2, 4, 8].iter().map(|&b| (b, 2.5 * 0.016)).collect();
+        let fast = spawn_energy_curve(
+            CurveEngine::latency_shaped(1_000),
+            DeviceKind::Gpu,
+            gpu_rows,
+        );
+        let eff = spawn_energy_curve(
+            CurveEngine::throughput_shaped(16_000),
+            DeviceKind::Fpga,
+            fpga_rows,
+        );
+        // latency-only baseline: the fast GPU shape wins singles
+        let lat_only = Router::new(
+            vec![fast.client(), eff.client()],
+            RoutePolicy::Predictive,
+        );
+        assert_eq!(lat_only.pick(), 0);
+        // energy-first: the joules argmin flips the pick
+        let energy_first = Router::new(
+            vec![fast.client(), eff.client()],
+            RoutePolicy::Predictive,
+        )
+        .with_energy(EnergyPolicy { objective: 1.0, cap_w: None });
+        for _ in 0..4 {
+            assert_eq!(energy_first.pick(), 1);
+        }
+        let m = energy_first.metrics();
+        assert_eq!(
+            m.backend(1).predictive_routed.load(Ordering::Relaxed),
+            4
+        );
+    }
+
+    /// Under a cluster power cap, an idle backend whose activation
+    /// draw would bust the cap is deprioritized: picks deflect to the
+    /// low-power backend that fits, and the deflections are counted.
+    #[test]
+    fn power_cap_deflects_idle_high_power_backend() {
+        let gpu_rows: Vec<(usize, f64)> = [1usize, 2, 4, 8]
+            .iter()
+            .map(|&b| (b, 97.0 * 0.001 * b as f64))
+            .collect();
+        let fpga_rows: Vec<(usize, f64)> =
+            [1usize, 2, 4, 8].iter().map(|&b| (b, 2.5 * 0.016)).collect();
+        let hot = spawn_energy_curve(
+            CurveEngine::latency_shaped(1_000),
+            DeviceKind::Gpu,
+            gpu_rows,
+        );
+        let cool = spawn_energy_curve(
+            CurveEngine::throughput_shaped(16_000),
+            DeviceKind::Fpga,
+            fpga_rows,
+        );
+        // waking the 97 W backend would bust the 50 W cap; the 2.5 W
+        // backend fits, so every pick deflects there even though the
+        // GPU shape is faster on pure latency
+        let r = Router::new(
+            vec![hot.client(), cool.client()],
+            RoutePolicy::Predictive,
+        )
+        .with_energy(EnergyPolicy { objective: 0.0, cap_w: Some(50.0) });
+        for _ in 0..4 {
+            assert_eq!(r.pick(), 1);
+        }
+        assert!(
+            r.metrics().cap_deflections.load(Ordering::Relaxed) >= 4,
+            "cap-driven deflections must be attributed"
+        );
     }
 
     /// With an unmodeled (cold) backend in the set, predictive routing

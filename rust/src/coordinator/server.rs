@@ -33,7 +33,8 @@ use crate::util::{Tensor, TensorView};
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::dispatch::{
-    pick_worker, DeviceProfile, DispatchPolicy, WorkerSnapshot, WorkerState,
+    pick_worker_energy, DeviceProfile, DispatchPolicy, EnergyPolicy,
+    EnergyState, WorkerSnapshot, WorkerState,
 };
 use super::engine::{largest_batch, BatchOutput, InferenceEngine};
 use super::formation::{
@@ -97,6 +98,13 @@ pub const DRAIN_PREFIX: &str = "ServerDraining";
 /// cooldown).
 pub const BROWNOUT_PREFIX: &str = "ServerBrownout";
 
+/// Message prefix of power-cap rejections: admitting this
+/// throughput-class submission would hold the coordinator's predicted
+/// instantaneous draw at or above the configured cluster power cap.
+/// Routers treat it exactly like a shed (fail over, no cooldown) —
+/// the backend is healthy, just power-bound.
+pub const CAP_PREFIX: &str = "ServerPowerCap";
+
 /// Base delay before a failed batch is re-executed; doubles per
 /// consumed attempt (capped) so a wedged device is not hammered.
 const RETRY_BACKOFF: Duration = Duration::from_micros(200);
@@ -126,6 +134,11 @@ pub enum SubmitError {
     /// The server is `Degraded` (brownout) and shed this
     /// throughput-class submission to protect latency-class traffic.
     Brownout,
+    /// Admitting this throughput-class submission would keep the
+    /// predicted instantaneous draw at or above the cluster power cap
+    /// — shed it (latency-class traffic keeps flowing, exactly the
+    /// brownout classing applied to watts instead of deadlines).
+    PowerCap,
 }
 
 impl SubmitError {
@@ -143,6 +156,8 @@ impl SubmitError {
             SubmitError::Draining
         } else if msg.starts_with(BROWNOUT_PREFIX) {
             SubmitError::Brownout
+        } else if msg.starts_with(CAP_PREFIX) {
+            SubmitError::PowerCap
         } else if msg.starts_with("batch execution failed") {
             SubmitError::ExecFailed
         } else {
@@ -171,6 +186,12 @@ impl std::fmt::Display for SubmitError {
                 write!(
                     f,
                     "{BROWNOUT_PREFIX}: throughput-class request shed"
+                )
+            }
+            SubmitError::PowerCap => {
+                write!(
+                    f,
+                    "{CAP_PREFIX}: predicted draw at the power cap"
                 )
             }
         }
@@ -522,6 +543,13 @@ pub struct Client {
     /// Live-migration mailbox shared with the leader (see
     /// [`MigrationBox`]); only a router's migration broker uses it.
     migration: Arc<MigrationBox>,
+    /// The energy objective/power-cap cell shared with the leader and
+    /// the formation lanes — admission reads it on every submit; an
+    /// autotune retune swaps the objective atomically.
+    energy: Arc<EnergyState>,
+    /// Event recorder mirrored from the config so the admission path
+    /// can log power-cap sheds.
+    events: Option<Arc<EventLog>>,
 }
 
 impl Client {
@@ -629,6 +657,23 @@ impl Client {
                 .fetch_add(1, Ordering::Relaxed);
             return Err((image, SubmitError::Brownout.into()));
         }
+        // Power-cap admission valve: when the predicted instantaneous
+        // draw (sum of live busy workers' per-batch power) is already
+        // at the cap, shed throughput-class submissions — the PR 7
+        // brownout classing applied to watts, so latency traffic keeps
+        // flowing while the cluster sheds its way back under budget.
+        if self.cap_sheds(lane) {
+            self.metrics.cap_shed.fetch_add(1, Ordering::Relaxed);
+            self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            self.metrics
+                .lane(lane)
+                .shed
+                .fetch_add(1, Ordering::Relaxed);
+            if let Some(log) = &self.events {
+                log.record(0, Lifecycle::CapShed);
+            }
+            return Err((image, SubmitError::PowerCap.into()));
+        }
         // Reserve the slot *before* handing the request to the leader:
         // a worker may complete (and release) it before this thread
         // resumes, so reserving after the send could underflow the
@@ -734,6 +779,69 @@ impl Client {
         &self.metrics
     }
 
+    /// The energy policy currently in force (objective possibly
+    /// retuned online since spawn).
+    pub fn energy_policy(&self) -> EnergyPolicy {
+        self.energy.policy()
+    }
+
+    /// Would admitting into `lane` right now be shed by the power cap?
+    /// True only for throughput-class (non-latency) lanes while the
+    /// predicted instantaneous draw is at or above the configured cap.
+    fn cap_sheds(&self, lane: usize) -> bool {
+        let Some(cap) = self.energy.policy().cap_w else {
+            return false;
+        };
+        if self.view.lane_class(lane) == LaneClass::Latency {
+            return false;
+        }
+        self.predicted_draw_w() >= cap
+    }
+
+    /// Predicted instantaneous draw in watts: the sum of live busy
+    /// workers' model power at their largest artifact (idle silicon
+    /// draws its static floor, which the per-batch model folds into
+    /// the dynamic figure — see `WorkerState::current_draw_w`).
+    pub fn predicted_draw_w(&self) -> f64 {
+        self.view.states.iter().map(|s| s.current_draw_w()).sum()
+    }
+
+    /// This coordinator's joules-per-image estimate for a request
+    /// landing now: the minimum over live workers of the predicted
+    /// per-image energy at each worker's largest profiled artifact —
+    /// the energy analogue of [`Client::predicted_admission_us`],
+    /// published so a predictive router and the migration broker can
+    /// respect the cap cluster-wide.  `None` while no worker has an
+    /// energy model.
+    pub fn predicted_energy_per_image(&self) -> Option<f64> {
+        self.view
+            .states
+            .iter()
+            .filter(|s| s.is_live())
+            .filter_map(|s| {
+                let &big = s.artifacts().last()?;
+                s.predict_energy_j(big)
+            })
+            .fold(None, |best: Option<f64>, e| {
+                Some(best.map_or(e, |b| b.min(e)))
+            })
+    }
+
+    /// The cheapest wattage this coordinator must switch on to serve a
+    /// fresh request — the minimum live worker activation power.  A
+    /// router deprioritizes backends whose activation would bust the
+    /// cluster cap.  `None` while no worker has an energy model.
+    pub(crate) fn activation_draw_w(&self) -> Option<f64> {
+        self.view
+            .states
+            .iter()
+            .filter(|s| s.is_live())
+            .filter_map(|s| s.activation_power_w())
+            .fold(None, |best: Option<f64>, w| {
+                Some(best.map_or(w, |b| b.min(w)))
+            })
+    }
+
     // ---- live-migration surface (router's broker only) ----
 
     /// Current lifecycle state — steal decisions key on it (a
@@ -832,6 +940,12 @@ impl Client {
         if state == ServerState::Degraded
             && self.view.lane_class(lane) != LaneClass::Latency
         {
+            return Err(env);
+        }
+        // a thief at the power cap refuses throughput-class steals the
+        // same way it would shed a fresh submission — the broker moves
+        // on to the next candidate, so the cap holds cluster-wide
+        if self.cap_sheds(lane) {
             return Err(env);
         }
         if !self.admission.try_admit(lane) {
@@ -941,6 +1055,14 @@ pub struct ServerConfig {
     /// changed (the retune-storm guard).  Per-class formation only; a
     /// global-formation server ignores it.
     pub autotune: bool,
+    /// Energy-aware scheduling: the latency↔energy objective weight
+    /// every argmin folds in (dispatch, lane steering, within-lane
+    /// pick) plus an optional cluster power cap in watts the admission
+    /// valve enforces like a lane budget.  The default (objective 0,
+    /// no cap) is exactly the pre-energy behaviour.  Under
+    /// `autotune`, the objective is re-derived from the draw-vs-cap
+    /// ratio on the leader's monitor tick.
+    pub energy: EnergyPolicy,
 }
 
 impl Default for ServerConfig {
@@ -956,6 +1078,7 @@ impl Default for ServerConfig {
             respawn: false,
             brownout: None,
             autotune: false,
+            energy: EnergyPolicy::default(),
         }
     }
 }
@@ -964,12 +1087,14 @@ impl Default for ServerConfig {
 enum BatchRouter {
     /// One shared queue; idle workers pull.
     Shared(Sender<DispatchedBatch>),
-    /// Per-worker queues; the leader picks by predicted completion time.
+    /// Per-worker queues; the leader picks by predicted completion
+    /// time blended with predicted joules per the energy policy.
     Affinity {
         txs: Vec<Sender<DispatchedBatch>>,
         states: Vec<Arc<WorkerState>>,
         rr: AtomicUsize,
         metrics: Arc<ServerMetrics>,
+        energy: Arc<EnergyState>,
     },
 }
 
@@ -979,8 +1104,13 @@ impl BatchRouter {
             BatchRouter::Shared(tx) => {
                 let _ = tx.send(DispatchedBatch { envs, cost_us: 0 });
             }
-            BatchRouter::Affinity { txs, states, rr, metrics } => {
-                let pick = pick_worker(states, envs.len(), rr);
+            BatchRouter::Affinity { txs, states, rr, metrics, energy } => {
+                let pick = pick_worker_energy(
+                    states,
+                    envs.len(),
+                    rr,
+                    &energy.policy(),
+                );
                 let counter = if pick.cold {
                     &metrics.cold_fallbacks
                 } else {
@@ -1303,6 +1433,7 @@ impl Server {
         let control_notify = Arc::new(Notifier::new());
         let (control_tx, control_rx) = channel::<ControlMsg>();
         let migration = Arc::new(MigrationBox::default());
+        let energy = Arc::new(EnergyState::new(config.energy));
         let client = Client {
             tx,
             next_id: Arc::new(AtomicU64::new(0)),
@@ -1312,6 +1443,8 @@ impl Server {
             lifecycle: Arc::clone(&lifecycle),
             leader_notify: Arc::clone(&leader_notify),
             migration: Arc::clone(&migration),
+            energy: Arc::clone(&energy),
+            events: config.event_log.clone(),
         };
 
         // leader -> workers: unbounded (depth already bounded by the
@@ -1327,7 +1460,8 @@ impl Server {
                     states.clone(),
                     txs,
                     Arc::clone(&metrics),
-                );
+                )
+                .with_energy(Arc::clone(&energy));
                 if let Some(ps) = state {
                     lanes.preload_arrivals(&ps.arrivals);
                 }
@@ -1373,6 +1507,7 @@ impl Server {
                             states: states.clone(),
                             rr: AtomicUsize::new(0),
                             metrics: Arc::clone(&metrics),
+                            energy: Arc::clone(&energy),
                         };
                         (router, sources)
                     }
@@ -1460,6 +1595,8 @@ impl Server {
         let base_policy = config.policy;
         let queue_capacity = config.queue_capacity;
         let leader_budgets = Arc::clone(&lane_budgets);
+        let leader_energy = Arc::clone(&energy);
+        let base_objective = config.energy.objective;
         let leader = std::thread::Builder::new()
             .name("cnnlab-leader".into())
             .spawn(move || {
@@ -1481,6 +1618,8 @@ impl Server {
                         base_policy,
                         queue_capacity,
                         applied: leader_budgets,
+                        energy: leader_energy,
+                        base_objective,
                     },
                 )
             })
@@ -1517,6 +1656,23 @@ impl Server {
     /// minimizes across coordinators.
     pub fn predicted_admission_us(&self) -> Option<u64> {
         self.client.predicted_admission_us()
+    }
+
+    /// This coordinator's joules-per-image estimate (see
+    /// [`Client::predicted_energy_per_image`]).
+    pub fn predicted_energy_per_image(&self) -> Option<f64> {
+        self.client.predicted_energy_per_image()
+    }
+
+    /// Predicted instantaneous draw in watts (see
+    /// [`Client::predicted_draw_w`]).
+    pub fn predicted_draw_w(&self) -> f64 {
+        self.client.predicted_draw_w()
+    }
+
+    /// The energy policy in force (objective possibly retuned online).
+    pub fn energy_policy(&self) -> EnergyPolicy {
+        self.client.energy_policy()
     }
 
     /// Engine workers backing this server.
@@ -2041,6 +2197,12 @@ struct LeaderTuning {
     /// Budgets in force, shared with [`Server::lane_budgets`]; the
     /// leader writes it on every applied retune.
     applied: Arc<Mutex<LaneBudgets>>,
+    /// The shared energy objective/cap cell (gauge source; the energy
+    /// retune writes its objective).
+    energy: Arc<EnergyState>,
+    /// The spawn-time latency↔energy split an energy retune relaxes
+    /// back to when the predicted draw falls away from the cap.
+    base_objective: f64,
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -2143,6 +2305,27 @@ fn leader_loop(
         }
         driver.publish(&metrics, Instant::now());
 
+        // energy gauges: the predicted instantaneous draw (sum of
+        // live busy workers' model power) and the objective in force
+        // — what `--report-every` and the acceptance tests read
+        {
+            let pol = tuning.energy.policy();
+            if pol.is_active() {
+                let draw: f64 = view
+                    .states
+                    .iter()
+                    .map(|s| s.current_draw_w())
+                    .sum();
+                metrics
+                    .predicted_draw_mw
+                    .store((draw * 1e3) as u64, Ordering::Relaxed);
+                metrics.energy_objective_milli.store(
+                    (pol.objective * 1e3) as u64,
+                    Ordering::Relaxed,
+                );
+            }
+        }
+
         // the leader's monitor tick: wall-clock paced by
         // [`MonitorTick`] and shared by the brownout sampler and the
         // online retuner, so an event storm of wakeups can neither
@@ -2237,6 +2420,35 @@ fn leader_loop(
                             if let Some(log) = &events {
                                 log.record(0, Lifecycle::Retune);
                             }
+                        }
+                    }
+                }
+            }
+            // energy-objective retune: push the latency↔energy split
+            // toward energy as the predicted draw approaches the cap
+            // (linear ramp above half-cap, back to the spawn-time
+            // base below it), written into the shared cell every
+            // argmin reads — the same closed loop as the budget
+            // retune, applied to the objective instead of the bounds
+            if tuning.autotune && state.admits() {
+                if let Some(cap) = tuning.energy.policy().cap_w {
+                    let draw: f64 = view
+                        .states
+                        .iter()
+                        .map(|s| s.current_draw_w())
+                        .sum();
+                    let pressure = (2.0 * draw / cap.max(1e-9) - 1.0)
+                        .clamp(0.0, 1.0);
+                    let eff = tuning.base_objective
+                        + (1.0 - tuning.base_objective) * pressure;
+                    let cur = tuning.energy.policy().objective;
+                    if (eff - cur).abs() > 0.01 {
+                        tuning.energy.set_objective(eff);
+                        metrics
+                            .energy_retunes
+                            .fetch_add(1, Ordering::Relaxed);
+                        if let Some(log) = &events {
+                            log.record(0, Lifecycle::EnergyRetune);
                         }
                     }
                 }
@@ -2414,6 +2626,18 @@ fn worker_loop<E: InferenceEngine>(
             None => (1, None),
         };
         state.finish(cost_us, n, exec);
+        // joules-per-image sample at the calibrated model power: the
+        // wattage is pinned analytic (the paper's operating points via
+        // the profile's energy seed), the duration is what the device
+        // actually took — so the percentile track drifts with observed
+        // execution time without trusting a wattmeter we do not have
+        if let (Some(exec), Some(w)) = (exec, state.model_power_w(n)) {
+            metrics.record_energy(
+                worker,
+                w * exec.as_secs_f64() / n.max(1) as f64,
+                n,
+            );
+        }
         if run.died {
             // the engine panicked mid-batch: every envelope was still
             // answered, retried, or quarantined above, but the device
@@ -2860,6 +3084,13 @@ mod tests {
         a.release(0);
         assert!(a.try_admit(0));
         assert_eq!(a.total(), 4);
+    }
+
+    #[test]
+    fn power_cap_error_round_trips_through_the_message_contract() {
+        let e: anyhow::Error = SubmitError::PowerCap.into();
+        assert!(e.to_string().starts_with(CAP_PREFIX));
+        assert_eq!(SubmitError::classify(&e), SubmitError::PowerCap);
     }
 
     #[test]

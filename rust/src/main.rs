@@ -12,9 +12,10 @@ use std::time::{Duration, Instant};
 
 use cnnlab::cli::Args;
 use cnnlab::coordinator::{
-    BrownoutConfig, DeviceProfile, EngineFactory, FormationPolicy,
-    InferenceEngine, LaneBudgets, MigrationConfig, PjrtEngine,
-    ProfileState, RoutePolicy, Router, Server, ServerConfig, SubmitError,
+    BrownoutConfig, DeviceProfile, EnergyPolicy, EngineFactory,
+    FormationPolicy, InferenceEngine, LaneBudgets, MigrationConfig,
+    PjrtEngine, ProfileState, RoutePolicy, Router, Server, ServerConfig,
+    SubmitError,
 };
 use cnnlab::device::{Accelerator, FpgaDevice, GpuDevice};
 use cnnlab::fpga;
@@ -142,7 +143,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
 ///  --brownout-deadline 100000 --brownout-trip-loops 3
 ///  --brownout-exit-below 50000 --brownout-exit-loops 12
 ///  --reload-at 32 --migrate --steal-hysteresis 2.0 --steal-knee 8
-///  --autotune
+///  --autotune --energy-objective 0.5 --power-cap 120
 ///  --profile-state state.json --report-every 32`
 ///
 /// A running serve also hot-reloads on SIGHUP (`kill -HUP <pid>`).
@@ -270,6 +271,31 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     } else {
         None
     };
+    // energy-aware scheduling: `--energy-objective` blends the argmin
+    // between predicted latency (0.0) and predicted joules/image
+    // (1.0); `--power-cap` bounds each coordinator's predicted draw
+    // (watts), shedding throughput-class traffic over the cap and
+    // steering routing away from silicon whose activation would bust
+    // it
+    let energy_objective = args.get_f64("energy-objective", 0.0)?;
+    anyhow::ensure!(
+        (0.0..=1.0).contains(&energy_objective),
+        "--energy-objective must be within 0.0..=1.0"
+    );
+    let power_cap_w = match args.get("power-cap") {
+        Some(v) => {
+            let w: f64 = v.parse().map_err(|_| {
+                anyhow::anyhow!("--power-cap needs watts")
+            })?;
+            anyhow::ensure!(w > 0.0, "--power-cap must be positive");
+            Some(w)
+        }
+        None => None,
+    };
+    let energy = EnergyPolicy {
+        objective: energy_objective,
+        cap_w: power_cap_w,
+    };
     // learned-state persistence: load if the file exists, save on exit
     let profile_state_path = args.get("profile-state");
     // print worker/lane snapshots every N submissions (0 = only at end)
@@ -322,6 +348,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         respawn,
         brownout,
         autotune,
+        energy,
     };
     let loaded_state = match profile_state_path {
         Some(path) if std::path::Path::new(path).exists() => {
@@ -482,7 +509,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         servers.iter().map(Server::client).collect(),
         route,
     )
-    .with_event_log(Arc::clone(&events));
+    .with_event_log(Arc::clone(&events))
+    .with_energy(energy);
     if let Some(us) = hedge_slo_us {
         router = router.with_hedge_slo(Duration::from_micros(us));
     }
@@ -620,7 +648,7 @@ fn print_snapshot_report(
     let rm = router.metrics();
     println!(
         "  router: failovers={} shed={} hedges={} drain_deflections={} \
-         steals={} steal_aborted={} retunes={}",
+         steals={} steal_aborted={} retunes={} cap_deflections={}",
         rm.failovers.load(Ordering::Relaxed),
         rm.shed.load(Ordering::Relaxed),
         rm.hedges.load(Ordering::Relaxed),
@@ -628,6 +656,7 @@ fn print_snapshot_report(
         rm.steals.load(Ordering::Relaxed),
         rm.steal_aborted.load(Ordering::Relaxed),
         rm.retunes.load(Ordering::Relaxed),
+        rm.cap_deflections.load(Ordering::Relaxed),
     );
     for (c, server) in servers.iter().enumerate() {
         let b = rm.backend(c);
@@ -673,6 +702,25 @@ fn print_snapshot_report(
             b.steals_in.load(Ordering::Relaxed),
             m.retunes.load(Ordering::Relaxed),
         );
+        let policy = server.energy_policy();
+        let joules = m.energy_summary();
+        if policy.is_active() || joules.n > 0 {
+            let (p50, p95, p99) = m.energy_percentiles();
+            let cap = policy
+                .cap_w
+                .map(|w| format!("{w:.1}W"))
+                .unwrap_or_else(|| "none".into());
+            println!(
+                "    energy: j/img p50={p50:.4} p95={p95:.4} \
+                 p99={p99:.4} predicted_draw={:.1}W cap={cap} \
+                 cap_sheds={} retunes={} objective={:.2}",
+                server.predicted_draw_w(),
+                m.cap_shed.load(Ordering::Relaxed),
+                m.energy_retunes.load(Ordering::Relaxed),
+                m.energy_objective_milli.load(Ordering::Relaxed) as f64
+                    / 1e3,
+            );
+        }
         for (i, label) in server.lane_labels().iter().enumerate() {
             let lane = m.lane(i);
             let gap_ns = lane.arrival_gap_ns.load(Ordering::Relaxed);

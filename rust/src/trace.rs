@@ -75,6 +75,16 @@ pub enum Lifecycle {
     /// lane budgets from live arrival gauges and swapped them in
     /// without dropping in-flight requests (online retune).
     Retune,
+    /// A throughput-class admission was shed because the predicted
+    /// instantaneous draw reached the cluster power cap (typed
+    /// `SubmitError::PowerCap`); latency-class traffic is never shed
+    /// by the cap.
+    CapShed,
+    /// The leader's monitor tick re-derived the latency↔energy
+    /// objective split from the live draw-vs-cap ratio and swapped it
+    /// into the shared `EnergyState` (autotune; recorded with token 0
+    /// only when the split actually moved).
+    EnergyRetune,
 }
 
 impl Lifecycle {
@@ -96,6 +106,8 @@ impl Lifecycle {
             Lifecycle::BrownoutExit => "brownout-exit",
             Lifecycle::Steal { .. } => "steal",
             Lifecycle::Retune => "retune",
+            Lifecycle::CapShed => "cap-shed",
+            Lifecycle::EnergyRetune => "energy-retune",
         }
     }
 }

@@ -3,17 +3,22 @@
 //! math; the coordinator only creates, moves, and inspects buffers.
 
 use crate::util::rng::Rng;
+use std::sync::Arc;
 
+/// The payload is `Arc`-backed with copy-on-write semantics: `clone()` is
+/// a refcount bump (hedged dispatch and batch retries duplicate requests
+/// on the submit path without copying image data), and `data_mut` copies
+/// the buffer only when it is actually shared.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tensor {
     shape: Vec<usize>,
-    data: Vec<f32>,
+    data: Arc<Vec<f32>>,
 }
 
 impl Tensor {
     pub fn zeros(shape: &[usize]) -> Self {
         let n = shape.iter().product();
-        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+        Tensor { shape: shape.to_vec(), data: Arc::new(vec![0.0; n]) }
     }
 
     pub fn from_vec(shape: &[usize], data: Vec<f32>) -> anyhow::Result<Self> {
@@ -25,14 +30,15 @@ impl Tensor {
             n,
             data.len()
         );
-        Ok(Tensor { shape: shape.to_vec(), data })
+        Ok(Tensor { shape: shape.to_vec(), data: Arc::new(data) })
     }
 
     /// N(0, scale) synthetic values — weights/images for the experiments.
     pub fn randn(shape: &[usize], rng: &mut Rng, scale: f32) -> Self {
-        let mut t = Tensor::zeros(shape);
-        rng.fill_normal_f32(&mut t.data, scale);
-        t
+        let n = shape.iter().product();
+        let mut data = vec![0.0; n];
+        rng.fill_normal_f32(&mut data, scale);
+        Tensor { shape: shape.to_vec(), data: Arc::new(data) }
     }
 
     pub fn shape(&self) -> &[usize] {
@@ -51,12 +57,16 @@ impl Tensor {
         &self.data
     }
 
+    /// Mutable access; copies the buffer first iff it is shared with
+    /// another `Tensor` clone (copy-on-write).
     pub fn data_mut(&mut self) -> &mut [f32] {
-        &mut self.data
+        Arc::make_mut(&mut self.data)
     }
 
+    /// Recover the owned buffer (pool recycling).  Zero-copy when this
+    /// is the last reference; clones only if the data is still shared.
     pub fn into_vec(self) -> Vec<f32> {
-        self.data
+        Arc::try_unwrap(self.data).unwrap_or_else(|a| (*a).clone())
     }
 
     pub fn bytes(&self) -> usize {
@@ -78,7 +88,7 @@ impl Tensor {
         assert_eq!(self.shape, other.shape);
         self.data
             .iter()
-            .zip(&other.data)
+            .zip(other.data.iter())
             .map(|(a, b)| (a - b).abs())
             .fold(0.0, f32::max)
     }
@@ -185,6 +195,42 @@ mod tests {
         let b = Tensor::randn(&[16], &mut r2, 1.0);
         assert_eq!(a, b);
         assert!(a.all_finite());
+    }
+
+    #[test]
+    fn clone_shares_backing_buffer() {
+        // The submit-path duplicates (hedge legs, batch retries) rely on
+        // clone being a refcount bump, not a data copy.
+        let a = Tensor::zeros(&[64]);
+        let b = a.clone();
+        assert!(std::ptr::eq(a.data().as_ptr(), b.data().as_ptr()));
+    }
+
+    #[test]
+    fn data_mut_copies_on_write_when_shared() {
+        let mut a = Tensor::zeros(&[4]);
+        let b = a.clone();
+        a.data_mut()[0] = 7.0;
+        assert_eq!(a.at(&[0]), 7.0);
+        assert_eq!(b.at(&[0]), 0.0, "clone must not see the write");
+        // Unshared again: mutation in place, no further copies.
+        let before = a.data().as_ptr();
+        a.data_mut()[1] = 8.0;
+        assert!(std::ptr::eq(before, a.data().as_ptr()));
+    }
+
+    #[test]
+    fn into_vec_zero_copy_when_unshared() {
+        let t = Tensor::from_vec(&[3], vec![1.0, 2.0, 3.0]).unwrap();
+        let ptr = t.data().as_ptr();
+        let v = t.into_vec();
+        assert!(std::ptr::eq(ptr, v.as_ptr()));
+
+        let shared = Tensor::from_vec(&[2], vec![4.0, 5.0]).unwrap();
+        let keep = shared.clone();
+        let copied = shared.into_vec();
+        assert_eq!(copied, vec![4.0, 5.0]);
+        assert_eq!(keep.data(), &[4.0, 5.0]);
     }
 
     #[test]
