@@ -17,7 +17,7 @@ use std::time::{Duration, Instant};
 
 use cnnlab::coordinator::{
     BatchPolicy, CurveEngine, DispatchPolicy, EnergyPolicy,
-    FormationPolicy, MigrationConfig, MockEngine, PjrtEngine,
+    FormationPolicy, HotPath, MigrationConfig, MockEngine, PjrtEngine,
     RoutePolicy, Router, Server, ServerConfig,
 };
 use cnnlab::device::DeviceKind;
@@ -764,8 +764,101 @@ fn energy_routing_section(smoke: bool) {
     );
 }
 
+/// Hot-path contention spot check: the same 8x8 b=1 hand-off workload
+/// `runtime_hotpath --smoke` tables in full, reduced to one
+/// lock-free-vs-baseline row so the e2e smoke run also covers the
+/// serving hot path's headline comparison.
+fn hotpath_contention_section(smoke: bool) {
+    let per_thread = if smoke { 150 } else { 1000 };
+    let (submitters, workers) = (8usize, 8usize);
+    let mut t = Table::new(
+        "Hot-path contention, instant engines, b=1 hand-offs",
+        &["hot path", "req/s"],
+    );
+    let mut rows = Vec::new();
+    for hp in [HotPath::SharedMutexBaseline, HotPath::LockFree] {
+        let engines: Vec<MockEngine> = (0..workers)
+            .map(|_| {
+                let mut e = MockEngine::new(vec![1, 2, 4, 8]);
+                e.delay = Duration::ZERO;
+                e
+            })
+            .collect();
+        let server = Server::spawn_pool(
+            engines,
+            ServerConfig {
+                policy: BatchPolicy::new(1, Duration::ZERO),
+                queue_capacity: 512,
+                dispatch: DispatchPolicy::JoinIdle,
+                hot_path: hp,
+                ..Default::default()
+            },
+        );
+        let client = server.client();
+        let t0 = Instant::now();
+        std::thread::scope(|s| {
+            for st in 0..submitters {
+                let client = client.clone();
+                s.spawn(move || {
+                    let mut rng = Rng::new(7000 + st as u64);
+                    let mut pending =
+                        std::collections::VecDeque::new();
+                    for _ in 0..per_thread {
+                        let mut img =
+                            Tensor::randn(&[3, 8, 8], &mut rng, 0.1);
+                        loop {
+                            match client.submit_or_return(img) {
+                                Ok(rx) => {
+                                    pending.push_back(rx);
+                                    break;
+                                }
+                                Err((back, _)) => {
+                                    img = back;
+                                    match pending.pop_front() {
+                                        Some(rx) => {
+                                            rx.recv()
+                                                .unwrap()
+                                                .unwrap();
+                                        }
+                                        None => {
+                                            std::thread::yield_now()
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                        while pending.len() >= 64 {
+                            pending
+                                .pop_front()
+                                .unwrap()
+                                .recv()
+                                .unwrap()
+                                .unwrap();
+                        }
+                    }
+                    for rx in pending {
+                        rx.recv().unwrap().unwrap();
+                    }
+                });
+            }
+        });
+        let rps = (submitters * per_thread) as f64
+            / t0.elapsed().as_secs_f64();
+        rows.push(rps);
+        t.row(&[format!("{hp:?}"), f2(rps)]);
+    }
+    println!("{}", t.render());
+    println!(
+        "expected shape: lock-free rings+slab beat the shared-mutex \
+         baseline (speedup {:.2}x here; the full sweep lives in \
+         `runtime_hotpath`).\n",
+        rows[1] / rows[0]
+    );
+}
+
 fn main() -> anyhow::Result<()> {
     let smoke = std::env::args().any(|a| a == "--smoke");
+    hotpath_contention_section(smoke);
     mock_pipeline_section(smoke);
     predictive_close_section(smoke);
     affinity_dispatch_section(smoke);

@@ -172,6 +172,7 @@ impl ServingConfig {
             brownout: self.brownout(),
             autotune: self.autotune,
             energy: self.energy(),
+            ..ServerConfig::default()
         }
     }
 

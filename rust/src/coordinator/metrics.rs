@@ -94,6 +94,15 @@ pub struct ServerMetrics {
     /// Gauge: the effective latency↔energy objective in thousandths
     /// (0..=1000), after any autotune ramp.
     pub energy_objective_milli: AtomicU64,
+    /// Batches that found a worker's SPSC ring full and fell back to
+    /// its unbounded overflow queue (ring too small for the burst).
+    pub ring_full_fallbacks: AtomicU64,
+    /// Batches an idle worker stole from a busy sibling's ring/overflow
+    /// on the lock-free JoinIdle path.
+    pub steals_idle: AtomicU64,
+    /// Submits whose reply pair reused a recycled slab slot (steady
+    /// state: every submit after warmup).
+    pub slab_reuse: AtomicU64,
     shards: Vec<Mutex<MetricsShard>>,
     lanes: Vec<LaneCounters>,
 }
@@ -173,6 +182,9 @@ impl ServerMetrics {
             energy_retunes: AtomicU64::new(0),
             predicted_draw_mw: AtomicU64::new(0),
             energy_objective_milli: AtomicU64::new(0),
+            ring_full_fallbacks: AtomicU64::new(0),
+            steals_idle: AtomicU64::new(0),
+            slab_reuse: AtomicU64::new(0),
             shards: (0..workers)
                 .map(|_| Mutex::new(MetricsShard::default()))
                 .collect(),
@@ -348,6 +360,10 @@ mod tests {
         assert_eq!(m.energy_retunes.load(Ordering::Relaxed), 0);
         assert_eq!(m.predicted_draw_mw.load(Ordering::Relaxed), 0);
         assert_eq!(m.energy_objective_milli.load(Ordering::Relaxed), 0);
+        // lock-free hot-path counters start at zero
+        assert_eq!(m.ring_full_fallbacks.load(Ordering::Relaxed), 0);
+        assert_eq!(m.steals_idle.load(Ordering::Relaxed), 0);
+        assert_eq!(m.slab_reuse.load(Ordering::Relaxed), 0);
     }
 
     #[test]

@@ -43,7 +43,7 @@ pub use router::{
     DEAD_BACKEND_COOLDOWN, STOLEN_BACKEND_HOLDOFF,
 };
 pub use server::{
-    Client, EngineFactory, ReplyReceiver, Server, ServerConfig,
+    Client, EngineFactory, HotPath, ReplyReceiver, Server, ServerConfig,
     SubmitError, BROWNOUT_PREFIX, BUSY_PREFIX, CAP_PREFIX, DRAIN_PREFIX,
     POISON_PREFIX,
 };

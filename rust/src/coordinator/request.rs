@@ -2,11 +2,10 @@
 //! cancellation token every in-flight request carries.
 
 use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
-use std::sync::mpsc::Sender;
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::util::{Tensor, TensorView};
+use crate::util::{SlotSender, Tensor, TensorView};
 
 /// Token states: a token is born live, then resolves exactly once —
 /// either claimed by the worker that answers the request or cancelled
@@ -119,14 +118,16 @@ pub struct Request {
 }
 
 /// A request travelling with its reply channel — the unit the batcher
-/// queues and the worker pool consumes.  Because the reply `Sender`
+/// queues and the worker pool consumes.  Because the reply sender
 /// rides *inside* the batch, any worker can answer any request and
 /// batches may complete out of order; no leader-owned routing table
-/// exists on the hot path.
+/// exists on the hot path.  The sender is a [`SlotSender`]: normally a
+/// lease on a reusable reply slot from the client's slab, or a plain
+/// `mpsc` channel when the slab is exhausted (and in tests).
 #[derive(Debug)]
 pub struct Envelope {
     pub req: Request,
-    pub reply: Sender<anyhow::Result<Response>>,
+    pub reply: SlotSender<anyhow::Result<Response>>,
     /// Metrics-lane slot this request's admission was accounted to
     /// (its predicted device class under per-lane budgets; 0 under the
     /// single global lane).  The worker that answers the request — or
@@ -163,12 +164,12 @@ impl Envelope {
     /// on lane 0 and unbalancing per-lane outstanding counts.
     pub fn new(
         req: Request,
-        reply: Sender<anyhow::Result<Response>>,
+        reply: impl Into<SlotSender<anyhow::Result<Response>>>,
         lane: usize,
     ) -> Envelope {
         Envelope {
             req,
-            reply,
+            reply: reply.into(),
             lane,
             token: CancelToken::new(),
             hedged: false,

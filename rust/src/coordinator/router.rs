@@ -26,12 +26,11 @@
 //! usually before it costs any device work.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::trace::{EventLog, Lifecycle};
-use crate::util::Tensor;
+use crate::util::{ReplySlab, SlotSender, Tensor};
 
 use super::dispatch::{blend_keys, rotating_argmin, EnergyPolicy};
 use super::lifecycle::{Notifier, ServerState};
@@ -245,6 +244,10 @@ pub struct Router {
     broker: Option<std::thread::JoinHandle<()>>,
     broker_shutdown: Arc<AtomicBool>,
     broker_notify: Arc<Notifier>,
+    /// Router-owned reusable reply slots: one slot per logical request
+    /// regardless of how many legs (failover retries, hedge
+    /// duplicates) carry its `SlotSender` clones.
+    replies: ReplySlab<anyhow::Result<Response>>,
 }
 
 impl Router {
@@ -269,6 +272,7 @@ impl Router {
             broker: None,
             broker_shutdown: Arc::new(AtomicBool::new(false)),
             broker_notify: Arc::new(Notifier::new()),
+            replies: ReplySlab::with_capacity(1024),
         }
     }
 
@@ -667,7 +671,7 @@ impl Router {
             _ => None,
         };
         let token = CancelToken::new();
-        let (reply, rx) = channel();
+        let (reply, rx) = self.replies.pair();
         let mut candidates = vec![first];
         candidates.extend(order);
         let mut image = image;
@@ -755,7 +759,7 @@ impl Router {
         primary: usize,
         primary_est: Option<u64>,
         image: Tensor,
-        reply: &Sender<anyhow::Result<Response>>,
+        reply: &SlotSender<anyhow::Result<Response>>,
         token: &CancelToken,
     ) {
         // re-check against the backend that actually accepted the

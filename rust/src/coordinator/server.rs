@@ -17,19 +17,23 @@
 //! table — the batcher refills while every worker runs, which is what
 //! pipelines batch formation with device execution.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{
     AtomicBool, AtomicU64, AtomicUsize, Ordering,
 };
 use std::sync::mpsc::{
     channel, sync_channel, Receiver, Sender, SyncSender, TryRecvError,
 };
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::device::DeviceKind;
 use crate::trace::{EventLog, Lifecycle};
-use crate::util::{Tensor, TensorView};
+use crate::util::{
+    ReplySlab, RingBuffer, SlotReceiver, SlotSender, Snapshot, Tensor,
+    TensorView,
+};
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::dispatch::{
@@ -108,6 +112,12 @@ pub const CAP_PREFIX: &str = "ServerPowerCap";
 /// Base delay before a failed batch is re-executed; doubles per
 /// consumed attempt (capped) so a wedged device is not hammered.
 const RETRY_BACKOFF: Duration = Duration::from_micros(200);
+
+/// Failsafe cap on how long an idle worker parks between ring-group
+/// notifier wakeups.  Every dispatch and the shutdown both notify the
+/// group explicitly; like [`IDLE_WAIT`] this bound only matters if a
+/// wakeup were ever lost.
+const RING_WAIT: Duration = Duration::from_millis(100);
 
 /// Typed classification of a submit/infer failure — what callers and
 /// tests key on instead of string matching.  The vendored `anyhow`
@@ -205,8 +215,11 @@ impl std::fmt::Display for SubmitError {
 impl std::error::Error for SubmitError {}
 
 /// The receiver handed back by [`Client::submit`]: yields exactly one
-/// reply for the submitted request.
-pub type ReplyReceiver = Receiver<anyhow::Result<Response>>;
+/// reply for the submitted request.  Normally a lease on a reusable
+/// slot from the client's reply slab (no per-submit allocation); falls
+/// back to a plain `mpsc` channel when the slab is exhausted or under
+/// the [`HotPath::SharedMutexBaseline`] test configuration.
+pub type ReplyReceiver = SlotReceiver<anyhow::Result<Response>>;
 
 /// Admission bookkeeping shared by every [`Client`] clone and the
 /// worker pool: the global outstanding count, plus per-lane counters
@@ -404,10 +417,11 @@ pub(crate) struct AdmissionView {
     /// (`u64::MAX` until the first).
     last_submit_us: AtomicU64,
     states: Vec<Arc<WorkerState>>,
-    /// Behind a `RwLock` so a hot reload can swap the lane policies
-    /// and worker assignments while submitters keep estimating; read
-    /// on every submit, written once per reload.
-    lanes: RwLock<Vec<LaneView>>,
+    /// Behind an epoch-swapped [`Snapshot`] so a hot reload can swap
+    /// the lane policies and worker assignments while submitters keep
+    /// estimating; read lock-free on every submit (a single `Acquire`
+    /// pointer load, never a lock), written once per reload.
+    lanes: Snapshot<Vec<LaneView>>,
 }
 
 impl AdmissionView {
@@ -420,30 +434,30 @@ impl AdmissionView {
             epoch: Instant::now(),
             last_submit_us: AtomicU64::new(u64::MAX),
             states,
-            lanes: RwLock::new(lanes),
+            lanes: Snapshot::new(lanes),
         }
     }
 
     fn lane_count(&self) -> usize {
-        self.lanes.read().unwrap().len()
+        self.lanes.load().len()
     }
 
     fn lane_class(&self, lane: usize) -> LaneClass {
-        let lanes = self.lanes.read().unwrap();
+        let lanes = self.lanes.load();
         lanes[lane.min(lanes.len() - 1)].class
     }
 
-    /// Swap the lane views in place (hot reload).  Lane count is fixed
-    /// — geometry changes are rejected upstream — so every lane index
-    /// already admitted stays valid.
+    /// Publish new lane views (hot reload).  Lane count is fixed —
+    /// geometry changes are rejected upstream — so every lane index
+    /// already admitted stays valid.  Submitters mid-read keep the old
+    /// snapshot; the swap is one atomic pointer store.
     fn set_lanes(&self, lanes: Vec<LaneView>) {
-        let mut cur = self.lanes.write().unwrap();
         assert_eq!(
             lanes.len(),
-            cur.len(),
+            self.lanes.load().len(),
             "reload cannot change the admission lane count"
         );
-        *cur = lanes;
+        self.lanes.swap(lanes);
     }
 
     fn since_epoch_us(&self, now: Instant) -> u64 {
@@ -482,7 +496,7 @@ impl AdmissionView {
     /// (the same all-warm gate `pick_worker` and lane steering use).
     fn class_lane(&self, gap: Option<Duration>) -> Option<usize> {
         let mut best: Option<(u64, usize)> = None;
-        for (li, lane) in self.lanes.read().unwrap().iter().enumerate() {
+        for (li, lane) in self.lanes.load().iter().enumerate() {
             let (wait_us, close_n) =
                 lane.policy.admission_estimate_us(0, gap);
             let exec = lane
@@ -550,6 +564,11 @@ pub struct Client {
     /// Event recorder mirrored from the config so the admission path
     /// can log power-cap sheds.
     events: Option<Arc<EventLog>>,
+    /// Reusable one-shot reply slots — replaces the fresh
+    /// `mpsc::channel()` allocation per submit.  `None` under the
+    /// [`HotPath::SharedMutexBaseline`] test configuration (which
+    /// keeps the per-submit channel for comparison).
+    replies: Option<ReplySlab<anyhow::Result<Response>>>,
 }
 
 impl Client {
@@ -597,9 +616,35 @@ impl Client {
         &self,
         image: Tensor,
     ) -> Result<ReplyReceiver, (Tensor, anyhow::Error)> {
-        let (reply, rx) = channel();
+        let (reply, rx) = self.reply_pair();
         self.submit_routed(image, reply, CancelToken::new(), false)
             .map(|()| rx)
+    }
+
+    /// A reply sender/receiver pair: a slab lease when the lock-free
+    /// hot path is active (and the slab has a free slot), a plain
+    /// `mpsc` channel otherwise.  Slot reuse is counted so benches can
+    /// verify steady state allocates nothing.
+    fn reply_pair(&self) -> (SlotSender<anyhow::Result<Response>>, ReplyReceiver) {
+        if let Some(slab) = &self.replies {
+            let (tx, rx, reused) = slab.pair_tracked();
+            if reused {
+                self.metrics.slab_reuse.fetch_add(1, Ordering::Relaxed);
+            }
+            (tx, rx)
+        } else {
+            let (tx, rx) = channel();
+            (tx.into(), rx.into())
+        }
+    }
+
+    /// Test/bench hook: `(idle, capacity)` of the reply slab, `None`
+    /// under the baseline hot path.  After every submitted request has
+    /// been answered *and its receiver dropped*, `idle == capacity`
+    /// (no leaked slots).
+    #[doc(hidden)]
+    pub fn reply_slab_stats(&self) -> Option<(usize, usize)> {
+        self.replies.as_ref().map(|s| (s.idle(), s.capacity()))
     }
 
     /// Submit with a cancellation handle: the returned
@@ -612,7 +657,7 @@ impl Client {
         &self,
         image: Tensor,
     ) -> anyhow::Result<(ReplyReceiver, CancelToken)> {
-        let (reply, rx) = channel();
+        let (reply, rx) = self.reply_pair();
         let token = CancelToken::new();
         self.submit_routed(image, reply, token.clone(), false)
             .map(|()| (rx, token))
@@ -620,16 +665,16 @@ impl Client {
     }
 
     /// The full-control submit every public variant builds on: the
-    /// caller supplies the reply `Sender` and the cancellation token,
-    /// so a router can fan one logical request out to several
-    /// coordinators (hedged dispatch) that share one reply channel and
+    /// caller supplies the reply [`SlotSender`] and the cancellation
+    /// token, so a router can fan one logical request out to several
+    /// coordinators (hedged dispatch) that share one reply slot and
     /// one winner-takes-all token.  `hedged` marks the duplicate leg
     /// (its claim counts as a hedge win).  Admission, lane accounting,
     /// and backpressure behave exactly like [`Client::submit`].
     pub(crate) fn submit_routed(
         &self,
         image: Tensor,
-        reply: Sender<anyhow::Result<Response>>,
+        reply: SlotSender<anyhow::Result<Response>>,
         token: CancelToken,
         hedged: bool,
     ) -> Result<(), (Tensor, anyhow::Error)> {
@@ -752,7 +797,7 @@ impl Client {
     /// least-outstanding.
     pub fn predicted_admission_us(&self) -> Option<u64> {
         let mut best: Option<u64> = None;
-        let lanes = self.view.lanes.read().unwrap();
+        let lanes = self.view.lanes.load();
         for (li, lane) in lanes.iter().enumerate() {
             let wait = self
                 .metrics
@@ -875,7 +920,7 @@ impl Client {
     /// backlogged lane's workers are cold.
     pub(crate) fn predicted_backlog_wait_us(&self) -> Option<u64> {
         let mut worst: Option<u64> = None;
-        let lanes = self.view.lanes.read().unwrap();
+        let lanes = self.view.lanes.load();
         for (li, lane) in lanes.iter().enumerate() {
             let occ = self
                 .metrics
@@ -989,6 +1034,24 @@ impl Client {
     }
 }
 
+/// Which request→reply critical path the server runs.
+///
+/// The lock-free layout is the production path; the shared-mutex
+/// baseline exists *only* so tests and benches can measure the
+/// contention the lock-free path removes, on otherwise identical
+/// machinery (same batcher, same workers, same admission).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HotPath {
+    /// Per-worker bounded SPSC rings with idle stealing (JoinIdle
+    /// dispatch), a reusable reply-slot slab instead of a fresh
+    /// `mpsc::channel` per submit, and lock-free lane-view reads.
+    LockFree,
+    /// The historical layout: one shared `Mutex<Receiver>` queue every
+    /// idle worker contends on, plus a per-submit reply channel.
+    /// Test-only — kept as the contention baseline.
+    SharedMutexBaseline,
+}
+
 /// Coordinator configuration.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
@@ -1063,6 +1126,10 @@ pub struct ServerConfig {
     /// `autotune`, the objective is re-derived from the draw-vs-cap
     /// ratio on the leader's monitor tick.
     pub energy: EnergyPolicy,
+    /// Which request→reply critical path to run.  Default
+    /// [`HotPath::LockFree`]; [`HotPath::SharedMutexBaseline`] is the
+    /// test-only contention baseline.
+    pub hot_path: HotPath,
 }
 
 impl Default for ServerConfig {
@@ -1079,14 +1146,161 @@ impl Default for ServerConfig {
             brownout: None,
             autotune: false,
             energy: EnergyPolicy::default(),
+            hot_path: HotPath::LockFree,
         }
     }
 }
 
+/// One worker's intake under the lock-free shared dispatch: a bounded
+/// SPSC ring (the leader is the only producer) with an unbounded
+/// overflow queue behind it.  The overflow is *sticky*: once the ring
+/// rejects a push, subsequent pushes go to the overflow until it
+/// drains, so per-worker FIFO order survives the spill (the single
+/// producer makes the `overflow_len > 0` check race-free).
+struct WorkerSlot {
+    ring: RingBuffer<DispatchedBatch>,
+    overflow: Mutex<VecDeque<DispatchedBatch>>,
+    /// Cached `overflow.len()` so the producer's sticky check and the
+    /// consumer's fast path never touch the overflow mutex while it is
+    /// empty (the steady state).
+    overflow_len: AtomicUsize,
+}
+
+/// The lock-free replacement for the shared `Mutex<Receiver>` queue
+/// under [`DispatchPolicy::JoinIdle`]: one [`WorkerSlot`] per worker,
+/// one shared eventcount for wakeups, and an idle-steal path so the
+/// join-idle semantics survive — a worker whose own ring is empty
+/// pulls from a sibling's instead of parking while work exists.
+struct RingGroup {
+    slots: Vec<WorkerSlot>,
+    /// Wakes parked workers after any dispatch (shared: a steal-able
+    /// batch may satisfy any worker, so targeting wakeups per-slot
+    /// would lose the work-conservation property).
+    notify: Notifier,
+    /// Leader gone: workers run one final drain sweep, then exit.
+    closed: AtomicBool,
+    metrics: Arc<ServerMetrics>,
+}
+
+impl RingGroup {
+    fn new(
+        workers: usize,
+        ring_capacity: usize,
+        metrics: Arc<ServerMetrics>,
+    ) -> RingGroup {
+        RingGroup {
+            slots: (0..workers)
+                .map(|_| WorkerSlot {
+                    ring: RingBuffer::with_capacity(ring_capacity),
+                    overflow: Mutex::new(VecDeque::new()),
+                    overflow_len: AtomicUsize::new(0),
+                })
+                .collect(),
+            notify: Notifier::new(),
+            closed: AtomicBool::new(false),
+            metrics,
+        }
+    }
+
+    /// Leader-side: enqueue `batch` for `worker`.  Lock-free while the
+    /// ring has room; spills to the overflow mutex (uncontended — only
+    /// this producer and at most one draining consumer touch it) when
+    /// full, counting the fallback.
+    fn send(&self, worker: usize, batch: DispatchedBatch) {
+        let slot = &self.slots[worker];
+        // Sticky spill: while the overflow holds batches, new pushes
+        // join it behind them — ring-first would reorder the queue.
+        if slot.overflow_len.load(Ordering::Acquire) > 0 {
+            self.spill(slot, batch);
+        } else if let Err(batch) = slot.ring.push(batch) {
+            self.spill(slot, batch);
+        }
+        self.notify.notify();
+    }
+
+    fn spill(&self, slot: &WorkerSlot, batch: DispatchedBatch) {
+        let mut q = slot.overflow.lock().unwrap();
+        q.push_back(batch);
+        slot.overflow_len.store(q.len(), Ordering::Release);
+        self.metrics
+            .ring_full_fallbacks
+            .fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Worker-side: one batch from `who`'s ring, else its overflow.
+    fn pop(&self, who: usize) -> Option<DispatchedBatch> {
+        let slot = &self.slots[who];
+        if let Some(b) = slot.ring.pop() {
+            return Some(b);
+        }
+        if slot.overflow_len.load(Ordering::Acquire) > 0 {
+            let mut q = slot.overflow.lock().unwrap();
+            let b = q.pop_front();
+            slot.overflow_len.store(q.len(), Ordering::Release);
+            return b;
+        }
+        None
+    }
+
+    /// Idle-steal: scan the siblings of `me` for queued work.  This is
+    /// what preserves join-idle's work conservation on the ring layout
+    /// — the ring assignment is round-robin, not affinity, so any
+    /// worker may execute any batch.
+    fn steal(&self, me: usize) -> Option<DispatchedBatch> {
+        let n = self.slots.len();
+        for d in 1..n {
+            if let Some(b) = self.pop((me + d) % n) {
+                self.metrics.steals_idle.fetch_add(1, Ordering::Relaxed);
+                return Some(b);
+            }
+        }
+        None
+    }
+
+    /// Blocking intake for worker `me`: own ring, then steal, then
+    /// park on the group eventcount.  `None` once the leader closed
+    /// the group and a final sweep found nothing — the worker-exit
+    /// signal, mirroring the disconnected-channel `None` of
+    /// [`BatchSource::next`]'s channel variants.
+    fn next(&self, me: usize) -> Option<DispatchedBatch> {
+        loop {
+            let seen = self.notify.seq();
+            if let Some(b) = self.pop(me).or_else(|| self.steal(me)) {
+                return Some(b);
+            }
+            if self.closed.load(Ordering::Acquire) {
+                // Re-sweep after observing the close: a batch sent
+                // just before the close flag must still be drained.
+                return self.pop(me).or_else(|| self.steal(me));
+            }
+            self.notify.wait_timeout(seen, RING_WAIT);
+        }
+    }
+
+    /// Leader gone: flip the close flag and wake everyone for their
+    /// final drain sweep.
+    fn close(&self) {
+        self.closed.store(true, Ordering::Release);
+        self.notify.notify();
+    }
+}
+
+/// The join-idle dispatch transport: the lock-free ring group, or the
+/// historical shared channel ([`HotPath::SharedMutexBaseline`]).
+enum SharedDispatch {
+    /// Round-robin over per-worker SPSC rings; idle workers steal.
+    /// Round-robin (not load-aware) is deliberate: join-idle is the
+    /// anonymous-queue policy, and stealing — not placement — is what
+    /// keeps it work-conserving.
+    Ring { group: Arc<RingGroup>, rr: AtomicUsize },
+    /// One shared queue; idle workers contend on its mutex.
+    Channel(Sender<DispatchedBatch>),
+}
+
 /// Leader-side batch routing per [`DispatchPolicy`].
 enum BatchRouter {
-    /// One shared queue; idle workers pull.
-    Shared(Sender<DispatchedBatch>),
+    /// Anonymous shared intake; idle workers pull (or steal).
+    Shared(SharedDispatch),
     /// Per-worker queues; the leader picks by predicted completion
     /// time blended with predicted joules per the energy policy.
     Affinity {
@@ -1101,7 +1315,12 @@ enum BatchRouter {
 impl BatchRouter {
     fn dispatch(&self, envs: Vec<Envelope>) {
         match self {
-            BatchRouter::Shared(tx) => {
+            BatchRouter::Shared(SharedDispatch::Ring { group, rr }) => {
+                let n = group.slots.len();
+                let w = rr.fetch_add(1, Ordering::Relaxed) % n;
+                group.send(w, DispatchedBatch { envs, cost_us: 0 });
+            }
+            BatchRouter::Shared(SharedDispatch::Channel(tx)) => {
                 let _ = tx.send(DispatchedBatch { envs, cost_us: 0 });
             }
             BatchRouter::Affinity { txs, states, rr, metrics, energy } => {
@@ -1125,13 +1344,16 @@ impl BatchRouter {
     }
 }
 
-/// Worker-side batch intake: the shared pool queue or this worker's
-/// own.  Both variants hold the receiver behind `Arc<Mutex<..>>` so a
-/// supervisor can hand the *same* queue to a respawned worker thread —
-/// batches dispatched while the worker was dead are drained by its
-/// replacement instead of being lost.
+/// Worker-side batch intake: the lock-free ring group, the shared
+/// pool queue, or this worker's own queue.  Every variant is `Clone`
+/// so a supervisor can hand the *same* intake to a respawned worker
+/// thread — batches dispatched while the worker was dead are drained
+/// by its replacement (or stolen by a sibling) instead of being lost.
 #[derive(Clone)]
 enum BatchSource {
+    /// This worker's slot in the join-idle ring group (plus the steal
+    /// path over its siblings).
+    Ring { group: Arc<RingGroup>, me: usize },
     Shared(Arc<Mutex<Receiver<DispatchedBatch>>>),
     Own(Arc<Mutex<Receiver<DispatchedBatch>>>),
 }
@@ -1156,10 +1378,23 @@ impl BatchSource {
     /// drained.
     fn next(&self) -> Option<DispatchedBatch> {
         match self {
+            BatchSource::Ring { group, me } => group.next(*me),
             BatchSource::Shared(rx) | BatchSource::Own(rx) => {
                 rx.lock().unwrap().recv().ok()
             }
         }
+    }
+
+    /// Whether dispatch-time accounting was skipped for this intake —
+    /// anonymous-queue batches (shared channel or ring) carry no
+    /// affinity pick, so the executing worker does its own `begin` at
+    /// receipt.  Affinity/per-class (`Own`) batches were accounted to
+    /// their worker at dispatch.
+    fn pop_side_accounting(&self) -> bool {
+        matches!(
+            self,
+            BatchSource::Ring { .. } | BatchSource::Shared(_)
+        )
     }
 }
 
@@ -1434,6 +1669,13 @@ impl Server {
         let (control_tx, control_rx) = channel::<ControlMsg>();
         let migration = Arc::new(MigrationBox::default());
         let energy = Arc::new(EnergyState::new(config.energy));
+        // Reply-slot slab: sized past the deepest admissible
+        // outstanding set (hedge legs share one slot, so admission
+        // bounds the live slots) with headroom for receivers still
+        // being read after their slot's request completed.
+        let replies = (config.hot_path == HotPath::LockFree).then(|| {
+            ReplySlab::with_capacity((chan_capacity * 2).clamp(64, 8192))
+        });
         let client = Client {
             tx,
             next_id: Arc::new(AtomicU64::new(0)),
@@ -1445,13 +1687,16 @@ impl Server {
             migration: Arc::clone(&migration),
             energy: Arc::clone(&energy),
             events: config.event_log.clone(),
+            replies,
         };
 
-        // leader -> workers: unbounded (depth already bounded by the
-        // request queue).  Join-idle shares one receiver across the
-        // pool; affinity and per-class formation give each worker its
-        // own queue so the leader can steer batches by predicted
-        // completion time.
+        // leader -> workers: depth already bounded by the request
+        // queue.  Join-idle fans out over per-worker SPSC rings with
+        // idle stealing (or, under the baseline hot path, one shared
+        // mutex-guarded receiver); affinity and per-class formation
+        // give each worker its own queue so the leader can steer
+        // batches by predicted completion time.
+        let mut ring_group: Option<Arc<RingGroup>> = None;
         let (driver, sources) = match plan {
             Some(plan) => {
                 let (txs, sources) = per_worker_queues(engines.len());
@@ -1488,6 +1733,37 @@ impl Server {
                     batcher.preload_gap(arrival.gap_s, arrival.obs);
                 }
                 let (router, sources) = match config.dispatch {
+                    DispatchPolicy::JoinIdle
+                        if config.hot_path == HotPath::LockFree =>
+                    {
+                        // Ring sized to the submit channel: even if
+                        // every admissible request landed on one
+                        // worker as size-1 batches, the overflow
+                        // spill stays the exception.
+                        let ring_cap = chan_capacity
+                            .max(8)
+                            .next_power_of_two()
+                            .min(1024);
+                        let group = Arc::new(RingGroup::new(
+                            engines.len(),
+                            ring_cap,
+                            Arc::clone(&metrics),
+                        ));
+                        ring_group = Some(Arc::clone(&group));
+                        let sources = (0..engines.len())
+                            .map(|me| BatchSource::Ring {
+                                group: Arc::clone(&group),
+                                me,
+                            })
+                            .collect::<Vec<_>>();
+                        (
+                            BatchRouter::Shared(SharedDispatch::Ring {
+                                group,
+                                rr: AtomicUsize::new(0),
+                            }),
+                            sources,
+                        )
+                    }
                     DispatchPolicy::JoinIdle => {
                         let (batch_tx, batch_rx) =
                             channel::<DispatchedBatch>();
@@ -1497,7 +1773,12 @@ impl Server {
                                 BatchSource::Shared(Arc::clone(&batch_rx))
                             })
                             .collect::<Vec<_>>();
-                        (BatchRouter::Shared(batch_tx), sources)
+                        (
+                            BatchRouter::Shared(SharedDispatch::Channel(
+                                batch_tx,
+                            )),
+                            sources,
+                        )
                     }
                     DispatchPolicy::Affinity => {
                         let (txs, sources) =
@@ -1597,6 +1878,7 @@ impl Server {
         let leader_budgets = Arc::clone(&lane_budgets);
         let leader_energy = Arc::clone(&energy);
         let base_objective = config.energy.objective;
+        let ring_close = ring_group;
         let leader = std::thread::Builder::new()
             .name("cnnlab-leader".into())
             .spawn(move || {
@@ -1621,7 +1903,14 @@ impl Server {
                         energy: leader_energy,
                         base_objective,
                     },
-                )
+                );
+                // Rings have no disconnect edge the way channels do:
+                // once the driver (dropped inside `leader_loop`) can
+                // produce no more batches, flip the group closed so
+                // workers run their final drain sweep and exit.
+                if let Some(group) = ring_close {
+                    group.close();
+                }
             })
             .expect("spawn leader");
         Server {
@@ -2153,7 +2442,7 @@ fn brownout_pressure(
     view: &AdmissionView,
 ) -> Option<u64> {
     let mut worst: Option<u64> = None;
-    let lanes = view.lanes.read().unwrap();
+    let lanes = view.lanes.load();
     for (li, lane) in lanes.iter().enumerate() {
         if lane.class == LaneClass::Latency {
             continue;
@@ -2603,10 +2892,12 @@ fn worker_loop<E: InferenceEngine>(
     notify: Arc<Notifier>,
 ) {
     while let Some(DispatchedBatch { envs, cost_us }) = source.next() {
-        // under join-idle the leader does no per-worker accounting;
-        // register receipt here so finish() stays balanced and
-        // snapshots count batches in both modes
-        if matches!(source, BatchSource::Shared(_)) {
+        // under join-idle (ring or shared channel) the leader does no
+        // per-worker accounting; register receipt here so finish()
+        // stays balanced and snapshots count batches in both modes —
+        // and so a *stolen* batch is accounted to the worker that
+        // actually executes it
+        if source.pop_side_accounting() {
             state.begin(cost_us);
         }
         let run = run_batch(
@@ -3231,5 +3522,66 @@ mod tests {
             Ok(())
         })
         .unwrap();
+    }
+
+    fn test_batch(id: u64) -> DispatchedBatch {
+        let (tx, _rx) = channel();
+        DispatchedBatch {
+            envs: vec![Envelope::new(
+                Request {
+                    id,
+                    image: Tensor::zeros(&[1]),
+                    arrived: Instant::now(),
+                },
+                tx,
+                0,
+            )],
+            cost_us: 0,
+        }
+    }
+
+    #[test]
+    fn ring_group_preserves_fifo_through_overflow() {
+        let metrics = Arc::new(ServerMetrics::with_lanes(1, 1));
+        // capacity 2: pushes 3.. spill to the overflow, and the
+        // sticky rule must keep the dispatch order end to end
+        let g = RingGroup::new(1, 2, Arc::clone(&metrics));
+        for id in 0..6 {
+            g.send(0, test_batch(id));
+        }
+        assert!(
+            metrics.ring_full_fallbacks.load(Ordering::Relaxed) > 0,
+            "overflow must have been exercised"
+        );
+        for want in 0..6 {
+            let got = g.pop(0).expect("queued batch");
+            assert_eq!(got.envs[0].req.id, want, "FIFO across the spill");
+        }
+        assert!(g.pop(0).is_none());
+    }
+
+    #[test]
+    fn ring_group_idle_steal_is_work_conserving() {
+        let metrics = Arc::new(ServerMetrics::with_lanes(2, 1));
+        let g = RingGroup::new(2, 8, Arc::clone(&metrics));
+        g.send(0, test_batch(7));
+        // worker 1's own slot is empty; the steal path must find the
+        // batch queued for worker 0
+        let got = g.steal(1).expect("stolen batch");
+        assert_eq!(got.envs[0].req.id, 7);
+        assert_eq!(metrics.steals_idle.load(Ordering::Relaxed), 1);
+        assert!(g.steal(1).is_none());
+    }
+
+    #[test]
+    fn ring_group_close_drains_before_exit() {
+        let metrics = Arc::new(ServerMetrics::with_lanes(1, 1));
+        let g = Arc::new(RingGroup::new(1, 4, metrics));
+        g.send(0, test_batch(1));
+        g.close();
+        // a batch sent before the close must still be delivered by the
+        // final sweep; only then does `next` report exit
+        assert!(g.next(0).is_some(), "close must not drop queued work");
+        assert!(g.next(0).is_none(), "drained and closed means exit");
     }
 }

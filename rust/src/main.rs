@@ -349,6 +349,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         brownout,
         autotune,
         energy,
+        ..ServerConfig::default()
     };
     let loaded_state = match profile_state_path {
         Some(path) if std::path::Path::new(path).exists() => {

@@ -4,12 +4,18 @@
 pub mod json;
 pub mod pool;
 pub mod rng;
+pub mod slab;
+pub mod snapshot;
+pub mod spsc;
 pub mod stats;
 pub mod tensor;
 
 pub use json::Json;
 pub use pool::{BufferPool, ImagePool, ThreadPool};
 pub use rng::Rng;
+pub use slab::{ReplySlab, SlotReceiver, SlotSender};
+pub use snapshot::Snapshot;
+pub use spsc::RingBuffer;
 pub use stats::{Ewma, Samples, Summary};
 pub use tensor::{Tensor, TensorView};
 

@@ -89,10 +89,45 @@ impl Drop for ThreadPool {
 /// multi-hundred-KB allocation per batch.  Buffers are keyed by length
 /// and bounded per size class, so a traffic burst cannot pin memory
 /// forever.  Shareable across worker threads (`Clone` bumps an `Arc`).
+///
+/// Internally the pool is sharded: each thread sticks to one shard
+/// (assigned on first use), so concurrent workers stacking batches stop
+/// serializing on one `Mutex<HashMap>`.  A shared overflow map catches
+/// cross-thread flows — a buffer `put` by the engine thread whose shard
+/// is full lands in overflow, where any thread's `take` can reclaim it.
 #[derive(Clone)]
 pub struct BufferPool {
-    slots: Arc<Mutex<HashMap<usize, Vec<Vec<f32>>>>>,
+    inner: Arc<PoolShards>,
     per_class: usize,
+}
+
+struct PoolShards {
+    shards: Box<[Mutex<HashMap<usize, Vec<Vec<f32>>>>]>,
+    overflow: Mutex<HashMap<usize, Vec<Vec<f32>>>>,
+}
+
+/// Shards per pool.  Power of two, sized for "a handful of worker
+/// threads plus a handful of submitter threads" — the serving fleet
+/// shapes this repo targets.
+const POOL_SHARDS: usize = 8;
+
+/// Sticky shard for the calling thread: threads are striped across
+/// shards in first-use order, so a worker keeps hitting the same (almost
+/// always uncontended) mutex.
+fn my_shard(n: usize) -> usize {
+    use std::cell::Cell;
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    thread_local! {
+        static SHARD: Cell<usize> = const { Cell::new(usize::MAX) };
+    }
+    SHARD.with(|c| {
+        let mut v = c.get();
+        if v == usize::MAX {
+            v = NEXT.fetch_add(1, Ordering::Relaxed);
+            c.set(v);
+        }
+        v % n
+    })
 }
 
 impl Default for BufferPool {
@@ -102,17 +137,34 @@ impl Default for BufferPool {
 }
 
 impl BufferPool {
-    /// Default: keep at most 4 idle buffers per size class (the serving
-    /// pipeline has at most a few batches in flight per worker).
+    /// Default: keep at most 4 idle buffers per size class per tier (the
+    /// serving pipeline has at most a few batches in flight per worker).
     pub fn new() -> BufferPool {
         BufferPool::with_capacity(4)
     }
 
     pub fn with_capacity(per_class: usize) -> BufferPool {
+        let shards = (0..POOL_SHARDS)
+            .map(|_| Mutex::new(HashMap::new()))
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
         BufferPool {
-            slots: Arc::new(Mutex::new(HashMap::new())),
+            inner: Arc::new(PoolShards { shards, overflow: Mutex::new(HashMap::new()) }),
             per_class: per_class.max(1),
         }
+    }
+
+    /// Pop a recycled buffer: own shard first, shared overflow second.
+    fn take_recycled(&self, len: usize) -> Option<Vec<f32>> {
+        let idx = my_shard(self.inner.shards.len());
+        if let Some(buf) = {
+            let mut shard = self.inner.shards[idx].lock().unwrap();
+            shard.get_mut(&len).and_then(Vec::pop)
+        } {
+            return Some(buf);
+        }
+        let mut overflow = self.inner.overflow.lock().unwrap();
+        overflow.get_mut(&len).and_then(Vec::pop)
     }
 
     /// Take a buffer of exactly `len` elements with **arbitrary**
@@ -120,40 +172,63 @@ impl BufferPool {
     /// (the batch-stacking path writes images then zeroes the padding
     /// tail explicitly).
     pub fn take(&self, len: usize) -> Vec<f32> {
-        let recycled = {
-            let mut slots = self.slots.lock().unwrap();
-            slots.get_mut(&len).and_then(Vec::pop)
-        };
-        recycled.unwrap_or_else(|| vec![0.0; len])
+        self.take_recycled(len).unwrap_or_else(|| vec![0.0; len])
     }
 
-    /// Take a buffer of `len` elements, all zero.
+    /// Take a buffer of `len` elements, all zero.  A fresh allocation is
+    /// already zero; only a recycled buffer needs the fill.
     pub fn take_zeroed(&self, len: usize) -> Vec<f32> {
-        let mut buf = self.take(len);
-        buf.fill(0.0);
-        buf
+        match self.take_recycled(len) {
+            Some(mut buf) => {
+                buf.fill(0.0);
+                buf
+            }
+            None => vec![0.0; len],
+        }
     }
 
-    /// Return a buffer for reuse.  Buffers whose size class is already
-    /// full are simply dropped.
+    /// Return a buffer for reuse: own shard first, shared overflow when
+    /// the shard's size class is full.  A buffer rejected by both tiers
+    /// is deallocated *after* the locks are released — freeing a
+    /// multi-hundred-KB allocation never stalls other threads.
     pub fn put(&self, buf: Vec<f32>) {
         if buf.is_empty() {
             return;
         }
-        let mut slots = self.slots.lock().unwrap();
-        let class = slots.entry(buf.len()).or_default();
-        if class.len() < self.per_class {
-            class.push(buf);
+        let len = buf.len();
+        let idx = my_shard(self.inner.shards.len());
+        let mut pending = Some(buf);
+        {
+            let mut shard = self.inner.shards[idx].lock().unwrap();
+            let class = shard.entry(len).or_default();
+            if class.len() < self.per_class {
+                class.push(pending.take().expect("unplaced buffer"));
+            }
         }
+        let Some(buf) = pending.take() else { return };
+        let rejected = {
+            let mut overflow = self.inner.overflow.lock().unwrap();
+            let class = overflow.entry(len).or_default();
+            if class.len() < self.per_class {
+                class.push(buf);
+                None
+            } else {
+                Some(buf)
+            }
+        };
+        drop(rejected); // both tiers full: deallocate outside the locks
     }
 
-    /// Number of idle pooled buffers of the given length (test hook).
+    /// Number of idle pooled buffers of the given length across every
+    /// shard plus overflow (test hook).
     pub fn idle(&self, len: usize) -> usize {
-        self.slots
-            .lock()
-            .unwrap()
-            .get(&len)
-            .map_or(0, Vec::len)
+        let shards: usize = self
+            .inner
+            .shards
+            .iter()
+            .map(|s| s.lock().unwrap().get(&len).map_or(0, Vec::len))
+            .sum();
+        shards + self.inner.overflow.lock().unwrap().get(&len).map_or(0, Vec::len)
     }
 }
 
@@ -278,10 +353,32 @@ mod tests {
     #[test]
     fn buffer_pool_bounds_idle_buffers() {
         let pool = BufferPool::with_capacity(2);
-        for _ in 0..5 {
+        for _ in 0..9 {
             pool.put(vec![0.0; 8]);
         }
-        assert_eq!(pool.idle(8), 2, "per-class cap enforced");
+        // One thread fills its own shard (2) then the shared overflow
+        // (2); the rest are dropped.
+        assert_eq!(pool.idle(8), 4, "per-class cap enforced per tier");
+    }
+
+    #[test]
+    fn buffer_pool_overflow_crosses_threads() {
+        let pool = BufferPool::with_capacity(1);
+        // A different thread fills its shard (1 buffer) and pushes the
+        // second into shared overflow.
+        let p = pool.clone();
+        std::thread::spawn(move || {
+            p.put(vec![1.0; 8]);
+            p.put(vec![2.0; 8]);
+        })
+        .join()
+        .unwrap();
+        assert_eq!(pool.idle(8), 2);
+        // A take from this thread recycles a pooled buffer (via the
+        // shared overflow when the shards differ) instead of allocating.
+        let a = pool.take(8);
+        assert_eq!(a.len(), 8);
+        assert_eq!(pool.idle(8), 1);
     }
 
     #[test]

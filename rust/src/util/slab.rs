@@ -1,0 +1,482 @@
+//! Reusable one-shot reply slots.
+//!
+//! Every submit used to allocate a fresh `mpsc::channel()` pair just to
+//! carry one `Result<Response>` back to the caller.  `ReplySlab` keeps a
+//! fixed pool of slots instead: `pair()` pops a free index from a
+//! lock-free ring, hands out a `SlotSender`/`SlotReceiver` pair bound to
+//! that slot, and the slot returns to the free list once both sides are
+//! done — a steady-state request allocates nothing on the reply path.
+//!
+//! Semantics match `std::sync::mpsc` for the one-shot case so call sites
+//! keep compiling unchanged:
+//! - senders are `Clone` (hedge legs share one slot as they share one
+//!   `CancelToken`; in practice reply sends are token-guarded so only
+//!   one leg ever sends),
+//! - `recv` blocks until a value arrives or every sender is gone
+//!   (`RecvError`), `try_recv` mirrors `TryRecvError`,
+//! - dropping the receiver makes `send` return `SendError(value)`.
+//!
+//! Each slot carries a generation counter bumped on reclaim, and every
+//! handle captures the generation it was issued with: a handle from a
+//! previous life of the slot can never deliver into or observe the next
+//! one (belt and braces — the refcount protocol already prevents a live
+//! handle from outliving its lease).
+//!
+//! When the slab is exhausted the pair falls back to a plain
+//! `mpsc::channel()`, so exhaustion degrades to today's behaviour rather
+//! than failing.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, RecvError, SendError, TryRecvError};
+use std::sync::{Arc, Condvar, Mutex};
+
+use super::spsc::RingBuffer;
+
+struct SlotState<T> {
+    value: Option<T>,
+    /// Live `SlotSender` handles bound to this lease.
+    senders: usize,
+    /// Cleared when the `SlotReceiver` drops.
+    rx_alive: bool,
+}
+
+struct Slot<T> {
+    state: Mutex<SlotState<T>>,
+    cv: Condvar,
+    /// Bumped on every reclaim; handles carry the generation they were
+    /// issued with.
+    gen: AtomicU64,
+    /// Completed leases of this slot.
+    cycles: AtomicU64,
+}
+
+struct SlabShared<T> {
+    slots: Box<[Slot<T>]>,
+    free: RingBuffer<usize>,
+    reused: AtomicU64,
+    fallbacks: AtomicU64,
+}
+
+/// Fixed-capacity pool of reusable one-shot reply slots.
+pub struct ReplySlab<T> {
+    shared: Arc<SlabShared<T>>,
+}
+
+impl<T> Clone for ReplySlab<T> {
+    fn clone(&self) -> Self {
+        ReplySlab { shared: Arc::clone(&self.shared) }
+    }
+}
+
+impl<T> ReplySlab<T> {
+    pub fn with_capacity(capacity: usize) -> Self {
+        let cap = capacity.max(1);
+        let slots = (0..cap)
+            .map(|_| Slot {
+                state: Mutex::new(SlotState { value: None, senders: 0, rx_alive: false }),
+                cv: Condvar::new(),
+                gen: AtomicU64::new(0),
+                cycles: AtomicU64::new(0),
+            })
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        let free = RingBuffer::with_capacity(cap);
+        for i in 0..cap {
+            free.push(i).expect("fresh free list holds every index");
+        }
+        ReplySlab {
+            shared: Arc::new(SlabShared {
+                slots,
+                free,
+                reused: AtomicU64::new(0),
+                fallbacks: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// A one-shot sender/receiver pair.  Reuses a pooled slot when one
+    /// is free; falls back to a fresh `mpsc::channel()` otherwise.
+    /// Returns `true` in the third position when the pair reuses a slot
+    /// that has already served a previous request.
+    pub fn pair_tracked(&self) -> (SlotSender<T>, SlotReceiver<T>, bool) {
+        match self.shared.free.pop() {
+            Some(idx) => {
+                let slot = &self.shared.slots[idx];
+                let gen = slot.gen.load(Ordering::Acquire);
+                let reused = slot.cycles.load(Ordering::Relaxed) > 0;
+                if reused {
+                    self.shared.reused.fetch_add(1, Ordering::Relaxed);
+                }
+                {
+                    let mut st = slot.state.lock().unwrap();
+                    debug_assert!(st.value.is_none() && st.senders == 0 && !st.rx_alive);
+                    st.senders = 1;
+                    st.rx_alive = true;
+                }
+                let tx = SlotSender(SenderInner::Slot {
+                    shared: Arc::clone(&self.shared),
+                    idx,
+                    gen,
+                });
+                let rx = SlotReceiver(ReceiverInner::Slot {
+                    shared: Arc::clone(&self.shared),
+                    idx,
+                    gen,
+                });
+                (tx, rx, reused)
+            }
+            None => {
+                self.shared.fallbacks.fetch_add(1, Ordering::Relaxed);
+                let (tx, rx) = mpsc::channel();
+                (
+                    SlotSender(SenderInner::Channel(tx)),
+                    SlotReceiver(ReceiverInner::Channel(rx)),
+                    false,
+                )
+            }
+        }
+    }
+
+    pub fn pair(&self) -> (SlotSender<T>, SlotReceiver<T>) {
+        let (tx, rx, _) = self.pair_tracked();
+        (tx, rx)
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.shared.slots.len()
+    }
+
+    /// Slots currently on the free list.  Equals `capacity()` when every
+    /// issued pair has fully retired — the leak check used by tests.
+    pub fn idle(&self) -> usize {
+        self.shared.free.len()
+    }
+
+    /// Pairs that reused a previously-retired slot.
+    pub fn reused(&self) -> u64 {
+        self.shared.reused.load(Ordering::Relaxed)
+    }
+
+    /// Pairs served by the `mpsc::channel()` fallback (slab exhausted).
+    pub fn fallbacks(&self) -> u64 {
+        self.shared.fallbacks.load(Ordering::Relaxed)
+    }
+}
+
+impl<T> SlabShared<T> {
+    /// Called with the slot's state lock held, after a side retires.
+    /// Reclaims the slot once no sender and no receiver remain.
+    fn maybe_reclaim(&self, idx: usize, gen: u64, st: &mut SlotState<T>) {
+        if st.senders == 0 && !st.rx_alive {
+            st.value = None;
+            let slot = &self.slots[idx];
+            debug_assert_eq!(slot.gen.load(Ordering::Relaxed), gen);
+            slot.cycles.fetch_add(1, Ordering::Relaxed);
+            slot.gen.store(gen.wrapping_add(1), Ordering::Release);
+            self.free
+                .push(idx)
+                .unwrap_or_else(|_| panic!("free list can hold every slot index"));
+        }
+    }
+}
+
+enum SenderInner<T> {
+    Slot { shared: Arc<SlabShared<T>>, idx: usize, gen: u64 },
+    Channel(mpsc::Sender<T>),
+}
+
+/// Sending half of a slab pair (or of its channel fallback).
+pub struct SlotSender<T>(SenderInner<T>);
+
+impl<T> SlotSender<T> {
+    pub fn send(&self, value: T) -> Result<(), SendError<T>> {
+        match &self.0 {
+            SenderInner::Slot { shared, idx, gen } => {
+                let slot = &shared.slots[*idx];
+                if slot.gen.load(Ordering::Acquire) != *gen {
+                    // Stale handle from a previous lease of this slot:
+                    // never deliver into the new one.
+                    return Err(SendError(value));
+                }
+                let mut st = slot.state.lock().unwrap();
+                if !st.rx_alive {
+                    return Err(SendError(value));
+                }
+                st.value = Some(value);
+                slot.cv.notify_all();
+                Ok(())
+            }
+            SenderInner::Channel(tx) => tx.send(value),
+        }
+    }
+}
+
+impl<T> Clone for SlotSender<T> {
+    fn clone(&self) -> Self {
+        match &self.0 {
+            SenderInner::Slot { shared, idx, gen } => {
+                let slot = &shared.slots[*idx];
+                let mut st = slot.state.lock().unwrap();
+                if slot.gen.load(Ordering::Acquire) == *gen {
+                    st.senders += 1;
+                }
+                drop(st);
+                SlotSender(SenderInner::Slot {
+                    shared: Arc::clone(shared),
+                    idx: *idx,
+                    gen: *gen,
+                })
+            }
+            SenderInner::Channel(tx) => SlotSender(SenderInner::Channel(tx.clone())),
+        }
+    }
+}
+
+impl<T> Drop for SlotSender<T> {
+    fn drop(&mut self) {
+        if let SenderInner::Slot { shared, idx, gen } = &self.0 {
+            let slot = &shared.slots[*idx];
+            if slot.gen.load(Ordering::Acquire) != *gen {
+                // Stale clone that was never counted against this lease.
+                return;
+            }
+            let mut st = slot.state.lock().unwrap();
+            st.senders = st.senders.saturating_sub(1);
+            if st.senders == 0 {
+                // Last sender gone: a blocked receiver must observe
+                // disconnection.
+                slot.cv.notify_all();
+            }
+            shared.maybe_reclaim(*idx, *gen, &mut st);
+        }
+    }
+}
+
+impl<T> From<mpsc::Sender<T>> for SlotSender<T> {
+    fn from(tx: mpsc::Sender<T>) -> Self {
+        SlotSender(SenderInner::Channel(tx))
+    }
+}
+
+impl<T> std::fmt::Debug for SlotSender<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match &self.0 {
+            SenderInner::Slot { idx, gen, .. } => f
+                .debug_struct("SlotSender")
+                .field("idx", idx)
+                .field("gen", gen)
+                .finish(),
+            SenderInner::Channel(_) => f.debug_struct("SlotSender").finish_non_exhaustive(),
+        }
+    }
+}
+
+enum ReceiverInner<T> {
+    Slot { shared: Arc<SlabShared<T>>, idx: usize, gen: u64 },
+    Channel(mpsc::Receiver<T>),
+}
+
+/// Receiving half of a slab pair (or of its channel fallback).
+pub struct SlotReceiver<T>(ReceiverInner<T>);
+
+impl<T> SlotReceiver<T> {
+    pub fn recv(&self) -> Result<T, RecvError> {
+        match &self.0 {
+            ReceiverInner::Slot { shared, idx, gen } => {
+                let slot = &shared.slots[*idx];
+                if slot.gen.load(Ordering::Acquire) != *gen {
+                    return Err(RecvError);
+                }
+                let mut st = slot.state.lock().unwrap();
+                loop {
+                    if let Some(v) = st.value.take() {
+                        return Ok(v);
+                    }
+                    if st.senders == 0 {
+                        return Err(RecvError);
+                    }
+                    st = slot.cv.wait(st).unwrap();
+                }
+            }
+            ReceiverInner::Channel(rx) => rx.recv(),
+        }
+    }
+
+    pub fn try_recv(&self) -> Result<T, TryRecvError> {
+        match &self.0 {
+            ReceiverInner::Slot { shared, idx, gen } => {
+                let slot = &shared.slots[*idx];
+                if slot.gen.load(Ordering::Acquire) != *gen {
+                    return Err(TryRecvError::Disconnected);
+                }
+                let mut st = slot.state.lock().unwrap();
+                if let Some(v) = st.value.take() {
+                    Ok(v)
+                } else if st.senders == 0 {
+                    Err(TryRecvError::Disconnected)
+                } else {
+                    Err(TryRecvError::Empty)
+                }
+            }
+            ReceiverInner::Channel(rx) => rx.try_recv(),
+        }
+    }
+}
+
+impl<T> Drop for SlotReceiver<T> {
+    fn drop(&mut self) {
+        if let ReceiverInner::Slot { shared, idx, gen } = &self.0 {
+            let slot = &shared.slots[*idx];
+            if slot.gen.load(Ordering::Acquire) != *gen {
+                return;
+            }
+            let mut st = slot.state.lock().unwrap();
+            st.rx_alive = false;
+            shared.maybe_reclaim(*idx, *gen, &mut st);
+        }
+    }
+}
+
+impl<T> From<mpsc::Receiver<T>> for SlotReceiver<T> {
+    fn from(rx: mpsc::Receiver<T>) -> Self {
+        SlotReceiver(ReceiverInner::Channel(rx))
+    }
+}
+
+impl<T> std::fmt::Debug for SlotReceiver<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match &self.0 {
+            ReceiverInner::Slot { idx, gen, .. } => f
+                .debug_struct("SlotReceiver")
+                .field("idx", idx)
+                .field("gen", gen)
+                .finish(),
+            ReceiverInner::Channel(_) => {
+                f.debug_struct("SlotReceiver").finish_non_exhaustive()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn one_shot_roundtrip_and_reclaim() {
+        let slab: ReplySlab<u32> = ReplySlab::with_capacity(2);
+        let (tx, rx) = slab.pair();
+        assert_eq!(slab.idle(), 1);
+        tx.send(7).unwrap();
+        assert_eq!(rx.recv().unwrap(), 7);
+        drop(tx);
+        drop(rx);
+        assert_eq!(slab.idle(), 2, "slot must return to the free list");
+    }
+
+    #[test]
+    fn dropped_receiver_rejects_send() {
+        let slab: ReplySlab<u32> = ReplySlab::with_capacity(1);
+        let (tx, rx) = slab.pair();
+        drop(rx);
+        assert_eq!(tx.send(1), Err(SendError(1)));
+        drop(tx);
+        assert_eq!(slab.idle(), 1);
+    }
+
+    #[test]
+    fn dropped_senders_disconnect_receiver() {
+        let slab: ReplySlab<u32> = ReplySlab::with_capacity(1);
+        let (tx, rx) = slab.pair();
+        let tx2 = tx.clone();
+        drop(tx);
+        assert_eq!(rx.try_recv(), Err(TryRecvError::Empty));
+        drop(tx2);
+        assert_eq!(rx.recv(), Err(RecvError));
+        drop(rx);
+        assert_eq!(slab.idle(), 1);
+    }
+
+    #[test]
+    fn recv_blocks_until_send() {
+        let slab: ReplySlab<u32> = ReplySlab::with_capacity(1);
+        let (tx, rx) = slab.pair();
+        let t = std::thread::spawn(move || rx.recv().unwrap());
+        std::thread::sleep(Duration::from_millis(10));
+        tx.send(42).unwrap();
+        assert_eq!(t.join().unwrap(), 42);
+    }
+
+    #[test]
+    fn exhaustion_falls_back_to_channel() {
+        let slab: ReplySlab<u32> = ReplySlab::with_capacity(1);
+        let (_tx1, _rx1) = slab.pair();
+        let (tx2, rx2) = slab.pair();
+        assert_eq!(slab.fallbacks(), 1);
+        tx2.send(5).unwrap();
+        assert_eq!(rx2.recv().unwrap(), 5);
+    }
+
+    #[test]
+    fn stale_generation_never_crosses_leases() {
+        let slab: ReplySlab<u32> = ReplySlab::with_capacity(1);
+        let (tx_a, rx_a) = slab.pair();
+        let stale_tx = tx_a.clone();
+        tx_a.send(1).unwrap();
+        assert_eq!(rx_a.recv().unwrap(), 1);
+        drop(tx_a);
+        drop(rx_a);
+        // stale_tx still holds a sender refcount, so the slot is not
+        // reclaimed yet and the second pair must fall back.
+        assert_eq!(slab.idle(), 0);
+        let (tx_b, rx_b) = slab.pair();
+        assert_eq!(slab.fallbacks(), 1);
+        tx_b.send(2).unwrap();
+        assert_eq!(rx_b.recv().unwrap(), 2);
+        drop(stale_tx);
+        drop(tx_b);
+        drop(rx_b);
+        assert_eq!(slab.idle(), 1, "slot reclaims once the last handle drops");
+        // Take the recycled slot and check it serves the new lease
+        // cleanly (no value left over from lease A).
+        let (tx_c, rx_c) = slab.pair();
+        assert!(slab.reused() >= 1);
+        assert_eq!(rx_c.try_recv(), Err(TryRecvError::Empty));
+        tx_c.send(3).unwrap();
+        assert_eq!(rx_c.recv().unwrap(), 3);
+    }
+
+    #[test]
+    fn stale_sender_cannot_deliver_into_new_lease() {
+        let slab: ReplySlab<u32> = ReplySlab::with_capacity(1);
+        let (tx_a, rx_a) = slab.pair();
+        drop(rx_a);
+        // Force-retire lease A while keeping a raw handle shape around:
+        // after tx_a drops the slot is reclaimed; a later send through a
+        // clone made before the drop must be rejected by the generation
+        // check rather than land in lease B.
+        let stale = tx_a.clone();
+        drop(tx_a);
+        // `stale` is still counted, so reclaim waits for it.
+        assert_eq!(slab.idle(), 0);
+        drop(stale);
+        assert_eq!(slab.idle(), 1);
+        let (tx_b, rx_b) = slab.pair();
+        tx_b.send(9).unwrap();
+        assert_eq!(rx_b.recv().unwrap(), 9);
+    }
+
+    #[test]
+    fn reuse_counter_tracks_recycled_slots() {
+        let slab: ReplySlab<u32> = ReplySlab::with_capacity(1);
+        for i in 0..5 {
+            let (tx, rx) = slab.pair();
+            tx.send(i).unwrap();
+            assert_eq!(rx.recv().unwrap(), i);
+        }
+        assert_eq!(slab.reused(), 4);
+        assert_eq!(slab.fallbacks(), 0);
+        assert_eq!(slab.idle(), 1);
+    }
+}

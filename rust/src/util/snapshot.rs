@@ -1,0 +1,129 @@
+//! Lock-free read-mostly snapshot cell.
+//!
+//! `Snapshot<T>` publishes a value behind an `AtomicPtr`: readers call
+//! `load()` — one `Acquire` load, no lock, no refcount traffic — while
+//! infrequent writers (`swap`) install a new boxed value and retire the
+//! old one.  Retired values are parked in a graveyard and freed only
+//! when the `Snapshot` itself drops, so a reference obtained from
+//! `load()` stays valid for the lifetime of the cell; no epoch/hazard
+//! tracking is needed.  That trade — a few retired boxes held until
+//! shutdown — fits configuration-shaped data that swaps a handful of
+//! times per process (lane tables swapped by hot-reload/retune), not
+//! per-request data.
+//!
+//! `epoch()` counts swaps, letting readers detect staleness cheaply if
+//! they cache derived state.
+
+use std::sync::atomic::{AtomicPtr, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+pub struct Snapshot<T> {
+    cur: AtomicPtr<T>,
+    epoch: AtomicU64,
+    retired: Mutex<Vec<Box<T>>>,
+}
+
+unsafe impl<T: Send + Sync> Send for Snapshot<T> {}
+unsafe impl<T: Send + Sync> Sync for Snapshot<T> {}
+
+impl<T> Snapshot<T> {
+    pub fn new(value: T) -> Self {
+        Snapshot {
+            cur: AtomicPtr::new(Box::into_raw(Box::new(value))),
+            epoch: AtomicU64::new(0),
+            retired: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// The current value.  Lock-free; the reference lives as long as the
+    /// `Snapshot` (retired values are not freed until drop).
+    pub fn load(&self) -> &T {
+        // Safety: the pointer is always a live Box leaked by `new` or
+        // `swap`; swapped-out values move to `retired` and are only
+        // dropped in `Drop`, which takes `&mut self` — no outstanding
+        // `&T` can exist then.
+        unsafe { &*self.cur.load(Ordering::Acquire) }
+    }
+
+    /// Swaps in a new value and bumps the epoch.  The old value is
+    /// retired (kept alive) rather than dropped.
+    pub fn swap(&self, value: T) {
+        let fresh = Box::into_raw(Box::new(value));
+        let old = self.cur.swap(fresh, Ordering::AcqRel);
+        self.epoch.fetch_add(1, Ordering::Release);
+        // Safety: `old` came out of the same cell, so it is a live Box
+        // no longer reachable by new readers.
+        let boxed = unsafe { Box::from_raw(old) };
+        self.retired.lock().unwrap().push(boxed);
+    }
+
+    /// Number of swaps since creation.
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+}
+
+impl<T> Drop for Snapshot<T> {
+    fn drop(&mut self) {
+        let cur = self.cur.load(Ordering::Relaxed);
+        // Safety: sole owner at drop; `cur` is the live Box installed by
+        // `new` or the latest `swap`.
+        drop(unsafe { Box::from_raw(cur) });
+        // `retired` drops its boxes normally.
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicBool;
+    use std::sync::Arc;
+
+    #[test]
+    fn load_swap_epoch() {
+        let s = Snapshot::new(vec![1, 2, 3]);
+        assert_eq!(s.load(), &[1, 2, 3]);
+        assert_eq!(s.epoch(), 0);
+        s.swap(vec![4]);
+        assert_eq!(s.load(), &[4]);
+        assert_eq!(s.epoch(), 1);
+    }
+
+    #[test]
+    fn old_reference_survives_swap() {
+        let s = Snapshot::new(String::from("alpha"));
+        let old = s.load();
+        s.swap(String::from("beta"));
+        assert_eq!(old, "alpha", "retired value must stay alive");
+        assert_eq!(s.load(), "beta");
+    }
+
+    #[test]
+    fn concurrent_readers_and_swapper() {
+        let s = Arc::new(Snapshot::new(0u64));
+        let stop = Arc::new(AtomicBool::new(false));
+        let readers: Vec<_> = (0..4)
+            .map(|_| {
+                let s = Arc::clone(&s);
+                let stop = Arc::clone(&stop);
+                std::thread::spawn(move || {
+                    let mut last = 0u64;
+                    while !stop.load(Ordering::Relaxed) {
+                        let v = *s.load();
+                        assert!(v >= last, "values must be monotone under swap");
+                        last = v;
+                    }
+                })
+            })
+            .collect();
+        for i in 1..=200 {
+            s.swap(i);
+        }
+        stop.store(true, Ordering::Relaxed);
+        for t in readers {
+            t.join().unwrap();
+        }
+        assert_eq!(s.epoch(), 200);
+        assert_eq!(*s.load(), 200);
+    }
+}

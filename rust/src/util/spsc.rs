@@ -1,0 +1,268 @@
+//! Bounded lock-free ring queue (Vyukov-style per-slot sequence numbers).
+//!
+//! The serving hot path hands batches from the leader to workers through
+//! one `RingBuffer` per worker.  The leader is the only producer per ring
+//! (SPSC at steady state), but the algorithm is full MPMC: sibling
+//! workers may `pop` from each other's rings on the idle-steal path, and
+//! the reply slab reuses the same ring as its multi-producer free list.
+//!
+//! Each slot carries a sequence number that encodes whose turn it is:
+//! `seq == pos` means the slot is free for the producer claiming index
+//! `pos`; `seq == pos + 1` means it holds a value for the consumer
+//! claiming index `pos`.  Claims are CAS bumps on `head`/`tail`, so a
+//! push or pop is one CAS plus one store — no locks, no spinning on a
+//! shared flag, and a full (or empty) ring reports immediately instead
+//! of blocking.
+
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+struct Slot<T> {
+    seq: AtomicUsize,
+    val: UnsafeCell<MaybeUninit<T>>,
+}
+
+/// Bounded MPMC ring; capacity is rounded up to a power of two.
+pub struct RingBuffer<T> {
+    slots: Box<[Slot<T>]>,
+    mask: usize,
+    head: AtomicUsize,
+    tail: AtomicUsize,
+}
+
+unsafe impl<T: Send> Send for RingBuffer<T> {}
+unsafe impl<T: Send> Sync for RingBuffer<T> {}
+
+impl<T> RingBuffer<T> {
+    /// A ring holding at least `capacity` items (rounded up to a power
+    /// of two, minimum 2 so `mask` is nonzero).
+    pub fn with_capacity(capacity: usize) -> Self {
+        let cap = capacity.max(2).next_power_of_two();
+        let slots = (0..cap)
+            .map(|i| Slot {
+                seq: AtomicUsize::new(i),
+                val: UnsafeCell::new(MaybeUninit::uninit()),
+            })
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        RingBuffer { slots, mask: cap - 1, head: AtomicUsize::new(0), tail: AtomicUsize::new(0) }
+    }
+
+    /// Slots in the ring (always a power of two).
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Approximate occupancy; exact when quiescent.
+    pub fn len(&self) -> usize {
+        let tail = self.tail.load(Ordering::Relaxed);
+        let head = self.head.load(Ordering::Relaxed);
+        tail.wrapping_sub(head)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Enqueue; returns the value back if the ring is full.
+    pub fn push(&self, val: T) -> Result<(), T> {
+        let mut pos = self.tail.load(Ordering::Relaxed);
+        loop {
+            let slot = &self.slots[pos & self.mask];
+            let seq = slot.seq.load(Ordering::Acquire);
+            if seq == pos {
+                // Our turn: claim the index, then fill the slot.
+                match self.tail.compare_exchange_weak(
+                    pos,
+                    pos.wrapping_add(1),
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        unsafe { (*slot.val.get()).write(val) };
+                        slot.seq.store(pos.wrapping_add(1), Ordering::Release);
+                        return Ok(());
+                    }
+                    Err(cur) => pos = cur,
+                }
+            } else if (seq as isize).wrapping_sub(pos as isize) < 0 {
+                // Slot still holds an unconsumed value from a lap ago:
+                // the ring is full.
+                return Err(val);
+            } else {
+                // Another producer claimed this index; retry on the
+                // current tail.
+                pos = self.tail.load(Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Dequeue; `None` when the ring is empty.
+    pub fn pop(&self) -> Option<T> {
+        let mut pos = self.head.load(Ordering::Relaxed);
+        loop {
+            let slot = &self.slots[pos & self.mask];
+            let seq = slot.seq.load(Ordering::Acquire);
+            let expect = pos.wrapping_add(1);
+            if seq == expect {
+                match self.head.compare_exchange_weak(
+                    pos,
+                    pos.wrapping_add(1),
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        let val = unsafe { (*slot.val.get()).assume_init_read() };
+                        // Mark the slot free for the producer one lap
+                        // ahead.
+                        slot.seq.store(
+                            pos.wrapping_add(self.mask).wrapping_add(1),
+                            Ordering::Release,
+                        );
+                        return Some(val);
+                    }
+                    Err(cur) => pos = cur,
+                }
+            } else if (seq as isize).wrapping_sub(expect as isize) < 0 {
+                return None;
+            } else {
+                pos = self.head.load(Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+impl<T> Drop for RingBuffer<T> {
+    fn drop(&mut self) {
+        while self.pop().is_some() {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn push_pop_fifo() {
+        let q = RingBuffer::with_capacity(4);
+        for i in 0..4 {
+            q.push(i).unwrap();
+        }
+        assert!(q.push(99).is_err(), "full ring must reject");
+        for i in 0..4 {
+            assert_eq!(q.pop(), Some(i));
+        }
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn wraps_many_laps() {
+        let q = RingBuffer::with_capacity(2);
+        for i in 0..1000 {
+            q.push(i).unwrap();
+            assert_eq!(q.pop(), Some(i));
+        }
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn drops_undrained_items() {
+        let item = Arc::new(());
+        {
+            let q = RingBuffer::with_capacity(8);
+            for _ in 0..5 {
+                q.push(Arc::clone(&item)).unwrap();
+            }
+        }
+        assert_eq!(Arc::strong_count(&item), 1, "ring drop must free slots");
+    }
+
+    #[test]
+    fn spsc_threads_preserve_order() {
+        let q = Arc::new(RingBuffer::with_capacity(64));
+        let n = 20_000usize;
+        let prod = {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || {
+                for i in 0..n {
+                    let mut v = i;
+                    loop {
+                        match q.push(v) {
+                            Ok(()) => break,
+                            Err(back) => {
+                                v = back;
+                                std::thread::yield_now();
+                            }
+                        }
+                    }
+                }
+            })
+        };
+        let mut next = 0usize;
+        while next < n {
+            if let Some(v) = q.pop() {
+                assert_eq!(v, next, "SPSC must be FIFO");
+                next += 1;
+            } else {
+                std::thread::yield_now();
+            }
+        }
+        prod.join().unwrap();
+    }
+
+    #[test]
+    fn mpmc_threads_conserve_items() {
+        let q = Arc::new(RingBuffer::with_capacity(32));
+        let per = 5_000usize;
+        let producers: Vec<_> = (0..3)
+            .map(|p| {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || {
+                    for i in 0..per {
+                        let mut v = p * per + i;
+                        loop {
+                            match q.push(v) {
+                                Ok(()) => break,
+                                Err(back) => {
+                                    v = back;
+                                    std::thread::yield_now();
+                                }
+                            }
+                        }
+                    }
+                })
+            })
+            .collect();
+        let seen = Arc::new(AtomicUsize::new(0));
+        let sum = Arc::new(AtomicUsize::new(0));
+        let consumers: Vec<_> = (0..3)
+            .map(|_| {
+                let q = Arc::clone(&q);
+                let seen = Arc::clone(&seen);
+                let sum = Arc::clone(&sum);
+                std::thread::spawn(move || loop {
+                    if seen.load(Ordering::Relaxed) >= 3 * per {
+                        break;
+                    }
+                    if let Some(v) = q.pop() {
+                        sum.fetch_add(v, Ordering::Relaxed);
+                        seen.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        std::thread::yield_now();
+                    }
+                })
+            })
+            .collect();
+        for t in producers {
+            t.join().unwrap();
+        }
+        for t in consumers {
+            t.join().unwrap();
+        }
+        let total = 3 * per;
+        assert_eq!(seen.load(Ordering::Relaxed), total);
+        assert_eq!(sum.load(Ordering::Relaxed), total * (total - 1) / 2);
+    }
+}

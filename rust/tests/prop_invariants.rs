@@ -20,7 +20,7 @@ use cnnlab::prop::{check, f64_in, usize_in, vec_of, Gen, PropResult};
 use cnnlab::sched::{
     frontier, simulate, Choice, EstimateSource, Mapping, Point,
 };
-use cnnlab::util::{Rng, Tensor};
+use cnnlab::util::{ReplySlab, Rng, Tensor};
 
 fn expect_ok<T: std::fmt::Debug>(r: PropResult<T>) {
     r.unwrap();
@@ -1097,6 +1097,107 @@ fn prop_power_cap_sheds_throughput_class_only_and_conserves() {
         cap_sheds_seen.load(Ordering::Relaxed) > 0,
         "no iteration exercised the power-cap shed path"
     );
+}
+
+// -------------------------------------------------------------- reply slab
+
+/// REPLY-SLOT GENERATION/REUSE INVARIANTS: a tiny slab (capacity 4,
+/// forcing heavy slot recycling and mpsc fallback under bursts) driven
+/// through random lease lifecycles — happy path, receiver-dropped-
+/// first, sender-dropped-without-sending, cloned senders with a
+/// winner.  For any op sequence:
+/// * a delivered value is exactly the one sent on *this* lease — slot
+///   recycling never lets a stale value cross into a later lease;
+/// * dropping the receiver first makes every send on that lease fail;
+/// * dropping all senders without sending yields a disconnect error,
+///   never a value;
+/// * after every lease resolves, the free list is back to capacity
+///   (zero leaked slots) and — given enough leases — reuse happened.
+#[test]
+fn prop_reply_slab_generation_reuse_never_leaks_or_crosses() {
+    let gen = vec_of(usize_in(0, 3), usize_in(16, 160));
+    expect_ok(check(53, 60, &gen, |ops: &Vec<usize>| {
+        let slab: ReplySlab<u64> = ReplySlab::with_capacity(4);
+        // leases deliberately held open across ops so later acquires
+        // hit the fallback path while slots are leased out
+        let mut open = Vec::new();
+        for (i, &op) in ops.iter().enumerate() {
+            let id = i as u64;
+            match op {
+                // happy path: send, receive, verify the lease's own
+                // value came back
+                0 => {
+                    let (tx, rx) = slab.pair();
+                    tx.send(id).map_err(|_| "send refused")?;
+                    let got =
+                        rx.recv().map_err(|_| "reply lost")?;
+                    if got != id {
+                        return Err(format!(
+                            "lease {id} received stale value {got}"
+                        ));
+                    }
+                }
+                // receiver gone first: the send must fail and hand
+                // the value back
+                1 => {
+                    let (tx, rx) = slab.pair();
+                    drop(rx);
+                    if tx.send(id).is_ok() {
+                        return Err(
+                            "send delivered to a dropped receiver"
+                                .into(),
+                        );
+                    }
+                }
+                // all senders gone without sending: disconnect, not
+                // a value from some earlier occupant of the slot
+                2 => {
+                    let (tx, rx) = slab.pair();
+                    let tx2 = tx.clone();
+                    drop(tx);
+                    drop(tx2);
+                    if rx.recv().is_ok() {
+                        return Err(
+                            "recv yielded a value nobody sent".into(),
+                        );
+                    }
+                }
+                // cloned senders race to reply (the hedge shape):
+                // hold the lease open to push later acquires into
+                // the fallback path
+                _ => {
+                    let (tx, rx) = slab.pair();
+                    let tx2 = tx.clone();
+                    open.push((tx2, rx, id));
+                    drop(tx);
+                }
+            }
+        }
+        // resolve the held-open leases: the surviving clone replies
+        for (tx, rx, id) in open {
+            tx.send(id).map_err(|_| "held lease send refused")?;
+            let got = rx.recv().map_err(|_| "held lease lost")?;
+            if got != id {
+                return Err(format!(
+                    "held lease {id} received stale value {got}"
+                ));
+            }
+        }
+        if slab.idle() != slab.capacity() {
+            return Err(format!(
+                "slab leaked slots: {} idle of {}",
+                slab.idle(),
+                slab.capacity()
+            ));
+        }
+        if ops.len() >= 32 && slab.reused() == 0 {
+            return Err(
+                "heavy lease traffic on a 4-slot slab must recycle"
+                    .into(),
+            );
+        }
+        Ok(())
+    }));
 }
 
 // ---------------------------------------------------------------- schedule

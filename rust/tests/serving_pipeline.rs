@@ -12,9 +12,9 @@ use std::time::{Duration, Instant};
 use cnnlab::coordinator::{
     BatchPolicy, BrownoutConfig, CurveEngine, DeviceProfile,
     DispatchPolicy, EngineFactory, FaultPlan, FaultyEngine,
-    FormationPolicy, LaneBudgets, LaneClass, MigrationConfig, MockEngine,
-    ProfileState, RoutePolicy, Router, Server, ServerConfig, ServerState,
-    SubmitError,
+    FormationPolicy, HotPath, LaneBudgets, LaneClass, MigrationConfig,
+    MockEngine, ProfileState, RoutePolicy, Router, Server, ServerConfig,
+    ServerState, SubmitError,
 };
 use cnnlab::device::DeviceKind;
 use cnnlab::trace::{EventLog, Lifecycle};
@@ -1957,4 +1957,158 @@ fn online_retune_rebudgets_lanes_from_live_arrivals() {
     );
     assert_eq!(m.errors.load(Ordering::Relaxed), 0);
     assert_eq!(client.outstanding(), 0);
+}
+
+/// One contended hot-path trial: 8 instant workers (their profiles
+/// *declare* 6 ms/img, so the scenario models a real device while the
+/// measurement isolates pure hand-off overhead), b=1 batches (every
+/// request is its own leader→worker hand-off), 4 submitter threads in
+/// a bounded-window closed loop.  Returns `(throughput req/s, p99 s)`.
+fn hotpath_trial(hot_path: HotPath) -> (f64, f64) {
+    const WORKERS: usize = 8;
+    const SUBMITTERS: usize = 4;
+    const PER_THREAD: usize = 400;
+    const WINDOW: usize = 64;
+    let engines: Vec<(MockEngine, DeviceProfile)> = (0..WORKERS)
+        .map(|_| {
+            (
+                mock(0),
+                DeviceProfile::from_seed(
+                    DeviceKind::CpuPjrt,
+                    vec![(1, 0.006)],
+                ),
+            )
+        })
+        .collect();
+    let server = Server::spawn_pool_profiled(
+        engines,
+        ServerConfig {
+            policy: BatchPolicy::new(1, Duration::ZERO),
+            queue_capacity: 512,
+            dispatch: DispatchPolicy::JoinIdle,
+            hot_path,
+            ..Default::default()
+        },
+    );
+    let client = server.client();
+    let t0 = Instant::now();
+    let latencies: Vec<f64> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..SUBMITTERS)
+            .map(|t| {
+                let client = client.clone();
+                s.spawn(move || {
+                    let mut rng = Rng::new(4000 + t as u64);
+                    let mut pending =
+                        std::collections::VecDeque::new();
+                    let mut lat = Vec::with_capacity(PER_THREAD);
+                    for _ in 0..PER_THREAD {
+                        let mut img = image(&mut rng);
+                        loop {
+                            match client.submit_or_return(img) {
+                                Ok(rx) => {
+                                    pending.push_back(rx);
+                                    break;
+                                }
+                                Err((back, _)) => {
+                                    // shed under the window burst:
+                                    // free a slot by reaping the
+                                    // oldest in-flight reply, then
+                                    // retry with the same image
+                                    img = back;
+                                    if let Some(rx) =
+                                        pending.pop_front()
+                                    {
+                                        let r = rx
+                                            .recv()
+                                            .unwrap()
+                                            .unwrap();
+                                        lat.push(r.latency_s);
+                                    } else {
+                                        std::thread::yield_now();
+                                    }
+                                }
+                            }
+                        }
+                        while pending.len() >= WINDOW {
+                            let r = pending
+                                .pop_front()
+                                .unwrap()
+                                .recv()
+                                .unwrap()
+                                .unwrap();
+                            lat.push(r.latency_s);
+                        }
+                    }
+                    for rx in pending {
+                        lat.push(rx.recv().unwrap().unwrap().latency_s);
+                    }
+                    lat
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().unwrap())
+            .collect()
+    });
+    let elapsed = t0.elapsed().as_secs_f64();
+    assert_eq!(latencies.len(), SUBMITTERS * PER_THREAD);
+    if hot_path == HotPath::LockFree {
+        // every slot leased for this run is back in the free list —
+        // the zero-leak contract of the reply slab.  A worker's
+        // sender drop may lag the receiver's `recv` by a beat, so
+        // poll briefly before judging a slot leaked.
+        let (mut idle, cap) = client.reply_slab_stats().unwrap();
+        let deadline = Instant::now() + Duration::from_secs(2);
+        while idle != cap && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+            idle = client.reply_slab_stats().unwrap().0;
+        }
+        assert_eq!(
+            idle, cap,
+            "reply slab leaked slots: {idle} idle of {cap}"
+        );
+        assert!(
+            server.metrics().slab_reuse.load(Ordering::Relaxed) > 0,
+            "steady state must reuse reply slots, not allocate"
+        );
+    } else {
+        assert!(client.reply_slab_stats().is_none());
+    }
+    let mut sorted = latencies.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p99 = sorted[(sorted.len() * 99 / 100).min(sorted.len() - 1)];
+    ((SUBMITTERS * PER_THREAD) as f64 / elapsed, p99)
+}
+
+/// The PR's headline bound: on the pure hand-off workload the
+/// lock-free layout (SPSC rings + reply slab + lock-free lane reads)
+/// must beat the shared-`Mutex<Receiver>` baseline by ≥1.3x
+/// throughput without giving up tail latency (p99 ≤ 1.1x baseline).
+/// Best-of-3 per configuration so a scheduler hiccup in one trial
+/// cannot fail the bound.
+#[test]
+fn lock_free_hot_path_outpaces_shared_mutex_baseline() {
+    let best = |hp: HotPath| -> (f64, f64) {
+        let mut tput: f64 = 0.0;
+        let mut p99 = f64::INFINITY;
+        for _ in 0..3 {
+            let (t, p) = hotpath_trial(hp);
+            tput = tput.max(t);
+            p99 = p99.min(p);
+        }
+        (tput, p99)
+    };
+    let (base_tput, base_p99) = best(HotPath::SharedMutexBaseline);
+    let (lf_tput, lf_p99) = best(HotPath::LockFree);
+    assert!(
+        lf_tput >= 1.3 * base_tput,
+        "lock-free hot path must win ≥1.3x on contended hand-offs: \
+         {lf_tput:.0} req/s vs baseline {base_tput:.0} req/s"
+    );
+    assert!(
+        lf_p99 <= 1.1 * base_p99,
+        "lock-free hot path must not trade tail latency for \
+         throughput: p99 {lf_p99:.6}s vs baseline {base_p99:.6}s"
+    );
 }
